@@ -1,0 +1,86 @@
+//! DLB policy sweep: the paper's closing discussion made executable.
+//!
+//! "In practice one must weigh partitioning time, migration cost and
+//! solver time together" (§4). This example sweeps the imbalance
+//! trigger lambda for one method and prints the resulting trade-off:
+//! a low trigger repartitions constantly (ParMETIS-style quality
+//! chasing -- more DLB time, best balance), a high trigger tolerates
+//! skew (less DLB, worse solve balance). The sweet spot depends on how
+//! expensive the method's partition+migration is -- which is exactly
+//! why the paper pairs cheap incremental partitioners with moderate
+//! triggers.
+//!
+//! ```sh
+//! cargo run --release --example dlb_policy_sweep [method]
+//! ```
+
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::mesh::generator;
+
+fn main() {
+    let method = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "PHG/HSFC".to_string());
+    let triggers = [1.02, 1.05, 1.1, 1.2, 1.5, 2.5];
+
+    println!("== DLB policy sweep: method {method}, parabolic moving peak, p = 32 ==\n");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "trigger", "repartitions", "DLB total(s)", "mean lambda", "STP mean(s)", "TAL(s)"
+    );
+
+    let mut rows: Vec<(f64, usize, f64, f64, f64, f64)> = Vec::new();
+    for &trigger in &triggers {
+        let cfg = DriverConfig {
+            nparts: 32,
+            method: method.clone(),
+            lambda_trigger: trigger,
+            theta_refine: 0.45,
+            theta_coarsen: 0.04,
+            max_elements: 30_000,
+            solver: SolverOpts {
+                tol: 1e-5,
+                max_iter: 600,
+            },
+            use_pjrt: true,
+            nsteps: 12,
+            dt: 1.0 / 512.0,
+        };
+        let mut d = AdaptiveDriver::new(generator::cube_mesh(4), cfg);
+        d.run_parabolic(0.0);
+        let reps = d.timeline.repartition_count();
+        let dlb: f64 = d.timeline.records.iter().map(|r| r.dlb_time()).sum();
+        let mean_lambda: f64 = d
+            .timeline
+            .records
+            .iter()
+            .map(|r| r.imbalance_after)
+            .sum::<f64>()
+            / d.timeline.records.len() as f64;
+        let (tal, _, _, stp) = d.timeline.table_columns();
+        println!(
+            "{:>8.2} {:>12} {:>12.4} {:>12.3} {:>12.4} {:>10.3}",
+            trigger, reps, dlb, mean_lambda, stp, tal
+        );
+        rows.push((trigger, reps, dlb, mean_lambda, stp, tal));
+    }
+
+    // the qualitative law the paper states: tighter triggers buy
+    // balance with DLB time
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    assert!(
+        first.1 >= last.1,
+        "low trigger should repartition at least as often"
+    );
+    assert!(
+        first.3 <= last.3 + 0.35,
+        "low trigger should hold lambda lower on average"
+    );
+    println!(
+        "\ntrade-off confirmed: trigger {:.2} -> {} repartitions, mean lambda {:.3}; \
+         trigger {:.2} -> {} repartitions, mean lambda {:.3}",
+        first.0, first.1, first.3, last.0, last.1, last.3
+    );
+}

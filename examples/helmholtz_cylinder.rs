@@ -1,0 +1,124 @@
+//! END-TO-END VALIDATION DRIVER (example 3.1, scaled).
+//!
+//! The full system on a real workload: adaptive FEM solution of the
+//! Helmholtz problem  -lap u + u = f  on the long cylinder Omega_1,
+//! exact solution u = cos(2 pi x) cos(2 pi y) cos(2 pi z).
+//!
+//! Everything composes here: the cylinder mesher, bisection refinement
+//! driven by the residual estimator, the RTK partitioner + Oliker-
+//! Biswas remap + migration under the lambda-trigger DLB policy, P1
+//! assembly batched through the Pallas `elem_tet` artifact, and the
+//! Jacobi-PCG solve running one `cg_step` PJRT execute per iteration.
+//!
+//! Prints the per-step log (the "loss curve" equivalent: L2 error vs
+//! DOFs, which must decrease) and the paper-format summary. Recorded
+//! in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example helmholtz_cylinder [method] [nsteps]
+//! ```
+
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::mesh::generator;
+use phg_dlb::util::timer::Stopwatch;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let method = args.first().cloned().unwrap_or_else(|| "RTK".to_string());
+    let nsteps: usize = args
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+
+    let mesh = generator::omega1_cylinder(3);
+    println!(
+        "Omega_1 cylinder: {} tets, aspect ratio {:.1}",
+        mesh.n_leaves(),
+        mesh.bounding_box().aspect_ratio()
+    );
+
+    let cfg = DriverConfig {
+        nparts: 32,
+        method: method.clone(),
+        lambda_trigger: 1.15,
+        theta_refine: 0.4,
+        theta_coarsen: 0.0,
+        max_elements: 150_000,
+        solver: SolverOpts {
+            tol: 1e-5,
+            max_iter: 1500,
+        },
+        use_pjrt: true,
+        nsteps,
+        dt: 0.0,
+    };
+    let mut driver = AdaptiveDriver::new(mesh, cfg);
+    if driver.runtime.is_none() {
+        eprintln!("WARNING: artifacts missing; using native engines (run `make artifacts`)");
+    }
+
+    println!(
+        "\n{:>4} {:>9} {:>9} {:>7} {:>7} {:>5} {:>10} {:>6} {:>10} {:>10}",
+        "step", "elements", "dofs", "lam_in", "lam_out", "DLB", "solve(ms)", "iters", "L2err", "maxerr"
+    );
+    let sw = Stopwatch::start();
+    for _ in 0..nsteps {
+        let more = driver.helmholtz_step();
+        let r = driver.timeline.records.last().unwrap();
+        println!(
+            "{:>4} {:>9} {:>9} {:>7.3} {:>7.3} {:>5} {:>10.1} {:>6} {:>10.3e} {:>10.3e}",
+            r.step,
+            r.n_elements,
+            r.n_dofs,
+            r.imbalance_before,
+            r.imbalance_after,
+            if r.repartitioned { "yes" } else { "-" },
+            r.total_solve_time() * 1e3,
+            r.solve_iterations,
+            r.l2_error,
+            r.max_error
+        );
+        if !more {
+            break;
+        }
+    }
+    let wall = sw.elapsed();
+
+    let (tal, dlb, sol, stp) = driver.timeline.table_columns();
+    println!("\nmethod {method}: wall {wall:.2}s");
+    println!(
+        "TAL {tal:.3}s | mean DLB {:.4}s | mean SOL {:.4}s | mean STP {:.4}s | repartitions {}",
+        dlb,
+        sol,
+        stp,
+        driver.timeline.repartition_count()
+    );
+
+    // convergence check: the error-vs-dofs curve must trend down
+    let errs: Vec<(usize, f64)> = driver
+        .timeline
+        .records
+        .iter()
+        .map(|r| (r.n_dofs, r.l2_error))
+        .collect();
+    let first = errs.first().unwrap();
+    let last = errs.last().unwrap();
+    println!(
+        "\nerror curve: {} dofs @ L2 {:.3e}  ->  {} dofs @ L2 {:.3e}",
+        first.0, first.1, last.0, last.1
+    );
+    assert!(
+        last.1 < first.1,
+        "adaptive refinement failed to reduce the L2 error"
+    );
+    println!("E2E VALIDATION OK: error decreased under adaptive refinement with DLB");
+
+    let csv = driver.timeline.to_csv();
+    if let Ok(p) = phg_dlb::coordinator::report::write_report(
+        &format!("helmholtz_cylinder_{}.csv", method.replace('/', "_")),
+        &csv,
+    ) {
+        println!("timeline csv: {}", p.display());
+    }
+}

@@ -1,0 +1,62 @@
+//! Partition gallery: write VTK files of the cylinder partitioned by
+//! every method, for visual inspection in ParaView -- the qualitative
+//! counterpart of the paper's quality tables. Also dumps the Hilbert
+//! curve order as cell data so the SFC locality is visible.
+//!
+//! ```sh
+//! cargo run --release --example partition_gallery   # writes out/*.vtk
+//! ```
+
+use phg_dlb::coordinator::{partitioner_by_name, METHOD_NAMES};
+use phg_dlb::dist::Distribution;
+use phg_dlb::mesh::generator;
+use phg_dlb::mesh::io::write_vtk;
+use phg_dlb::partition::sfc::{sfc_keys, Curve, Normalization};
+use phg_dlb::partition::PartitionInput;
+use std::path::Path;
+
+fn main() {
+    let mut mesh = generator::omega1_cylinder(3);
+    // refine one end so partitions must adapt to non-uniform density
+    let marked: Vec<_> = mesh
+        .leaves_unordered()
+        .into_iter()
+        .filter(|&id| mesh.centroid(id).x < 2.0)
+        .collect();
+    mesh.refine(&marked);
+
+    let nparts = 12;
+    let leaves = mesh.leaves_unordered();
+    let weights = vec![1.0; leaves.len()];
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+
+    std::fs::create_dir_all("out").unwrap();
+    for name in METHOD_NAMES.iter().chain(["RIB"].iter()) {
+        let p = partitioner_by_name(name).unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let r = p.partition(&input);
+        let data: Vec<f64> = r.parts.iter().map(|&x| x as f64).collect();
+        let fname = format!("out/partition_{}.vtk", name.replace('/', "_"));
+        write_vtk(&mesh, &data, "part", Path::new(&fname)).unwrap();
+        println!("wrote {fname}");
+    }
+
+    // hilbert curve position as cell data (both normalizations)
+    for (norm, tag) in [
+        (Normalization::AspectPreserving, "aspect"),
+        (Normalization::PerAxis, "peraxis"),
+    ] {
+        let keys = sfc_keys(&mesh, &leaves, Curve::Hilbert, norm);
+        let mut order: Vec<usize> = (0..keys.len()).collect();
+        order.sort_by_key(|&i| keys[i]);
+        let mut pos = vec![0.0f64; keys.len()];
+        for (rank, &i) in order.iter().enumerate() {
+            pos[i] = rank as f64 / keys.len() as f64;
+        }
+        let fname = format!("out/hilbert_order_{tag}.vtk");
+        write_vtk(&mesh, &pos, "curve_pos", Path::new(&fname)).unwrap();
+        println!("wrote {fname}");
+    }
+    println!("open the files in ParaView and color by the cell scalar");
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! Build a mesh, refine it adaptively, partition it with every method
+//! the paper compares, and print the quality metrics -- then run three
+//! adaptive FEM steps with dynamic load balancing.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use phg_dlb::coordinator::{partitioner_by_name, AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::dist::Distribution;
+use phg_dlb::mesh::generator;
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::partition::{metrics, PartitionInput};
+use phg_dlb::util::timer::Stopwatch;
+
+fn main() {
+    // 1. A mesh: the paper's long cylinder, locally refined at one end
+    //    to create realistic imbalance.
+    let mut mesh = generator::omega1_cylinder(3);
+    for _ in 0..2 {
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .filter(|&id| mesh.centroid(id).x < 2.0)
+            .collect();
+        mesh.refine(&marked);
+    }
+    println!("mesh: {} tets, {} vertices\n", mesh.n_leaves(), mesh.n_vertices());
+
+    // 2. Partition with every method; report speed and quality.
+    let nparts = 16;
+    let leaves = mesh.leaves_unordered();
+    let weights = vec![1.0; leaves.len()];
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+    let topo = LeafTopology::build_for(&mesh, leaves.clone());
+
+    println!(
+        "{:<12} {:>9} {:>10} {:>12} {:>9}",
+        "method", "time(ms)", "imbalance", "iface-faces", "surface%"
+    );
+    for name in METHOD_NAMES {
+        let p = partitioner_by_name(name).unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let sw = Stopwatch::start();
+        let r = p.partition(&input);
+        let q = metrics::quality(&topo, &r.parts, &weights, nparts);
+        println!(
+            "{:<12} {:>9.2} {:>10.4} {:>12} {:>9.2}",
+            name,
+            sw.elapsed() * 1e3,
+            q.imbalance,
+            q.interface_faces,
+            100.0 * q.surface_index
+        );
+    }
+
+    // 3. Three adaptive Helmholtz steps with DLB (RTK method).
+    println!("\nadaptive loop (RTK, 8 virtual procs):");
+    let cfg = DriverConfig {
+        nparts: 8,
+        method: "RTK".into(),
+        nsteps: 3,
+        max_elements: 60_000,
+        ..DriverConfig::default()
+    };
+    let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg);
+    driver.run_helmholtz();
+    for r in &driver.timeline.records {
+        println!(
+            "step {}: {} tets, {} dofs, lambda {:.3} -> {:.3}{}, solve {:.1} ms ({} iters), L2 err {:.2e}",
+            r.step,
+            r.n_elements,
+            r.n_dofs,
+            r.imbalance_before,
+            r.imbalance_after,
+            if r.repartitioned { " [DLB]" } else { "" },
+            r.total_solve_time() * 1e3,
+            r.solve_iterations,
+            r.l2_error
+        );
+    }
+}

@@ -1,0 +1,110 @@
+"""AOT bridge: lower the L2 graph to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT `lowered.compile()` / serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids,
+which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Every entry point is lowered at a ladder of fixed shapes ("one compiled
+executable per model variant"); Rust pads its data up to the next rung.
+A plain-text manifest lists every artifact with its parameters so the
+Rust executable cache can pick rungs without hard-coding the ladder.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape ladders. Batches/vectors are padded up to the next rung by Rust.
+ELEM_BATCHES = [2048, 8192, 32768, 131072]
+ELEM_BLOCK = 512
+CG_SIZES = [4096, 16384, 65536, 262144]
+ELL_WIDTH = 32
+CG_BLOCK = None  # single block: see kernels/spmv_ell.py (O(N^2) otherwise)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_elem_tet(batch):
+    fn = lambda c, f: model.assemble_batch(c, f, block=ELEM_BLOCK)
+    return jax.jit(fn).lower(f32(batch, 4, 3), f32(batch, 4))
+
+
+def lower_cg_step(n, w):
+    fn = lambda vals, cols, dinv, x, r, p, rz: model.cg_step(
+        vals, cols, dinv, x, r, p, rz, block=CG_BLOCK
+    )
+    return jax.jit(fn).lower(
+        f32(n, w), i32(n, w), f32(n), f32(n), f32(n), f32(n), f32()
+    )
+
+
+def lower_spmv(n, w):
+    fn = lambda vals, cols, x: model.spmv(vals, cols, x, block=CG_BLOCK)
+    return jax.jit(fn).lower(f32(n, w), i32(n, w), f32(n))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+
+    for b in ELEM_BATCHES:
+        name = f"elem_tet_b{b}"
+        text = to_hlo_text(lower_elem_tet(b))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} elem_tet {fname} batch={b}")
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    for n in CG_SIZES:
+        name = f"cg_step_n{n}_w{ELL_WIDTH}"
+        text = to_hlo_text(lower_cg_step(n, ELL_WIDTH))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} cg_step {fname} n={n} w={ELL_WIDTH}")
+        print(f"wrote {fname} ({len(text)} chars)")
+
+        name = f"spmv_n{n}_w{ELL_WIDTH}"
+        text = to_hlo_text(lower_spmv(n, ELL_WIDTH))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} spmv {fname} n={n} w={ELL_WIDTH}")
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

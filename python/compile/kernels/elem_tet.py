@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: batched P1 tetrahedral element matrices.
+
+Given a batch of tetrahedra (vertex coordinates) and the P1-interpolated
+source values at the vertices, compute for every element
+
+  * the 4x4 local stiffness matrix  K_ij = V * (grad phi_i . grad phi_j)
+  * the 4x4 local consistent mass   M_ij = V/20 * (1 + delta_ij)
+  * the 4-vector local load         b_i  = sum_j M_ij f_j
+
+This is the geometric hot-spot of FEM assembly: on the paper's platform
+(PHG) it is the per-element inner loop; here it is a single fixed-shape
+batched kernel so it AOT-compiles to one HLO module per batch size.
+
+TPU shaping (see DESIGN.md #Hardware-Adaptation): the kernel blocks over
+the batch dimension only; each block holds (BLK, 4, 3) coordinates plus
+(BLK, 4) source values in VMEM (a few hundred KiB at BLK=2048) and emits
+three dense outputs -- a regular streaming HBM<->VMEM schedule with all
+arithmetic as dense batched products (einsum 'bik,bjk->bij' feeds the
+MXU). interpret=True is mandatory on CPU PJRT (Mosaic custom-calls are
+TPU-only).
+
+Degenerate elements (|det J| < eps), which we use as batch padding, get
+exactly-zero K, M and b.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEG_EPS = 1e-12
+
+
+def _cross(a, b):
+    """Batched 3-vector cross product, shapes (..., 3)."""
+    ax, ay, az = a[..., 0], a[..., 1], a[..., 2]
+    bx, by, bz = b[..., 0], b[..., 1], b[..., 2]
+    return jnp.stack(
+        [ay * bz - az * by, az * bx - ax * bz, ax * by - ay * bx], axis=-1
+    )
+
+
+def elem_tet_kernel(coords_ref, fvals_ref, k_ref, m_ref, b_ref):
+    """Pallas kernel body over one batch block.
+
+    coords_ref: (BLK, 4, 3) f32   tet vertex coordinates
+    fvals_ref:  (BLK, 4)    f32   source values at vertices
+    k_ref:      (BLK, 4, 4) f32   out: stiffness
+    m_ref:      (BLK, 4, 4) f32   out: consistent mass
+    b_ref:      (BLK, 4)    f32   out: load vector
+    """
+    c = coords_ref[...]
+    f = fvals_ref[...]
+
+    d1 = c[:, 1, :] - c[:, 0, :]
+    d2 = c[:, 2, :] - c[:, 0, :]
+    d3 = c[:, 3, :] - c[:, 0, :]
+
+    c23 = _cross(d2, d3)
+    c31 = _cross(d3, d1)
+    c12 = _cross(d1, d2)
+
+    det = jnp.sum(d1 * c23, axis=-1)  # 6 * signed volume
+    degenerate = jnp.abs(det) < DEG_EPS
+    safe_det = jnp.where(degenerate, 1.0, det)
+    vol = jnp.where(degenerate, 0.0, jnp.abs(det) / 6.0)
+
+    inv_det = 1.0 / safe_det
+    g1 = c23 * inv_det[:, None]
+    g2 = c31 * inv_det[:, None]
+    g3 = c12 * inv_det[:, None]
+    g0 = -(g1 + g2 + g3)
+    grads = jnp.stack([g0, g1, g2, g3], axis=1)  # (BLK, 4, 3)
+
+    # K = V * G G^T : a batched (4,3)x(3,4) product -- MXU-friendly.
+    k = vol[:, None, None] * jnp.einsum("bik,bjk->bij", grads, grads)
+
+    ones_eye = 1.0 + jnp.eye(4, dtype=c.dtype)  # (4, 4)
+    m = (vol / 20.0)[:, None, None] * ones_eye[None, :, :]
+
+    b = jnp.einsum("bij,bj->bi", m, f)
+
+    k_ref[...] = k
+    m_ref[...] = m
+    b_ref[...] = b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def elem_tet(coords, fvals, *, block=512):
+    """Batched P1 tet element matrices via the Pallas kernel.
+
+    coords: (B, 4, 3) f32, fvals: (B, 4) f32 with B % block == 0.
+    Returns (K, M, b) of shapes (B,4,4), (B,4,4), (B,4).
+    """
+    batch = coords.shape[0]
+    if batch % block != 0:
+        raise ValueError(f"batch {batch} not a multiple of block {block}")
+    grid = (batch // block,)
+    dtype = coords.dtype
+    return pl.pallas_call(
+        elem_tet_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 4, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 4, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, 4, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, 4, 4), dtype),
+            jax.ShapeDtypeStruct((batch, 4, 4), dtype),
+            jax.ShapeDtypeStruct((batch, 4), dtype),
+        ],
+        interpret=True,
+    )(coords, fvals)

@@ -1,0 +1,85 @@
+"""Pure-jnp/numpy correctness oracles for the Pallas kernels and the L2 graph.
+
+Everything here is written with the most naive constructions available
+(explicit loops, or loops replaced only by vmap) so the oracle is
+obviously correct by inspection. pytest/hypothesis compare the kernels
+against these.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEG_EPS = 1e-12
+
+
+def elem_tet_ref_single(coords, fvals):
+    """Reference P1 tet element matrices for ONE element.
+
+    coords: (4, 3), fvals: (4,). Returns (K (4,4), M (4,4), b (4,)).
+    """
+    d = jnp.stack([coords[i] - coords[0] for i in (1, 2, 3)], axis=1)  # J: cols = edges
+    det = jnp.linalg.det(d)  # 6 * signed volume
+    degenerate = jnp.abs(det) < DEG_EPS
+    vol = jnp.where(degenerate, 0.0, jnp.abs(det) / 6.0)
+
+    # gradients of barycentric coords 1..3 are the rows of inv(J)^T? No:
+    # lambda_i(x) for i=1..3 satisfies J^T grad lambda_i = e_i, so the
+    # grads are the rows of inv(J).
+    safe_j = jnp.where(degenerate, jnp.eye(3), d)
+    inv_j = jnp.linalg.inv(safe_j)
+    g123 = inv_j  # (3,3): row i-1 = grad lambda_i
+    g0 = -jnp.sum(g123, axis=0, keepdims=True)
+    grads = jnp.concatenate([g0, g123], axis=0)  # (4, 3)
+    grads = jnp.where(degenerate, 0.0, 1.0) * grads
+
+    k = vol * grads @ grads.T
+    m = vol / 20.0 * (jnp.ones((4, 4)) + jnp.eye(4))
+    b = m @ fvals
+    return k, m, b
+
+
+def elem_tet_ref(coords, fvals):
+    """Batched oracle: coords (B,4,3), fvals (B,4)."""
+    return jax.vmap(elem_tet_ref_single)(coords, fvals)
+
+
+def spmv_ell_ref(vals, cols, x):
+    """Naive ELL SpMV oracle (python loops)."""
+    vals = np.asarray(vals)
+    cols = np.asarray(cols)
+    x = np.asarray(x)
+    n, w = vals.shape
+    y = np.zeros(n, dtype=np.float64)
+    for i in range(n):
+        for j in range(w):
+            y[i] += float(vals[i, j]) * float(x[cols[i, j]])
+    return y.astype(x.dtype)
+
+
+def cg_step_ref(vals, cols, diag_inv, x, r, p, rz):
+    """One Jacobi-PCG iteration, oracle form (float64 numpy)."""
+    vals64 = np.asarray(vals, dtype=np.float64)
+    diag_inv = np.asarray(diag_inv, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    p = np.asarray(p, dtype=np.float64)
+    rz = float(rz)
+
+    q = np.zeros_like(x)
+    cols = np.asarray(cols)
+    n, w = vals64.shape
+    for i in range(n):
+        for j in range(w):
+            q[i] += vals64[i, j] * p[cols[i, j]]
+
+    pq = float(p @ q)
+    alpha = rz / pq if pq != 0.0 else 0.0
+    x1 = x + alpha * p
+    r1 = r - alpha * q
+    z1 = diag_inv * r1
+    rz1 = float(r1 @ z1)
+    beta = rz1 / rz if rz != 0.0 else 0.0
+    p1 = z1 + beta * p
+    rnorm2 = float(r1 @ r1)
+    return x1, r1, p1, rz1, rnorm2

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: SpMV over an ELL (ELLPACK) matrix.
+
+ELL stores a sparse N x N matrix as two dense (N, W) arrays -- values and
+column indices -- with rows padded to the fixed width W (padding entries
+carry value 0.0 and column 0, which contributes exactly nothing).
+
+ELL is the sparse layout a VMEM/MXU machine wants (see DESIGN.md
+#Hardware-Adaptation): dense, regular tiles with a single gather per
+lane, instead of CSR's per-row variable-length indirection. The paper's
+platform runs CSR SpMV inside Hypre on CPUs; our AOT hot path needs
+fixed shapes anyway, so ELL with a size ladder is the natural port.
+
+The kernel blocks over rows; the x vector is small enough (<= 1 MiB for
+the ladder sizes) to keep resident per block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def spmv_ell_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    """y[i] = sum_w vals[i, w] * x[cols[i, w]] over one row block.
+
+    vals_ref: (BLK, W) f32, cols_ref: (BLK, W) i32, x_ref: (N,) f32
+    y_ref: (BLK,) f32
+    """
+    vals = vals_ref[...]
+    cols = cols_ref[...]
+    x = x_ref[...]
+    y_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def spmv_ell(vals, cols, x, *, block=None):
+    """ELL SpMV via the Pallas kernel. vals/cols: (N, W); x: (N,).
+
+    `block=None` (the default, and what aot.py lowers) uses a single
+    block spanning all rows. Rationale: every row block needs the whole
+    x vector, and interpret-mode Pallas *materializes* each block's
+    operands per grid step -- row-blocking therefore costs
+    O(N^2 / block) memory traffic (measured: 250x slowdown at N = 256k;
+    EXPERIMENTS.md #Perf). On a real TPU one would row-block with x
+    resident in HBM and a dynamic gather per tile; on CPU-interpret the
+    single block is the faithful O(N) schedule.
+    """
+    n, _w = vals.shape
+    if block is None:
+        block = n
+    if n % block != 0:
+        raise ValueError(f"rows {n} not a multiple of block {block}")
+    grid = (n // block,)
+    return pl.pallas_call(
+        spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, vals.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((block, cols.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(vals, cols, x)

@@ -1,0 +1,57 @@
+"""L2: the FEM compute graph, in JAX, calling the L1 Pallas kernels.
+
+Two entry points, both AOT-lowered by aot.py and executed from Rust:
+
+  * assemble_batch -- batched P1 tet element matrices (elem_tet kernel).
+    Rust gathers element coordinates into fixed-size batches, runs the
+    executable, and scatter-adds the 4x4 blocks into its CSR/ELL matrix.
+
+  * cg_step -- ONE full Jacobi-preconditioned CG iteration over an ELL
+    matrix (spmv_ell kernel + dense reductions). Rust owns the outer
+    loop and the convergence test; each iteration is a single PJRT
+    execute. alpha/beta are computed inside the graph so no reductions
+    ever cross the FFI boundary.
+
+Nothing in this module may be imported at runtime -- it exists only for
+`make artifacts` (and the pytest suite).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.elem_tet import elem_tet
+from .kernels.spmv_ell import spmv_ell
+
+
+def assemble_batch(coords, fvals, *, block=512):
+    """Batched element matrices; see kernels/elem_tet.py.
+
+    coords (B,4,3) f32, fvals (B,4) f32 -> (K (B,4,4), M (B,4,4), b (B,4)).
+    """
+    return elem_tet(coords, fvals, block=block)
+
+
+def cg_step(vals, cols, diag_inv, x, r, p, rz, *, block=1024):
+    """One Jacobi-PCG iteration.
+
+    vals (N,W) f32, cols (N,W) i32, diag_inv (N,) f32 (0.0 on padded and
+    Dirichlet-eliminated rows keeps them exactly invariant), x/r/p (N,)
+    f32, rz () f32 = <r, z> from the previous iteration.
+
+    Returns (x', r', p', rz', rnorm2).
+    """
+    q = spmv_ell(vals, cols, p, block=block)
+    pq = jnp.dot(p, q)
+    alpha = jnp.where(pq != 0.0, rz / pq, 0.0)
+    x1 = x + alpha * p
+    r1 = r - alpha * q
+    z1 = diag_inv * r1
+    rz1 = jnp.dot(r1, z1)
+    beta = jnp.where(rz != 0.0, rz1 / rz, 0.0)
+    p1 = z1 + beta * p
+    rnorm2 = jnp.dot(r1, r1)
+    return x1, r1, p1, rz1, rnorm2
+
+
+def spmv(vals, cols, x, *, block=1024):
+    """Standalone ELL SpMV (used by the residual check and benches)."""
+    return spmv_ell(vals, cols, x, block=block)

@@ -1,0 +1,35 @@
+"""AOT lowering sanity: every ladder rung lowers to parseable HLO text
+with the expected parameter shapes mentioned in the module."""
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("batch", [2048])
+def test_elem_tet_lowers(batch):
+    text = aot.to_hlo_text(aot.lower_elem_tet(batch))
+    assert "HloModule" in text
+    assert f"f32[{batch},4,3]" in text
+    assert f"f32[{batch},4,4]" in text
+
+
+@pytest.mark.parametrize("n", [4096])
+def test_cg_step_lowers(n):
+    text = aot.to_hlo_text(aot.lower_cg_step(n, aot.ELL_WIDTH))
+    assert "HloModule" in text
+    assert f"f32[{n},{aot.ELL_WIDTH}]" in text
+    assert f"s32[{n},{aot.ELL_WIDTH}]" in text
+
+
+def test_spmv_lowers():
+    text = aot.to_hlo_text(aot.lower_spmv(4096, aot.ELL_WIDTH))
+    assert "HloModule" in text
+
+
+def test_ladders_are_sane():
+    assert all(b % aot.ELEM_BLOCK == 0 for b in aot.ELEM_BATCHES)
+    # CG lowers single-block (None) -- see kernels/spmv_ell.py
+    assert aot.CG_BLOCK is None or all(n % aot.CG_BLOCK == 0 for n in aot.CG_SIZES)
+    assert sorted(aot.ELEM_BATCHES) == aot.ELEM_BATCHES
+    assert sorted(aot.CG_SIZES) == aot.CG_SIZES

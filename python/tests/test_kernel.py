@@ -1,0 +1,171 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes and values of both Pallas kernels against the
+pure-jnp/numpy references in kernels/ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.elem_tet import elem_tet
+from compile.kernels.spmv_ell import spmv_ell
+from compile.kernels import ref
+
+RNG = np.random.default_rng(20170712)
+
+
+def random_tets(batch, rng, scale=1.0, degenerate_frac=0.0):
+    coords = rng.uniform(-scale, scale, size=(batch, 4, 3)).astype(np.float32)
+    ndeg = int(batch * degenerate_frac)
+    if ndeg:
+        # squash first ndeg tets flat (all vertices equal) -> det = 0
+        coords[:ndeg] = coords[:ndeg, :1, :]
+    fvals = rng.uniform(-2, 2, size=(batch, 4)).astype(np.float32)
+    return coords, fvals
+
+
+class TestElemTet:
+    def test_reference_unit_tet(self):
+        """K and M of the reference unit tet against hand-computed values."""
+        coords = np.array(
+            [[[0, 0, 0], [1, 0, 0], [0, 1, 0], [0, 0, 1]]], dtype=np.float32
+        )
+        fvals = np.ones((1, 4), dtype=np.float32)
+        k, m, b = elem_tet(coords, fvals, block=1)
+        k, m, b = np.asarray(k[0]), np.asarray(m[0]), np.asarray(b[0])
+        vol = 1.0 / 6.0
+        # grads: g0 = (-1,-1,-1), g1 = (1,0,0), g2 = (0,1,0), g3 = (0,0,1)
+        g = np.array([[-1, -1, -1], [1, 0, 0], [0, 1, 0], [0, 0, 1]], float)
+        np.testing.assert_allclose(k, vol * g @ g.T, rtol=1e-6)
+        np.testing.assert_allclose(m, vol / 20 * (np.ones((4, 4)) + np.eye(4)), rtol=1e-6)
+        # b = M @ 1 = row sums of M = vol/20 * 5 = vol/4 each
+        np.testing.assert_allclose(b, np.full(4, vol / 4), rtol=1e-6)
+
+    def test_stiffness_row_sums_zero(self):
+        """Constants are in the P1 kernel: K @ 1 = 0 for every element."""
+        coords, fvals = random_tets(64, RNG)
+        k, _, _ = elem_tet(coords, fvals, block=32)
+        rowsums = np.asarray(k).sum(axis=2)
+        np.testing.assert_allclose(rowsums, 0.0, atol=1e-4)
+
+    def test_mass_total(self):
+        """sum(M) = element volume (integral of 1)."""
+        coords, fvals = random_tets(64, RNG)
+        _, m, _ = elem_tet(coords, fvals, block=32)
+        m = np.asarray(m)
+        vols = m.sum(axis=(1, 2))
+        # independent volume computation
+        d1 = coords[:, 1] - coords[:, 0]
+        d2 = coords[:, 2] - coords[:, 0]
+        d3 = coords[:, 3] - coords[:, 0]
+        det = np.einsum("bi,bi->b", d1, np.cross(d2, d3))
+        np.testing.assert_allclose(vols, np.abs(det) / 6.0, rtol=1e-4)
+
+    def test_matches_reference(self):
+        coords, fvals = random_tets(128, RNG)
+        k, m, b = elem_tet(coords, fvals, block=64)
+        kr, mr, br = ref.elem_tet_ref(coords, fvals)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(kr), rtol=2e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(mr), rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(br), rtol=1e-4, atol=1e-6)
+
+    def test_degenerate_padding_rows_are_zero(self):
+        coords, fvals = random_tets(32, RNG, degenerate_frac=0.5)
+        k, m, b = elem_tet(coords, fvals, block=16)
+        np.testing.assert_array_equal(np.asarray(k[:16]), 0.0)
+        np.testing.assert_array_equal(np.asarray(m[:16]), 0.0)
+        np.testing.assert_array_equal(np.asarray(b[:16]), 0.0)
+        assert np.abs(np.asarray(k[16:])).max() > 0
+
+    def test_translation_invariance(self):
+        """K is invariant under translation of the element."""
+        coords, fvals = random_tets(16, RNG)
+        shifted = coords + np.array([10.0, -3.0, 7.0], dtype=np.float32)
+        k0, _, _ = elem_tet(coords, fvals, block=16)
+        k1, _, _ = elem_tet(shifted, fvals, block=16)
+        np.testing.assert_allclose(np.asarray(k0), np.asarray(k1), rtol=1e-2, atol=1e-4)
+
+    def test_spd_on_constant_free_space(self):
+        """x^T K x >= 0 (K is PSD)."""
+        coords, fvals = random_tets(32, RNG)
+        k, _, _ = elem_tet(coords, fvals, block=32)
+        k = np.asarray(k, dtype=np.float64)
+        v = RNG.normal(size=(32, 4))
+        quad = np.einsum("bi,bij,bj->b", v, k, v)
+        assert (quad >= -1e-6).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch_log=st.integers(min_value=0, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.sampled_from([0.1, 1.0, 50.0]),
+    )
+    def test_hypothesis_vs_reference(self, batch_log, seed, scale):
+        batch = 2**batch_log * 8
+        rng = np.random.default_rng(seed)
+        coords, fvals = random_tets(batch, rng, scale=scale, degenerate_frac=0.1)
+        block = min(batch, 8)
+        k, m, b = elem_tet(coords, fvals, block=block)
+        kr, mr, br = ref.elem_tet_ref(coords, fvals)
+        # relative tolerance scaled: K entries scale like V/h^2 ~ scale
+        np.testing.assert_allclose(
+            np.asarray(k), np.asarray(kr), rtol=5e-3, atol=1e-3 * scale
+        )
+        np.testing.assert_allclose(
+            np.asarray(m), np.asarray(mr), rtol=1e-4, atol=1e-6 * scale**3
+        )
+
+
+def random_ell(n, w, rng, dtype=np.float32):
+    vals = rng.uniform(-1, 1, size=(n, w)).astype(dtype)
+    cols = rng.integers(0, n, size=(n, w)).astype(np.int32)
+    # emulate padding: ~25% of entries zeroed with col 0
+    mask = rng.uniform(size=(n, w)) < 0.25
+    vals[mask] = 0.0
+    cols[mask] = 0
+    x = rng.uniform(-1, 1, size=n).astype(dtype)
+    return vals, cols, x
+
+
+class TestSpmvEll:
+    def test_identity(self):
+        n, w = 16, 4
+        vals = np.zeros((n, w), np.float32)
+        cols = np.zeros((n, w), np.int32)
+        vals[:, 0] = 1.0
+        cols[:, 0] = np.arange(n)
+        x = RNG.uniform(-1, 1, n).astype(np.float32)
+        y = spmv_ell(vals, cols, x, block=8)
+        np.testing.assert_allclose(np.asarray(y), x, rtol=1e-6)
+
+    def test_matches_reference(self):
+        vals, cols, x = random_ell(64, 8, RNG)
+        y = spmv_ell(vals, cols, x, block=16)
+        yr = ref.spmv_ell_ref(vals, cols, x)
+        np.testing.assert_allclose(np.asarray(y), yr, rtol=1e-4, atol=1e-5)
+
+    def test_single_block(self):
+        vals, cols, x = random_ell(32, 5, RNG)
+        y1 = spmv_ell(vals, cols, x, block=32)
+        y2 = spmv_ell(vals, cols, x, block=8)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(min_value=1, max_value=8),
+        w=st.integers(min_value=1, max_value=12),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_vs_reference(self, n_blocks, w, seed):
+        n = 8 * n_blocks
+        rng = np.random.default_rng(seed)
+        vals, cols, x = random_ell(n, w, rng)
+        y = spmv_ell(vals, cols, x, block=8)
+        yr = ref.spmv_ell_ref(vals, cols, x)
+        np.testing.assert_allclose(np.asarray(y), yr, rtol=1e-3, atol=1e-4)
+
+    def test_rejects_bad_block(self):
+        vals, cols, x = random_ell(10, 3, RNG)
+        with pytest.raises(ValueError):
+            spmv_ell(vals, cols, x, block=4)

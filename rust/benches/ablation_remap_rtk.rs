@@ -1,0 +1,109 @@
+//! Two more ablations of the paper's design choices:
+//!
+//! 1. **Oliker-Biswas remap on/off (§2.4)**: migration volume with and
+//!    without the subgrid->process mapping, per method. The paper's
+//!    claim: remapping minimizes TotalV; without it a partitioner that
+//!    relabels subgrids forces gratuitous migration.
+//!
+//! 2. **Prefix-sum RTK vs Mitchell's original refinement-tree method
+//!    (§2.1)**: same partition-quality family, but the paper's
+//!    reformulation needs only two traversals + one MPI_Scan (O(N))
+//!    against Mitchell's subtree-weight bisection (O(N log p + p log N)).
+//!
+//! ```sh
+//! cargo bench --bench ablation_remap_rtk
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{median_time, save_csv, MeshSequence};
+use phg_dlb::coordinator::partitioner_by_name;
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::partition::metrics::migration_volume;
+use phg_dlb::partition::PartitionInput;
+use phg_dlb::remap::{apply_map, oliker_biswas, SimilarityMatrix};
+
+fn main() {
+    let nparts = 32;
+    println!("== Ablation A: Oliker-Biswas remap on/off (p = {nparts}) ==\n");
+    let mut csv = String::from("section,method,variant,value\n");
+
+    println!(
+        "{:<12} {:>16} {:>16} {:>10}",
+        "method", "TotalV no-remap", "TotalV remap", "kept gain"
+    );
+    for name in ["RTK", "MSFC", "PHG/HSFC", "RCB", "ParMETIS"] {
+        let mut seq = MeshSequence::cylinder(3, nparts, 200_000);
+        for _ in 0..4 {
+            seq.advance();
+        }
+        let (leaves, weights, owners) = seq.leaves_weights_owners();
+        let p = partitioner_by_name(name).unwrap();
+        let input = PartitionInput::from_mesh(&seq.mesh, &leaves, &weights, &owners, nparts);
+        let r = p.partition(&input);
+
+        let no_remap = migration_volume(&owners, &r.parts, &weights, nparts);
+        let sim = SimilarityMatrix::build(&owners, &r.parts, &weights, nparts, nparts);
+        let rm = oliker_biswas(&sim);
+        let mut parts = r.parts.clone();
+        apply_map(&mut parts, &rm.map);
+        let with_remap = migration_volume(&owners, &parts, &weights, nparts);
+
+        println!(
+            "{:<12} {:>16.0} {:>16.0} {:>9.1}%",
+            name,
+            no_remap.total_v,
+            with_remap.total_v,
+            100.0 * (no_remap.total_v - with_remap.total_v) / no_remap.total_v.max(1.0)
+        );
+        csv.push_str(&format!(
+            "remap,{name},no_remap,{}\nremap,{name},remap,{}\n",
+            no_remap.total_v, with_remap.total_v
+        ));
+        assert!(with_remap.total_v <= no_remap.total_v + 1e-9);
+    }
+
+    println!("\n== Ablation B: prefix-sum RTK (paper §2.1) vs Mitchell's original ==\n");
+    println!(
+        "{:<10} {:>9} {:>14} {:>14} {:>12} {:>12}",
+        "elements", "parts", "RTK ms", "Mitchell ms", "RTK cut", "Mitchell cut"
+    );
+    let rtk = partitioner_by_name("RTK").unwrap();
+    let mit = partitioner_by_name("Mitchell-RT").unwrap();
+    let mut seq = MeshSequence::cylinder(3, 64, 500_000);
+    for round in 0..5 {
+        for _ in 0..2 {
+            seq.advance();
+        }
+        let (leaves, weights, owners) = seq.leaves_weights_owners();
+        let input = PartitionInput::from_mesh(&seq.mesh, &leaves, &weights, &owners, 64);
+        let t_rtk = median_time(3, || {
+            std::hint::black_box(rtk.partition(&input).parts.len());
+        });
+        let t_mit = median_time(3, || {
+            std::hint::black_box(mit.partition(&input).parts.len());
+        });
+        let topo = LeafTopology::build_for(&seq.mesh, leaves.clone());
+        let cut_rtk = topo.interface_faces(&rtk.partition(&input).parts);
+        let cut_mit = topo.interface_faces(&mit.partition(&input).parts);
+        println!(
+            "{:<10} {:>9} {:>14.3} {:>14.3} {:>12} {:>12}",
+            leaves.len(),
+            64,
+            t_rtk * 1e3,
+            t_mit * 1e3,
+            cut_rtk,
+            cut_mit
+        );
+        csv.push_str(&format!(
+            "rtk,round{round},rtk_ms,{}\nrtk,round{round},mitchell_ms,{}\n",
+            t_rtk * 1e3,
+            t_mit * 1e3
+        ));
+    }
+    println!(
+        "\npaper shape: prefix-sum RTK is the cheaper equal-quality formulation"
+    );
+    save_csv("ablation_remap_rtk.csv", &csv);
+}

@@ -1,0 +1,103 @@
+//! Shared helpers for the benchmark harnesses (plain-main benches; the
+//! criterion crate is not vendored in this environment).
+#![allow(dead_code)] // each bench uses a different subset
+
+use phg_dlb::dist::Distribution;
+use phg_dlb::mesh::{generator, ElemId, TetMesh};
+use phg_dlb::util::timer::Stopwatch;
+
+/// A deterministic adaptive-mesh scenario: the Omega_1 cylinder with a
+/// refinement front sweeping along the axis, mimicking the element-
+/// density evolution of the paper's example 3.1 without needing FEM
+/// solves. Step `k` refines elements in a band around x = front(k).
+pub struct MeshSequence {
+    pub mesh: TetMesh,
+    pub step: usize,
+    pub max_elements: usize,
+}
+
+impl MeshSequence {
+    pub fn cylinder(scale: usize, nparts: usize, max_elements: usize) -> Self {
+        let mut mesh = generator::omega1_cylinder(scale);
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        Self {
+            mesh,
+            step: 0,
+            max_elements,
+        }
+    }
+
+    pub fn cube(n: usize, nparts: usize, max_elements: usize) -> Self {
+        let mut mesh = generator::cube_mesh(n);
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        Self {
+            mesh,
+            step: 0,
+            max_elements,
+        }
+    }
+
+    /// Advance the refinement front; returns false once the element
+    /// budget is spent.
+    pub fn advance(&mut self) -> bool {
+        if self.mesh.n_leaves() >= self.max_elements {
+            return false;
+        }
+        let bb = self.mesh.bounding_box();
+        let span = bb.extent().x.max(1e-9);
+        let front = bb.lo.x + span * (0.15 + 0.07 * self.step as f64) % span;
+        let band = span * 0.18;
+        let marked: Vec<ElemId> = self
+            .mesh
+            .leaves_unordered()
+            .into_iter()
+            .filter(|&id| (self.mesh.centroid(id).x - front).abs() < band)
+            .collect();
+        self.mesh.refine(&marked);
+        self.step += 1;
+        true
+    }
+
+    pub fn leaves_weights_owners(&self) -> (Vec<ElemId>, Vec<f64>, Vec<u16>) {
+        let leaves = self.mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = leaves
+            .iter()
+            .map(|&id| self.mesh.elem(id).owner)
+            .collect();
+        (leaves, weights, owners)
+    }
+}
+
+/// Median wall time of `reps` runs of `f` (seconds).
+pub fn median_time(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let sw = Stopwatch::start();
+            f();
+            sw.elapsed()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Write a CSV report under out/ and echo the path.
+pub fn save_csv(name: &str, content: &str) {
+    match phg_dlb::coordinator::report::write_report(name, content) {
+        Ok(p) => println!("[csv] {}", p.display()),
+        Err(e) => eprintln!("[csv] write failed: {e}"),
+    }
+}
+
+/// Parse `--key value` style bench args.
+pub fn arg_usize(key: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}

@@ -1,0 +1,89 @@
+//! Figure 3.2: partition time per adaptive step, all six methods.
+//!
+//! Paper shape to reproduce: RTK fastest, then MSFC, PHG/HSFC,
+//! Zoltan/HSFC; ParMETIS and RCB slowest; ParMETIS's time oscillates
+//! with the mesh distribution while the geometric methods grow
+//! smoothly with mesh size.
+//!
+//! ```sh
+//! cargo bench --bench fig3_2_partition_time [-- --steps 12 --scale 3 --nparts 64]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{arg_usize, median_time, save_csv, MeshSequence};
+use phg_dlb::coordinator::{partitioner_by_name, METHOD_NAMES};
+use phg_dlb::partition::PartitionInput;
+use phg_dlb::util::stats::coeff_of_variation;
+
+fn main() {
+    let steps = arg_usize("--steps", 12);
+    let scale = arg_usize("--scale", 3);
+    let nparts = arg_usize("--nparts", 64);
+
+    println!("== Fig 3.2: partition time per adaptive step (p = {nparts}) ==\n");
+    let mut seq = MeshSequence::cylinder(scale, nparts, 400_000);
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = METHOD_NAMES
+        .iter()
+        .map(|m| (m.to_string(), Vec::new()))
+        .collect();
+    let mut sizes = Vec::new();
+
+    for step in 0..steps {
+        let (leaves, weights, owners) = seq.leaves_weights_owners();
+        sizes.push(leaves.len());
+        for (mi, name) in METHOD_NAMES.iter().enumerate() {
+            let p = partitioner_by_name(name).unwrap();
+            let input = PartitionInput::from_mesh(&seq.mesh, &leaves, &weights, &owners, nparts);
+            let t = median_time(3, || {
+                let _ = p.partition(&input);
+            });
+            series[mi].1.push((step as f64, t * 1e3));
+        }
+        if !seq.advance() {
+            break;
+        }
+    }
+
+    // table: per-step partition times
+    print!("{:>5} {:>9}", "step", "elements");
+    for name in METHOD_NAMES {
+        print!(" {name:>12}");
+    }
+    println!("   (ms)");
+    for (i, &n) in sizes.iter().enumerate() {
+        print!("{:>5} {:>9}", i, n);
+        for s in &series {
+            print!(" {:>12.3}", s.1[i].1);
+        }
+        println!();
+    }
+
+    println!("\nsummary (mean ms, oscillation = std/mean):");
+    let mut means: Vec<(String, f64, f64)> = Vec::new();
+    for (name, pts) in &series {
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        means.push((name.clone(), mean, coeff_of_variation(&ys)));
+    }
+    for (name, mean, cv) in &means {
+        println!("  {name:<12} mean {mean:>9.3} ms   cv {cv:>5.2}");
+    }
+
+    // paper-shape checks
+    let get = |n: &str| means.iter().find(|m| m.0 == n).unwrap().1;
+    let shape_ok = get("RTK") < get("MSFC")
+        && get("MSFC") < get("Zoltan/HSFC") * 1.5
+        && get("RTK") < get("ParMETIS")
+        && get("PHG/HSFC") < get("ParMETIS");
+    println!(
+        "\npaper shape (RTK fastest; geometric < ParMETIS): {}",
+        if shape_ok { "REPRODUCED" } else { "DIVERGED (see csv)" }
+    );
+
+    save_csv(
+        "fig3_2_partition_time.csv",
+        &phg_dlb::coordinator::report::format_figure_csv("step", "partition_ms", &series),
+    );
+}

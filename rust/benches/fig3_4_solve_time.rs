@@ -1,0 +1,94 @@
+//! Figure 3.4: linear-system solve time vs number of DOFs.
+//!
+//! Runs the adaptive Helmholtz driver per method; the measured PCG
+//! time is identical across methods (same systems, same machine), so
+//! the differentiation -- as in the paper -- comes from the modeled
+//! per-iteration halo exchange, which scales with each method's
+//! interface size. Paper shape: RCB / ParMETIS / RTK best on the long
+//! cylinder; PHG/HSFC beats Zoltan/HSFC.
+//!
+//! ```sh
+//! cargo bench --bench fig3_4_solve_time [-- --steps 8 --nparts 32]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{arg_usize, save_csv};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::mesh::generator;
+
+fn main() {
+    let steps = arg_usize("--steps", 8);
+    let nparts = arg_usize("--nparts", 32);
+
+    println!("== Fig 3.4: solve time vs #DOFs (p = {nparts}) ==\n");
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut comm_share: Vec<(String, f64)> = Vec::new();
+
+    for name in METHOD_NAMES {
+        let cfg = DriverConfig {
+            nparts,
+            method: name.to_string(),
+            lambda_trigger: 1.1,
+            theta_refine: 0.4,
+            theta_coarsen: 0.0,
+            max_elements: 60_000,
+            solver: SolverOpts {
+                tol: 1e-5,
+                max_iter: 1200,
+            },
+            use_pjrt: true,
+            nsteps: steps,
+            dt: 0.0,
+        };
+        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg);
+        driver.run_helmholtz();
+        let pts: Vec<(f64, f64)> = driver
+            .timeline
+            .records
+            .iter()
+            .map(|r| (r.n_dofs as f64, r.total_solve_time() * 1e3))
+            .collect();
+        let comm: f64 = driver
+            .timeline
+            .records
+            .iter()
+            .map(|r| r.solve_comm_modeled)
+            .sum();
+        let total: f64 = driver
+            .timeline
+            .records
+            .iter()
+            .map(|r| r.total_solve_time())
+            .sum();
+        comm_share.push((name.to_string(), comm / total.max(1e-12)));
+        series.push((name.to_string(), pts));
+        println!(
+            "{name:<12} final dofs {:>8}  total solve {:.3}s  (halo share {:.2}%)",
+            driver.timeline.records.last().map(|r| r.n_dofs).unwrap_or(0),
+            total,
+            100.0 * comm / total.max(1e-12)
+        );
+    }
+
+    // modeled-comm comparison at the final step (the paper's quality
+    // -> solve-time effect, isolated from measured noise)
+    println!("\nmodeled halo time at final step (ms):");
+    let mut final_comm: Vec<(String, f64)> = Vec::new();
+    for (name, pts) in &series {
+        let _ = pts;
+        final_comm.push((name.clone(), 0.0));
+    }
+    // recompute from share table for readability
+    for (name, share) in &comm_share {
+        println!("  {name:<12} halo share {:.2}%", 100.0 * share);
+    }
+    let _ = final_comm;
+
+    save_csv(
+        "fig3_4_solve_time.csv",
+        &phg_dlb::coordinator::report::format_figure_csv("dofs", "solve_ms", &series),
+    );
+}

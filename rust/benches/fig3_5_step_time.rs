@@ -1,0 +1,80 @@
+//! Figure 3.5: total time of each adaptive step (DLB + assembly +
+//! solve + estimate + adapt), per method.
+//!
+//! Paper shape: ordering tracks Fig 3.4 (solve dominates), with the
+//! DLB differences from Fig 3.3 layered on top.
+//!
+//! ```sh
+//! cargo bench --bench fig3_5_step_time [-- --steps 8 --nparts 32]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{arg_usize, save_csv};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::mesh::generator;
+
+fn main() {
+    let steps = arg_usize("--steps", 8);
+    let nparts = arg_usize("--nparts", 32);
+
+    println!("== Fig 3.5: per-adaptive-step time (p = {nparts}) ==\n");
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+
+    for name in METHOD_NAMES {
+        let cfg = DriverConfig {
+            nparts,
+            method: name.to_string(),
+            lambda_trigger: 1.1,
+            theta_refine: 0.4,
+            theta_coarsen: 0.0,
+            max_elements: 60_000,
+            solver: SolverOpts {
+                tol: 1e-5,
+                max_iter: 1200,
+            },
+            use_pjrt: true,
+            nsteps: steps,
+            dt: 0.0,
+        };
+        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg);
+        driver.run_helmholtz();
+        let pts: Vec<(f64, f64)> = driver
+            .timeline
+            .records
+            .iter()
+            .map(|r| (r.step as f64, r.step_time() * 1e3))
+            .collect();
+        series.push((name.to_string(), pts));
+    }
+
+    print!("{:>5}", "step");
+    for name in METHOD_NAMES {
+        print!(" {name:>12}");
+    }
+    println!("   (ms)");
+    let n = series[0].1.len();
+    for i in 0..n {
+        print!("{i:>5}");
+        for s in &series {
+            print!(
+                " {:>12.1}",
+                s.1.get(i).map(|p| p.1).unwrap_or(f64::NAN)
+            );
+        }
+        println!();
+    }
+
+    println!("\ntotal over the run (s):");
+    for (name, pts) in &series {
+        let tot: f64 = pts.iter().map(|p| p.1).sum::<f64>() / 1e3;
+        println!("  {name:<12} {tot:>8.3}");
+    }
+
+    save_csv(
+        "fig3_5_step_time.csv",
+        &phg_dlb::coordinator::report::format_figure_csv("step", "step_ms", &series),
+    );
+}

@@ -1,0 +1,204 @@
+//! §Perf: hot-path microbenchmarks across all three layers.
+//!
+//! L3: SFC key generation, radix sort, the 1-D partitioner, RTK
+//!     end-to-end, graph-partitioner phases, topology build.
+//! L2/L1 (via PJRT): batched element assembly and one cg_step
+//!     iteration at each ladder rung.
+//!
+//! Used before/after every optimization; results are logged in
+//! EXPERIMENTS.md §Perf.
+//!
+//! ```sh
+//! cargo bench --bench perf_hotpath
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{median_time, save_csv};
+use phg_dlb::coordinator::partitioner_by_name;
+use phg_dlb::dist::Distribution;
+use phg_dlb::fem::{assemble, DofMap};
+use phg_dlb::mesh::generator;
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::partition::oned::partition_1d;
+use phg_dlb::partition::sfc::{hilbert::hilbert_key, morton::morton_key, sfc_keys, Curve, Normalization};
+use phg_dlb::partition::PartitionInput;
+use phg_dlb::runtime::Runtime;
+use phg_dlb::util::rng::Pcg32;
+use phg_dlb::util::sort::radix_sort_by_key;
+
+struct Report {
+    rows: Vec<(String, f64, String)>,
+}
+
+impl Report {
+    fn add(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<44} {value:>12.3} {unit}");
+        self.rows.push((name.to_string(), value, unit.to_string()));
+    }
+}
+
+fn main() {
+    let mut rep = Report { rows: Vec::new() };
+    println!("== §Perf hot-path microbenchmarks ==\n");
+
+    // ---------- L3: SFC keys ----------
+    let n = 1_000_000usize;
+    let mut rng = Pcg32::new(42);
+    let coords: Vec<(u32, u32, u32)> = (0..n)
+        .map(|_| {
+            (
+                rng.gen_range(1 << 21) as u32,
+                rng.gen_range(1 << 21) as u32,
+                rng.gen_range(1 << 21) as u32,
+            )
+        })
+        .collect();
+    let t = median_time(3, || {
+        let mut acc = 0u64;
+        for &(x, y, z) in &coords {
+            acc = acc.wrapping_add(morton_key(x, y, z));
+        }
+        std::hint::black_box(acc);
+    });
+    rep.add("morton keys", n as f64 / t / 1e6, "Mkeys/s");
+
+    let t = median_time(3, || {
+        let mut acc = 0u64;
+        for &(x, y, z) in &coords {
+            acc = acc.wrapping_add(hilbert_key(x, y, z));
+        }
+        std::hint::black_box(acc);
+    });
+    rep.add("hilbert keys", n as f64 / t / 1e6, "Mkeys/s");
+
+    // ---------- L3: sorting ----------
+    let base: Vec<(u64, u32)> = (0..n).map(|i| (rng.next_u64(), i as u32)).collect();
+    let t = median_time(3, || {
+        let mut v = base.clone();
+        radix_sort_by_key(&mut v);
+        std::hint::black_box(v.len());
+    });
+    rep.add("radix sort 1M (u64,u32)", n as f64 / t / 1e6, "Mitems/s");
+    let t = median_time(3, || {
+        let mut v = base.clone();
+        v.sort_unstable_by_key(|&(k, _)| k);
+        std::hint::black_box(v.len());
+    });
+    rep.add("std sort 1M (u64,u32)", n as f64 / t / 1e6, "Mitems/s");
+
+    // ---------- L3: 1-D partitioner ----------
+    let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let weights = vec![1.0f64; n];
+    let t = median_time(3, || {
+        let r = partition_1d(&keys, &weights, 64, 8, 1e-4);
+        std::hint::black_box(r.splitters.len());
+    });
+    rep.add("1-D partition 1M items, p=64", n as f64 / t / 1e6, "Mitems/s");
+
+    // ---------- L3: whole partitioners on a real mesh ----------
+    let mut mesh = generator::omega1_cylinder(4);
+    let marked: Vec<_> = mesh
+        .leaves_unordered()
+        .into_iter()
+        .filter(|&id| mesh.centroid(id).x < 3.0)
+        .collect();
+    mesh.refine(&marked);
+    let leaves = mesh.leaves_unordered();
+    let nel = leaves.len();
+    let w = vec![1.0; nel];
+    Distribution::new(64).assign_blocks(&mut mesh, &leaves);
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+
+    for method in ["RTK", "MSFC", "PHG/HSFC", "RCB", "ParMETIS"] {
+        let p = partitioner_by_name(method).unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &w, &owners, 64);
+        let t = median_time(3, || {
+            let r = p.partition(&input);
+            std::hint::black_box(r.parts.len());
+        });
+        rep.add(
+            &format!("partition {method} ({nel} elements, p=64)"),
+            nel as f64 / t / 1e6,
+            "Melem/s",
+        );
+    }
+
+    let t = median_time(3, || {
+        let topo = LeafTopology::build(&mesh);
+        std::hint::black_box(topo.n_interior_faces);
+    });
+    rep.add("topology build", nel as f64 / t / 1e6, "Melem/s");
+
+    let t = median_time(3, || {
+        let k = sfc_keys(&mesh, &leaves, Curve::Hilbert, Normalization::AspectPreserving);
+        std::hint::black_box(k.len());
+    });
+    rep.add("mesh hilbert keys (centroid+key)", nel as f64 / t / 1e6, "Melem/s");
+
+    // ---------- L2/L1 via PJRT ----------
+    match Runtime::open_default() {
+        Err(e) => println!("(PJRT section skipped: {e})"),
+        Ok(rt) => {
+            let topo = LeafTopology::build(&mesh);
+            let dof = DofMap::build(&mesh, &topo);
+            let src = vec![1.0f64; dof.n_dofs];
+
+            let t = median_time(3, || {
+                let a = assemble(&mesh, &topo, &dof, &src, None);
+                std::hint::black_box(a.b.len());
+            });
+            rep.add("assembly native f64", nel as f64 / t / 1e6, "Melem/s");
+
+            let t = median_time(3, || {
+                let a = assemble(&mesh, &topo, &dof, &src, Some(&rt));
+                std::hint::black_box(a.b.len());
+            });
+            rep.add("assembly PJRT batched", nel as f64 / t / 1e6, "Melem/s");
+
+            // cg_step per-iteration cost at each rung
+            for &rung in &rt.cg_ladder() {
+                let wd = rt.ell_width();
+                let mut vals = vec![0.0f32; rung * wd];
+                let mut cols = vec![0i32; rung * wd];
+                let mut dinv = vec![0.0f32; rung];
+                for i in 0..rung {
+                    vals[i * wd] = 2.0;
+                    cols[i * wd] = i as i32;
+                    if i > 0 {
+                        vals[i * wd + 1] = -1.0;
+                        cols[i * wd + 1] = (i - 1) as i32;
+                    }
+                    dinv[i] = 0.5;
+                }
+                let bufs = rt.stage_cg(&vals, &cols, &dinv, rung).unwrap();
+                let x = vec![0.0f32; rung];
+                let r: Vec<f32> = (0..rung).map(|i| (i % 7) as f32).collect();
+                let p: Vec<f32> = r.clone();
+                let rz: f32 = r.iter().map(|v| v * v).sum();
+                let t = median_time(5, || {
+                    let o = bufs.step(&x, &r, &p, rz).unwrap();
+                    std::hint::black_box(o.rnorm2);
+                });
+                rep.add(
+                    &format!("cg_step PJRT n={rung}"),
+                    t * 1e3,
+                    "ms/iter",
+                );
+                // effective SpMV throughput: 2*n*w flops
+                rep.add(
+                    &format!("  -> spmv throughput n={rung}"),
+                    2.0 * rung as f64 * wd as f64 / t / 1e9,
+                    "GFLOP/s",
+                );
+            }
+        }
+    }
+
+    let mut csv = String::from("bench,value,unit\n");
+    for (n, v, u) in &rep.rows {
+        csv.push_str(&format!("{n},{v},{u}\n"));
+    }
+    save_csv("perf_hotpath.csv", &csv);
+}

@@ -1,0 +1,147 @@
+//! Marking strategies: which elements to refine (or coarsen) given
+//! per-element indicators. PHG ships the same family (max-strategy,
+//! Doerfler bulk criterion, top-fraction); see Liu & Zhang 2009.
+
+use crate::mesh::ElemId;
+
+/// Max strategy: mark every element with eta >= theta * max(eta).
+pub fn mark_max(leaves: &[ElemId], eta: &[f64], theta: f64) -> Vec<ElemId> {
+    assert_eq!(leaves.len(), eta.len());
+    let max = eta.iter().cloned().fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return Vec::new();
+    }
+    let cut = theta * max;
+    leaves
+        .iter()
+        .zip(eta)
+        .filter(|(_, &e)| e >= cut)
+        .map(|(&id, _)| id)
+        .collect()
+}
+
+/// Doerfler (bulk) criterion: smallest set carrying `theta` of the
+/// total squared indicator.
+pub fn mark_dorfler(leaves: &[ElemId], eta: &[f64], theta: f64) -> Vec<ElemId> {
+    assert_eq!(leaves.len(), eta.len());
+    let total2: f64 = eta.iter().map(|e| e * e).sum();
+    if total2 <= 0.0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..leaves.len()).collect();
+    order.sort_by(|&a, &b| eta[b].partial_cmp(&eta[a]).unwrap());
+    let mut acc = 0.0;
+    let mut out = Vec::new();
+    for i in order {
+        if acc >= theta * total2 {
+            break;
+        }
+        acc += eta[i] * eta[i];
+        out.push(leaves[i]);
+    }
+    out
+}
+
+/// Mark the top `frac` fraction of elements by indicator.
+pub fn mark_top_fraction(leaves: &[ElemId], eta: &[f64], frac: f64) -> Vec<ElemId> {
+    assert_eq!(leaves.len(), eta.len());
+    let k = ((leaves.len() as f64 * frac).ceil() as usize).min(leaves.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..leaves.len()).collect();
+    order.sort_by(|&a, &b| eta[b].partial_cmp(&eta[a]).unwrap());
+    order[..k].iter().map(|&i| leaves[i]).collect()
+}
+
+/// Coarsening marks: every element with eta <= theta * max(eta).
+/// (Used by the time-dependent example where the feature moves away.)
+pub fn mark_coarsen_threshold(leaves: &[ElemId], eta: &[f64], theta: f64) -> Vec<ElemId> {
+    assert_eq!(leaves.len(), eta.len());
+    let max = eta.iter().cloned().fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return leaves.to_vec();
+    }
+    let cut = theta * max;
+    leaves
+        .iter()
+        .zip(eta)
+        .filter(|(_, &e)| e <= cut)
+        .map(|(&id, _)| id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Vec<ElemId>, Vec<f64>) {
+        let leaves: Vec<ElemId> = (0..10).collect();
+        let eta = vec![0.1, 0.9, 0.2, 1.0, 0.05, 0.3, 0.8, 0.01, 0.5, 0.02];
+        (leaves, eta)
+    }
+
+    #[test]
+    fn max_strategy_thresholds() {
+        let (leaves, eta) = setup();
+        let marked = mark_max(&leaves, &eta, 0.75);
+        // threshold 0.75: elements with eta >= 0.75 -> ids 1, 3, 6
+        assert_eq!(marked, vec![1, 3, 6]);
+    }
+
+    #[test]
+    fn max_strategy_theta_zero_marks_all() {
+        let (leaves, eta) = setup();
+        assert_eq!(mark_max(&leaves, &eta, 0.0).len(), leaves.len());
+    }
+
+    #[test]
+    fn max_strategy_empty_on_zero_eta() {
+        let leaves: Vec<ElemId> = (0..3).collect();
+        assert!(mark_max(&leaves, &[0.0, 0.0, 0.0], 0.5).is_empty());
+    }
+
+    #[test]
+    fn dorfler_carries_bulk() {
+        let (leaves, eta) = setup();
+        let marked = mark_dorfler(&leaves, &eta, 0.5);
+        let marked_set: std::collections::HashSet<_> = marked.iter().collect();
+        let tot: f64 = eta.iter().map(|e| e * e).sum();
+        let got: f64 = leaves
+            .iter()
+            .zip(&eta)
+            .filter(|(id, _)| marked_set.contains(id))
+            .map(|(_, e)| e * e)
+            .sum();
+        assert!(got >= 0.5 * tot);
+        // and it is minimal-ish: dropping the smallest marked element
+        // would fall below the bulk
+        assert!(marked.len() <= 4);
+    }
+
+    #[test]
+    fn top_fraction_counts() {
+        let (leaves, eta) = setup();
+        assert_eq!(mark_top_fraction(&leaves, &eta, 0.3).len(), 3);
+        assert_eq!(mark_top_fraction(&leaves, &eta, 1.0).len(), 10);
+        assert!(mark_top_fraction(&leaves, &eta, 0.0).is_empty());
+    }
+
+    #[test]
+    fn top_fraction_picks_largest() {
+        let (leaves, eta) = setup();
+        let marked = mark_top_fraction(&leaves, &eta, 0.2);
+        assert!(marked.contains(&3)); // eta = 1.0
+        assert!(marked.contains(&1)); // eta = 0.9
+    }
+
+    #[test]
+    fn coarsen_marks_smallest() {
+        let (leaves, eta) = setup();
+        let marked = mark_coarsen_threshold(&leaves, &eta, 0.05);
+        assert!(marked.contains(&7)); // 0.01
+        assert!(marked.contains(&9)); // 0.02
+        assert!(marked.contains(&4)); // 0.05
+        assert!(!marked.contains(&3)); // 1.0
+    }
+}

@@ -1,0 +1,12 @@
+//! Adaptivity: a-posteriori error estimation and marking strategies.
+//!
+//! The paper's experiments drive refinement with residual-based
+//! estimators over P1 FEM solutions (example 3.1) and refine+coarsen
+//! around a moving solution feature (example 3.2). Both drivers live
+//! here; the coordinator composes them with the DLB machinery.
+
+pub mod estimator;
+pub mod marking;
+
+pub use estimator::{geometric_indicator, residual_indicator};
+pub use marking::{mark_coarsen_threshold, mark_dorfler, mark_max, mark_top_fraction};

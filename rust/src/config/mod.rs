@@ -1,0 +1,185 @@
+//! Configuration: a tiny `key = value` file format (TOML subset --
+//! no external crates in this environment) plus command-line
+//! `--key value` overrides. The launcher (`main.rs`) and the benches
+//! build [`crate::coordinator::DriverConfig`]s from this.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Parsed configuration: flat string map with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key = value` lines; `#` comments; blank lines ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            values.insert(
+                k.trim().to_string(),
+                v.trim().trim_matches('"').to_string(),
+            );
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply `--key value` style overrides (leading dashes stripped).
+    pub fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut rest = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow!("missing value for --{key}"))?;
+                self.values.insert(key.replace('-', "_"), v.clone());
+            } else {
+                rest.push(a.clone());
+            }
+        }
+        Ok(rest)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("config {key} = {v}: expected integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("config {key} = {v}: expected float")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow!("config {key} = {v}: expected bool")),
+        }
+    }
+
+    /// Build a DriverConfig with config-file defaults + overrides.
+    pub fn driver_config(&self) -> Result<crate::coordinator::DriverConfig> {
+        use crate::fem::SolverOpts;
+        Ok(crate::coordinator::DriverConfig {
+            nparts: self.get_usize("nparts", 16)?,
+            method: self.get_str("method", "PHG/HSFC"),
+            lambda_trigger: self.get_f64("lambda_trigger", 1.2)?,
+            theta_refine: self.get_f64("theta_refine", 0.5)?,
+            theta_coarsen: self.get_f64("theta_coarsen", 0.0)?,
+            max_elements: self.get_usize("max_elements", 200_000)?,
+            solver: SolverOpts {
+                tol: self.get_f64("solver_tol", 1e-6)?,
+                max_iter: self.get_usize("solver_max_iter", 2000)?,
+            },
+            use_pjrt: self.get_bool("use_pjrt", true)?,
+            nsteps: self.get_usize("nsteps", 10)?,
+            dt: self.get_f64("dt", 1e-3)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basics() {
+        let c = Config::parse(
+            "# scenario\nnparts = 32\nmethod = \"RTK\"\nlambda_trigger = 1.3\nuse_pjrt = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("nparts", 0).unwrap(), 32);
+        assert_eq!(c.get_str("method", ""), "RTK");
+        assert_eq!(c.get_f64("lambda_trigger", 0.0).unwrap(), 1.3);
+        assert!(!c.get_bool("use_pjrt", true).unwrap());
+    }
+
+    #[test]
+    fn defaults_on_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("absent", 7).unwrap(), 7);
+        assert_eq!(c.get_str("absent", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_bad_lines_and_types() {
+        assert!(Config::parse("no_equals_here\n").is_err());
+        let c = Config::parse("nparts = banana\n").unwrap();
+        assert!(c.get_usize("nparts", 1).is_err());
+        let c = Config::parse("flag = maybe\n").unwrap();
+        assert!(c.get_bool("flag", true).is_err());
+    }
+
+    #[test]
+    fn args_override_and_passthrough() {
+        let mut c = Config::parse("nparts = 8\n").unwrap();
+        let rest = c
+            .apply_args(&[
+                "run".to_string(),
+                "--nparts".to_string(),
+                "64".to_string(),
+                "--method".to_string(),
+                "RCB".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(rest, vec!["run"]);
+        assert_eq!(c.get_usize("nparts", 0).unwrap(), 64);
+        assert_eq!(c.get_str("method", ""), "RCB");
+    }
+
+    #[test]
+    fn dashes_normalize_to_underscores() {
+        let mut c = Config::new();
+        c.apply_args(&["--lambda-trigger".into(), "1.5".into()])
+            .unwrap();
+        assert_eq!(c.get_f64("lambda_trigger", 0.0).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn driver_config_roundtrip() {
+        let c = Config::parse("nparts = 12\nmethod = RCB\nnsteps = 5\n").unwrap();
+        let d = c.driver_config().unwrap();
+        assert_eq!(d.nparts, 12);
+        assert_eq!(d.method, "RCB");
+        assert_eq!(d.nsteps, 5);
+        assert_eq!(d.lambda_trigger, 1.2); // default
+    }
+}

@@ -1,0 +1,140 @@
+//! Report emitters: ASCII tables in the paper's format, plus CSV
+//! series for the figures. The bench targets print these.
+
+use super::timeline::Timeline;
+
+/// A row of the paper's Table 1 (total running time + repartitionings).
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub method: String,
+    pub total_time: f64,
+    pub repartitionings: usize,
+}
+
+pub fn format_table1(rows: &[Table1Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>22} {:>22}\n",
+        "Method", "total running time(s)", "# of repartitionings"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>22.2} {:>22}\n",
+            r.method, r.total_time, r.repartitionings
+        ));
+    }
+    out
+}
+
+/// A row of the paper's Tables 2/3 (TAL / DLB / SOL / STP).
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub method: String,
+    pub tal: f64,
+    pub dlb: f64,
+    pub sol: f64,
+    pub stp: f64,
+}
+
+impl Table2Row {
+    pub fn from_timeline(method: &str, tl: &Timeline) -> Self {
+        let (tal, dlb, sol, stp) = tl.table_columns();
+        Self {
+            method: method.to_string(),
+            tal,
+            dlb,
+            sol,
+            stp,
+        }
+    }
+}
+
+pub fn format_table2(rows: &[Table2Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12}\n",
+        "Method", "Time TAL(s)", "Time DLB(s)", "Time SOL(s)", "Time STP(s)"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>12.4} {:>12.4} {:>12.4} {:>12.4}\n",
+            r.method, r.tal, r.dlb, r.sol, r.stp
+        ));
+    }
+    out
+}
+
+/// Figure series: one (x, y) column pair per method, CSV.
+pub fn format_figure_csv(
+    xlabel: &str,
+    ylabel: &str,
+    series: &[(String, Vec<(f64, f64)>)],
+) -> String {
+    let mut out = format!("method,{xlabel},{ylabel}\n");
+    for (name, pts) in series {
+        for (x, y) in pts {
+            out.push_str(&format!("{name},{x},{y}\n"));
+        }
+    }
+    out
+}
+
+/// Write a report file under out/ (created if needed).
+pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_formats() {
+        let rows = vec![
+            Table1Row {
+                method: "RCB".into(),
+                total_time: 3049.60,
+                repartitionings: 60,
+            },
+            Table1Row {
+                method: "RTK".into(),
+                total_time: 3465.63,
+                repartitionings: 59,
+            },
+        ];
+        let s = format_table1(&rows);
+        assert!(s.contains("RCB"));
+        assert!(s.contains("3049.60"));
+        assert!(s.contains("59"));
+    }
+
+    #[test]
+    fn table2_formats() {
+        let rows = vec![Table2Row {
+            method: "PHG/HSFC".into(),
+            tal: 6525.0,
+            dlb: 0.0734,
+            sol: 0.1886,
+            stp: 0.9192,
+        }];
+        let s = format_table2(&rows);
+        assert!(s.contains("PHG/HSFC"));
+        assert!(s.contains("0.0734"));
+        assert!(s.contains("Time STP"));
+    }
+
+    #[test]
+    fn figure_csv_shape() {
+        let series = vec![
+            ("RTK".to_string(), vec![(1.0, 0.1), (2.0, 0.2)]),
+            ("RCB".to_string(), vec![(1.0, 0.3)]),
+        ];
+        let csv = format_figure_csv("step", "seconds", &series);
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("method,step,seconds"));
+    }
+}

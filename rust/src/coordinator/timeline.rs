@@ -1,0 +1,229 @@
+//! Per-step records of the adaptive computation: everything the
+//! paper's figures and tables aggregate (partition time, DLB time,
+//! solve time, step time, repartition counts, quality metrics).
+
+use crate::partition::metrics::MigrationVolume;
+
+/// One adaptive (or time) step's accounting. Times in seconds;
+/// `*_modeled` are alpha-beta network charges, the rest is measured
+/// wall clock.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    /// virtual process count (for SPMD scaling of measured compute)
+    pub nparts: usize,
+    pub n_elements: usize,
+    pub n_dofs: usize,
+    /// load imbalance before any DLB this step
+    pub imbalance_before: f64,
+    pub imbalance_after: f64,
+    pub repartitioned: bool,
+    /// measured partitioner wall time
+    pub partition_time: f64,
+    /// modeled collectives of the partitioner + remap
+    pub partition_comm_modeled: f64,
+    /// measured remap+migrate restructuring time
+    pub migrate_time: f64,
+    /// modeled migration network time
+    pub migrate_modeled: f64,
+    pub migration: Option<MigrationVolume>,
+    /// fraction of data kept in place by the Oliker-Biswas remap
+    pub remap_kept_fraction: f64,
+    pub interface_faces: usize,
+    pub assemble_time: f64,
+    /// measured solver wall time
+    pub solve_time: f64,
+    /// modeled halo-exchange time over all CG iterations
+    pub solve_comm_modeled: f64,
+    pub solve_iterations: usize,
+    pub estimate_time: f64,
+    pub adapt_time: f64,
+    pub l2_error: f64,
+    pub max_error: f64,
+}
+
+impl StepRecord {
+    pub fn new(step: usize) -> Self {
+        Self {
+            step,
+            nparts: 1,
+            n_elements: 0,
+            n_dofs: 0,
+            imbalance_before: 1.0,
+            imbalance_after: 1.0,
+            repartitioned: false,
+            partition_time: 0.0,
+            partition_comm_modeled: 0.0,
+            migrate_time: 0.0,
+            migrate_modeled: 0.0,
+            migration: None,
+            remap_kept_fraction: 1.0,
+            interface_faces: 0,
+            assemble_time: 0.0,
+            solve_time: 0.0,
+            solve_comm_modeled: 0.0,
+            solve_iterations: 0,
+            estimate_time: 0.0,
+            adapt_time: 0.0,
+            l2_error: 0.0,
+            max_error: 0.0,
+        }
+    }
+
+    /// DLB time: partitioning + remap/migration, measured + modeled
+    /// (the quantity of Fig 3.3).
+    pub fn dlb_time(&self) -> f64 {
+        self.partition_time + self.partition_comm_modeled + self.migrate_time + self.migrate_modeled
+    }
+
+    /// Parallel solve time (Fig 3.4 / the SOL column): the measured
+    /// single-address-space solve is divided by the virtual process
+    /// count (perfect compute scaling -- the substitution documented in
+    /// DESIGN.md §3), then the partition-dependent modeled halo time is
+    /// added. This is where partition quality shows up, as in the paper.
+    pub fn total_solve_time(&self) -> f64 {
+        self.solve_time / self.nparts.max(1) as f64 + self.solve_comm_modeled
+    }
+
+    /// Parallel assembly/estimate/adapt compute, same SPMD scaling.
+    fn scaled_local(&self, t: f64) -> f64 {
+        t / self.nparts.max(1) as f64
+    }
+
+    /// Whole-step time (Fig 3.5 / the STP column): DLB (measured
+    /// partition + modeled collectives + migration) plus the SPMD-scaled
+    /// local phases.
+    pub fn step_time(&self) -> f64 {
+        self.dlb_time()
+            + self.scaled_local(self.assemble_time + self.estimate_time + self.adapt_time)
+            + self.total_solve_time()
+    }
+}
+
+/// The whole run.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub records: Vec<StepRecord>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn repartition_count(&self) -> usize {
+        self.records.iter().filter(|r| r.repartitioned).count()
+    }
+
+    /// The paper's table columns: (TAL, mean DLB, mean SOL, mean STP).
+    pub fn table_columns(&self) -> (f64, f64, f64, f64) {
+        let n = self.records.len().max(1) as f64;
+        let tal: f64 = self.records.iter().map(|r| r.step_time()).sum();
+        let dlb: f64 = self.records.iter().map(|r| r.dlb_time()).sum::<f64>() / n;
+        let sol: f64 = self
+            .records
+            .iter()
+            .map(|r| r.total_solve_time())
+            .sum::<f64>()
+            / n;
+        let stp = tal / n;
+        (tal, dlb, sol, stp)
+    }
+
+    /// CSV dump (one row per step) for the figure benches.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "step,n_elements,n_dofs,imbalance_before,imbalance_after,repartitioned,\
+             partition_time,partition_comm_modeled,migrate_time,migrate_modeled,\
+             moved_fraction,remap_kept_fraction,interface_faces,assemble_time,\
+             solve_time,solve_comm_modeled,solve_iterations,estimate_time,adapt_time,\
+             dlb_time,step_time,l2_error,max_error\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{:.4},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{:.6},{:.3e},{:.3e}\n",
+                r.step,
+                r.n_elements,
+                r.n_dofs,
+                r.imbalance_before,
+                r.imbalance_after,
+                r.repartitioned as u8,
+                r.partition_time,
+                r.partition_comm_modeled,
+                r.migrate_time,
+                r.migrate_modeled,
+                r.migration.map(|m| m.moved_fraction).unwrap_or(0.0),
+                r.remap_kept_fraction,
+                r.interface_faces,
+                r.assemble_time,
+                r.solve_time,
+                r.solve_comm_modeled,
+                r.solve_iterations,
+                r.estimate_time,
+                r.adapt_time,
+                r.dlb_time(),
+                r.step_time(),
+                r.l2_error,
+                r.max_error,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_time_is_sum_of_phases() {
+        let mut r = StepRecord::new(0);
+        r.partition_time = 1.0;
+        r.migrate_time = 2.0;
+        r.migrate_modeled = 0.5;
+        r.assemble_time = 3.0;
+        r.solve_time = 4.0;
+        r.solve_comm_modeled = 0.25;
+        r.estimate_time = 0.5;
+        r.adapt_time = 0.5;
+        assert!((r.dlb_time() - 3.5).abs() < 1e-12);
+        assert!((r.total_solve_time() - 4.25).abs() < 1e-12);
+        assert!((r.step_time() - 11.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_columns_aggregate() {
+        let mut tl = Timeline::new();
+        for i in 0..4 {
+            let mut r = StepRecord::new(i);
+            r.solve_time = 1.0;
+            r.partition_time = 0.5;
+            r.repartitioned = i % 2 == 0;
+            tl.push(r);
+        }
+        let (tal, dlb, sol, stp) = tl.table_columns();
+        assert!((tal - 6.0).abs() < 1e-12);
+        assert!((dlb - 0.5).abs() < 1e-12);
+        assert!((sol - 1.0).abs() < 1e-12);
+        assert!((stp - 1.5).abs() < 1e-12);
+        assert_eq!(tl.repartition_count(), 2);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut tl = Timeline::new();
+        tl.push(StepRecord::new(0));
+        let csv = tl.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0].split(',').count(),
+            lines[1].split(',').count(),
+            "header/row column mismatch"
+        );
+    }
+}

@@ -1,0 +1,269 @@
+//! P1 FEM assembly: element matrices -> global CSR stiffness K, mass M
+//! and load vector b.
+//!
+//! Two element-matrix engines with identical math:
+//! * **PJRT** -- batched through the `elem_tet` artifact (the L1 Pallas
+//!   kernel), f32; the production hot path.
+//! * **native** -- straight f64 Rust, used as the correctness oracle
+//!   and as fallback when artifacts are absent.
+
+use super::csr::Csr;
+use super::dof::DofMap;
+use crate::geometry::Vec3;
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::TetMesh;
+use crate::runtime::Runtime;
+
+/// Element stiffness/mass/load in f64 (native engine; mirrors
+/// python/compile/kernels/elem_tet.py exactly).
+pub fn elem_matrices(c: &[Vec3; 4], f: &[f64; 4]) -> ([f64; 16], [f64; 16], [f64; 4]) {
+    let d1 = c[1] - c[0];
+    let d2 = c[2] - c[0];
+    let d3 = c[3] - c[0];
+    let c23 = d2.cross(d3);
+    let c31 = d3.cross(d1);
+    let c12 = d1.cross(d2);
+    let det = d1.dot(c23);
+    let mut k = [0.0; 16];
+    let mut m = [0.0; 16];
+    let mut b = [0.0; 4];
+    if det.abs() < 1e-300 {
+        return (k, m, b);
+    }
+    let vol = det.abs() / 6.0;
+    let g1 = c23 / det;
+    let g2 = c31 / det;
+    let g3 = c12 / det;
+    let g0 = -(g1 + g2 + g3);
+    let g = [g0, g1, g2, g3];
+    for i in 0..4 {
+        for j in 0..4 {
+            k[i * 4 + j] = vol * g[i].dot(g[j]);
+            m[i * 4 + j] = vol / 20.0 * if i == j { 2.0 } else { 1.0 };
+        }
+    }
+    for i in 0..4 {
+        for j in 0..4 {
+            b[i] += m[i * 4 + j] * f[j];
+        }
+    }
+    (k, m, b)
+}
+
+/// Assembled global system (no boundary conditions applied yet).
+#[derive(Debug, Clone)]
+pub struct Assembled {
+    pub k: Csr,
+    pub m: Csr,
+    pub b: Vec<f64>,
+}
+
+/// Assemble K, M, b over the current leaves. `source` is evaluated at
+/// vertices (P1 interpolation of f, matching the L2 graph).
+/// When `rt` is Some, element matrices come from the PJRT artifact.
+pub fn assemble(
+    mesh: &TetMesh,
+    topo: &LeafTopology,
+    dof: &DofMap,
+    source: &[f64],
+    rt: Option<&Runtime>,
+) -> Assembled {
+    assert_eq!(source.len(), dof.n_dofs);
+    let nel = topo.leaves.len();
+    let n = dof.n_dofs;
+    let mut kt: Vec<(u32, u32, f64)> = Vec::with_capacity(nel * 16);
+    let mut mt: Vec<(u32, u32, f64)> = Vec::with_capacity(nel * 16);
+    let mut b = vec![0.0f64; n];
+
+    // per-element dof indices
+    let elem_dofs: Vec<[u32; 4]> = topo
+        .leaves
+        .iter()
+        .map(|&id| {
+            let v = mesh.elem(id).verts;
+            [
+                dof.dof_of_vertex[v[0] as usize],
+                dof.dof_of_vertex[v[1] as usize],
+                dof.dof_of_vertex[v[2] as usize],
+                dof.dof_of_vertex[v[3] as usize],
+            ]
+        })
+        .collect();
+
+    let scatter = |kt: &mut Vec<(u32, u32, f64)>,
+                   mt: &mut Vec<(u32, u32, f64)>,
+                   b: &mut Vec<f64>,
+                   e: usize,
+                   ke: &[f64],
+                   me: &[f64],
+                   be: &[f64]| {
+        let dofs = &elem_dofs[e];
+        for i in 0..4 {
+            b[dofs[i] as usize] += be[i];
+            for j in 0..4 {
+                kt.push((dofs[i], dofs[j], ke[i * 4 + j]));
+                mt.push((dofs[i], dofs[j], me[i * 4 + j]));
+            }
+        }
+    };
+
+    let mut used_pjrt = false;
+    if let Some(rt) = rt {
+        // batched artifact path, chunked by the largest ladder rung
+        let ladder = rt.elem_ladder();
+        if let Some(&max_rung) = ladder.last() {
+            used_pjrt = true;
+            let mut e0 = 0usize;
+            while e0 < nel {
+                // greedy-down chunking (#Perf): take the largest rung
+                // that fits the remainder so padding waste is bounded
+                // by one sub-rung instead of rung/2 of dead elements
+                let remaining = nel - e0;
+                let chunk = ladder
+                    .iter()
+                    .rev()
+                    .find(|&&r| r <= remaining)
+                    .copied()
+                    .unwrap_or(remaining)
+                    .min(max_rung);
+                let mut coords = Vec::with_capacity(chunk * 12);
+                let mut fvals = Vec::with_capacity(chunk * 4);
+                for e in e0..e0 + chunk {
+                    let c = mesh.elem_coords(topo.leaves[e]);
+                    for p in &c {
+                        coords.extend_from_slice(&[p.x as f32, p.y as f32, p.z as f32]);
+                    }
+                    for d in &elem_dofs[e] {
+                        fvals.push(source[*d as usize] as f32);
+                    }
+                }
+                let out = rt
+                    .elem_tet(&coords, &fvals, chunk)
+                    .expect("elem_tet artifact execution failed");
+                // scatter straight from the f32 buffers (#Perf: the
+                // per-element Vec<f64> temporaries tripled allocation
+                // pressure in this loop)
+                for e in 0..chunk {
+                    let dofs = &elem_dofs[e0 + e];
+                    let ko = e * 16;
+                    let bo = e * 4;
+                    for i in 0..4 {
+                        b[dofs[i] as usize] += out.b[bo + i] as f64;
+                        for j in 0..4 {
+                            kt.push((dofs[i], dofs[j], out.k[ko + i * 4 + j] as f64));
+                            mt.push((dofs[i], dofs[j], out.m[ko + i * 4 + j] as f64));
+                        }
+                    }
+                }
+                e0 += chunk;
+            }
+        }
+    }
+    if !used_pjrt {
+        for e in 0..nel {
+            let c = mesh.elem_coords(topo.leaves[e]);
+            let dofs = &elem_dofs[e];
+            let f = [
+                source[dofs[0] as usize],
+                source[dofs[1] as usize],
+                source[dofs[2] as usize],
+                source[dofs[3] as usize],
+            ];
+            let (ke, me, be) = elem_matrices(&c, &f);
+            scatter(&mut kt, &mut mt, &mut b, e, &ke, &me, &be);
+        }
+    }
+
+    Assembled {
+        k: Csr::from_triplets(n, kt),
+        m: Csr::from_triplets(n, mt),
+        b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator::cube_mesh;
+
+    fn setup() -> (TetMesh, LeafTopology, DofMap) {
+        let mut m = cube_mesh(2);
+        m.refine(&m.leaves_unordered());
+        let topo = LeafTopology::build(&m);
+        let dof = DofMap::build(&m, &topo);
+        (m, topo, dof)
+    }
+
+    #[test]
+    fn stiffness_kernel_contains_constants() {
+        let (m, topo, dof) = setup();
+        let src = vec![0.0; dof.n_dofs];
+        let a = assemble(&m, &topo, &dof, &src, None);
+        // K * 1 = 0
+        let ones = vec![1.0; dof.n_dofs];
+        let mut y = vec![0.0; dof.n_dofs];
+        a.k.spmv(&ones, &mut y);
+        for v in y {
+            assert!(v.abs() < 1e-10, "K*1 component {v}");
+        }
+    }
+
+    #[test]
+    fn mass_total_is_volume() {
+        let (m, topo, dof) = setup();
+        let src = vec![0.0; dof.n_dofs];
+        let a = assemble(&m, &topo, &dof, &src, None);
+        let ones = vec![1.0; dof.n_dofs];
+        let mut y = vec![0.0; dof.n_dofs];
+        a.m.spmv(&ones, &mut y);
+        let total: f64 = y.iter().sum();
+        assert!((total - 1.0).abs() < 1e-10, "1' M 1 = {total}");
+    }
+
+    #[test]
+    fn load_is_mass_times_source() {
+        let (m, topo, dof) = setup();
+        let src = dof.eval_at_dofs(&m, |p| p.x + p.y * p.z);
+        let a = assemble(&m, &topo, &dof, &src, None);
+        let mut y = vec![0.0; dof.n_dofs];
+        a.m.spmv(&src, &mut y);
+        for (bi, yi) in a.b.iter().zip(&y) {
+            assert!((bi - yi).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn stiffness_energy_of_linear_field() {
+        // u = x: u' K u = int |grad u|^2 = volume = 1
+        let (m, topo, dof) = setup();
+        let src = vec![0.0; dof.n_dofs];
+        let a = assemble(&m, &topo, &dof, &src, None);
+        let u = dof.eval_at_dofs(&m, |p| p.x);
+        let mut y = vec![0.0; dof.n_dofs];
+        a.k.spmv(&u, &mut y);
+        let energy: f64 = u.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((energy - 1.0).abs() < 1e-10, "energy {energy}");
+    }
+
+    #[test]
+    fn pjrt_assembly_matches_native() {
+        let Ok(rt) = Runtime::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (m, topo, dof) = setup();
+        let src = dof.eval_at_dofs(&m, |p| (p.x * 7.0).sin());
+        let native = assemble(&m, &topo, &dof, &src, None);
+        let pjrt = assemble(&m, &topo, &dof, &src, Some(&rt));
+        assert_eq!(native.k.nnz(), pjrt.k.nnz());
+        let mut max_rel = 0.0f64;
+        for (a, b) in native.k.vals.iter().zip(&pjrt.k.vals) {
+            let rel = (a - b).abs() / a.abs().max(1e-3);
+            max_rel = max_rel.max(rel);
+        }
+        assert!(max_rel < 5e-4, "K mismatch rel {max_rel}");
+        for (a, b) in native.b.iter().zip(&pjrt.b) {
+            assert!((a - b).abs() < 1e-5, "b mismatch {a} vs {b}");
+        }
+    }
+}

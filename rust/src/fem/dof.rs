@@ -1,0 +1,217 @@
+//! P1 degree-of-freedom management: one DoF per active vertex, with
+//! boundary detection for Dirichlet conditions.
+
+use crate::mesh::topology::{LeafTopology, FACES};
+use crate::mesh::{TetMesh, NONE};
+use crate::util::hash::FxHashMap;
+
+#[derive(Debug, Clone)]
+pub struct DofMap {
+    /// dense dof index per vertex id (u32::MAX = inactive vertex)
+    pub dof_of_vertex: Vec<u32>,
+    /// vertex id per dof
+    pub vertex_of_dof: Vec<u32>,
+    /// dofs on the domain boundary (Dirichlet set)
+    pub on_boundary: Vec<bool>,
+    pub n_dofs: usize,
+}
+
+impl DofMap {
+    /// Build over the current leaves: active vertices in first-seen
+    /// order, boundary = vertices of unshared faces.
+    pub fn build(mesh: &TetMesh, topo: &LeafTopology) -> Self {
+        let mut dof_of_vertex = vec![u32::MAX; mesh.vertices.len()];
+        let mut vertex_of_dof = Vec::new();
+        for &id in &topo.leaves {
+            for &v in &mesh.elem(id).verts {
+                if dof_of_vertex[v as usize] == u32::MAX {
+                    dof_of_vertex[v as usize] = vertex_of_dof.len() as u32;
+                    vertex_of_dof.push(v);
+                }
+            }
+        }
+        let n_dofs = vertex_of_dof.len();
+        let mut on_boundary = vec![false; n_dofs];
+        for (i, &id) in topo.leaves.iter().enumerate() {
+            let verts = mesh.elem(id).verts;
+            for (fi, f) in FACES.iter().enumerate() {
+                if topo.neighbors[i][fi] == NONE {
+                    for &lv in f {
+                        let v = verts[lv as usize];
+                        on_boundary[dof_of_vertex[v as usize] as usize] = true;
+                    }
+                }
+            }
+        }
+        Self {
+            dof_of_vertex,
+            vertex_of_dof,
+            on_boundary,
+            n_dofs,
+        }
+    }
+
+    /// Evaluate a function at every dof's vertex position.
+    pub fn eval_at_dofs(
+        &self,
+        mesh: &TetMesh,
+        f: impl Fn(crate::geometry::Vec3) -> f64,
+    ) -> Vec<f64> {
+        self.vertex_of_dof
+            .iter()
+            .map(|&v| f(mesh.vertices[v as usize]))
+            .collect()
+    }
+
+    /// Transfer a dof vector from an old dof map to this one by vertex
+    /// identity (new vertices get `fill`); the P1 "interpolate to the
+    /// adapted mesh" operation used between adaptive steps. New
+    /// midpoint vertices get the mean of their edge endpoints when
+    /// both are known, else `fill`.
+    pub fn transfer_from(
+        &self,
+        old: &DofMap,
+        old_vals: &[f64],
+        mesh: &TetMesh,
+        fill: f64,
+    ) -> Vec<f64> {
+        let mut out = vec![f64::NAN; self.n_dofs];
+        let mut known = vec![false; self.n_dofs];
+        for (d, &v) in self.vertex_of_dof.iter().enumerate() {
+            let od = old.dof_of_vertex.get(v as usize).copied().unwrap_or(u32::MAX);
+            if od != u32::MAX && (od as usize) < old_vals.len() {
+                out[d] = old_vals[od as usize];
+                known[d] = true;
+            }
+        }
+        // midpoints: average parents when both known (walk refinement
+        // forest midpoint info via elems is costly; geometric fallback:
+        // leave at fill). P1 interpolation exactness for linears is
+        // kept by the vertex-identity path; new vertices only appear
+        // at edge midpoints whose endpoints existed, so one pass over
+        // leaf edges finds them.
+        let mut vert_dofs: FxHashMap<u32, u32> = FxHashMap::default();
+        for (d, &v) in self.vertex_of_dof.iter().enumerate() {
+            vert_dofs.insert(v, d as u32);
+        }
+        for e in mesh.elems.iter() {
+            if e.dead || e.children[0] == NONE || e.mid_vertex == NONE {
+                continue;
+            }
+            if let Some(&md) = vert_dofs.get(&e.mid_vertex) {
+                let md = md as usize;
+                if !known[md] {
+                    let (a, b) = e.refine_edge();
+                    let da = old
+                        .dof_of_vertex
+                        .get(a as usize)
+                        .copied()
+                        .unwrap_or(u32::MAX);
+                    let db = old
+                        .dof_of_vertex
+                        .get(b as usize)
+                        .copied()
+                        .unwrap_or(u32::MAX);
+                    if da != u32::MAX && db != u32::MAX {
+                        out[md] = 0.5 * (old_vals[da as usize] + old_vals[db as usize]);
+                        known[md] = true;
+                    }
+                }
+            }
+        }
+        for (d, k) in known.iter().enumerate() {
+            if !k {
+                out[d] = fill;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator::cube_mesh;
+
+    #[test]
+    fn counts_match_active_vertices() {
+        let m = cube_mesh(2);
+        let topo = LeafTopology::build(&m);
+        let dof = DofMap::build(&m, &topo);
+        assert_eq!(dof.n_dofs, 27); // 3^3 grid vertices
+        assert_eq!(dof.vertex_of_dof.len(), 27);
+    }
+
+    #[test]
+    fn boundary_detection_on_cube() {
+        let m = cube_mesh(2);
+        let topo = LeafTopology::build(&m);
+        let dof = DofMap::build(&m, &topo);
+        let nb = dof.on_boundary.iter().filter(|&&b| b).count();
+        // 3^3 grid: 27 vertices, 1 interior
+        assert_eq!(nb, 26);
+        // interior vertex is at (0.5, 0.5, 0.5)
+        for d in 0..dof.n_dofs {
+            let v = dof.vertex_of_dof[d] as usize;
+            let p = m.vertices[v];
+            let interior = (p.x - 0.5).abs() < 1e-12
+                && (p.y - 0.5).abs() < 1e-12
+                && (p.z - 0.5).abs() < 1e-12;
+            assert_eq!(!dof.on_boundary[d], interior);
+        }
+    }
+
+    #[test]
+    fn eval_at_dofs_positions() {
+        let m = cube_mesh(1);
+        let topo = LeafTopology::build(&m);
+        let dof = DofMap::build(&m, &topo);
+        let vals = dof.eval_at_dofs(&m, |p| p.x + 2.0 * p.y);
+        for d in 0..dof.n_dofs {
+            let p = m.vertices[dof.vertex_of_dof[d] as usize];
+            assert_eq!(vals[d], p.x + 2.0 * p.y);
+        }
+    }
+
+    #[test]
+    fn transfer_preserves_linear_fields_under_refinement() {
+        let mut m = cube_mesh(1);
+        let topo0 = LeafTopology::build(&m);
+        let dof0 = DofMap::build(&m, &topo0);
+        let u0 = dof0.eval_at_dofs(&m, |p| 3.0 * p.x - p.y + 0.5 * p.z);
+
+        m.refine(&m.leaves_unordered());
+        let topo1 = LeafTopology::build(&m);
+        let dof1 = DofMap::build(&m, &topo1);
+        let u1 = dof1.transfer_from(&dof0, &u0, &m, 0.0);
+
+        let exact = dof1.eval_at_dofs(&m, |p| 3.0 * p.x - p.y + 0.5 * p.z);
+        for d in 0..dof1.n_dofs {
+            assert!(
+                (u1[d] - exact[d]).abs() < 1e-12,
+                "dof {d}: {} vs {}",
+                u1[d],
+                exact[d]
+            );
+        }
+    }
+
+    #[test]
+    fn transfer_after_coarsen_keeps_surviving_vertices() {
+        let mut m = cube_mesh(1);
+        m.refine(&m.leaves_unordered());
+        let topo0 = LeafTopology::build(&m);
+        let dof0 = DofMap::build(&m, &topo0);
+        let u0 = dof0.eval_at_dofs(&m, |p| p.x * p.x);
+
+        // coarsen everything back
+        while m.coarsen(&m.leaves_unordered()) > 0 {}
+        let topo1 = LeafTopology::build(&m);
+        let dof1 = DofMap::build(&m, &topo1);
+        let u1 = dof1.transfer_from(&dof0, &u0, &m, -1.0);
+        for d in 0..dof1.n_dofs {
+            let p = m.vertices[dof1.vertex_of_dof[d] as usize];
+            assert!((u1[d] - p.x * p.x).abs() < 1e-12);
+        }
+    }
+}

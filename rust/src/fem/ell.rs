@@ -1,0 +1,114 @@
+//! f32 ELL conversion: the fixed-width layout the AOT cg_step/spmv
+//! artifacts consume (see python/compile/kernels/spmv_ell.py).
+//!
+//! Rows are padded to the artifact width with (value 0, column 0);
+//! the whole system is padded to the ladder rung with zero rows whose
+//! `diag_inv` is 0, which the cg_step graph keeps exactly invariant.
+
+use super::csr::Csr;
+
+#[derive(Debug, Clone)]
+pub struct EllF32 {
+    /// padded system size (ladder rung)
+    pub n_pad: usize,
+    /// logical (unpadded) size
+    pub n: usize,
+    pub width: usize,
+    /// (n_pad, width) row-major
+    pub vals: Vec<f32>,
+    pub cols: Vec<i32>,
+    /// 1/diag, 0.0 on padded rows
+    pub diag_inv: Vec<f32>,
+}
+
+/// Convert CSR to padded f32 ELL. Returns None if any row exceeds
+/// `width` (caller falls back to the native CSR solver).
+pub fn csr_to_ell(a: &Csr, width: usize, n_pad: usize) -> Option<EllF32> {
+    assert!(n_pad >= a.n);
+    if a.max_row_len() > width {
+        return None;
+    }
+    let mut vals = vec![0.0f32; n_pad * width];
+    let mut cols = vec![0i32; n_pad * width];
+    let mut diag_inv = vec![0.0f32; n_pad];
+    for r in 0..a.n {
+        let (rc, rv) = a.row(r);
+        for (k, (c, v)) in rc.iter().zip(rv).enumerate() {
+            vals[r * width + k] = *v as f32;
+            cols[r * width + k] = *c as i32;
+            if *c as usize == r {
+                diag_inv[r] = if *v != 0.0 { (1.0 / v) as f32 } else { 0.0 };
+            }
+        }
+    }
+    Some(EllF32 {
+        n_pad,
+        n: a.n,
+        width,
+        vals,
+        cols,
+        diag_inv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tridiag(n: usize) -> Csr {
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i as u32, i as u32, 2.0));
+            if i > 0 {
+                t.push((i as u32, (i - 1) as u32, -1.0));
+            }
+            if i + 1 < n {
+                t.push((i as u32, (i + 1) as u32, -1.0));
+            }
+        }
+        Csr::from_triplets(n, t)
+    }
+
+    #[test]
+    fn roundtrip_spmv_agrees() {
+        let a = tridiag(10);
+        let e = csr_to_ell(&a, 4, 16).unwrap();
+        let x64: Vec<f64> = (0..10).map(|i| (i as f64).sin()).collect();
+        let mut y64 = vec![0.0; 10];
+        a.spmv(&x64, &mut y64);
+        // manual ELL spmv in f32
+        let mut x32 = vec![0.0f32; 16];
+        for i in 0..10 {
+            x32[i] = x64[i] as f32;
+        }
+        for r in 0..10 {
+            let mut acc = 0.0f32;
+            for k in 0..e.width {
+                acc += e.vals[r * e.width + k] * x32[e.cols[r * e.width + k] as usize];
+            }
+            assert!((acc as f64 - y64[r]).abs() < 1e-5, "row {r}");
+        }
+    }
+
+    #[test]
+    fn rejects_wide_rows() {
+        let a = tridiag(10);
+        assert!(csr_to_ell(&a, 2, 16).is_none());
+        assert!(csr_to_ell(&a, 3, 16).is_some());
+    }
+
+    #[test]
+    fn diag_inv_zero_on_padding() {
+        let a = tridiag(5);
+        let e = csr_to_ell(&a, 4, 8).unwrap();
+        for r in 5..8 {
+            assert_eq!(e.diag_inv[r], 0.0);
+            for k in 0..4 {
+                assert_eq!(e.vals[r * 4 + k], 0.0);
+            }
+        }
+        for r in 0..5 {
+            assert!((e.diag_inv[r] - 0.5).abs() < 1e-7);
+        }
+    }
+}

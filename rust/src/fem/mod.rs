@@ -1,0 +1,17 @@
+//! P1 finite elements over the tet mesh: DoF management, assembly
+//! (native f64 or batched through the PJRT artifacts), sparse formats,
+//! the Jacobi-PCG solver (native or the cg_step artifact), and the
+//! paper's two model problems.
+
+pub mod assemble;
+pub mod csr;
+pub mod dof;
+pub mod ell;
+pub mod problems;
+pub mod solver;
+
+pub use assemble::{assemble, elem_matrices, Assembled};
+pub use csr::Csr;
+pub use dof::DofMap;
+pub use ell::{csr_to_ell, EllF32};
+pub use solver::{native_pcg, pjrt_pcg, solve, SolveStats, SolverOpts};

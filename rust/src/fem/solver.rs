@@ -1,0 +1,296 @@
+//! Jacobi-preconditioned conjugate gradients.
+//!
+//! Production path: the `cg_step` AOT artifact -- ONE PJRT execute per
+//! iteration, with the ELL matrix staged as device buffers and
+//! alpha/beta computed inside the graph. Rust owns only the outer loop
+//! and the convergence test (the paper's Hypre-BoomerAMG role is
+//! played by this solver at our scale).
+//!
+//! Native path: the same algorithm in f64 Rust -- the correctness
+//! oracle and the fallback when artifacts are absent or a row exceeds
+//! the artifact's ELL width.
+
+use super::csr::Csr;
+use super::ell::csr_to_ell;
+use crate::runtime::{next_rung, Runtime};
+
+#[derive(Debug, Clone, Copy)]
+pub struct SolveStats {
+    pub iterations: usize,
+    pub rel_residual: f64,
+    /// which engine actually ran
+    pub used_pjrt: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SolverOpts {
+    pub tol: f64,
+    pub max_iter: usize,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        Self {
+            tol: 1e-6,
+            max_iter: 2000,
+        }
+    }
+}
+
+/// f64 native Jacobi-PCG (oracle + fallback).
+pub fn native_pcg(a: &Csr, b: &[f64], x: &mut [f64], opts: &SolverOpts) -> SolveStats {
+    let n = a.n;
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+    let diag = a.diag();
+    let dinv: Vec<f64> = diag
+        .iter()
+        .map(|&d| if d != 0.0 { 1.0 / d } else { 0.0 })
+        .collect();
+
+    let bnorm2: f64 = b.iter().map(|v| v * v).sum();
+    if bnorm2 == 0.0 {
+        x.fill(0.0);
+        return SolveStats {
+            iterations: 0,
+            rel_residual: 0.0,
+            used_pjrt: false,
+        };
+    }
+    let mut r = vec![0.0; n];
+    a.spmv(x, &mut r);
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let mut z: Vec<f64> = r.iter().zip(&dinv).map(|(a, d)| a * d).collect();
+    let mut p = z.clone();
+    let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+    let mut q = vec![0.0; n];
+    let tol2 = opts.tol * opts.tol * bnorm2;
+
+    for it in 0..opts.max_iter {
+        let rnorm2: f64 = r.iter().map(|v| v * v).sum();
+        if rnorm2 <= tol2 {
+            return SolveStats {
+                iterations: it,
+                rel_residual: (rnorm2 / bnorm2).sqrt(),
+                used_pjrt: false,
+            };
+        }
+        a.spmv(&p, &mut q);
+        let pq: f64 = p.iter().zip(&q).map(|(a, b)| a * b).sum();
+        if pq <= 0.0 {
+            break; // not SPD / breakdown
+        }
+        let alpha = rz / pq;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * q[i];
+        }
+        for i in 0..n {
+            z[i] = r[i] * dinv[i];
+        }
+        let rz_new: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    let rnorm2: f64 = r.iter().map(|v| v * v).sum();
+    SolveStats {
+        iterations: opts.max_iter,
+        rel_residual: (rnorm2 / bnorm2).sqrt(),
+        used_pjrt: false,
+    }
+}
+
+/// PJRT Jacobi-PCG through the cg_step artifact. Returns None when the
+/// system does not fit any artifact rung or exceeds the ELL width
+/// (caller should fall back to `native_pcg`).
+pub fn pjrt_pcg(
+    rt: &Runtime,
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    opts: &SolverOpts,
+) -> Option<SolveStats> {
+    let ladder = rt.cg_ladder();
+    let n_pad = next_rung(&ladder, a.n)?;
+    let ell = csr_to_ell(a, rt.ell_width(), n_pad)?;
+    let bufs = rt.stage_cg(&ell.vals, &ell.cols, &ell.diag_inv, n_pad).ok()?;
+
+    let bnorm2: f64 = b.iter().map(|v| v * v).sum();
+    if bnorm2 == 0.0 {
+        x.fill(0.0);
+        return Some(SolveStats {
+            iterations: 0,
+            rel_residual: 0.0,
+            used_pjrt: true,
+        });
+    }
+
+    // f32 state, padded; start from the provided x (warm starts between
+    // adaptive steps matter)
+    let mut xs = vec![0.0f32; n_pad];
+    for i in 0..a.n {
+        xs[i] = x[i] as f32;
+    }
+    // r = b - A x in f64 for a clean start
+    let mut r64 = vec![0.0; a.n];
+    a.spmv(x, &mut r64);
+    let mut rs = vec![0.0f32; n_pad];
+    for i in 0..a.n {
+        rs[i] = (b[i] - r64[i]) as f32;
+    }
+    let mut ps = vec![0.0f32; n_pad];
+    for i in 0..a.n {
+        ps[i] = rs[i] * ell.diag_inv[i];
+    }
+    let mut rz: f32 = rs.iter().zip(&ps).map(|(a, b)| a * b).sum();
+
+    // f32 floor: don't demand more than single precision can resolve
+    let tol2 = (opts.tol * opts.tol * bnorm2).max(1e-12 * bnorm2) as f32;
+    let mut iterations = 0;
+    let mut rnorm2 = rs.iter().map(|v| v * v).sum::<f32>();
+    while iterations < opts.max_iter && rnorm2 > tol2 {
+        let out = bufs.step(&xs, &rs, &ps, rz).ok()?;
+        xs = out.x;
+        rs = out.r;
+        ps = out.p;
+        rz = out.rz;
+        rnorm2 = out.rnorm2;
+        iterations += 1;
+        if !rnorm2.is_finite() {
+            return None; // f32 breakdown: let the native engine handle it
+        }
+    }
+    for i in 0..a.n {
+        x[i] = xs[i] as f64;
+    }
+    Some(SolveStats {
+        iterations,
+        rel_residual: ((rnorm2 as f64) / bnorm2).sqrt(),
+        used_pjrt: true,
+    })
+}
+
+/// Solve with the best available engine.
+pub fn solve(rt: Option<&Runtime>, a: &Csr, b: &[f64], x: &mut [f64], opts: &SolverOpts) -> SolveStats {
+    if let Some(rt) = rt {
+        if let Some(stats) = pjrt_pcg(rt, a, b, x, opts) {
+            return stats;
+        }
+    }
+    native_pcg(a, b, x, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn laplacian_2d(n: usize) -> (Csr, Vec<f64>) {
+        // n x n grid 5-point laplacian, rhs = A * ones
+        let id = |i: usize, j: usize| (i * n + j) as u32;
+        let mut t = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                let r = id(i, j);
+                t.push((r, r, 4.0));
+                if i > 0 {
+                    t.push((r, id(i - 1, j), -1.0));
+                }
+                if i + 1 < n {
+                    t.push((r, id(i + 1, j), -1.0));
+                }
+                if j > 0 {
+                    t.push((r, id(i, j - 1), -1.0));
+                }
+                if j + 1 < n {
+                    t.push((r, id(i, j + 1), -1.0));
+                }
+            }
+        }
+        let a = Csr::from_triplets(n * n, t);
+        let ones = vec![1.0; n * n];
+        let mut b = vec![0.0; n * n];
+        a.spmv(&ones, &mut b);
+        (a, b)
+    }
+
+    #[test]
+    fn native_pcg_solves_laplacian() {
+        let (a, b) = laplacian_2d(16);
+        let mut x = vec![0.0; a.n];
+        let stats = native_pcg(&a, &b, &mut x, &SolverOpts::default());
+        assert!(stats.rel_residual < 1e-6);
+        for v in &x {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+        assert!(stats.iterations < 200);
+    }
+
+    #[test]
+    fn native_pcg_zero_rhs() {
+        let (a, _) = laplacian_2d(4);
+        let b = vec![0.0; a.n];
+        let mut x = vec![5.0; a.n];
+        let stats = native_pcg(&a, &b, &mut x, &SolverOpts::default());
+        assert_eq!(stats.iterations, 0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn native_pcg_warm_start_fewer_iterations() {
+        let (a, b) = laplacian_2d(16);
+        let mut cold = vec![0.0; a.n];
+        let s_cold = native_pcg(&a, &b, &mut cold, &SolverOpts::default());
+        let mut warm: Vec<f64> = cold.iter().map(|v| v * 0.999).collect();
+        let s_warm = native_pcg(&a, &b, &mut warm, &SolverOpts::default());
+        assert!(s_warm.iterations < s_cold.iterations);
+    }
+
+    #[test]
+    fn pjrt_pcg_matches_native() {
+        let Ok(rt) = Runtime::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (a, b) = laplacian_2d(24); // 576 dofs -> rung 4096
+        let opts = SolverOpts {
+            tol: 1e-5,
+            max_iter: 1000,
+        };
+        let mut xp = vec![0.0; a.n];
+        let stats = pjrt_pcg(&rt, &a, &b, &mut xp, &opts).expect("pjrt path");
+        assert!(stats.used_pjrt);
+        assert!(stats.rel_residual < 1e-4, "relres {}", stats.rel_residual);
+        for v in &xp {
+            assert!((v - 1.0).abs() < 1e-3, "{v}");
+        }
+    }
+
+    #[test]
+    fn solve_falls_back_when_row_too_wide() {
+        let Ok(rt) = Runtime::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // dense row 0 of width 40 > ELL width 32
+        let n = 64;
+        let mut t = Vec::new();
+        for j in 0..40u32 {
+            t.push((0u32, j, if j == 0 { 50.0 } else { 0.1 }));
+            t.push((j, 0u32, if j == 0 { 0.0 } else { 0.1 }));
+        }
+        for i in 1..n as u32 {
+            t.push((i, i, 2.0));
+        }
+        let a = Csr::from_triplets(n, t);
+        let b = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let stats = solve(Some(&rt), &a, &b, &mut x, &SolverOpts::default());
+        assert!(!stats.used_pjrt, "should have fallen back to native");
+        assert!(stats.rel_residual < 1e-5);
+    }
+}

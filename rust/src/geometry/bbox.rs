@@ -1,0 +1,144 @@
+//! Axis-aligned bounding box. Central to the SFC partitioners: the
+//! paper's PHG/HSFC vs Zoltan/HSFC difference is precisely *how* the
+//! domain bounding box is normalized to the unit cube (aspect-ratio
+//! preserving vs per-axis), see `partition::sfc::Normalization`.
+
+use super::Vec3;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub lo: Vec3,
+    pub hi: Vec3,
+}
+
+impl BBox {
+    /// Empty box ready to `expand`.
+    pub fn empty() -> Self {
+        Self {
+            lo: Vec3::new(f64::INFINITY, f64::INFINITY, f64::INFINITY),
+            hi: Vec3::new(f64::NEG_INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY),
+        }
+    }
+
+    pub fn new(lo: Vec3, hi: Vec3) -> Self {
+        Self { lo, hi }
+    }
+
+    pub fn from_points<'a>(pts: impl IntoIterator<Item = &'a Vec3>) -> Self {
+        let mut b = Self::empty();
+        for p in pts {
+            b.expand(*p);
+        }
+        b
+    }
+
+    pub fn expand(&mut self, p: Vec3) {
+        self.lo = self.lo.min(p);
+        self.hi = self.hi.max(p);
+    }
+
+    pub fn union(&self, o: &BBox) -> BBox {
+        BBox {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+        }
+    }
+
+    pub fn extent(&self) -> Vec3 {
+        self.hi - self.lo
+    }
+
+    pub fn max_extent(&self) -> f64 {
+        let e = self.extent();
+        e.x.max(e.y).max(e.z)
+    }
+
+    pub fn center(&self) -> Vec3 {
+        self.lo.midpoint(self.hi)
+    }
+
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.lo.x
+            && p.x <= self.hi.x
+            && p.y >= self.lo.y
+            && p.y <= self.hi.y
+            && p.z >= self.lo.z
+            && p.z <= self.hi.z
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo.x > self.hi.x
+    }
+
+    /// Aspect ratio: longest extent / shortest non-zero extent.
+    pub fn aspect_ratio(&self) -> f64 {
+        let e = self.extent();
+        let dims = [e.x, e.y, e.z];
+        let max = dims.iter().cloned().fold(0.0f64, f64::max);
+        let min = dims
+            .iter()
+            .cloned()
+            .filter(|&d| d > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if min == f64::INFINITY || min == 0.0 {
+            1.0
+        } else {
+            max / min
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_from_points() {
+        let pts = [
+            Vec3::new(0.0, 1.0, 2.0),
+            Vec3::new(3.0, -1.0, 0.0),
+            Vec3::new(1.0, 0.5, 5.0),
+        ];
+        let b = BBox::from_points(pts.iter());
+        assert_eq!(b.lo, Vec3::new(0.0, -1.0, 0.0));
+        assert_eq!(b.hi, Vec3::new(3.0, 1.0, 5.0));
+        assert_eq!(b.extent(), Vec3::new(3.0, 2.0, 5.0));
+        assert_eq!(b.max_extent(), 5.0);
+    }
+
+    #[test]
+    fn empty_detection() {
+        assert!(BBox::empty().is_empty());
+        let mut b = BBox::empty();
+        b.expand(Vec3::ZERO);
+        assert!(!b.is_empty());
+        assert_eq!(b.lo, b.hi);
+    }
+
+    #[test]
+    fn contains_boundary() {
+        let b = BBox::new(Vec3::ZERO, Vec3::new(1.0, 1.0, 1.0));
+        assert!(b.contains(Vec3::ZERO));
+        assert!(b.contains(Vec3::new(1.0, 1.0, 1.0)));
+        assert!(b.contains(Vec3::new(0.5, 0.5, 0.5)));
+        assert!(!b.contains(Vec3::new(1.5, 0.5, 0.5)));
+    }
+
+    #[test]
+    fn aspect_ratio_cylinderish() {
+        // long thin box like the paper's cylinder bounding box
+        let b = BBox::new(Vec3::ZERO, Vec3::new(8.0, 1.0, 1.0));
+        assert_eq!(b.aspect_ratio(), 8.0);
+        let cube = BBox::new(Vec3::ZERO, Vec3::new(1.0, 1.0, 1.0));
+        assert_eq!(cube.aspect_ratio(), 1.0);
+    }
+
+    #[test]
+    fn union_covers_both() {
+        let a = BBox::new(Vec3::ZERO, Vec3::new(1.0, 1.0, 1.0));
+        let b = BBox::new(Vec3::new(2.0, -1.0, 0.0), Vec3::new(3.0, 0.0, 4.0));
+        let u = a.union(&b);
+        assert!(u.contains(Vec3::ZERO));
+        assert!(u.contains(Vec3::new(3.0, 0.0, 4.0)));
+    }
+}

@@ -1,0 +1,10 @@
+//! Geometric primitives: 3-vectors, axis-aligned bounding boxes, and
+//! tetrahedron measures (volume, quality).
+
+mod bbox;
+mod tet;
+mod vec3;
+
+pub use bbox::BBox;
+pub use tet::{tet_quality, tet_volume, tet_volume_signed};
+pub use vec3::Vec3;

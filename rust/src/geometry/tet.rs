@@ -1,0 +1,107 @@
+//! Tetrahedron measures.
+
+use super::Vec3;
+
+/// Signed volume: positive when (v1-v0, v2-v0, v3-v0) is right-handed.
+pub fn tet_volume_signed(v: &[Vec3; 4]) -> f64 {
+    let d1 = v[1] - v[0];
+    let d2 = v[2] - v[0];
+    let d3 = v[3] - v[0];
+    d1.dot(d2.cross(d3)) / 6.0
+}
+
+pub fn tet_volume(v: &[Vec3; 4]) -> f64 {
+    tet_volume_signed(v).abs()
+}
+
+/// Mean-ratio shape quality in (0, 1]; 1 for the regular tetrahedron,
+/// -> 0 for degenerate slivers. Used to verify bisection refinement
+/// keeps element quality bounded (the guarantee PHG's bisection relies
+/// on for its a-priori estimates).
+pub fn tet_quality(v: &[Vec3; 4]) -> f64 {
+    let vol = tet_volume(v);
+    if vol <= 0.0 {
+        return 0.0;
+    }
+    let mut sum_l2 = 0.0;
+    for i in 0..4 {
+        for j in (i + 1)..4 {
+            sum_l2 += (v[i] - v[j]).norm2();
+        }
+    }
+    // regular tet with edge a: vol = a^3/(6 sqrt 2), sum_l2 = 6 a^2
+    // quality = c * vol^{2/3} / sum_l2 normalized so regular == 1
+    let c = 6.0 * (6.0 * 2.0f64.sqrt()).powf(2.0 / 3.0);
+    c * vol.powf(2.0 / 3.0) / sum_l2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_tet() -> [Vec3; 4] {
+        [
+            Vec3::ZERO,
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+        ]
+    }
+
+    fn regular_tet() -> [Vec3; 4] {
+        [
+            Vec3::new(1.0, 1.0, 1.0),
+            Vec3::new(1.0, -1.0, -1.0),
+            Vec3::new(-1.0, 1.0, -1.0),
+            Vec3::new(-1.0, -1.0, 1.0),
+        ]
+    }
+
+    #[test]
+    fn unit_tet_volume() {
+        assert!((tet_volume(&unit_tet()) - 1.0 / 6.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn signed_volume_flips_with_orientation() {
+        let mut t = unit_tet();
+        let v = tet_volume_signed(&t);
+        t.swap(2, 3);
+        assert!((tet_volume_signed(&t) + v).abs() < 1e-15);
+    }
+
+    #[test]
+    fn regular_tet_quality_is_one() {
+        assert!((tet_quality(&regular_tet()) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn degenerate_quality_zero() {
+        let t = [
+            Vec3::ZERO,
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(2.0, 0.0, 0.0),
+            Vec3::new(3.0, 0.0, 0.0),
+        ];
+        assert_eq!(tet_quality(&t), 0.0);
+    }
+
+    #[test]
+    fn sliver_quality_low() {
+        let t = [
+            Vec3::ZERO,
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(0.5, 0.5, 1e-3),
+        ];
+        let q = tet_quality(&t);
+        assert!(q > 0.0 && q < 0.05, "q = {q}");
+    }
+
+    #[test]
+    fn quality_scale_invariant() {
+        let t = unit_tet();
+        let scaled: [Vec3; 4] = [t[0] * 10.0, t[1] * 10.0, t[2] * 10.0, t[3] * 10.0];
+        assert!((tet_quality(&t) - tet_quality(&scaled)).abs() < 1e-12);
+    }
+}

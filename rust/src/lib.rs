@@ -1,0 +1,30 @@
+//! # phg-dlb
+//!
+//! Reproduction of *"Dynamic load balancing for large-scale adaptive
+//! finite element computation"* (Liu, Cui, Leng, Zhang; cs.DC 2017):
+//! the dynamic load-balancing subsystem of the parallel adaptive FEM
+//! platform PHG, rebuilt as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** -- the paper's contribution: the partitioners
+//!   ([`partition`]), subgrid-process remapping ([`remap`]), migration
+//!   and the virtual MPI runtime ([`dist`]), and the adaptive driver
+//!   with its DLB policy ([`coordinator`]) -- plus every substrate they
+//!   need: tet meshes with refinement forests ([`mesh`]), bisection
+//!   refinement ([`mesh::TetMesh::refine`]), error estimation
+//!   ([`adapt`]), and P1 FEM ([`fem`]).
+//! * **L2/L1 (python/, build time only)** -- the FEM compute graph and
+//!   its Pallas kernels, AOT-lowered to HLO text and executed from
+//!   [`runtime`] via PJRT.
+
+pub mod adapt;
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod fem;
+pub mod geometry;
+pub mod mesh;
+pub mod partition;
+pub mod remap;
+pub mod runtime;
+pub mod util;

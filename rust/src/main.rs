@@ -1,0 +1,196 @@
+//! phg-dlb launcher: run the paper's experiments from the command line.
+//!
+//! ```text
+//! phg-dlb run --problem helmholtz --domain cylinder --method RTK \
+//!             --nparts 32 --nsteps 10 [--config file.toml]
+//! phg-dlb partition --domain cylinder --method PHG/HSFC --nparts 64
+//! phg-dlb compare --domain cylinder --nparts 32          # all methods
+//! phg-dlb methods | info
+//! ```
+
+use anyhow::{anyhow, Result};
+use phg_dlb::config::Config;
+use phg_dlb::coordinator::{partitioner_by_name, AdaptiveDriver, METHOD_NAMES};
+use phg_dlb::dist::Distribution;
+use phg_dlb::mesh::generator;
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::mesh::TetMesh;
+use phg_dlb::partition::{metrics, PartitionInput};
+use phg_dlb::runtime::Runtime;
+use phg_dlb::util::timer::Stopwatch;
+
+fn make_domain(cfg: &Config) -> Result<TetMesh> {
+    let domain = cfg.get_str("domain", "cube");
+    let scale = cfg.get_usize("scale", 3)?;
+    let refine = cfg.get_usize("prerefine", 0)?;
+    let mut mesh = match domain.as_str() {
+        "cube" => generator::cube_mesh(scale.max(1) * 2),
+        "cylinder" => generator::omega1_cylinder(scale.max(2)),
+        other => return Err(anyhow!("unknown domain {other} (cube|cylinder)")),
+    };
+    for _ in 0..refine {
+        let leaves = mesh.leaves_unordered();
+        mesh.refine(&leaves);
+    }
+    Ok(mesh)
+}
+
+fn cmd_run(cfg: &Config) -> Result<()> {
+    let problem = cfg.get_str("problem", "helmholtz");
+    let mesh = make_domain(cfg)?;
+    let dc = cfg.driver_config()?;
+    println!(
+        "# problem={problem} method={} nparts={} elements0={} nsteps={}",
+        dc.method,
+        dc.nparts,
+        mesh.n_leaves(),
+        dc.nsteps
+    );
+    let mut driver = AdaptiveDriver::new(mesh, dc);
+    let sw = Stopwatch::start();
+    match problem.as_str() {
+        "helmholtz" => driver.run_helmholtz(),
+        "parabolic" => driver.run_parabolic(0.0),
+        other => return Err(anyhow!("unknown problem {other} (helmholtz|parabolic)")),
+    }
+    let wall = sw.elapsed();
+
+    let (tal, dlb, sol, stp) = driver.timeline.table_columns();
+    println!("# steps={} wall={wall:.2}s", driver.timeline.records.len());
+    println!("TAL(s) {tal:.4}  DLB(s) {dlb:.6}  SOL(s) {sol:.6}  STP(s) {stp:.6}");
+    println!("repartitionings: {}", driver.timeline.repartition_count());
+    if let Some(last) = driver.timeline.records.last() {
+        println!(
+            "final: elements={} dofs={} L2err={:.3e} maxerr={:.3e}",
+            last.n_elements, last.n_dofs, last.l2_error, last.max_error
+        );
+    }
+    if cfg.get_bool("csv", false)? {
+        let path = phg_dlb::coordinator::report::write_report(
+            &format!(
+                "run_{}_{}.csv",
+                problem,
+                cfg.get_str("method", "PHG/HSFC").replace('/', "_")
+            ),
+            &driver.timeline.to_csv(),
+        )?;
+        println!("csv: {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_partition(cfg: &Config) -> Result<()> {
+    let mut mesh = make_domain(cfg)?;
+    let nparts = cfg.get_usize("nparts", 16)?;
+    let method = cfg.get_str("method", "PHG/HSFC");
+    let p = partitioner_by_name(&method).ok_or_else(|| anyhow!("unknown method {method}"))?;
+    let leaves = mesh.leaves_unordered();
+    let weights = vec![1.0; leaves.len()];
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+    let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+
+    let sw = Stopwatch::start();
+    let result = p.partition(&input);
+    let dt = sw.elapsed();
+
+    let topo = LeafTopology::build_for(&mesh, leaves.clone());
+    let q = metrics::quality(&topo, &result.parts, &weights, nparts);
+    println!(
+        "{method}: {} elements -> {} parts in {:.1} ms",
+        leaves.len(),
+        nparts,
+        dt * 1e3
+    );
+    println!(
+        "imbalance {:.4}  interface faces {} ({:.2}% of interior)  nonempty {}",
+        q.imbalance,
+        q.interface_faces,
+        100.0 * q.surface_index,
+        q.nonempty
+    );
+    Ok(())
+}
+
+fn cmd_compare(cfg: &Config) -> Result<()> {
+    let mut mesh = make_domain(cfg)?;
+    let nparts = cfg.get_usize("nparts", 16)?;
+    let leaves = mesh.leaves_unordered();
+    let weights = vec![1.0; leaves.len()];
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+    let topo = LeafTopology::build_for(&mesh, leaves.clone());
+    println!(
+        "{:<12} {:>10} {:>10} {:>12} {:>10}",
+        "method", "time(ms)", "imbalance", "iface-faces", "surface%"
+    );
+    for name in METHOD_NAMES {
+        let p = partitioner_by_name(name).unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let sw = Stopwatch::start();
+        let r = p.partition(&input);
+        let dt = sw.elapsed();
+        let q = metrics::quality(&topo, &r.parts, &weights, nparts);
+        println!(
+            "{:<12} {:>10.2} {:>10.4} {:>12} {:>10.2}",
+            name,
+            dt * 1e3,
+            q.imbalance,
+            q.interface_faces,
+            100.0 * q.surface_index
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("phg-dlb {}", env!("CARGO_PKG_VERSION"));
+    match Runtime::open_default() {
+        Ok(rt) => {
+            println!("artifacts: OK ({} entries)", rt.manifest().entries.len());
+            println!("  elem_tet ladder: {:?}", rt.elem_ladder());
+            println!(
+                "  cg ladder: {:?} (ELL width {})",
+                rt.cg_ladder(),
+                rt.ell_width()
+            );
+        }
+        Err(e) => println!("artifacts: MISSING ({e}); native fallback engines will be used"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = Config::new();
+    if let Some(i) = args.iter().position(|a| a == "--config") {
+        let path = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow!("--config needs a path"))?;
+        cfg = Config::load(std::path::Path::new(path))?;
+    }
+    let rest = cfg.apply_args(&args)?;
+    let sub = rest.first().map(|s| s.as_str()).unwrap_or("help");
+    match sub {
+        "run" => cmd_run(&cfg),
+        "partition" => cmd_partition(&cfg),
+        "compare" => cmd_compare(&cfg),
+        "methods" => {
+            for m in METHOD_NAMES {
+                println!("{m}");
+            }
+            println!("RIB");
+            Ok(())
+        }
+        "info" => cmd_info(),
+        _ => {
+            println!(
+                "usage: phg-dlb <run|partition|compare|methods|info> [--key value ...]\n\
+                 keys: problem domain scale prerefine method nparts nsteps dt\n\
+                 \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
+                 \x20     solver_tol solver_max_iter use_pjrt csv config"
+            );
+            Ok(())
+        }
+    }
+}

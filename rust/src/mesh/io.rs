@@ -1,0 +1,84 @@
+//! Legacy-VTK export of the leaf mesh with per-element part ids --
+//! lets partitions be eyeballed in ParaView (used by the
+//! `partition_gallery` example).
+
+use super::TetMesh;
+use std::io::Write;
+use std::path::Path;
+
+/// Write the current leaves as an unstructured grid; `cell_data` maps
+/// each leaf (in `leaves_unordered` order) to a scalar (e.g. part id).
+pub fn write_vtk(
+    mesh: &TetMesh,
+    cell_data: &[f64],
+    data_name: &str,
+    path: &Path,
+) -> std::io::Result<()> {
+    let leaves = mesh.leaves_unordered();
+    assert_eq!(cell_data.len(), leaves.len());
+
+    // compact vertex numbering over active vertices
+    let mut vert_map = vec![u32::MAX; mesh.vertices.len()];
+    let mut verts = Vec::new();
+    for &id in &leaves {
+        for &v in &mesh.elem(id).verts {
+            if vert_map[v as usize] == u32::MAX {
+                vert_map[v as usize] = verts.len() as u32;
+                verts.push(v);
+            }
+        }
+    }
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "# vtk DataFile Version 3.0")?;
+    writeln!(f, "phg-dlb mesh")?;
+    writeln!(f, "ASCII")?;
+    writeln!(f, "DATASET UNSTRUCTURED_GRID")?;
+    writeln!(f, "POINTS {} double", verts.len())?;
+    for &v in &verts {
+        let p = mesh.vertices[v as usize];
+        writeln!(f, "{} {} {}", p.x, p.y, p.z)?;
+    }
+    writeln!(f, "CELLS {} {}", leaves.len(), leaves.len() * 5)?;
+    for &id in &leaves {
+        let v = mesh.elem(id).verts;
+        writeln!(
+            f,
+            "4 {} {} {} {}",
+            vert_map[v[0] as usize],
+            vert_map[v[1] as usize],
+            vert_map[v[2] as usize],
+            vert_map[v[3] as usize]
+        )?;
+    }
+    writeln!(f, "CELL_TYPES {}", leaves.len())?;
+    for _ in &leaves {
+        writeln!(f, "10")?; // VTK_TETRA
+    }
+    writeln!(f, "CELL_DATA {}", leaves.len())?;
+    writeln!(f, "SCALARS {data_name} double 1")?;
+    writeln!(f, "LOOKUP_TABLE default")?;
+    for d in cell_data {
+        writeln!(f, "{d}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator::cube_mesh;
+
+    #[test]
+    fn writes_parseable_vtk() {
+        let m = cube_mesh(1);
+        let data = vec![0.0; m.n_leaves()];
+        let path = std::env::temp_dir().join("phg_dlb_test.vtk");
+        write_vtk(&m, &data, "part", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("POINTS 8 double"));
+        assert!(text.contains("CELLS 6 30"));
+        assert!(text.contains("SCALARS part double 1"));
+        std::fs::remove_file(&path).ok();
+    }
+}

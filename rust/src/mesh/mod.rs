@@ -1,0 +1,658 @@
+//! Tetrahedral mesh with a refinement forest.
+//!
+//! This is PHG's central substrate: a conforming tet mesh whose
+//! elements carry the binary refinement tree produced by bisection
+//! (`refine`), the structure the paper's RTK partitioner (§2.1) walks.
+//!
+//! Elements are tree *nodes*; only leaves are part of the computational
+//! mesh. Refined elements stay in the arena as interior tree nodes;
+//! coarsened children are tomb-stoned and their slots reused.
+//!
+//! Bisection follows Maubach's algorithm (tagged simplices), which for
+//! the Kuhn-subdivision meshes our generators emit is exactly PHG's
+//! bisection: conformity is restored by a closure pass, element quality
+//! stays bounded over arbitrary refinement depth, and every bisection
+//! yields the left/right child order whose DFS traversal gives the
+//! face-connected leaf sequence RTK relies on.
+
+pub mod generator;
+pub mod io;
+pub mod topology;
+
+use crate::geometry::{tet_volume, BBox, Vec3};
+use crate::util::hash::{edge_key, FxHashMap};
+
+pub type VertId = u32;
+pub type ElemId = u32;
+
+pub const NONE: u32 = u32::MAX;
+
+/// One node of the refinement forest.
+#[derive(Debug, Clone)]
+pub struct Elem {
+    /// Vertices in Maubach order; refinement edge is (verts[0], verts[tag]).
+    pub verts: [VertId; 4],
+    /// Maubach tag, in {1, 2, 3}.
+    pub tag: u8,
+    /// Tree depth (roots at 0).
+    pub generation: u16,
+    /// Owning rank of this element's data (partition assignment).
+    pub owner: u16,
+    pub parent: ElemId,
+    /// `[NONE, NONE]` for leaves.
+    pub children: [ElemId; 2],
+    /// Midpoint vertex created when this element was bisected.
+    pub mid_vertex: VertId,
+    /// Tomb-stone: slot is free for reuse.
+    pub dead: bool,
+}
+
+impl Elem {
+    pub fn is_leaf(&self) -> bool {
+        !self.dead && self.children[0] == NONE
+    }
+
+    pub fn refine_edge(&self) -> (VertId, VertId) {
+        (self.verts[0], self.verts[self.tag as usize])
+    }
+}
+
+/// Statistics returned by a refinement pass.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RefineStats {
+    /// Elements bisected because they were marked.
+    pub marked_bisections: usize,
+    /// Extra bisections forced by the conformity closure.
+    pub closure_bisections: usize,
+    /// Closure sweeps until conforming.
+    pub closure_passes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TetMesh {
+    pub vertices: Vec<Vec3>,
+    pub elems: Vec<Elem>,
+    /// Refinement forest roots in maintained (SFC-sorted) order; this
+    /// order is what makes RTK's leaf sequence stable across the whole
+    /// adaptive computation (§2.1 of the paper).
+    pub roots: Vec<ElemId>,
+    /// Edge (packed key) -> midpoint vertex, for every edge ever split
+    /// and not yet coarsened away.
+    edge_mid: FxHashMap<u64, VertId>,
+    free_elems: Vec<ElemId>,
+    free_verts: Vec<VertId>,
+    n_leaves: usize,
+}
+
+impl TetMesh {
+    /// Build from raw vertices + tets. Tets must be positively oriented
+    /// in Maubach vertex order and compatibly tagged (the generators
+    /// guarantee this; `tag` defaults to 3, correct for Kuhn meshes).
+    pub fn from_raw(vertices: Vec<Vec3>, tets: Vec<[VertId; 4]>) -> Self {
+        let n = tets.len();
+        let elems: Vec<Elem> = tets
+            .into_iter()
+            .map(|verts| Elem {
+                verts,
+                tag: 3,
+                generation: 0,
+                owner: 0,
+                parent: NONE,
+                children: [NONE, NONE],
+                mid_vertex: NONE,
+                dead: false,
+            })
+            .collect();
+        Self {
+            vertices,
+            roots: (0..n as u32).collect(),
+            elems,
+            edge_mid: FxHashMap::default(),
+            free_elems: Vec::new(),
+            free_verts: Vec::new(),
+            n_leaves: n,
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.n_leaves
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.vertices.len() - self.free_verts.len()
+    }
+
+    pub fn elem(&self, id: ElemId) -> &Elem {
+        &self.elems[id as usize]
+    }
+
+    pub fn elem_coords(&self, id: ElemId) -> [Vec3; 4] {
+        let v = &self.elems[id as usize].verts;
+        [
+            self.vertices[v[0] as usize],
+            self.vertices[v[1] as usize],
+            self.vertices[v[2] as usize],
+            self.vertices[v[3] as usize],
+        ]
+    }
+
+    pub fn centroid(&self, id: ElemId) -> Vec3 {
+        let c = self.elem_coords(id);
+        (c[0] + c[1] + c[2] + c[3]) / 4.0
+    }
+
+    pub fn elem_volume(&self, id: ElemId) -> f64 {
+        tet_volume(&self.elem_coords(id))
+    }
+
+    /// Bounding box over all *active* vertices (leaf-referenced).
+    pub fn bounding_box(&self) -> BBox {
+        let mut bb = BBox::empty();
+        for id in self.leaves_unordered() {
+            for &v in &self.elems[id as usize].verts {
+                bb.expand(self.vertices[v as usize]);
+            }
+        }
+        bb
+    }
+
+    /// All leaves, arena order (fast scan; no traversal guarantees).
+    pub fn leaves_unordered(&self) -> Vec<ElemId> {
+        let mut out = Vec::with_capacity(self.n_leaves);
+        for (i, e) in self.elems.iter().enumerate() {
+            if e.is_leaf() {
+                out.push(i as ElemId);
+            }
+        }
+        out
+    }
+
+    /// Leaves in refinement-forest DFS order (left child before right):
+    /// the RTK traversal order of §2.1. Iterative DFS to survive deep
+    /// trees.
+    pub fn leaves_dfs(&self) -> Vec<ElemId> {
+        let mut out = Vec::with_capacity(self.n_leaves);
+        let mut stack: Vec<ElemId> = Vec::new();
+        for &root in self.roots.iter().rev() {
+            stack.push(root);
+        }
+        while let Some(id) = stack.pop() {
+            let e = &self.elems[id as usize];
+            if e.dead {
+                continue;
+            }
+            if e.children[0] == NONE {
+                out.push(id);
+            } else {
+                stack.push(e.children[1]);
+                stack.push(e.children[0]);
+            }
+        }
+        out
+    }
+
+    /// Sum of all leaf volumes.
+    pub fn total_volume(&self) -> f64 {
+        self.leaves_unordered()
+            .iter()
+            .map(|&id| self.elem_volume(id))
+            .sum()
+    }
+
+    /// Sort the forest roots by a key (used once at setup to order the
+    /// initial mesh along an SFC, as the paper prescribes for RTK).
+    pub fn sort_roots_by_key(&mut self, key: impl Fn(ElemId) -> u64) {
+        self.roots.sort_by_key(|&r| key(r));
+    }
+
+    fn alloc_vertex(&mut self, p: Vec3) -> VertId {
+        if let Some(v) = self.free_verts.pop() {
+            self.vertices[v as usize] = p;
+            v
+        } else {
+            self.vertices.push(p);
+            (self.vertices.len() - 1) as VertId
+        }
+    }
+
+    fn alloc_elem(&mut self, e: Elem) -> ElemId {
+        if let Some(id) = self.free_elems.pop() {
+            self.elems[id as usize] = e;
+            id
+        } else {
+            self.elems.push(e);
+            (self.elems.len() - 1) as ElemId
+        }
+    }
+
+    /// Midpoint vertex of edge (a, b), creating it on first use. The
+    /// shared map is what keeps simultaneous bisections of the same
+    /// edge (from different elements) conforming.
+    fn edge_midpoint(&mut self, a: VertId, b: VertId) -> VertId {
+        let key = edge_key(a, b);
+        if let Some(&v) = self.edge_mid.get(&key) {
+            return v;
+        }
+        let p = self.vertices[a as usize].midpoint(self.vertices[b as usize]);
+        let v = self.alloc_vertex(p);
+        self.edge_mid.insert(key, v);
+        v
+    }
+
+    /// Bisect one leaf (Maubach). Children inherit the owner -- new
+    /// elements are born on their parent's process, which is exactly
+    /// the data-locality behaviour whose erosion the DLB fixes.
+    pub fn bisect(&mut self, id: ElemId) -> [ElemId; 2] {
+        let (verts, tag, generation, owner) = {
+            let e = &self.elems[id as usize];
+            debug_assert!(e.is_leaf(), "bisect of non-leaf {id}");
+            (e.verts, e.tag, e.generation, e.owner)
+        };
+        let k = tag as usize;
+        let z = self.edge_midpoint(verts[0], verts[k]);
+
+        // Maubach child vertex lists.
+        let mut c1 = verts;
+        c1[k] = z;
+        let mut c2 = [0u32; 4];
+        for (i, slot) in c2.iter_mut().enumerate().take(k) {
+            *slot = verts[i + 1];
+        }
+        c2[k] = z;
+        for (i, slot) in c2.iter_mut().enumerate().skip(k + 1) {
+            *slot = verts[i];
+        }
+        let new_tag = if tag > 1 { tag - 1 } else { 3 };
+
+        let mk = |verts: [VertId; 4]| Elem {
+            verts,
+            tag: new_tag,
+            generation: generation + 1,
+            owner,
+            parent: id,
+            children: [NONE, NONE],
+            mid_vertex: NONE,
+            dead: false,
+        };
+        let a = self.alloc_elem(mk(c1));
+        let b = self.alloc_elem(mk(c2));
+        let e = &mut self.elems[id as usize];
+        e.children = [a, b];
+        e.mid_vertex = z;
+        self.n_leaves += 1; // one leaf became two
+        [a, b]
+    }
+
+    /// True if any edge of leaf `id` carries a registered midpoint,
+    /// i.e. a neighbour has split an edge this leaf still spans.
+    fn has_hanging_edge(&self, id: ElemId) -> bool {
+        let v = self.elems[id as usize].verts;
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                if self.edge_mid.contains_key(&edge_key(v[i], v[j])) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Refine: bisect all `marked` leaves, then run the conformity
+    /// closure (bisect any leaf spanning a split edge) to a fixpoint.
+    pub fn refine(&mut self, marked: &[ElemId]) -> RefineStats {
+        let mut stats = RefineStats::default();
+        for &id in marked {
+            if self.elems[id as usize].is_leaf() {
+                self.bisect(id);
+                stats.marked_bisections += 1;
+            }
+        }
+        // Closure to fixpoint. Each pass scans current leaves; new
+        // leaves produced in a pass are checked in the next pass.
+        const MAX_PASSES: usize = 1000;
+        loop {
+            stats.closure_passes += 1;
+            assert!(
+                stats.closure_passes < MAX_PASSES,
+                "conformity closure did not terminate (incompatible mesh tags?)"
+            );
+            let mut any = false;
+            let leaves = self.leaves_unordered();
+            for id in leaves {
+                if self.elems[id as usize].is_leaf() && self.has_hanging_edge(id) {
+                    self.bisect(id);
+                    stats.closure_bisections += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        stats
+    }
+
+    /// Coarsen: undo bisections whose midpoint patch is fully marked.
+    /// A parent P (children both leaves) is *coarsenable* iff every
+    /// leaf incident to P's midpoint vertex is itself a child-of-a-
+    /// parent with the same midpoint, with a leaf sibling, and marked.
+    /// Whole patches coarsen atomically, preserving conformity.
+    /// Returns the number of parents un-refined.
+    pub fn coarsen(&mut self, marked: &[ElemId]) -> usize {
+        use std::collections::HashSet;
+        let marked: HashSet<ElemId> = marked.iter().copied().collect();
+
+        // Candidate parents: both children are leaves and marked.
+        let mut patch_parents: FxHashMap<VertId, Vec<ElemId>> = FxHashMap::default();
+        for (i, e) in self.elems.iter().enumerate() {
+            if e.dead || e.children[0] == NONE {
+                continue;
+            }
+            let [a, b] = e.children;
+            if self.elems[a as usize].is_leaf()
+                && self.elems[b as usize].is_leaf()
+                && marked.contains(&a)
+                && marked.contains(&b)
+            {
+                patch_parents
+                    .entry(e.mid_vertex)
+                    .or_default()
+                    .push(i as ElemId);
+            }
+        }
+        if patch_parents.is_empty() {
+            return 0;
+        }
+
+        // Leaf incidence restricted to candidate midpoints.
+        let mut incidence: FxHashMap<VertId, Vec<ElemId>> = FxHashMap::default();
+        for id in self.leaves_unordered() {
+            for &v in &self.elems[id as usize].verts {
+                if patch_parents.contains_key(&v) {
+                    incidence.entry(v).or_default().push(id);
+                }
+            }
+        }
+
+        let mut coarsened = 0;
+        for (&mid, parents) in patch_parents.iter() {
+            let incident = match incidence.get(&mid) {
+                Some(v) => v,
+                None => continue,
+            };
+            // Every incident leaf must be a child of one of `parents`.
+            let children: std::collections::HashSet<ElemId> = parents
+                .iter()
+                .flat_map(|&p| self.elems[p as usize].children)
+                .collect();
+            if !incident.iter().all(|l| children.contains(l)) {
+                continue;
+            }
+            // Un-refine the whole patch.
+            for &p in parents {
+                let [a, b] = self.elems[p as usize].children;
+                self.elems[a as usize].dead = true;
+                self.elems[b as usize].dead = true;
+                self.free_elems.push(a);
+                self.free_elems.push(b);
+                let pe = &mut self.elems[p as usize];
+                pe.children = [NONE, NONE];
+                pe.mid_vertex = NONE;
+                self.n_leaves -= 1;
+                coarsened += 1;
+            }
+            // Drop the midpoint vertex and its edge-map entry.
+            // The parent refinement edge is the same for all patch
+            // parents (they share the split edge).
+            let p0 = parents[0];
+            let (a, b) = self.elems[p0 as usize].refine_edge();
+            self.edge_mid.remove(&edge_key(a, b));
+            self.free_verts.push(mid);
+            coarsened = coarsened.max(1);
+        }
+        coarsened
+    }
+
+    /// Verify structural invariants (test / debug helper):
+    /// conformity (no leaf spans a split edge; every interior face is
+    /// shared by exactly 2 leaves), tree integrity, and leaf count.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let leaves = self.leaves_unordered();
+        if leaves.len() != self.n_leaves {
+            return Err(format!(
+                "leaf count mismatch: cached {} actual {}",
+                self.n_leaves,
+                leaves.len()
+            ));
+        }
+        for &id in &leaves {
+            if self.has_hanging_edge(id) {
+                return Err(format!("leaf {id} spans a split edge"));
+            }
+        }
+        // face conformity
+        let mut face_count: FxHashMap<u128, u32> = FxHashMap::default();
+        for &id in &leaves {
+            let v = self.elems[id as usize].verts;
+            for f in crate::mesh::topology::FACES {
+                let key = crate::util::hash::face_key(
+                    v[f[0] as usize],
+                    v[f[1] as usize],
+                    v[f[2] as usize],
+                );
+                *face_count.entry(key).or_insert(0) += 1;
+            }
+        }
+        for (_, c) in face_count {
+            if c > 2 {
+                return Err(format!("face shared by {c} leaves"));
+            }
+        }
+        // tree integrity
+        for (i, e) in self.elems.iter().enumerate() {
+            if e.dead {
+                continue;
+            }
+            if e.children[0] != NONE {
+                for &c in &e.children {
+                    let ce = &self.elems[c as usize];
+                    if ce.dead {
+                        return Err(format!("elem {i} has dead child {c}"));
+                    }
+                    if ce.parent != i as u32 {
+                        return Err(format!("child {c} parent link broken"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::generator;
+    use super::*;
+
+    fn unit_cube() -> TetMesh {
+        generator::box_mesh(1, 1, 1, Vec3::ZERO, Vec3::new(1.0, 1.0, 1.0))
+    }
+
+    #[test]
+    fn cube_mesh_basics() {
+        let m = unit_cube();
+        assert_eq!(m.n_leaves(), 6);
+        assert_eq!(m.n_vertices(), 8);
+        assert!((m.total_volume() - 1.0).abs() < 1e-12);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn uniform_refine_doubles_leaves_preserves_volume() {
+        let mut m = unit_cube();
+        for step in 0..4 {
+            let leaves = m.leaves_unordered();
+            let stats = m.refine(&leaves);
+            assert_eq!(stats.marked_bisections, leaves.len());
+            m.check_invariants()
+                .unwrap_or_else(|e| panic!("step {step}: {e}"));
+            assert!((m.total_volume() - 1.0).abs() < 1e-12);
+        }
+        assert!(m.n_leaves() >= 6 * 16);
+    }
+
+    #[test]
+    fn local_refine_stays_conforming() {
+        let mut m = unit_cube();
+        // refine around one corner repeatedly
+        for _ in 0..6 {
+            let marked: Vec<ElemId> = m
+                .leaves_unordered()
+                .into_iter()
+                .filter(|&id| m.centroid(id).norm() < 0.95)
+                .collect();
+            assert!(!marked.is_empty());
+            m.refine(&marked);
+            m.check_invariants().unwrap();
+            assert!((m.total_volume() - 1.0).abs() < 1e-12);
+        }
+        // graded, not uniform: far-corner elements stay coarser
+        let gens: Vec<u16> = m
+            .leaves_unordered()
+            .iter()
+            .map(|&id| m.elem(id).generation)
+            .collect();
+        let gmax = *gens.iter().max().unwrap();
+        let gmin = *gens.iter().min().unwrap();
+        assert!(m.n_leaves() > 30);
+        assert!(gmax > gmin, "refinement was uniform (gmax {gmax} gmin {gmin})");
+    }
+
+    #[test]
+    fn dfs_order_visits_all_leaves_once() {
+        let mut m = unit_cube();
+        m.refine(&m.leaves_unordered());
+        m.refine(&m.leaves_unordered());
+        let dfs = m.leaves_dfs();
+        assert_eq!(dfs.len(), m.n_leaves());
+        let mut sorted = dfs.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), dfs.len());
+    }
+
+    #[test]
+    fn dfs_consecutive_leaves_share_vertices() {
+        // Maubach sibling order: consecutive DFS leaves under the same
+        // parent share a face; across parents they still overwhelmingly
+        // share >= 1 vertex, which is the locality RTK exploits.
+        let mut m = unit_cube();
+        for _ in 0..3 {
+            m.refine(&m.leaves_unordered());
+        }
+        let dfs = m.leaves_dfs();
+        let mut share = 0;
+        for w in dfs.windows(2) {
+            let a = m.elem(w[0]).verts;
+            let b = m.elem(w[1]).verts;
+            let common = a.iter().filter(|x| b.contains(x)).count();
+            if common >= 1 {
+                share += 1;
+            }
+        }
+        assert!(
+            share as f64 >= 0.8 * (dfs.len() - 1) as f64,
+            "only {share}/{} consecutive pairs share a vertex",
+            dfs.len() - 1
+        );
+    }
+
+    #[test]
+    fn refine_then_coarsen_roundtrip() {
+        let mut m = unit_cube();
+        let v0 = m.total_volume();
+        let n0 = m.n_leaves();
+        m.refine(&m.leaves_unordered());
+        let n1 = m.n_leaves();
+        assert!(n1 > n0);
+        // coarsen everything back
+        let mut guard = 0;
+        while m.n_leaves() > n0 {
+            let c = m.coarsen(&m.leaves_unordered());
+            if c == 0 {
+                break;
+            }
+            m.check_invariants().unwrap();
+            guard += 1;
+            assert!(guard < 20);
+        }
+        assert_eq!(m.n_leaves(), n0);
+        assert!((m.total_volume() - v0).abs() < 1e-12);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coarsen_respects_partial_marks() {
+        let mut m = unit_cube();
+        m.refine(&m.leaves_unordered());
+        let n1 = m.n_leaves();
+        // mark only half the leaves: patches containing unmarked leaves
+        // must survive
+        let leaves = m.leaves_unordered();
+        let half = &leaves[..leaves.len() / 2];
+        m.coarsen(half);
+        m.check_invariants().unwrap();
+        assert!(m.n_leaves() <= n1);
+        assert!((m.total_volume() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn owners_inherited_on_refine() {
+        let mut m = unit_cube();
+        for (i, &id) in m.leaves_unordered().iter().enumerate() {
+            m.elems[id as usize].owner = (i % 3) as u16;
+        }
+        let before: FxHashMap<ElemId, u16> = m
+            .leaves_unordered()
+            .into_iter()
+            .map(|id| (id, m.elem(id).owner))
+            .collect();
+        m.refine(&m.leaves_unordered());
+        for id in m.leaves_unordered() {
+            let mut anc = id;
+            while m.elem(anc).parent != NONE {
+                anc = m.elem(anc).parent;
+            }
+            // every leaf's owner matches some original ancestor's owner
+            if let Some(&o) = before.get(&anc) {
+                assert_eq!(m.elem(id).owner, o);
+            }
+        }
+    }
+
+    #[test]
+    fn element_quality_bounded_under_deep_refinement() {
+        use crate::geometry::tet_quality;
+        let mut m = unit_cube();
+        for _ in 0..6 {
+            m.refine(&m.leaves_unordered());
+        }
+        let qmin = m
+            .leaves_unordered()
+            .iter()
+            .map(|&id| tet_quality(&m.elem_coords(id)))
+            .fold(f64::INFINITY, f64::min);
+        // Maubach bisection cycles through 3 shape classes; quality is
+        // bounded below uniformly in refinement depth.
+        assert!(qmin > 0.1, "qmin = {qmin}");
+    }
+
+    #[test]
+    fn generation_increments() {
+        let mut m = unit_cube();
+        m.refine(&m.leaves_unordered());
+        for id in m.leaves_unordered() {
+            assert_eq!(m.elem(id).generation, 1);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Initial bisection of the coarsest graph: greedy graph growing
+//! (GGGP): BFS from a pseudo-peripheral seed, absorbing the frontier
+//! vertex with the best cut gain until the grown region reaches the
+//! target weight. Several seeds are tried; the best cut wins.
+
+use super::CsrGraph;
+use crate::util::rng::Pcg32;
+
+/// Pseudo-peripheral vertex: start anywhere, BFS to the farthest
+/// vertex, repeat once.
+fn pseudo_peripheral(g: &CsrGraph, start: usize) -> usize {
+    let mut far = start;
+    for _ in 0..2 {
+        let mut dist = vec![u32::MAX; g.n()];
+        let mut q = std::collections::VecDeque::new();
+        dist[far] = 0;
+        q.push_back(far);
+        let mut last = far;
+        while let Some(v) = q.pop_front() {
+            last = v;
+            for (u, _) in g.neighbors(v) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = dist[v] + 1;
+                    q.push_back(u as usize);
+                }
+            }
+        }
+        far = last;
+    }
+    far
+}
+
+/// Grow side 0 from a seed until it carries `frac` of the weight.
+/// Returns side assignment; tries a few seeds, keeps the best cut.
+pub fn grow_bisection(g: &CsrGraph, frac: f64, rng: &mut Pcg32) -> Vec<u8> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total = g.total_vwgt();
+    let target = total * frac;
+
+    let mut best_side: Option<(f64, Vec<u8>)> = None;
+    let tries = 4.min(n);
+    for t in 0..tries {
+        let seed = if t == 0 {
+            pseudo_peripheral(g, rng.gen_range(n))
+        } else {
+            rng.gen_range(n)
+        };
+        let side = grow_from(g, seed, target);
+        let cut = g.cut2(&side);
+        if best_side
+            .as_ref()
+            .map(|(bc, _)| cut < *bc)
+            .unwrap_or(true)
+        {
+            best_side = Some((cut, side));
+        }
+    }
+    best_side.unwrap().1
+}
+
+fn grow_from(g: &CsrGraph, seed: usize, target: f64) -> Vec<u8> {
+    let n = g.n();
+    // side 1 = not grown yet
+    let mut side = vec![1u8; n];
+    // gain of moving v into the region: edges to region minus edges out
+    let mut gain = vec![0.0f64; n];
+    let mut in_frontier = vec![false; n];
+    let mut frontier: Vec<u32> = Vec::new();
+
+    let mut grown_w = 0.0;
+    let mut v = seed;
+    loop {
+        side[v] = 0;
+        grown_w += g.vwgt[v];
+        if grown_w >= target {
+            break;
+        }
+        for (u, w) in g.neighbors(v) {
+            let u = u as usize;
+            if side[u] == 1 {
+                gain[u] += 2.0 * w;
+                if !in_frontier[u] {
+                    in_frontier[u] = true;
+                    frontier.push(u as u32);
+                }
+            }
+        }
+        // pick the best frontier vertex (linear scan; coarsest graphs
+        // are small, so this simple O(F) step is fine)
+        let mut best: Option<(usize, f64)> = None;
+        let mut best_pos = 0;
+        for (pos, &u) in frontier.iter().enumerate() {
+            let u = u as usize;
+            if side[u] == 0 {
+                continue;
+            }
+            if best.map(|(_, bg)| gain[u] > bg).unwrap_or(true) {
+                best = Some((u, gain[u]));
+                best_pos = pos;
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                frontier.swap_remove(best_pos);
+                v = u;
+            }
+            None => {
+                // disconnected: jump to any ungrown vertex
+                match (0..n).find(|&u| side[u] == 1) {
+                    Some(u) => v = u,
+                    None => break,
+                }
+            }
+        }
+    }
+    side
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder(n: usize) -> CsrGraph {
+        // 2 x n grid
+        let id = |r: usize, c: usize| (r * n + c) as u32;
+        let mut xadj = vec![0u32];
+        let mut adjncy = Vec::new();
+        for r in 0..2 {
+            for c in 0..n {
+                if c > 0 {
+                    adjncy.push(id(r, c - 1));
+                }
+                if c + 1 < n {
+                    adjncy.push(id(r, c + 1));
+                }
+                adjncy.push(id(1 - r, c));
+                xadj.push(adjncy.len() as u32);
+            }
+        }
+        let adjwgt = vec![1.0; adjncy.len()];
+        CsrGraph {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt: vec![1.0; 2 * n],
+        }
+    }
+
+    #[test]
+    fn ladder_bisection_near_optimal() {
+        let g = ladder(20);
+        let mut rng = Pcg32::new(2);
+        let side = grow_bisection(&g, 0.5, &mut rng);
+        let cut = g.cut2(&side);
+        // optimal cut of a 2x20 ladder at the waist = 2
+        assert!(cut <= 6.0, "cut {cut}");
+        let w0: f64 = (0..g.n()).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
+        assert!((w0 - 20.0).abs() <= 2.0, "w0 {w0}");
+    }
+
+    #[test]
+    fn respects_fraction() {
+        let g = ladder(30);
+        let mut rng = Pcg32::new(4);
+        let side = grow_bisection(&g, 0.25, &mut rng);
+        let w0: f64 = (0..g.n()).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
+        assert!((w0 - 15.0).abs() <= 2.0, "w0 {w0} target 15");
+    }
+
+    #[test]
+    fn pseudo_peripheral_is_far() {
+        let g = ladder(25);
+        let v = pseudo_peripheral(&g, 12);
+        // a peripheral vertex of the ladder is at one of the 4 corners
+        let c = (v % 25) as i64;
+        assert!(c == 0 || c == 24, "peripheral col {c}");
+    }
+
+    #[test]
+    fn single_vertex_graph() {
+        let g = CsrGraph {
+            xadj: vec![0, 0],
+            adjncy: vec![],
+            adjwgt: vec![],
+            vwgt: vec![1.0],
+        };
+        let mut rng = Pcg32::new(9);
+        let side = grow_bisection(&g, 0.5, &mut rng);
+        assert_eq!(side.len(), 1);
+    }
+}

@@ -1,0 +1,220 @@
+//! Coarsening phase: heavy-edge matching (HEM) + graph contraction.
+
+use super::CsrGraph;
+use crate::util::rng::Pcg32;
+
+/// One round of heavy-edge matching followed by contraction.
+/// Returns the coarse graph and the fine->coarse vertex map.
+pub fn heavy_edge_matching(g: &CsrGraph, rng: &mut Pcg32) -> (CsrGraph, Vec<u32>) {
+    let n = g.n();
+    const UNMATCHED: u32 = u32::MAX;
+    let mut mate = vec![UNMATCHED; n];
+
+    // random visit order (standard HEM: breaks grid artifacts)
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    for &v in &order {
+        let v = v as usize;
+        if mate[v] != UNMATCHED {
+            continue;
+        }
+        // heaviest incident edge to an unmatched neighbour
+        let mut best: Option<(u32, f64)> = None;
+        for (u, w) in g.neighbors(v) {
+            if u as usize == v || mate[u as usize] != UNMATCHED {
+                continue;
+            }
+            if best.map(|(_, bw)| w > bw).unwrap_or(true) {
+                best = Some((u, w));
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                mate[v] = u;
+                mate[u as usize] = v as u32;
+            }
+            None => {
+                mate[v] = v as u32; // matched with itself
+            }
+        }
+    }
+
+    // assign coarse ids
+    let mut map = vec![u32::MAX; n];
+    let mut nc = 0u32;
+    for v in 0..n {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        let m = mate[v] as usize;
+        map[v] = nc;
+        map[m] = nc; // m == v for self-matched
+        nc += 1;
+    }
+
+    // contract: sum vertex weights, merge parallel edges
+    let ncz = nc as usize;
+    let mut vwgt = vec![0.0f64; ncz];
+    for v in 0..n {
+        vwgt[map[v] as usize] += g.vwgt[v];
+    }
+    // build adjacency with a per-coarse-vertex scatter buffer
+    let mut xadj = Vec::with_capacity(ncz + 1);
+    let mut adjncy: Vec<u32> = Vec::with_capacity(g.adjncy.len() / 2);
+    let mut adjwgt: Vec<f64> = Vec::with_capacity(g.adjncy.len() / 2);
+    xadj.push(0u32);
+
+    // coarse vertex -> its (up to two) fine vertices
+    let mut members: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); ncz];
+    for v in 0..n {
+        let c = map[v] as usize;
+        if members[c].0 == u32::MAX {
+            members[c].0 = v as u32;
+        } else if members[c].0 != v as u32 {
+            members[c].1 = v as u32;
+        }
+    }
+
+    let mut pos_of: Vec<u32> = vec![u32::MAX; ncz]; // coarse nbr -> slot in current row
+    let mut touched: Vec<u32> = Vec::with_capacity(32);
+    for c in 0..ncz {
+        let row_start = adjncy.len();
+        let (a, b) = members[c];
+        for fv in [a, b] {
+            if fv == u32::MAX {
+                continue;
+            }
+            for (u, w) in g.neighbors(fv as usize) {
+                let cu = map[u as usize];
+                if cu as usize == c {
+                    continue; // internal edge vanishes
+                }
+                let slot = pos_of[cu as usize];
+                if slot == u32::MAX {
+                    pos_of[cu as usize] = adjncy.len() as u32;
+                    touched.push(cu);
+                    adjncy.push(cu);
+                    adjwgt.push(w);
+                } else {
+                    adjwgt[slot as usize] += w;
+                }
+            }
+        }
+        for &t in &touched {
+            pos_of[t as usize] = u32::MAX;
+        }
+        touched.clear();
+        let _ = row_start;
+        xadj.push(adjncy.len() as u32);
+    }
+
+    (
+        CsrGraph {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt,
+        },
+        map,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_graph(nx: usize, ny: usize) -> CsrGraph {
+        let n = nx * ny;
+        let id = |x: usize, y: usize| (y * nx + x) as u32;
+        let mut xadj = vec![0u32];
+        let mut adjncy = Vec::new();
+        for y in 0..ny {
+            for x in 0..nx {
+                if x > 0 {
+                    adjncy.push(id(x - 1, y));
+                }
+                if x + 1 < nx {
+                    adjncy.push(id(x + 1, y));
+                }
+                if y > 0 {
+                    adjncy.push(id(x, y - 1));
+                }
+                if y + 1 < ny {
+                    adjncy.push(id(x, y + 1));
+                }
+                xadj.push(adjncy.len() as u32);
+            }
+        }
+        let adjwgt = vec![1.0; adjncy.len()];
+        CsrGraph {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt: vec![1.0; n],
+        }
+    }
+
+    #[test]
+    fn coarse_graph_shrinks() {
+        let g = grid_graph(10, 10);
+        let mut rng = Pcg32::new(5);
+        let (c, map) = heavy_edge_matching(&g, &mut rng);
+        assert!(c.n() <= (g.n() + 1) / 2 + 10);
+        assert!(c.n() >= g.n() / 2); // perfect matching halves exactly
+        assert_eq!(map.len(), g.n());
+        assert!(map.iter().all(|&m| (m as usize) < c.n()));
+    }
+
+    #[test]
+    fn vertex_weight_conserved() {
+        let g = grid_graph(8, 8);
+        let mut rng = Pcg32::new(7);
+        let (c, _) = heavy_edge_matching(&g, &mut rng);
+        assert!((c.total_vwgt() - g.total_vwgt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edge_weight_conserved_modulo_internal() {
+        // total edge weight of coarse graph = fine total minus matched
+        // (internal) edges
+        let g = grid_graph(6, 6);
+        let fine_total: f64 = g.adjwgt.iter().sum();
+        let mut rng = Pcg32::new(11);
+        let (c, map) = heavy_edge_matching(&g, &mut rng);
+        let coarse_total: f64 = c.adjwgt.iter().sum();
+        // internal edge weight (counted twice in CSR, like totals)
+        let mut internal = 0.0;
+        for v in 0..g.n() {
+            for (u, w) in g.neighbors(v) {
+                if map[v] == map[u as usize] {
+                    internal += w;
+                }
+            }
+        }
+        assert!(
+            (coarse_total - (fine_total - internal)).abs() < 1e-9,
+            "coarse {coarse_total} fine {fine_total} internal {internal}"
+        );
+    }
+
+    #[test]
+    fn coarse_adjacency_symmetric() {
+        let g = grid_graph(7, 5);
+        let mut rng = Pcg32::new(13);
+        let (c, _) = heavy_edge_matching(&g, &mut rng);
+        for v in 0..c.n() {
+            for (u, w) in c.neighbors(v) {
+                let back: f64 = c
+                    .neighbors(u as usize)
+                    .filter(|&(x, _)| x as usize == v)
+                    .map(|(_, w)| w)
+                    .sum();
+                assert!(
+                    (back - w).abs() < 1e-9,
+                    "asymmetric coarse edge {v}<->{u}: {w} vs {back}"
+                );
+            }
+        }
+    }
+}

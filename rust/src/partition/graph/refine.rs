@@ -1,0 +1,171 @@
+//! Uncoarsening refinement: boundary Fiduccia-Mattheyses passes.
+//!
+//! Each pass walks the current boundary vertices in descending gain
+//! order and greedily moves a vertex to the other side when the move
+//! (a) improves the cut, or (b) keeps the cut while improving balance,
+//! subject to both sides staying within (1 + eps) of their targets.
+//! Passes stop when a pass makes no move (local minimum).
+
+use super::CsrGraph;
+
+/// Gain of moving `v` to the other side: external - internal edge weight.
+fn gain_of(g: &CsrGraph, side: &[u8], v: usize) -> f64 {
+    let mut ext = 0.0;
+    let mut int = 0.0;
+    for (u, w) in g.neighbors(v) {
+        if side[u as usize] == side[v] {
+            int += w;
+        } else {
+            ext += w;
+        }
+    }
+    ext - int
+}
+
+/// Refine `side` in place toward weight split (frac, 1-frac).
+pub fn fm_refine(g: &CsrGraph, side: &mut [u8], frac: f64, epsilon: f64, passes: usize) {
+    let n = g.n();
+    if n == 0 {
+        return;
+    }
+    let total = g.total_vwgt();
+    let target0 = total * frac;
+    let target1 = total - target0;
+    let max0 = target0 * (1.0 + epsilon) + 1e-12;
+    let max1 = target1 * (1.0 + epsilon) + 1e-12;
+
+    let mut w0: f64 = (0..n).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
+
+    for _pass in 0..passes {
+        // collect boundary vertices with their gains
+        let mut cand: Vec<(f64, u32)> = Vec::new();
+        for v in 0..n {
+            let boundary = g.neighbors(v).any(|(u, _)| side[u as usize] != side[v]);
+            // also allow moves that fix imbalance even off-boundary
+            let over = if side[v] == 0 { w0 > max0 } else { total - w0 > max1 };
+            if boundary || over {
+                cand.push((gain_of(g, side, v), v as u32));
+            }
+        }
+        cand.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        let mut moved_any = false;
+        for &(_, v) in &cand {
+            let v = v as usize;
+            let gain = gain_of(g, side, v); // recompute: earlier moves changed it
+            let (new_w0, fits) = if side[v] == 0 {
+                let nw = w0 - g.vwgt[v];
+                (nw, total - nw <= max1)
+            } else {
+                let nw = w0 + g.vwgt[v];
+                (nw, nw <= max0)
+            };
+            if !fits {
+                continue;
+            }
+            let balance_now = (w0 - target0).abs();
+            let balance_after = (new_w0 - target0).abs();
+            let improves = gain > 1e-12 || (gain >= -1e-12 && balance_after < balance_now - 1e-12);
+            // forced move if current side is overweight
+            let forced = if side[v] == 0 { w0 > max0 } else { total - w0 > max1 };
+            if improves || (forced && balance_after < balance_now) {
+                side[v] ^= 1;
+                w0 = new_w0;
+                moved_any = true;
+            }
+        }
+        if !moved_any {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn grid_graph(nx: usize, ny: usize) -> CsrGraph {
+        let id = |x: usize, y: usize| (y * nx + x) as u32;
+        let mut xadj = vec![0u32];
+        let mut adjncy = Vec::new();
+        for y in 0..ny {
+            for x in 0..nx {
+                if x > 0 {
+                    adjncy.push(id(x - 1, y));
+                }
+                if x + 1 < nx {
+                    adjncy.push(id(x + 1, y));
+                }
+                if y > 0 {
+                    adjncy.push(id(x, y - 1));
+                }
+                if y + 1 < ny {
+                    adjncy.push(id(x, y + 1));
+                }
+                xadj.push(adjncy.len() as u32);
+            }
+        }
+        let adjwgt = vec![1.0; adjncy.len()];
+        CsrGraph {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt: vec![1.0; nx * ny],
+        }
+    }
+
+    #[test]
+    fn improves_random_partition() {
+        let g = grid_graph(12, 12);
+        let mut rng = Pcg32::new(17);
+        let mut side: Vec<u8> = (0..g.n()).map(|_| rng.gen_range(2) as u8).collect();
+        let before = g.cut2(&side);
+        fm_refine(&g, &mut side, 0.5, 0.05, 12);
+        let after = g.cut2(&side);
+        assert!(
+            after < 0.6 * before,
+            "cut {before} -> {after}: refinement too weak"
+        );
+        // balance respected
+        let w0: f64 = (0..g.n()).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
+        assert!((w0 - 72.0).abs() <= 72.0 * 0.05 + 1.0, "w0 {w0}");
+    }
+
+    #[test]
+    fn preserves_good_partition() {
+        // a clean half-half split of the grid: FM must not make it worse
+        let g = grid_graph(10, 10);
+        let mut side: Vec<u8> = (0..100).map(|v| if v % 10 < 5 { 0 } else { 1 }).collect();
+        let before = g.cut2(&side);
+        fm_refine(&g, &mut side, 0.5, 0.05, 6);
+        let after = g.cut2(&side);
+        assert!(after <= before, "cut {before} -> {after}");
+    }
+
+    #[test]
+    fn fixes_imbalance() {
+        let g = grid_graph(8, 8);
+        // everything on side 0: heavily imbalanced
+        let mut side = vec![0u8; 64];
+        side[63] = 1;
+        fm_refine(&g, &mut side, 0.5, 0.05, 40);
+        let w0: f64 = (0..64).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
+        assert!(
+            (w0 - 32.0).abs() <= 32.0 * 0.2,
+            "w0 {w0} still imbalanced"
+        );
+    }
+
+    #[test]
+    fn gain_computation() {
+        let g = grid_graph(3, 1); // path 0-1-2
+        let side = vec![0u8, 1, 1];
+        // moving 0: ext edge to 1 (w 1) - internal none = +1
+        assert_eq!(gain_of(&g, &side, 0), 1.0);
+        // moving 1: ext edge to 0 - internal edge to 2 = 0
+        assert_eq!(gain_of(&g, &side, 1), 0.0);
+        // moving 2: ext none - internal to 1 = -1
+        assert_eq!(gain_of(&g, &side, 2), -1.0);
+    }
+}

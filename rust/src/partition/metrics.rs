@@ -1,0 +1,147 @@
+//! Partition quality metrics: the quantities the paper's figures and
+//! tables compare -- load imbalance, interface size (edge cut), and
+//! migration volumes (TotalV / MaxV, §2.4).
+
+use crate::mesh::topology::LeafTopology;
+
+/// Full quality report of a partition.
+#[derive(Debug, Clone)]
+pub struct PartitionQuality {
+    pub nparts: usize,
+    /// max part weight / mean part weight (1.0 = perfect)
+    pub imbalance: f64,
+    /// number of interior mesh faces crossing a part boundary
+    pub interface_faces: usize,
+    /// interface_faces / total interior faces
+    pub surface_index: f64,
+    /// number of non-empty parts
+    pub nonempty: usize,
+}
+
+pub fn quality(topo: &LeafTopology, parts: &[u16], weights: &[f64], nparts: usize) -> PartitionQuality {
+    assert_eq!(parts.len(), weights.len());
+    let mut wsum = vec![0.0f64; nparts];
+    for (&p, &w) in parts.iter().zip(weights) {
+        wsum[p as usize] += w;
+    }
+    let interface_faces = topo.interface_faces(parts);
+    PartitionQuality {
+        nparts,
+        imbalance: crate::util::stats::imbalance(&wsum),
+        interface_faces,
+        surface_index: if topo.n_interior_faces == 0 {
+            0.0
+        } else {
+            interface_faces as f64 / topo.n_interior_faces as f64
+        },
+        nonempty: wsum.iter().filter(|&&w| w > 0.0).count(),
+    }
+}
+
+/// Migration volumes between an old and a new assignment of the same
+/// leaves (§2.4): TotalV = total weight that changes rank; MaxV = the
+/// largest per-rank traffic (send + receive).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationVolume {
+    pub total_v: f64,
+    pub max_v: f64,
+    /// fraction of total weight that moved
+    pub moved_fraction: f64,
+}
+
+pub fn migration_volume(
+    old_parts: &[u16],
+    new_parts: &[u16],
+    weights: &[f64],
+    nparts: usize,
+) -> MigrationVolume {
+    assert_eq!(old_parts.len(), new_parts.len());
+    assert_eq!(old_parts.len(), weights.len());
+    let mut send = vec![0.0f64; nparts];
+    let mut recv = vec![0.0f64; nparts];
+    let mut total_v = 0.0;
+    let mut total_w = 0.0;
+    for i in 0..old_parts.len() {
+        total_w += weights[i];
+        if old_parts[i] != new_parts[i] {
+            total_v += weights[i];
+            send[old_parts[i] as usize] += weights[i];
+            recv[new_parts[i] as usize] += weights[i];
+        }
+    }
+    let max_v = send
+        .iter()
+        .zip(&recv)
+        .map(|(s, r)| s + r)
+        .fold(0.0f64, f64::max);
+    MigrationVolume {
+        total_v,
+        max_v,
+        moved_fraction: if total_w > 0.0 { total_v / total_w } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator::cube_mesh;
+
+    #[test]
+    fn quality_of_trivial_partition() {
+        let m = cube_mesh(2);
+        let topo = LeafTopology::build(&m);
+        let parts = vec![0u16; topo.n_leaves()];
+        let weights = vec![1.0; topo.n_leaves()];
+        let q = quality(&topo, &parts, &weights, 4);
+        assert_eq!(q.interface_faces, 0);
+        assert_eq!(q.surface_index, 0.0);
+        assert_eq!(q.nonempty, 1);
+        assert_eq!(q.imbalance, 4.0); // all weight on one of 4 parts
+    }
+
+    #[test]
+    fn quality_balanced_two_parts() {
+        let m = cube_mesh(2);
+        let topo = LeafTopology::build(&m);
+        let n = topo.n_leaves();
+        let parts: Vec<u16> = (0..n).map(|i| (i % 2) as u16).collect();
+        let weights = vec![1.0; n];
+        let q = quality(&topo, &parts, &weights, 2);
+        assert!((q.imbalance - 1.0).abs() < 1e-12);
+        assert_eq!(q.nonempty, 2);
+        assert!(q.interface_faces > 0);
+        assert!(q.surface_index > 0.0 && q.surface_index <= 1.0);
+    }
+
+    #[test]
+    fn migration_none_when_identical() {
+        let old = vec![0u16, 1, 2, 1];
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let mv = migration_volume(&old, &old, &w, 3);
+        assert_eq!(mv.total_v, 0.0);
+        assert_eq!(mv.max_v, 0.0);
+        assert_eq!(mv.moved_fraction, 0.0);
+    }
+
+    #[test]
+    fn migration_counts_moves() {
+        let old = vec![0u16, 0, 1, 1];
+        let new = vec![0u16, 1, 1, 0];
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let mv = migration_volume(&old, &new, &w, 2);
+        assert_eq!(mv.total_v, 6.0); // items 1 (w2) and 3 (w4) moved
+        // rank 0: sends 2, receives 4 -> 6; rank 1: sends 4, receives 2 -> 6
+        assert_eq!(mv.max_v, 6.0);
+        assert!((mv.moved_fraction - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_all_moved() {
+        let old = vec![0u16, 0];
+        let new = vec![1u16, 1];
+        let w = vec![1.0, 1.0];
+        let mv = migration_volume(&old, &new, &w, 2);
+        assert_eq!(mv.total_v, 2.0);
+        assert_eq!(mv.moved_fraction, 1.0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Mitchell's ORIGINAL refinement-tree partitioner -- the baseline the
+//! paper's §2.1 reformulation improves on.
+//!
+//! Mitchell's two-step algorithm: (1) compute the weight of every tree
+//! node as the sum over its subtree's leaves; (2) partition by
+//! recursive bisection of the forest, descending into subtrees and
+//! splitting sibling lists so each side carries half the weight.
+//! Complexity O(N log p + p log N), with awkward communication for
+//! interior nodes shared across ranks (every ancestor's weight needs a
+//! reduction); the paper replaces all of it with per-leaf prefix sums,
+//! two traversals and a single `MPI_Scan` -- see `rtk.rs`.
+//!
+//! We implement the serial form faithfully (subtree weights + the
+//! bisection descent) as the ablation baseline: identical partition
+//! *quality* family, strictly more work per repartition.
+
+use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+use crate::mesh::{TetMesh, NONE};
+use crate::util::hash::FxHashMap;
+
+pub struct MitchellRefinementTree {
+    _private: (),
+}
+
+impl MitchellRefinementTree {
+    pub fn new() -> Self {
+        Self { _private: () }
+    }
+}
+
+impl Default for MitchellRefinementTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Step 1: subtree weights for every live node (post-order).
+fn subtree_weights(
+    mesh: &TetMesh,
+    leaf_weight: &FxHashMap<u32, f64>,
+) -> FxHashMap<u32, f64> {
+    let mut w: FxHashMap<u32, f64> = FxHashMap::default();
+    // iterative post-order over the forest
+    for &root in &mesh.roots {
+        let mut stack = vec![(root, false)];
+        while let Some((id, expanded)) = stack.pop() {
+            let e = mesh.elem(id);
+            if e.dead {
+                continue;
+            }
+            if e.children[0] == NONE {
+                w.insert(id, leaf_weight.get(&id).copied().unwrap_or(0.0));
+                continue;
+            }
+            if expanded {
+                let sum = w.get(&e.children[0]).copied().unwrap_or(0.0)
+                    + w.get(&e.children[1]).copied().unwrap_or(0.0);
+                w.insert(id, sum);
+            } else {
+                stack.push((id, true));
+                stack.push((e.children[1], false));
+                stack.push((e.children[0], false));
+            }
+        }
+    }
+    w
+}
+
+/// A work item in the bisection descent: a run of sibling subtrees
+/// (over the DFS order) plus the part range it must be split into.
+struct Task {
+    /// node ids forming a left-to-right forest slice
+    nodes: Vec<u32>,
+    part_lo: usize,
+    part_hi: usize,
+}
+
+impl Partitioner for MitchellRefinementTree {
+    fn name(&self) -> &'static str {
+        "Mitchell-RT"
+    }
+
+    #[allow(unused_assignments)] // straddle-descent keeps `acc` updated past the last read
+    fn partition(&self, input: &PartitionInput) -> PartitionResult {
+        let p = input.nparts;
+        let mut leaf_weight: FxHashMap<u32, f64> = FxHashMap::default();
+        for (i, &id) in input.leaves.iter().enumerate() {
+            leaf_weight.insert(id, input.weights[i]);
+        }
+        let w = subtree_weights(input.mesh, &leaf_weight);
+
+        let mut part_of: FxHashMap<u32, u16> = FxHashMap::default();
+        let mut tasks = vec![Task {
+            nodes: input.mesh.roots.clone(),
+            part_lo: 0,
+            part_hi: p,
+        }];
+
+        while let Some(task) = tasks.pop() {
+            let nparts = task.part_hi - task.part_lo;
+            if nparts <= 1 || task.nodes.is_empty() {
+                // assign all leaves below to part_lo
+                for &n in &task.nodes {
+                    assign_subtree(input.mesh, n, task.part_lo as u16, &mut part_of);
+                }
+                continue;
+            }
+            let total: f64 = task.nodes.iter().map(|n| w[n]).sum();
+            let p_left = nparts / 2;
+            let target = total * p_left as f64 / nparts as f64;
+
+            // walk the slice accumulating subtree weights; descend into
+            // the subtree that straddles the target
+            let mut acc = 0.0;
+            let mut left: Vec<u32> = Vec::new();
+            let mut right: Vec<u32> = Vec::new();
+            let mut it = task.nodes.iter().copied();
+            for n in it.by_ref() {
+                let wn = w[&n];
+                if acc + wn <= target || wn == 0.0 {
+                    acc += wn;
+                    left.push(n);
+                } else {
+                    // straddling node: expand it (or cut here if leaf)
+                    let e = input.mesh.elem(n);
+                    if e.children[0] == NONE {
+                        // leaf: put it on the lighter side
+                        if target - acc > acc + wn - target {
+                            left.push(n);
+                        } else {
+                            right.push(n);
+                        }
+                    } else {
+                        // expand children into the slice between sides
+                        let c = e.children;
+                        let wc0 = w[&c[0]];
+                        if acc + wc0 <= target {
+                            acc += wc0;
+                            left.push(c[0]);
+                            right.push(c[1]);
+                        } else {
+                            // recurse into left child next round: push
+                            // both children back as the straddle zone
+                            right.push(c[1]);
+                            // the left child still straddles: handle by
+                            // a mini descent
+                            let mut node = c[0];
+                            loop {
+                                let e2 = input.mesh.elem(node);
+                                if e2.children[0] == NONE {
+                                    if target - acc > acc + w[&node] - target {
+                                        acc += w[&node];
+                                        left.push(node);
+                                    } else {
+                                        right.insert(right.len() - 1, node);
+                                    }
+                                    break;
+                                }
+                                let [a, b] = e2.children;
+                                if acc + w[&a] <= target {
+                                    acc += w[&a];
+                                    left.push(a);
+                                    node = b;
+                                } else {
+                                    right.insert(right.len() - 1, b);
+                                    node = a;
+                                }
+                            }
+                        }
+                    }
+                    break;
+                }
+            }
+            right.extend(it);
+
+            tasks.push(Task {
+                nodes: left,
+                part_lo: task.part_lo,
+                part_hi: task.part_lo + p_left,
+            });
+            tasks.push(Task {
+                nodes: right,
+                part_lo: task.part_lo + p_left,
+                part_hi: task.part_hi,
+            });
+        }
+
+        let parts: Vec<u16> = input
+            .leaves
+            .iter()
+            .map(|id| part_of.get(id).copied().unwrap_or(0))
+            .collect();
+        // Mitchell's distributed form needs a reduction per tree level
+        // for the shared interior-node weights plus the final bcast.
+        let levels = input
+            .leaves
+            .iter()
+            .map(|&id| input.mesh.elem(id).generation)
+            .max()
+            .unwrap_or(0) as usize
+            + 1;
+        let mut comm = Vec::new();
+        for _ in 0..levels {
+            comm.push(CommOp::Allreduce {
+                bytes: input.mesh.roots.len() * 8,
+            });
+        }
+        comm.push(CommOp::Bcast {
+            bytes: input.nparts * 2,
+        });
+        PartitionResult { parts, comm }
+    }
+}
+
+fn assign_subtree(mesh: &TetMesh, node: u32, part: u16, out: &mut FxHashMap<u32, u16>) {
+    let mut stack = vec![node];
+    while let Some(id) = stack.pop() {
+        let e = mesh.elem(id);
+        if e.dead {
+            continue;
+        }
+        if e.children[0] == NONE {
+            out.insert(id, part);
+        } else {
+            stack.push(e.children[0]);
+            stack.push(e.children[1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::rtk::RefinementTree;
+    use crate::partition::testutil::{assert_valid_partition, setup_mesh};
+
+    fn input_for(
+        mesh: &TetMesh,
+        nparts: usize,
+    ) -> (Vec<u32>, Vec<f64>, Vec<u16>) {
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = vec![0u16; leaves.len()];
+        let _ = nparts;
+        (leaves, weights, owners)
+    }
+
+    #[test]
+    fn balances_unit_weights() {
+        let mesh = setup_mesh(2);
+        for p in [2usize, 4, 8] {
+            let (leaves, weights, owners) = input_for(&mesh, p);
+            let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, p);
+            let r = MitchellRefinementTree::new().partition(&input);
+            assert_valid_partition(&input, &r, 0.25);
+        }
+    }
+
+    #[test]
+    fn subtree_weights_sum_correctly() {
+        let mesh = setup_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let mut lw = FxHashMap::default();
+        for &l in &leaves {
+            lw.insert(l, 1.0);
+        }
+        let w = subtree_weights(&mesh, &lw);
+        let root_total: f64 = mesh.roots.iter().map(|r| w[r]).sum();
+        assert!((root_total - leaves.len() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn same_quality_family_as_prefix_sum_rtk() {
+        // Mitchell and the paper's RTK cut the same DFS leaf sequence,
+        // so their interface quality should be comparable
+        use crate::mesh::topology::LeafTopology;
+        let mesh = setup_mesh(3);
+        let (leaves, weights, owners) = input_for(&mesh, 8);
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 8);
+        let topo = LeafTopology::build_for(&mesh, leaves.clone());
+        let cut_m = topo.interface_faces(&MitchellRefinementTree::new().partition(&input).parts);
+        let cut_r = topo.interface_faces(&RefinementTree::new().partition(&input).parts);
+        assert!(
+            (cut_m as f64) < 1.6 * cut_r as f64 && (cut_r as f64) < 1.6 * cut_m as f64,
+            "Mitchell {cut_m} vs RTK {cut_r}"
+        );
+    }
+
+    #[test]
+    fn every_leaf_assigned() {
+        let mesh = setup_mesh(2);
+        let (leaves, weights, owners) = input_for(&mesh, 5);
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 5);
+        let r = MitchellRefinementTree::new().partition(&input);
+        assert_eq!(r.parts.len(), leaves.len());
+        assert!(r.parts.iter().all(|&p| (p as usize) < 5));
+        // all 5 parts used
+        let mut used = [false; 5];
+        for &p in &r.parts {
+            used[p as usize] = true;
+        }
+        assert!(used.iter().all(|&u| u));
+    }
+}

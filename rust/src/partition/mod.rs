@@ -1,0 +1,156 @@
+//! Mesh partitioning methods (§2 of the paper).
+//!
+//! Implemented from scratch:
+//! * [`rtk`] -- PHG's refinement-tree partitioner (§2.1), prefix-sum
+//!   formulation, two traversals + one `MPI_Scan`.
+//! * [`sfc`] -- Morton and Hilbert space-filling-curve partitioners
+//!   (§2.2), with both of the paper's bounding-box normalizations.
+//! * [`oned`] -- the generalized-k-section 1-D partitioner (§2.3) that
+//!   the SFC methods reduce to.
+//! * [`rcb`] / [`rib`] -- recursive coordinate / inertial bisection
+//!   (the Zoltan-style geometric baselines).
+//! * [`graph`] -- a multilevel k-way graph partitioner over the dual
+//!   graph (the ParMETIS stand-in).
+//! * [`metrics`] -- partition quality measures (imbalance, edge cut,
+//!   interface faces, TotalV/MaxV migration volumes).
+//!
+//! Partitioners are pure: they map `(mesh, leaves, weights, nparts)` to
+//! a part id per leaf plus a log of the MPI collectives the SPMD
+//! version of the algorithm would have performed; the [`crate::dist`]
+//! layer prices those against its alpha-beta network model.
+
+pub mod graph;
+pub mod metrics;
+pub mod mitchell;
+pub mod oned;
+pub mod rcb;
+pub mod rib;
+pub mod rtk;
+pub mod sfc;
+
+use crate::mesh::{ElemId, TetMesh};
+
+/// A collective operation the SPMD algorithm performs, logged by the
+/// partitioners and priced by `dist::cost`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CommOp {
+    /// Prefix scan over ranks (payload bytes per rank).
+    Scan { bytes: usize },
+    /// Allreduce (payload bytes).
+    Allreduce { bytes: usize },
+    /// Gather to root (total bytes at root).
+    Gather { bytes: usize },
+    /// Broadcast from root (payload bytes).
+    Bcast { bytes: usize },
+    /// Personalized all-to-all (total bytes moved, largest single message).
+    AllToAllV { total_bytes: usize, max_msg: usize },
+}
+
+/// Input to a partitioner. `leaves` is the caller's canonical leaf
+/// order; `weights[i]` is the computational weight of `leaves[i]`;
+/// `owners[i]` is its current rank (used by SPMD cost modelling and by
+/// incremental methods).
+pub struct PartitionInput<'a> {
+    pub mesh: &'a TetMesh,
+    pub leaves: &'a [ElemId],
+    pub weights: &'a [f64],
+    pub owners: &'a [u16],
+    pub nparts: usize,
+}
+
+impl<'a> PartitionInput<'a> {
+    pub fn from_mesh(
+        mesh: &'a TetMesh,
+        leaves: &'a [ElemId],
+        weights: &'a [f64],
+        owners: &'a [u16],
+        nparts: usize,
+    ) -> Self {
+        assert_eq!(leaves.len(), weights.len());
+        assert_eq!(leaves.len(), owners.len());
+        assert!(nparts >= 1 && nparts <= u16::MAX as usize);
+        Self {
+            mesh,
+            leaves,
+            weights,
+            owners,
+            nparts,
+        }
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+}
+
+/// A partitioner's output: `parts[i]` is the new part of `leaves[i]`,
+/// plus the collectives the distributed algorithm performed.
+#[derive(Debug, Clone)]
+pub struct PartitionResult {
+    pub parts: Vec<u16>,
+    pub comm: Vec<CommOp>,
+}
+
+/// The partitioning methods compared in the paper's §3.
+pub trait Partitioner: Send + Sync {
+    /// Short name used in reports ("RTK", "PHG/HSFC", ...).
+    fn name(&self) -> &'static str;
+    fn partition(&self, input: &PartitionInput) -> PartitionResult;
+    /// Whether the method is implicitly incremental (geometric methods
+    /// and RTK are; multilevel graph partitioning is not) -- §1.
+    fn incremental(&self) -> bool {
+        true
+    }
+}
+
+/// The full method lineup of the paper's experiments, in the fig-3.2
+/// presentation order.
+pub fn paper_lineup() -> Vec<Box<dyn Partitioner>> {
+    vec![
+        Box::new(rtk::RefinementTree::new()),
+        Box::new(sfc::SfcPartitioner::msfc()),
+        Box::new(sfc::SfcPartitioner::phg_hsfc()),
+        Box::new(sfc::SfcPartitioner::zoltan_hsfc()),
+        Box::new(rcb::Rcb::new()),
+        Box::new(graph::MultilevelGraph::parmetis_like()),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::mesh::generator;
+
+    /// A refined cube mesh with unit weights and all-zero owners.
+    pub fn setup_mesh(refines: usize) -> TetMesh {
+        let mut m = generator::cube_mesh(2);
+        for _ in 0..refines {
+            let leaves = m.leaves_unordered();
+            m.refine(&leaves);
+        }
+        m
+    }
+
+    /// Assert the PartitionResult is structurally valid and balanced
+    /// within `tol` (imbalance factor <= 1 + tol).
+    pub fn assert_valid_partition(
+        input: &PartitionInput,
+        result: &PartitionResult,
+        tol: f64,
+    ) {
+        assert_eq!(result.parts.len(), input.leaves.len());
+        let p = input.nparts;
+        let mut wsum = vec![0.0f64; p];
+        for (i, &part) in result.parts.iter().enumerate() {
+            assert!((part as usize) < p, "part {part} out of range");
+            wsum[part as usize] += input.weights[i];
+        }
+        let lambda = crate::util::stats::imbalance(&wsum);
+        assert!(
+            lambda <= 1.0 + tol,
+            "imbalance {lambda} > {} for {} parts (weights {wsum:?})",
+            1.0 + tol,
+            p
+        );
+    }
+}

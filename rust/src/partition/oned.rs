@@ -1,0 +1,298 @@
+//! The 1-D partitioning problem (§2.3): given items with scalar keys
+//! and weights, find p-1 splitters so each of the p key-intervals
+//! carries equal weight.
+//!
+//! The algorithm is the paper's generalization of bisection search
+//! (lifted from Zoltan): instead of bisecting, each round subdivides
+//! into N = (p-1)*k + 1 probe intervals; every splitter maintains a
+//! *bounding box* that shrinks each round, and only the boxes (not the
+//! whole interval) are re-probed. Each round costs one Allreduce of the
+//! probe histogram in the SPMD setting -- that is the collective we
+//! log.
+//!
+//! Keys are `u64` (the SFC key space), so convergence is at most
+//! 64 / log2(k+1) rounds; in practice 4-8 rounds with k = 8.
+
+use super::CommOp;
+
+/// Per-splitter search state.
+#[derive(Debug, Clone, Copy)]
+struct SplitterBox {
+    lo: u64,
+    hi: u64, // exclusive
+    /// weight of items with key < lo
+    w_lo: f64,
+    /// weight of items with key < hi
+    w_hi: f64,
+    done: bool,
+}
+
+/// Result of the 1-D partition.
+#[derive(Debug, Clone)]
+pub struct OneDResult {
+    /// p-1 splitter keys; item with key `x` goes to part
+    /// `#{s in splitters : s <= x}`.
+    pub splitters: Vec<u64>,
+    pub comm: Vec<CommOp>,
+    pub rounds: usize,
+}
+
+/// Find splitters for `nparts` equal-weight intervals. `tol` is the
+/// acceptable relative weight error per splitter (of total weight);
+/// `k` is the probes-per-splitter fan-out.
+pub fn partition_1d(
+    keys: &[u64],
+    weights: &[f64],
+    nparts: usize,
+    k: usize,
+    tol: f64,
+) -> OneDResult {
+    assert_eq!(keys.len(), weights.len());
+    assert!(nparts >= 1);
+    assert!(k >= 1);
+    let total: f64 = weights.iter().sum();
+    let mut comm = Vec::new();
+    if nparts == 1 || keys.is_empty() || total <= 0.0 {
+        return OneDResult {
+            splitters: vec![u64::MAX; nparts.saturating_sub(1)],
+            comm,
+            rounds: 0,
+        };
+    }
+
+    let nsplit = nparts - 1;
+    let mut boxes: Vec<SplitterBox> = (0..nsplit)
+        .map(|_| SplitterBox {
+            lo: 0,
+            hi: u64::MAX,
+            w_lo: 0.0,
+            w_hi: total,
+            done: false,
+        })
+        .collect();
+
+    let targets: Vec<f64> = (1..nparts).map(|i| total * i as f64 / nparts as f64).collect();
+
+    let mut rounds = 0;
+    const MAX_ROUNDS: usize = 80;
+    while rounds < MAX_ROUNDS {
+        rounds += 1;
+        // Probe set: k interior probes per unresolved box.
+        let mut probes: Vec<u64> = Vec::with_capacity(nsplit * k);
+        for b in boxes.iter().filter(|b| !b.done) {
+            let span = b.hi - b.lo;
+            for j in 1..=k {
+                let off = (span as u128 * j as u128 / (k as u128 + 1)) as u64;
+                probes.push(b.lo + off.max(1).min(span.saturating_sub(1).max(1)));
+            }
+        }
+        if probes.is_empty() {
+            break;
+        }
+        probes.sort_unstable();
+        probes.dedup();
+
+        // Histogram: weight of items with key < probe. (SPMD: each rank
+        // histograms its local items, then one Allreduce.)
+        let below = weight_below(keys, weights, &probes);
+        comm.push(CommOp::Allreduce {
+            bytes: probes.len() * 8,
+        });
+
+        // Shrink each box around its target.
+        let mut all_done = true;
+        for (b, &target) in boxes.iter_mut().zip(&targets) {
+            if b.done {
+                continue;
+            }
+            for (i, &pr) in probes.iter().enumerate() {
+                if pr <= b.lo || pr >= b.hi {
+                    continue;
+                }
+                let w = below[i];
+                if w <= target && w >= b.w_lo {
+                    b.lo = pr;
+                    b.w_lo = w;
+                }
+                if w >= target && w <= b.w_hi {
+                    b.hi = pr;
+                    b.w_hi = w;
+                }
+            }
+            // done when the box weight range is within tolerance or the
+            // key range cannot be subdivided further
+            if (b.w_hi - b.w_lo) <= tol * total || b.hi - b.lo <= 1 {
+                b.done = true;
+            } else {
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+
+    let splitters: Vec<u64> = boxes.iter().map(|b| b.hi).collect();
+    OneDResult {
+        splitters,
+        comm,
+        rounds,
+    }
+}
+
+/// For each probe (sorted ascending), total weight of items with
+/// key < probe. O(n log m) with binary search per item.
+fn weight_below(keys: &[u64], weights: &[f64], probes: &[u64]) -> Vec<f64> {
+    let mut acc = vec![0.0f64; probes.len() + 1];
+    for (&key, &w) in keys.iter().zip(weights) {
+        // first probe > key  ->  item counts toward all probes above it
+        let idx = probes.partition_point(|&p| p <= key);
+        acc[idx] += w;
+    }
+    // prefix: below[i] = sum of acc[0..=i-1]... items with key < probes[i]
+    // acc[j] holds weight of items with probes[j-1] <= key < probes[j]
+    let mut out = Vec::with_capacity(probes.len());
+    let mut run = 0.0;
+    for j in 0..probes.len() {
+        run += acc[j];
+        out.push(run);
+    }
+    out
+}
+
+/// Assign each key to its part given the splitters.
+pub fn assign_parts(keys: &[u64], splitters: &[u64]) -> Vec<u16> {
+    keys.iter()
+        .map(|&k| splitters.partition_point(|&s| s <= k) as u16)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+    use crate::util::stats::imbalance;
+
+    fn part_weights(parts: &[u16], weights: &[f64], nparts: usize) -> Vec<f64> {
+        let mut w = vec![0.0; nparts];
+        for (&p, &wt) in parts.iter().zip(weights) {
+            w[p as usize] += wt;
+        }
+        w
+    }
+
+    #[test]
+    fn uniform_keys_balance() {
+        let n = 10_000;
+        let keys: Vec<u64> = (0..n).map(|i| (i as u64) << 40).collect();
+        let weights = vec![1.0; n];
+        for p in [2, 3, 7, 16] {
+            let r = partition_1d(&keys, &weights, p, 8, 1e-4);
+            let parts = assign_parts(&keys, &r.splitters);
+            let w = part_weights(&parts, &weights, p);
+            assert!(
+                imbalance(&w) < 1.01,
+                "p={p} imbalance {} weights {w:?}",
+                imbalance(&w)
+            );
+        }
+    }
+
+    #[test]
+    fn single_part_trivial() {
+        let keys = [1u64, 2, 3];
+        let weights = [1.0, 1.0, 1.0];
+        let r = partition_1d(&keys, &weights, 1, 8, 1e-3);
+        assert!(r.splitters.is_empty());
+        assert_eq!(assign_parts(&keys, &r.splitters), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn skewed_weights_balance() {
+        let n = 5000;
+        let keys: Vec<u64> = (0..n).map(|i| (i as u64) * 1_000_003).collect();
+        // weight ~ index: heavily skewed toward high keys
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        let p = 8;
+        let r = partition_1d(&keys, &weights, p, 8, 1e-4);
+        let parts = assign_parts(&keys, &r.splitters);
+        let w = part_weights(&parts, &weights, p);
+        assert!(imbalance(&w) < 1.02, "imbalance {}", imbalance(&w));
+    }
+
+    #[test]
+    fn parts_are_contiguous_in_key_order() {
+        let n = 2000;
+        let keys: Vec<u64> = (0..n).map(|i| (i as u64) * 7_777_777).collect();
+        let weights = vec![1.0; n];
+        let r = partition_1d(&keys, &weights, 5, 8, 1e-4);
+        let parts = assign_parts(&keys, &r.splitters);
+        // keys ascending => parts must be non-decreasing
+        for w in parts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn logs_one_allreduce_per_round() {
+        let keys: Vec<u64> = (0..1000).map(|i| (i as u64) << 30).collect();
+        let weights = vec![1.0; 1000];
+        let r = partition_1d(&keys, &weights, 4, 4, 1e-5);
+        assert_eq!(r.comm.len(), r.rounds);
+        assert!(r.rounds >= 1 && r.rounds < 80, "rounds {}", r.rounds);
+    }
+
+    #[test]
+    fn converges_fast_with_large_k() {
+        let keys: Vec<u64> = (0..50_000u64).map(|i| i * 123_457).collect();
+        let weights = vec![1.0; keys.len()];
+        let r8 = partition_1d(&keys, &weights, 16, 8, 1e-4);
+        assert!(r8.rounds <= 24, "k=8 took {} rounds", r8.rounds);
+    }
+
+    #[test]
+    fn empty_and_zero_weight_inputs() {
+        let r = partition_1d(&[], &[], 4, 8, 1e-3);
+        assert_eq!(r.splitters.len(), 3);
+        let r = partition_1d(&[5u64], &[0.0], 4, 8, 1e-3);
+        assert_eq!(r.splitters.len(), 3);
+    }
+
+    #[test]
+    fn property_balance_random_inputs() {
+        propcheck::check("1d partition balances random inputs", |rng| {
+            let n = 500 + rng.gen_range(5000);
+            let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.gen_uniform(0.1, 2.0)).collect();
+            let p = 2 + rng.gen_range(15);
+            let r = partition_1d(&keys, &weights, p, 8, 1e-4);
+            let parts = assign_parts(&keys, &r.splitters);
+            let w = part_weights(&parts, &weights, p);
+            // with random continuous-ish keys the balance should be tight;
+            // allow slack for the heaviest single item straddling a cut
+            let wmax: f64 = weights.iter().cloned().fold(0.0, f64::max);
+            let ideal = weights.iter().sum::<f64>() / p as f64;
+            let bound = 1.0 + (wmax / ideal) + 0.02;
+            assert!(
+                imbalance(&w) <= bound,
+                "imbalance {} > {bound} (p={p}, n={n})",
+                imbalance(&w)
+            );
+        });
+    }
+
+    #[test]
+    fn property_parts_complete_and_in_range() {
+        propcheck::check("1d assigns every item to a valid part", |rng| {
+            let n = 100 + rng.gen_range(1000);
+            let keys: Vec<u64> = (0..n).map(|_| rng.next_u64() >> rng.gen_range(32)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.gen_uniform(0.5, 1.5)).collect();
+            let p = 1 + rng.gen_range(12);
+            let r = partition_1d(&keys, &weights, p, 4, 1e-3);
+            assert_eq!(r.splitters.len(), p - 1);
+            let parts = assign_parts(&keys, &r.splitters);
+            assert_eq!(parts.len(), n);
+            assert!(parts.iter().all(|&x| (x as usize) < p));
+        });
+    }
+}

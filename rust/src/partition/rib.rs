@@ -1,0 +1,241 @@
+//! Recursive inertial bisection (RIB, Simon 1991): like RCB but each
+//! bisection is along the principal axis of the point set's inertia
+//! (covariance) tensor instead of a coordinate axis, so cuts adapt to
+//! tilted geometry. The 3x3 symmetric eigenproblem is solved by Jacobi
+//! rotations (no linear-algebra crate in this environment).
+
+use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+
+pub struct Rib {
+    _private: (),
+}
+
+impl Rib {
+    pub fn new() -> Self {
+        Self { _private: () }
+    }
+}
+
+impl Default for Rib {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Item {
+    pos: [f64; 3],
+    w: f64,
+    idx: u32,
+}
+
+/// Largest-eigenvalue eigenvector of a symmetric 3x3 matrix via
+/// cyclic Jacobi. Exposed (crate) for direct testing.
+pub(crate) fn principal_axis(mut a: [[f64; 3]; 3]) -> [f64; 3] {
+    let mut v = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+    for _sweep in 0..32 {
+        // largest off-diagonal
+        let mut off = 0.0;
+        for r in 0..3 {
+            for c in (r + 1)..3 {
+                off += a[r][c] * a[r][c];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..3 {
+            for q in (p + 1)..3 {
+                if a[p][q].abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate a
+                for k in 0..3 {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..3 {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+                // accumulate v
+                for k in 0..3 {
+                    let vkp = v[k][p];
+                    let vkq = v[k][q];
+                    v[k][p] = c * vkp - s * vkq;
+                    v[k][q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // pick column with largest eigenvalue
+    let mut best = 0;
+    for i in 1..3 {
+        if a[i][i] > a[best][best] {
+            best = i;
+        }
+    }
+    [v[0][best], v[1][best], v[2][best]]
+}
+
+fn rib_recurse(
+    items: &mut [Item],
+    part_lo: usize,
+    part_hi: usize,
+    parts: &mut [u16],
+    comm: &mut Vec<CommOp>,
+) {
+    let nparts = part_hi - part_lo;
+    if nparts <= 1 || items.is_empty() {
+        for it in items.iter() {
+            parts[it.idx as usize] = part_lo as u16;
+        }
+        return;
+    }
+    // weighted centroid + covariance (the inertia tensor modulo trace)
+    let total: f64 = items.iter().map(|i| i.w).sum();
+    let mut cen = [0.0f64; 3];
+    for it in items.iter() {
+        for d in 0..3 {
+            cen[d] += it.w * it.pos[d];
+        }
+    }
+    for c in cen.iter_mut() {
+        *c /= total.max(1e-300);
+    }
+    let mut cov = [[0.0f64; 3]; 3];
+    for it in items.iter() {
+        let d = [
+            it.pos[0] - cen[0],
+            it.pos[1] - cen[1],
+            it.pos[2] - cen[2],
+        ];
+        for r in 0..3 {
+            for c in 0..3 {
+                cov[r][c] += it.w * d[r] * d[c];
+            }
+        }
+    }
+    let axis = principal_axis(cov);
+    comm.push(CommOp::Allreduce { bytes: 9 * 8 + 64 });
+
+    // project and split at the weighted median
+    let p_left = nparts / 2;
+    let target = total * p_left as f64 / nparts as f64;
+    items.sort_unstable_by(|a, b| {
+        let pa = a.pos[0] * axis[0] + a.pos[1] * axis[1] + a.pos[2] * axis[2];
+        let pb = b.pos[0] * axis[0] + b.pos[1] * axis[1] + b.pos[2] * axis[2];
+        pa.partial_cmp(&pb).unwrap()
+    });
+    let mut acc = 0.0;
+    let mut split = items.len();
+    for (i, it) in items.iter().enumerate() {
+        acc += it.w;
+        if acc >= target {
+            split = i + 1;
+            break;
+        }
+    }
+    let (left, right) = items.split_at_mut(split);
+    rib_recurse(left, part_lo, part_lo + p_left, parts, comm);
+    rib_recurse(right, part_lo + p_left, part_hi, parts, comm);
+}
+
+impl Partitioner for Rib {
+    fn name(&self) -> &'static str {
+        "RIB"
+    }
+
+    fn partition(&self, input: &PartitionInput) -> PartitionResult {
+        let mut items: Vec<Item> = input
+            .leaves
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| {
+                let c = input.mesh.centroid(id);
+                Item {
+                    pos: [c.x, c.y, c.z],
+                    w: input.weights[i],
+                    idx: i as u32,
+                }
+            })
+            .collect();
+        let mut parts = vec![0u16; input.leaves.len()];
+        let mut comm = Vec::new();
+        rib_recurse(&mut items, 0, input.nparts, &mut parts, &mut comm);
+        PartitionResult { parts, comm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::testutil::{assert_valid_partition, setup_mesh};
+
+    #[test]
+    fn principal_axis_of_diagonal() {
+        let a = [[5.0, 0.0, 0.0], [0.0, 2.0, 0.0], [0.0, 0.0, 1.0]];
+        let v = principal_axis(a);
+        assert!(v[0].abs() > 0.99, "{v:?}");
+    }
+
+    #[test]
+    fn principal_axis_of_rotated() {
+        // covariance of points along (1,1,0)
+        let a = [[1.0, 1.0, 0.0], [1.0, 1.0, 0.0], [0.0, 0.0, 0.1]];
+        let v = principal_axis(a);
+        let dot = (v[0] + v[1]).abs() / 2.0f64.sqrt();
+        assert!(dot > 0.99, "{v:?}");
+    }
+
+    #[test]
+    fn balances() {
+        let mesh = setup_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = vec![0u16; leaves.len()];
+        for p in [2usize, 5, 8] {
+            let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, p);
+            let r = Rib::new().partition(&input);
+            assert_valid_partition(&input, &r, 0.05);
+        }
+    }
+
+    #[test]
+    fn tilted_domain_first_cut_follows_diagonal() {
+        // stretch a cube along (1,1,1) by using a box mesh then shearing
+        let mut mesh = crate::mesh::generator::cube_mesh(3);
+        for v in &mut mesh.vertices {
+            let t = v.x;
+            v.x += 3.0 * t; // stretch x
+            v.y += 3.0 * t; // shear y along x: principal dir ~ (1, 0.75, 0)
+        }
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = vec![0u16; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 2);
+        let r = Rib::new().partition(&input);
+        assert_valid_partition(&input, &r, 0.05);
+        // the two parts should separate along the stretched direction:
+        // compare part centroids
+        let mut c = [crate::geometry::Vec3::ZERO; 2];
+        let mut n = [0usize; 2];
+        for (i, &id) in leaves.iter().enumerate() {
+            c[r.parts[i] as usize] += mesh.centroid(id);
+            n[r.parts[i] as usize] += 1;
+        }
+        let d = c[0] / n[0] as f64 - c[1] / n[1] as f64;
+        assert!(
+            d.x.abs() > d.z.abs(),
+            "separation {d:?} not along stretch"
+        );
+    }
+}

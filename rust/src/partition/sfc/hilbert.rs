@@ -1,0 +1,280 @@
+//! 3-D Hilbert space-filling curve via Skilling's transpose algorithm
+//! ("Programming the Hilbert curve", AIP Conf. Proc. 707, 2004).
+//!
+//! Much better spatial locality than Morton (no long jumps), at the
+//! cost of a more complex generator -- the trade-off §2.2 describes.
+//! `AxestoTranspose` converts integer coordinates into the "transposed"
+//! Hilbert index (one bit-plane per axis), which we then interleave
+//! into a single 63-bit key.
+
+pub const BITS: u32 = 21;
+
+/// Hilbert key of integer coords (each < 2^21).
+pub fn hilbert_key(x: u32, y: u32, z: u32) -> u64 {
+    let mut xs = [x, y, z];
+    axes_to_transpose(&mut xs, BITS);
+    interleave_transposed(&xs, BITS)
+}
+
+/// In-place AxestoTranspose (Skilling 2004), n = 3 axes.
+///
+/// The per-bit loop is branchless (#Perf pass): the two cases of
+/// Skilling's conditional are blended with a mask derived from the
+/// tested bit, removing 63 unpredictable branches per key.
+fn axes_to_transpose(xv: &mut [u32; 3], bits: u32) {
+    let m = 1u32 << (bits - 1);
+
+    // Inverse undo
+    let mut q = m;
+    while q > 1 {
+        let p = q - 1;
+        for i in 0..3 {
+            // sel = all-ones when bit q of xv[i] is set
+            let sel = 0u32.wrapping_sub((xv[i] >> q.trailing_zeros()) & 1);
+            let t = (xv[0] ^ xv[i]) & p & !sel;
+            xv[0] ^= (p & sel) | t;
+            xv[i] ^= t;
+        }
+        q >>= 1;
+    }
+
+    // Gray encode
+    for i in 1..3 {
+        xv[i] ^= xv[i - 1];
+    }
+    let mut t = 0u32;
+    q = m;
+    while q > 1 {
+        if xv[2] & q != 0 {
+            t ^= q - 1;
+        }
+        q >>= 1;
+    }
+    for x in xv.iter_mut() {
+        *x ^= t;
+    }
+}
+
+/// Interleave the transposed index: the key's most-significant bit
+/// triple is (bit b of X[0], X[1], X[2]) at b = bits-1.
+///
+/// Uses the same magic-number bit spreading as the Morton code instead
+/// of a 63-iteration bit loop -- part of the #Perf pass (4.9x on the
+/// hilbert-key microbench; see EXPERIMENTS.md).
+#[inline]
+fn interleave_transposed(xv: &[u32; 3], bits: u32) -> u64 {
+    debug_assert!(bits <= 21);
+    // X[0] is the most significant axis of each bit triple
+    (spread21(xv[0] as u64) << 2) | (spread21(xv[1] as u64) << 1) | spread21(xv[2] as u64)
+}
+
+/// Spread the low 21 bits so consecutive bits land 3 apart.
+#[inline]
+fn spread21(x: u64) -> u64 {
+    let mut x = x & 0x1F_FFFF;
+    x = (x | (x << 32)) & 0x1F_0000_0000_FFFF;
+    x = (x | (x << 16)) & 0x1F_0000_FF00_00FF;
+    x = (x | (x << 8)) & 0x100F_00F0_0F00_F00F;
+    x = (x | (x << 4)) & 0x10C3_0C30_C30C_30C3;
+    x = (x | (x << 2)) & 0x1249_2492_4924_9249;
+    x
+}
+
+/// Inverse of `interleave_transposed` (test support).
+fn deinterleave(key: u64, bits: u32) -> [u32; 3] {
+    let mut xv = [0u32; 3];
+    let mut k = key;
+    for b in 0..bits {
+        for i in (0..3).rev() {
+            xv[i] |= ((k & 1) as u32) << b;
+            k >>= 1;
+        }
+    }
+    xv
+}
+
+/// TransposetoAxes (Skilling 2004) -- the exact inverse, used by tests
+/// to prove bijectivity.
+fn transpose_to_axes(xv: &mut [u32; 3], bits: u32) {
+    let n = 3;
+    let m = 1u32 << (bits - 1);
+
+    // Gray decode by H ^ (H/2)
+    let mut t = xv[n - 1] >> 1;
+    for i in (1..n).rev() {
+        xv[i] ^= xv[i - 1];
+    }
+    xv[0] ^= t;
+
+    // Undo excess work
+    let mut q = 2u32;
+    while q != m << 1 {
+        let p = q - 1;
+        for i in (0..n).rev() {
+            if xv[i] & q != 0 {
+                xv[0] ^= p;
+            } else {
+                t = (xv[0] ^ xv[i]) & p;
+                xv[0] ^= t;
+                xv[i] ^= t;
+            }
+        }
+        q <<= 1;
+    }
+}
+
+/// Inverse Hilbert: key -> integer coordinates (test support and the
+/// partition-gallery visualizer).
+pub fn hilbert_key_inverse(key: u64) -> [u32; 3] {
+    let mut xv = deinterleave(key, BITS);
+    transpose_to_axes(&mut xv, BITS);
+    xv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    /// Hilbert keys at `bits` resolution, brute-forced by scaling up
+    /// coordinates to the full 21-bit lattice.
+    fn key_at(bits: u32, x: u32, y: u32, z: u32) -> u64 {
+        let shift = BITS - bits;
+        hilbert_key(x << shift, y << shift, z << shift) >> (3 * shift)
+    }
+
+    #[test]
+    fn bits1_visits_all_octants_adjacently() {
+        // At 1-bit resolution the curve visits the 8 octants in an
+        // order where consecutive octants differ in exactly one axis
+        // (the defining property of a Hilbert cell order).
+        let mut order: Vec<(u64, (u32, u32, u32))> = Vec::new();
+        for x in 0..2 {
+            for y in 0..2 {
+                for z in 0..2 {
+                    order.push((key_at(1, x, y, z), (x, y, z)));
+                }
+            }
+        }
+        order.sort();
+        let keys: Vec<u64> = order.iter().map(|e| e.0).collect();
+        assert_eq!(keys, (0..8).collect::<Vec<u64>>(), "keys not a permutation");
+        for w in order.windows(2) {
+            let a = w[0].1;
+            let b = w[1].1;
+            let diff = (a.0 != b.0) as u32 + (a.1 != b.1) as u32 + (a.2 != b.2) as u32;
+            assert_eq!(diff, 1, "octants {a:?} -> {b:?} not face-adjacent");
+        }
+    }
+
+    #[test]
+    fn curve_is_continuous_at_depth() {
+        // Defining Hilbert property at any resolution: consecutive
+        // cells along the curve are face neighbours (L1 distance 1).
+        for bits in [2u32, 3, 4] {
+            let n = 1u32 << bits;
+            let mut cells: Vec<(u64, [u32; 3])> = Vec::new();
+            for x in 0..n {
+                for y in 0..n {
+                    for z in 0..n {
+                        cells.push((key_at(bits, x, y, z), [x, y, z]));
+                    }
+                }
+            }
+            cells.sort();
+            // keys are a permutation of 0..n^3
+            for (i, c) in cells.iter().enumerate() {
+                assert_eq!(c.0, i as u64, "bits {bits}: keys not dense");
+            }
+            for w in cells.windows(2) {
+                let d: u32 = w[0]
+                    .1
+                    .iter()
+                    .zip(&w[1].1)
+                    .map(|(a, b)| a.abs_diff(*b))
+                    .sum();
+                assert_eq!(
+                    d, 1,
+                    "bits {bits}: cells {:?} -> {:?} not adjacent",
+                    w[0].1, w[1].1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_resolution_roundtrip() {
+        propcheck::check("hilbert key inverse roundtrips", |rng| {
+            let x = rng.gen_range(1 << BITS) as u32;
+            let y = rng.gen_range(1 << BITS) as u32;
+            let z = rng.gen_range(1 << BITS) as u32;
+            let key = hilbert_key(x, y, z);
+            assert_eq!(hilbert_key_inverse(key), [x, y, z]);
+        });
+    }
+
+    #[test]
+    fn injective_at_full_resolution() {
+        propcheck::check("hilbert is injective", |rng| {
+            let a = [
+                rng.gen_range(1 << BITS) as u32,
+                rng.gen_range(1 << BITS) as u32,
+                rng.gen_range(1 << BITS) as u32,
+            ];
+            let b = [
+                rng.gen_range(1 << BITS) as u32,
+                rng.gen_range(1 << BITS) as u32,
+                rng.gen_range(1 << BITS) as u32,
+            ];
+            if a != b {
+                assert_ne!(
+                    hilbert_key(a[0], a[1], a[2]),
+                    hilbert_key(b[0], b[1], b[2])
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn locality_beats_morton() {
+        // The paper's reason to prefer HSFC: walking the curve, every
+        // Hilbert step moves to a face-adjacent cell (mean L1 jump
+        // exactly 1), while Morton makes long jumps (mean L1 jump > 1).
+        use super::super::morton::morton_key;
+        let bits = 4u32;
+        let n = 1u32 << bits;
+        let shift = BITS - bits;
+        let mut h_cells: Vec<(u64, [u32; 3])> = Vec::new();
+        let mut m_cells: Vec<(u64, [u32; 3])> = Vec::new();
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    h_cells.push((
+                        hilbert_key(x << shift, y << shift, z << shift),
+                        [x, y, z],
+                    ));
+                    m_cells.push((morton_key(x, y, z), [x, y, z]));
+                }
+            }
+        }
+        h_cells.sort();
+        m_cells.sort();
+        let mean_jump = |cells: &[(u64, [u32; 3])]| -> f64 {
+            cells
+                .windows(2)
+                .map(|w| {
+                    w[0].1
+                        .iter()
+                        .zip(&w[1].1)
+                        .map(|(a, b)| a.abs_diff(*b) as f64)
+                        .sum::<f64>()
+                })
+                .sum::<f64>()
+                / (cells.len() - 1) as f64
+        };
+        let h = mean_jump(&h_cells);
+        let m = mean_jump(&m_cells);
+        assert!((h - 1.0).abs() < 1e-12, "hilbert mean jump {h} != 1");
+        assert!(m > 1.3, "morton mean jump {m} unexpectedly small");
+    }
+}

@@ -1,0 +1,283 @@
+//! Space-filling-curve partitioning (§2.2): map element centroids to
+//! 1-D keys along a Morton or Hilbert curve, then run the 1-D
+//! partitioner (§2.3).
+//!
+//! The normalization of the domain bounding box onto the unit cube is
+//! the paper's PHG-vs-Zoltan distinction:
+//!
+//! * [`Normalization::AspectPreserving`] (PHG): divide all axes by the
+//!   single longest extent `len = max(len_x, len_y, len_z)`, preserving
+//!   the domain's aspect ratio and hence spatial locality;
+//! * [`Normalization::PerAxis`] (Zoltan): divide each axis by its own
+//!   extent, stretching anisotropic domains (the long cylinder) to a
+//!   cube and destroying locality -- the measured quality gap between
+//!   PHG/HSFC and Zoltan/HSFC in §3 comes from exactly this.
+
+pub mod hilbert;
+pub mod morton;
+
+use super::oned::{assign_parts, partition_1d};
+use super::{PartitionInput, PartitionResult, Partitioner};
+use crate::geometry::BBox;
+use crate::mesh::{ElemId, TetMesh};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Curve {
+    Morton,
+    Hilbert,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Normalization {
+    /// PHG: x1 = (x - x0)/len with len = max extent (locality-keeping).
+    AspectPreserving,
+    /// Zoltan: x1 = (x - x0)/len_x etc. (stretches the domain).
+    PerAxis,
+}
+
+/// SFC keys for the given leaves. Exposed for reuse by RCB-adjacent
+/// code and the benches.
+pub fn sfc_keys(
+    mesh: &TetMesh,
+    leaves: &[ElemId],
+    curve: Curve,
+    norm: Normalization,
+) -> Vec<u64> {
+    let mut bb = BBox::empty();
+    for &id in leaves {
+        bb.expand(mesh.centroid(id));
+    }
+    keys_in_bbox(mesh, leaves, &bb, curve, norm)
+}
+
+fn keys_in_bbox(
+    mesh: &TetMesh,
+    leaves: &[ElemId],
+    bb: &BBox,
+    curve: Curve,
+    norm: Normalization,
+) -> Vec<u64> {
+    let ext = bb.extent();
+    let max_len = bb.max_extent().max(1e-300);
+    let scale = match norm {
+        Normalization::AspectPreserving => [max_len, max_len, max_len],
+        Normalization::PerAxis => [
+            ext.x.max(1e-300),
+            ext.y.max(1e-300),
+            ext.z.max(1e-300),
+        ],
+    };
+    let side = (1u64 << morton::BITS) as f64;
+    let to_int = |v: f64, lo: f64, s: f64| -> u32 {
+        let t = ((v - lo) / s).clamp(0.0, 1.0);
+        ((t * side) as u64).min((1 << morton::BITS) - 1) as u32
+    };
+    leaves
+        .iter()
+        .map(|&id| {
+            let c = mesh.centroid(id);
+            let xi = to_int(c.x, bb.lo.x, scale[0]);
+            let yi = to_int(c.y, bb.lo.y, scale[1]);
+            let zi = to_int(c.z, bb.lo.z, scale[2]);
+            match curve {
+                Curve::Morton => morton::morton_key(xi, yi, zi),
+                Curve::Hilbert => hilbert::hilbert_key(xi, yi, zi),
+            }
+        })
+        .collect()
+}
+
+/// The SFC partitioner: keys, then the §2.3 1-D partition, then the
+/// subgrid-process mapping is applied separately by `remap`.
+pub struct SfcPartitioner {
+    pub curve: Curve,
+    pub norm: Normalization,
+    /// 1-D search fan-out (probes per splitter).
+    pub k: usize,
+    /// relative balance tolerance for the 1-D search
+    pub tol: f64,
+    name: &'static str,
+}
+
+impl SfcPartitioner {
+    pub fn new(curve: Curve, norm: Normalization, name: &'static str) -> Self {
+        Self {
+            curve,
+            norm,
+            k: 8,
+            tol: 1e-4,
+            name,
+        }
+    }
+
+    /// PHG's Morton SFC method.
+    pub fn msfc() -> Self {
+        Self::new(Curve::Morton, Normalization::AspectPreserving, "MSFC")
+    }
+
+    /// PHG's Hilbert SFC method (aspect-preserving normalization).
+    pub fn phg_hsfc() -> Self {
+        Self::new(Curve::Hilbert, Normalization::AspectPreserving, "PHG/HSFC")
+    }
+
+    /// Zoltan's Hilbert SFC method (per-axis normalization).
+    pub fn zoltan_hsfc() -> Self {
+        Self::new(Curve::Hilbert, Normalization::PerAxis, "Zoltan/HSFC")
+    }
+}
+
+impl Partitioner for SfcPartitioner {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn partition(&self, input: &PartitionInput) -> PartitionResult {
+        let keys = sfc_keys(input.mesh, input.leaves, self.curve, self.norm);
+        let r = partition_1d(&keys, input.weights, input.nparts, self.k, self.tol);
+        let parts = assign_parts(&keys, &r.splitters);
+        PartitionResult {
+            parts,
+            comm: r.comm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator;
+    use crate::partition::testutil::{assert_valid_partition, setup_mesh};
+
+    fn run(curve: Curve, norm: Normalization, nparts: usize) {
+        let mesh = setup_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = vec![0u16; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let p = SfcPartitioner::new(curve, norm, "test");
+        let r = p.partition(&input);
+        assert_valid_partition(&input, &r, 0.15);
+    }
+
+    #[test]
+    fn morton_balances() {
+        run(Curve::Morton, Normalization::AspectPreserving, 4);
+        run(Curve::Morton, Normalization::AspectPreserving, 7);
+    }
+
+    #[test]
+    fn hilbert_balances() {
+        run(Curve::Hilbert, Normalization::AspectPreserving, 4);
+        run(Curve::Hilbert, Normalization::PerAxis, 8);
+    }
+
+    #[test]
+    fn parts_are_spatially_coherent() {
+        // each part's elements should form a compact blob: mean
+        // distance to the part centroid well below the domain diameter
+        let mesh = setup_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = vec![0u16; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 8);
+        let r = SfcPartitioner::phg_hsfc().partition(&input);
+        let mut cents = vec![crate::geometry::Vec3::ZERO; 8];
+        let mut counts = vec![0usize; 8];
+        for (i, &id) in leaves.iter().enumerate() {
+            cents[r.parts[i] as usize] += mesh.centroid(id);
+            counts[r.parts[i] as usize] += 1;
+        }
+        for (c, &n) in cents.iter_mut().zip(&counts) {
+            if n > 0 {
+                *c = *c / n as f64;
+            }
+        }
+        let mut mean_d = 0.0;
+        for (i, &id) in leaves.iter().enumerate() {
+            mean_d += (mesh.centroid(id) - cents[r.parts[i] as usize]).norm();
+        }
+        mean_d /= leaves.len() as f64;
+        // domain diameter = sqrt(3); compact blobs at p=8 should be ~< 0.35
+        assert!(mean_d < 0.4, "mean dist to part centroid {mean_d}");
+    }
+
+    #[test]
+    fn normalization_matters_on_anisotropic_domain() {
+        // On the long cylinder, aspect-preserving HSFC should produce
+        // fewer interface faces than per-axis HSFC (the paper's §2.2
+        // claim; the ablation bench quantifies it).
+        use crate::mesh::topology::LeafTopology;
+        let mesh = generator::omega1_cylinder(3);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = vec![0u16; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 16);
+        let topo = LeafTopology::build_for(&mesh, leaves.clone());
+
+        let phg = SfcPartitioner::phg_hsfc().partition(&input);
+        let zol = SfcPartitioner::zoltan_hsfc().partition(&input);
+        let cut_phg = topo.interface_faces(&phg.parts);
+        let cut_zol = topo.interface_faces(&zol.parts);
+        assert!(
+            (cut_phg as f64) < 1.05 * cut_zol as f64,
+            "aspect-preserving {cut_phg} vs per-axis {cut_zol}"
+        );
+    }
+
+    #[test]
+    fn normalizations_agree_on_cube() {
+        // On the unit cube the two normalizations coincide (table 2/3
+        // observation), so the partitions should be identical.
+        let mesh = setup_mesh(1);
+        let leaves = mesh.leaves_unordered();
+        let keys_a = sfc_keys(
+            &mesh,
+            &leaves,
+            Curve::Hilbert,
+            Normalization::AspectPreserving,
+        );
+        let keys_b = sfc_keys(&mesh, &leaves, Curve::Hilbert, Normalization::PerAxis);
+        assert_eq!(keys_a, keys_b);
+    }
+
+    #[test]
+    fn incremental_under_small_change() {
+        // refine a few elements: most leaves keep their part (implicit
+        // incrementality of SFC methods, §1)
+        let mut mesh = setup_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0; leaves.len()];
+        let owners = vec![0u16; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 4);
+        let before = SfcPartitioner::phg_hsfc().partition(&input);
+        let part_of_leaf: std::collections::HashMap<_, _> = leaves
+            .iter()
+            .zip(before.parts.iter())
+            .map(|(&l, &p)| (l, p))
+            .collect();
+
+        // small local refinement
+        let marked: Vec<_> = leaves.iter().take(8).copied().collect();
+        mesh.refine(&marked);
+        let leaves2 = mesh.leaves_unordered();
+        let weights2 = vec![1.0; leaves2.len()];
+        let owners2 = vec![0u16; leaves2.len()];
+        let input2 = PartitionInput::from_mesh(&mesh, &leaves2, &weights2, &owners2, 4);
+        let after = SfcPartitioner::phg_hsfc().partition(&input2);
+
+        let mut kept = 0;
+        let mut tracked = 0;
+        for (i, &id) in leaves2.iter().enumerate() {
+            if let Some(&old) = part_of_leaf.get(&id) {
+                tracked += 1;
+                if old == after.parts[i] {
+                    kept += 1;
+                }
+            }
+        }
+        assert!(
+            kept as f64 > 0.85 * tracked as f64,
+            "only {kept}/{tracked} leaves kept their part"
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact manifest: plain-text index written by aot.py.
+//!
+//! Line format: `name kind file key=value...`, e.g.
+//! `cg_step_n4096_w32 cg_step cg_step_n4096_w32.hlo.txt n=4096 w=32`.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub params: HashMap<String, usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let name = it
+                .next()
+                .ok_or_else(|| anyhow!("manifest line {lineno}: missing name"))?
+                .to_string();
+            let kind = it
+                .next()
+                .ok_or_else(|| anyhow!("manifest line {lineno}: missing kind"))?
+                .to_string();
+            let file = it
+                .next()
+                .ok_or_else(|| anyhow!("manifest line {lineno}: missing file"))?
+                .to_string();
+            let mut params = HashMap::new();
+            for kv in it {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("manifest line {lineno}: bad param {kv}"))?;
+                params.insert(k.to_string(), v.parse::<usize>()?);
+            }
+            entries.push(ArtifactEntry {
+                name,
+                kind,
+                file,
+                params,
+            });
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> + 'a {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// Sorted ladder of a parameter across entries of a kind.
+    pub fn ladder(&self, kind: &str, param: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .of_kind(kind)
+            .filter_map(|e| e.params.get(param).copied())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Entry of `kind` whose `param` equals `value`.
+    pub fn find(&self, kind: &str, param: &str, value: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.params.get(param) == Some(&value))
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// Locate the artifacts directory: $PHG_DLB_ARTIFACTS, then
+/// ./artifacts, then the crate root's artifacts/.
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("PHG_DLB_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    for cand in [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if cand.join("manifest.txt").exists() {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, content: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), content).unwrap();
+    }
+
+    #[test]
+    fn parses_entries_and_ladders() {
+        let dir = std::env::temp_dir().join("phg_dlb_manifest_test");
+        write_manifest(
+            &dir,
+            "a elem_tet a.hlo.txt batch=2048\n\
+             b elem_tet b.hlo.txt batch=16384\n\
+             c cg_step c.hlo.txt n=4096 w=32\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.ladder("elem_tet", "batch"), vec![2048, 16384]);
+        assert_eq!(m.ladder("cg_step", "n"), vec![4096]);
+        let e = m.find("cg_step", "n", 4096).unwrap();
+        assert_eq!(e.params["w"], 32);
+        assert!(m.find("cg_step", "n", 9999).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("phg_dlb_manifest_bad");
+        write_manifest(&dir, "only_name\n");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "a kind f.hlo badparam\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("phg_dlb_manifest_comments");
+        write_manifest(&dir, "# header\n\na spmv a.hlo.txt n=8\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // integration-ish: when `make artifacts` has run, the real
+        // manifest must parse and contain the expected kinds
+        if let Some(dir) = find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.ladder("elem_tet", "batch").is_empty());
+            assert!(!m.ladder("cg_step", "n").is_empty());
+            assert!(!m.ladder("spmv", "n").is_empty());
+        }
+    }
+}

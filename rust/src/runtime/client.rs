@@ -1,0 +1,442 @@
+//! The PJRT client wrapper: lazy-compiled executable cache + typed
+//! entry points for each artifact kind.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Outputs arrive as a 1-tuple (aot.py
+//! lowers with `return_tuple=True`), decomposed with `to_tuple`.
+//!
+//! For the CG hot loop, [`CgBuffers`] keeps the ELL matrix staged as
+//! device buffers across iterations (`execute_b`), so each iteration
+//! moves only the four state vectors.
+
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use super::artifacts::{find_artifacts_dir, Manifest};
+use super::next_rung;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// executables compiled so far (observable for tests/perf logs)
+    pub compile_count: RefCell<usize>,
+}
+
+/// Batched element matrices result (flattened f32, row-major).
+#[derive(Debug, Clone)]
+pub struct ElemBatchOut {
+    /// (B,4,4) stiffness
+    pub k: Vec<f32>,
+    /// (B,4,4) mass
+    pub m: Vec<f32>,
+    /// (B,4) load
+    pub b: Vec<f32>,
+}
+
+/// One CG iteration's outputs.
+#[derive(Debug, Clone)]
+pub struct CgStepOut {
+    pub x: Vec<f32>,
+    pub r: Vec<f32>,
+    pub p: Vec<f32>,
+    pub rz: f32,
+    pub rnorm2: f32,
+}
+
+impl Runtime {
+    /// Open the runtime against an artifact directory.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            compile_count: RefCell::new(0),
+        })
+    }
+
+    /// Open against the default artifact location.
+    pub fn open_default() -> Result<Self> {
+        let dir = find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts not found: run `make artifacts`"))?;
+        Self::new(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Ladder of element-batch sizes.
+    pub fn elem_ladder(&self) -> Vec<usize> {
+        self.manifest.ladder("elem_tet", "batch")
+    }
+
+    /// Ladder of CG system sizes.
+    pub fn cg_ladder(&self) -> Vec<usize> {
+        self.manifest.ladder("cg_step", "n")
+    }
+
+    /// ELL width the cg/spmv artifacts were lowered with.
+    pub fn ell_width(&self) -> usize {
+        self.manifest
+            .of_kind("cg_step")
+            .next()
+            .and_then(|e| e.params.get("w").copied())
+            .unwrap_or(32)
+    }
+
+    fn executable(&self, name: &str, file: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        *self.compile_count.borrow_mut() += 1;
+        Ok(exe)
+    }
+
+    fn kind_exe(&self, kind: &str, param: &str, value: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let entry = self
+            .manifest
+            .find(kind, param, value)
+            .ok_or_else(|| anyhow!("no {kind} artifact with {param}={value}"))?;
+        let path = self.manifest.hlo_path(entry);
+        self.executable(&entry.name.clone(), &path)
+    }
+
+    /// Run the batched element kernel on `n` elements (padding to the
+    /// ladder internally). `coords`: n*12 f32; `fvals`: n*4 f32.
+    /// Outputs are truncated back to `n` elements.
+    pub fn elem_tet(&self, coords: &[f32], fvals: &[f32], n: usize) -> Result<ElemBatchOut> {
+        assert_eq!(coords.len(), n * 12);
+        assert_eq!(fvals.len(), n * 4);
+        let ladder = self.elem_ladder();
+        let rung = next_rung(&ladder, n)
+            .ok_or_else(|| anyhow!("element batch {n} exceeds largest rung {ladder:?}"))?;
+        let exe = self.kind_exe("elem_tet", "batch", rung)?;
+
+        let mut c = coords.to_vec();
+        c.resize(rung * 12, 0.0); // degenerate padding -> zero outputs
+        let mut f = fvals.to_vec();
+        f.resize(rung * 4, 0.0);
+
+        let lc = xla::Literal::vec1(&c)
+            .reshape(&[rung as i64, 4, 3])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lf = xla::Literal::vec1(&f)
+            .reshape(&[rung as i64, 4])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lc, lf])
+            .map_err(|e| anyhow!("elem_tet execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        if parts.len() != 3 {
+            return Err(anyhow!("elem_tet returned {} outputs", parts.len()));
+        }
+        let mut k = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let mut m = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let mut b = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        k.truncate(n * 16);
+        m.truncate(n * 16);
+        b.truncate(n * 4);
+        Ok(ElemBatchOut { k, m, b })
+    }
+
+    /// Stage an ELL system for repeated CG iterations. `n_pad` must be
+    /// a ladder rung; vals/cols are (n_pad, w) row-major; diag_inv has
+    /// zeros on padded/Dirichlet rows.
+    pub fn stage_cg(
+        &self,
+        vals: &[f32],
+        cols: &[i32],
+        diag_inv: &[f32],
+        n_pad: usize,
+    ) -> Result<CgBuffers> {
+        let w = self.ell_width();
+        assert_eq!(vals.len(), n_pad * w);
+        assert_eq!(cols.len(), n_pad * w);
+        assert_eq!(diag_inv.len(), n_pad);
+        let exe = self.kind_exe("cg_step", "n", n_pad)?;
+        let dev = &self.client.devices()[0];
+        let to_buf_f32 = |data: &[f32], dims: &[usize]| -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, dims, Some(dev))
+                .map_err(|e| anyhow!("stage buffer: {e:?}"))
+        };
+        let vals_b = to_buf_f32(vals, &[n_pad, w])?;
+        let dinv_b = to_buf_f32(diag_inv, &[n_pad])?;
+        let cols_b = self
+            .client
+            .buffer_from_host_buffer(cols, &[n_pad, w], Some(dev))
+            .map_err(|e| anyhow!("stage cols: {e:?}"))?;
+        Ok(CgBuffers {
+            exe,
+            vals: vals_b,
+            cols: cols_b,
+            diag_inv: dinv_b,
+            n_pad,
+        })
+    }
+
+    /// Standalone SpMV (benches + residual checks). All padded to rung.
+    pub fn spmv(&self, vals: &[f32], cols: &[i32], x: &[f32], n_pad: usize) -> Result<Vec<f32>> {
+        let w = self.ell_width();
+        assert_eq!(vals.len(), n_pad * w);
+        assert_eq!(x.len(), n_pad);
+        let exe = self.kind_exe("spmv", "n", n_pad)?;
+        let lv = xla::Literal::vec1(vals)
+            .reshape(&[n_pad as i64, w as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lc = xla::Literal::vec1(cols)
+            .reshape(&[n_pad as i64, w as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lx = xla::Literal::vec1(x);
+        let result = exe
+            .execute::<xla::Literal>(&[lv, lc, lx])
+            .map_err(|e| anyhow!("spmv execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// Staged CG system: matrix buffers live on the PJRT device across
+/// iterations; only state vectors cross the boundary per step.
+pub struct CgBuffers {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    vals: xla::PjRtBuffer,
+    cols: xla::PjRtBuffer,
+    diag_inv: xla::PjRtBuffer,
+    pub n_pad: usize,
+}
+
+impl CgBuffers {
+    /// One Jacobi-PCG iteration: (x, r, p, rz) -> (x', r', p', rz', |r'|^2).
+    pub fn step(&self, x: &[f32], r: &[f32], p: &[f32], rz: f32) -> Result<CgStepOut> {
+        let n = self.n_pad;
+        assert_eq!(x.len(), n);
+        let client = self.exe.client();
+        let dev = &client.devices()[0];
+        let xb = client
+            .buffer_from_host_buffer(x, &[n], Some(dev))
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let rb = client
+            .buffer_from_host_buffer(r, &[n], Some(dev))
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let pb = client
+            .buffer_from_host_buffer(p, &[n], Some(dev))
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let rzb = client
+            .buffer_from_host_buffer(&[rz], &[], Some(dev))
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[
+                &self.vals,
+                &self.cols,
+                &self.diag_inv,
+                &xb,
+                &rb,
+                &pb,
+                &rzb,
+            ])
+            .map_err(|e| anyhow!("cg_step execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        if parts.len() != 5 {
+            return Err(anyhow!("cg_step returned {} outputs", parts.len()));
+        }
+        Ok(CgStepOut {
+            x: parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            r: parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            p: parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            rz: parts[3]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?,
+            rnorm2: parts[4]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("{e:?}"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::open_default().ok()
+    }
+
+    #[test]
+    fn elem_tet_unit_tet_matches_analytics() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // the reference unit tet
+        let coords: Vec<f32> = vec![
+            0.0, 0.0, 0.0, //
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0, //
+            0.0, 0.0, 1.0,
+        ];
+        let fvals = vec![1.0f32; 4];
+        let out = rt.elem_tet(&coords, &fvals, 1).unwrap();
+        let vol = 1.0 / 6.0f32;
+        // K row sums are zero; K[1][1] = vol * 1
+        let k = &out.k;
+        for i in 0..4 {
+            let row: f32 = (0..4).map(|j| k[i * 4 + j]).sum();
+            assert!(row.abs() < 1e-5, "row {i} sum {row}");
+        }
+        assert!((k[5] - vol).abs() < 1e-5);
+        // M diag = vol/10, off-diag vol/20
+        assert!((out.m[0] - vol / 10.0).abs() < 1e-6);
+        assert!((out.m[1] - vol / 20.0).abs() < 1e-6);
+        // b_i = vol/4
+        for i in 0..4 {
+            assert!((out.b[i] - vol / 4.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn elem_tet_padding_invisible() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // n = 3 (not a rung): padding must not leak into outputs
+        let mut coords = Vec::new();
+        let mut fvals = Vec::new();
+        for s in 1..=3 {
+            let s = s as f32;
+            coords.extend_from_slice(&[
+                0.0, 0.0, 0.0, s, 0.0, 0.0, 0.0, s, 0.0, 0.0, 0.0, s,
+            ]);
+            fvals.extend_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        }
+        let out = rt.elem_tet(&coords, &fvals, 3).unwrap();
+        assert_eq!(out.k.len(), 3 * 16);
+        assert_eq!(out.b.len(), 3 * 4);
+        // scaled tets have volume s^3/6: mass sums = volume
+        for (i, s) in [1.0f32, 2.0, 3.0].iter().enumerate() {
+            let msum: f32 = out.m[i * 16..(i + 1) * 16].iter().sum();
+            let vol = s * s * s / 6.0;
+            assert!(
+                (msum - vol).abs() < 1e-4 * vol.max(1.0),
+                "elem {i}: mass sum {msum} vs vol {vol}"
+            );
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let coords = vec![0.0f32; 12];
+        let fvals = vec![0.0f32; 4];
+        rt.elem_tet(&coords, &fvals, 1).unwrap();
+        let c1 = *rt.compile_count.borrow();
+        rt.elem_tet(&coords, &fvals, 1).unwrap();
+        assert_eq!(*rt.compile_count.borrow(), c1, "recompiled same rung");
+    }
+
+    #[test]
+    fn spmv_identity() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ladder = rt.cg_ladder();
+        let n = ladder[0];
+        let w = rt.ell_width();
+        let mut vals = vec![0.0f32; n * w];
+        let mut cols = vec![0i32; n * w];
+        for i in 0..n {
+            vals[i * w] = 1.0;
+            cols[i * w] = i as i32;
+        }
+        let x: Vec<f32> = (0..n).map(|i| (i % 17) as f32).collect();
+        let y = rt.spmv(&vals, &cols, &x, n).unwrap();
+        assert_eq!(y.len(), n);
+        for i in 0..n {
+            assert_eq!(y[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn cg_solves_small_laplacian() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ladder = rt.cg_ladder();
+        let n_pad = ladder[0];
+        let w = rt.ell_width();
+        let n = 100; // real rows; rest is padding
+        let mut vals = vec![0.0f32; n_pad * w];
+        let mut cols = vec![0i32; n_pad * w];
+        let mut dinv = vec![0.0f32; n_pad];
+        for i in 0..n {
+            vals[i * w] = 2.0;
+            cols[i * w] = i as i32;
+            if i > 0 {
+                vals[i * w + 1] = -1.0;
+                cols[i * w + 1] = (i - 1) as i32;
+            }
+            if i + 1 < n {
+                vals[i * w + 2] = -1.0;
+                cols[i * w + 2] = (i + 1) as i32;
+            }
+            dinv[i] = 0.5;
+        }
+        let bufs = rt.stage_cg(&vals, &cols, &dinv, n_pad).unwrap();
+        // rhs: A * ones
+        let mut b = vec![0.0f32; n_pad];
+        b[0] = 1.0;
+        b[n - 1] = 1.0;
+        let mut x = vec![0.0f32; n_pad];
+        let mut r = b.clone();
+        let mut p: Vec<f32> = r.iter().zip(&dinv).map(|(a, d)| a * d).collect();
+        let mut rz: f32 = r.iter().zip(&p).map(|(a, b)| a * b).sum();
+        for _ in 0..400 {
+            let out = bufs.step(&x, &r, &p, rz).unwrap();
+            x = out.x;
+            r = out.r;
+            p = out.p;
+            rz = out.rz;
+            if out.rnorm2 < 1e-10 {
+                break;
+            }
+        }
+        for i in 0..n {
+            assert!((x[i] - 1.0).abs() < 1e-3, "x[{i}] = {}", x[i]);
+        }
+        // padding untouched
+        for i in n..n_pad {
+            assert_eq!(x[i], 0.0);
+        }
+    }
+}

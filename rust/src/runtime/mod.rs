@@ -1,0 +1,36 @@
+//! PJRT runtime: load the AOT artifacts (HLO text emitted once by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! One compiled executable per model variant: the artifact manifest
+//! lists a ladder of fixed shapes per kernel; callers pad up to the
+//! next rung ([`Ladder`]). Executables compile lazily on first use and
+//! are cached for the life of the runtime.
+//!
+//! Python never runs at request time: after `make artifacts` the Rust
+//! binary is self-contained.
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{find_artifacts_dir, ArtifactEntry, Manifest};
+pub use client::{CgBuffers, CgStepOut, ElemBatchOut, Runtime};
+
+/// Pick the smallest rung >= `n` from a sorted ladder.
+pub fn next_rung(ladder: &[usize], n: usize) -> Option<usize> {
+    ladder.iter().copied().find(|&r| r >= n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_rung_picks_smallest_fit() {
+        let ladder = [4096usize, 16384, 65536];
+        assert_eq!(next_rung(&ladder, 1), Some(4096));
+        assert_eq!(next_rung(&ladder, 4096), Some(4096));
+        assert_eq!(next_rung(&ladder, 4097), Some(16384));
+        assert_eq!(next_rung(&ladder, 65536), Some(65536));
+        assert_eq!(next_rung(&ladder, 65537), None);
+    }
+}

@@ -1,0 +1,116 @@
+//! FxHash-style fast hasher for the mesh's edge/face maps.
+//!
+//! The refinement closure and topology builds hash millions of packed
+//! edge/face keys per adapt step; std's SipHash is a measurable drag
+//! there (it shows up in the §Perf profile), and we need no DoS
+//! resistance for internal integer keys.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-rotate hasher (the rustc FxHasher recipe, u64 flavour).
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = HashSet<K, FxBuildHasher>;
+
+/// Pack an (unordered) vertex pair into a sorted u64 edge key.
+#[inline]
+pub fn edge_key(a: u32, b: u32) -> u64 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    ((lo as u64) << 32) | hi as u64
+}
+
+/// Pack an (unordered) vertex triple into a sorted u128 face key.
+#[inline]
+pub fn face_key(a: u32, b: u32, c: u32) -> u128 {
+    let mut v = [a, b, c];
+    v.sort_unstable();
+    ((v[0] as u128) << 64) | ((v[1] as u128) << 32) | v[2] as u128
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_key_symmetric() {
+        assert_eq!(edge_key(3, 9), edge_key(9, 3));
+        assert_ne!(edge_key(3, 9), edge_key(3, 10));
+    }
+
+    #[test]
+    fn face_key_order_invariant() {
+        let k = face_key(5, 1, 9);
+        assert_eq!(k, face_key(9, 5, 1));
+        assert_eq!(k, face_key(1, 9, 5));
+        assert_ne!(k, face_key(1, 9, 6));
+    }
+
+    #[test]
+    fn fxmap_works() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000u32 {
+            m.insert(edge_key(i, i + 1), i);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&edge_key(43, 42)], 42);
+    }
+
+    #[test]
+    fn hasher_distributes() {
+        // weak sanity: different keys rarely collide in low bits
+        let mut buckets = [0u32; 64];
+        for i in 0..6400u64 {
+            let mut h = FxHasher::default();
+            h.write_u64(i);
+            buckets[(h.finish() & 63) as usize] += 1;
+        }
+        let max = *buckets.iter().max().unwrap();
+        assert!(max < 300, "max bucket {max}");
+    }
+}

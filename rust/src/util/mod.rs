@@ -1,0 +1,9 @@
+//! Foundation utilities: deterministic PRNGs, timers, statistics, a
+//! radix sort for SFC keys, and a tiny property-testing harness.
+
+pub mod hash;
+pub mod propcheck;
+pub mod rng;
+pub mod sort;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,120 @@
+//! LSD radix sort for `(u64 key, u32 payload)` pairs.
+//!
+//! The SFC partitioners sort millions of (Hilbert/Morton key, element)
+//! pairs per repartition; this is their dominant cost and the first
+//! target of the performance pass. An 8-bit-digit LSD radix sort is
+//! ~3-5x faster than comparison sort at these sizes and is stable,
+//! which keeps the partition deterministic under ties.
+
+/// Sort `items` by key ascending, stable. Allocates one scratch buffer.
+pub fn radix_sort_by_key(items: &mut Vec<(u64, u32)>) {
+    let n = items.len();
+    if n <= 64 {
+        items.sort_by_key(|&(k, _)| k);
+        return;
+    }
+    // Skip passes whose digit is constant (common: high bytes all zero).
+    let mut or_all = 0u64;
+    let mut and_all = u64::MAX;
+    for &(k, _) in items.iter() {
+        or_all |= k;
+        and_all &= k;
+    }
+    let mut scratch: Vec<(u64, u32)> = Vec::with_capacity(n);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        scratch.set_len(n);
+    }
+    let mut src_is_items = true;
+    for pass in 0..8 {
+        let shift = pass * 8;
+        let or_d = ((or_all >> shift) & 0xFF) as u8;
+        let and_d = ((and_all >> shift) & 0xFF) as u8;
+        if or_d == and_d {
+            continue; // all keys share this digit; pass is a no-op
+        }
+        let (src, dst): (&mut [(u64, u32)], &mut [(u64, u32)]) = if src_is_items {
+            (&mut items[..], &mut scratch[..])
+        } else {
+            (&mut scratch[..], &mut items[..])
+        };
+        let mut counts = [0usize; 256];
+        for &(k, _) in src.iter() {
+            counts[((k >> shift) & 0xFF) as usize] += 1;
+        }
+        let mut offsets = [0usize; 256];
+        let mut acc = 0;
+        for d in 0..256 {
+            offsets[d] = acc;
+            acc += counts[d];
+        }
+        for &(k, p) in src.iter() {
+            let d = ((k >> shift) & 0xFF) as usize;
+            dst[offsets[d]] = (k, p);
+            offsets[d] += 1;
+        }
+        src_is_items = !src_is_items;
+    }
+    if !src_is_items {
+        items.copy_from_slice(&scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn sorts_small() {
+        let mut v = vec![(3u64, 0u32), (1, 1), (2, 2)];
+        radix_sort_by_key(&mut v);
+        assert_eq!(v, vec![(1, 1), (2, 2), (3, 0)]);
+    }
+
+    #[test]
+    fn sorts_empty_and_single() {
+        let mut v: Vec<(u64, u32)> = vec![];
+        radix_sort_by_key(&mut v);
+        assert!(v.is_empty());
+        let mut v = vec![(9u64, 7u32)];
+        radix_sort_by_key(&mut v);
+        assert_eq!(v, vec![(9, 7)]);
+    }
+
+    #[test]
+    fn stable_on_ties() {
+        let mut v: Vec<(u64, u32)> = (0..1000).map(|i| ((i % 7) as u64, i as u32)).collect();
+        radix_sort_by_key(&mut v);
+        for w in v.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "stability violated");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_std_sort_property() {
+        propcheck::check("radix == std sort", |rng| {
+            let n = rng.gen_range(5000) + 1;
+            let mut v: Vec<(u64, u32)> = (0..n)
+                .map(|i| {
+                    // mix of full-range and low-range keys to exercise
+                    // the pass-skipping fast path
+                    let k = if rng.gen_bool(0.5) {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & 0xFFFF
+                    };
+                    (k, i as u32)
+                })
+                .collect();
+            let mut expect = v.clone();
+            expect.sort_by_key(|&(k, _)| k);
+            radix_sort_by_key(&mut v);
+            assert_eq!(v.iter().map(|x| x.0).collect::<Vec<_>>(),
+                       expect.iter().map(|x| x.0).collect::<Vec<_>>());
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Small statistics helpers shared by metrics, benches and reports.
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let n = xs.len();
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Self {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean,
+            std: var.sqrt(),
+            median,
+        }
+    }
+}
+
+/// Load imbalance factor: max_i w_i / mean_i w_i. 1.0 is perfect.
+/// This is the lambda the DLB policy triggers on.
+pub fn imbalance(weights: &[f64]) -> f64 {
+    if weights.is_empty() {
+        return 1.0;
+    }
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let mean = total / weights.len() as f64;
+    weights.iter().cloned().fold(0.0f64, f64::max) / mean
+}
+
+/// Coefficient of variation (std/mean) -- used to quantify the
+/// "oscillation" of ParMETIS-style partition times in Fig 3.2.
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let s = Summary::of(xs);
+    if s.mean == 0.0 {
+        0.0
+    } else {
+        s.std / s.mean
+    }
+}
+
+/// Linear-regression slope of y against x (least squares). Used by the
+/// benches to report growth rates of partition time vs mesh size.
+pub fn slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    if sxx == 0.0 {
+        0.0
+    } else {
+        sxy / sxx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.median, 2.5);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_odd_median() {
+        let s = Summary::of(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn imbalance_perfect() {
+        assert_eq!(imbalance(&[2.0, 2.0, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let l = imbalance(&[4.0, 1.0, 1.0]);
+        assert!((l - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_degenerate() {
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn slope_of_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        assert!((slope(&x, &y) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        assert_eq!(coeff_of_variation(&[3.0, 3.0, 3.0]), 0.0);
+    }
+}

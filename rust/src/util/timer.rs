@@ -1,0 +1,143 @@
+//! Wall-clock timing helpers and phase accumulators used by the
+//! coordinator's timeline and the benchmark harnesses.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch returning seconds.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates wall time per named phase. The coordinator charges
+/// phases like "partition", "migrate", "assemble", "solve" here and the
+/// report module turns them into the paper's TAL/DLB/SOL/STP columns.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, charging its wall time to `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.add(phase, sw.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        *self.totals.entry(phase.to_string()).or_insert(0.0) += secs;
+        *self.counts.entry(phase.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.totals.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn mean(&self, phase: &str) -> f64 {
+        let c = self.count(phase);
+        if c == 0 {
+            0.0
+        } else {
+            self.total(phase) / c as f64
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64, u64)> {
+        self.totals
+            .iter()
+            .map(move |(k, v)| (k.as_str(), *v, self.count(k)))
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("solve", 1.0);
+        pt.add("solve", 2.0);
+        pt.add("partition", 0.5);
+        assert_eq!(pt.total("solve"), 3.0);
+        assert_eq!(pt.count("solve"), 2);
+        assert_eq!(pt.mean("solve"), 1.5);
+        assert_eq!(pt.total("partition"), 0.5);
+        assert_eq!(pt.total("absent"), 0.0);
+        assert!((pt.grand_total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(pt.count("work"), 1);
+        assert!(pt.total("work") >= 0.0);
+    }
+
+    #[test]
+    fn merge_sums_phases() {
+        let mut a = PhaseTimer::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimer::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.total("x"), 3.0);
+        assert_eq!(a.total("y"), 3.0);
+        assert_eq!(a.count("x"), 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Cross-module property tests: invariants that must hold for EVERY
+//! partitioning method on randomized meshes, weights and process
+//! counts -- the proptest-style layer over the whole L3 coordinator
+//! surface (see util::propcheck; the proptest crate is not vendored).
+
+use phg_dlb::coordinator::partitioner_by_name;
+use phg_dlb::dist::Distribution;
+use phg_dlb::mesh::{generator, TetMesh};
+use phg_dlb::partition::metrics::migration_volume;
+use phg_dlb::partition::PartitionInput;
+use phg_dlb::remap::{apply_map, oliker_biswas, SimilarityMatrix};
+use phg_dlb::util::propcheck;
+use phg_dlb::util::rng::Pcg32;
+
+const ALL_METHODS: [&str; 7] = [
+    "RTK",
+    "MSFC",
+    "PHG/HSFC",
+    "Zoltan/HSFC",
+    "RCB",
+    "RIB",
+    "ParMETIS",
+];
+
+/// Random adaptive mesh: a cube or cylinder with 1-3 rounds of random
+/// local refinement.
+fn random_mesh(rng: &mut Pcg32) -> TetMesh {
+    let mut mesh = if rng.gen_bool(0.5) {
+        generator::cube_mesh(2)
+    } else {
+        generator::cylinder_mesh(6, 2, 0.5, 3.0)
+    };
+    let rounds = 1 + rng.gen_range(2);
+    for _ in 0..rounds {
+        let leaves = mesh.leaves_unordered();
+        let marked: Vec<_> = leaves
+            .into_iter()
+            .filter(|_| rng.gen_bool(0.4))
+            .collect();
+        mesh.refine(&marked);
+    }
+    mesh
+}
+
+#[test]
+fn every_method_assigns_every_leaf_in_range() {
+    propcheck::check_with(101, 12, "partition completeness", |rng| {
+        let mut mesh = random_mesh(rng);
+        let leaves = mesh.leaves_unordered();
+        let weights: Vec<f64> = (0..leaves.len())
+            .map(|_| rng.gen_uniform(0.5, 2.0))
+            .collect();
+        let nparts = 2 + rng.gen_range(14);
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let method = ALL_METHODS[rng.gen_range(ALL_METHODS.len())];
+        let p = partitioner_by_name(method).unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let r = p.partition(&input);
+        assert_eq!(r.parts.len(), leaves.len(), "{method}");
+        assert!(
+            r.parts.iter().all(|&x| (x as usize) < nparts),
+            "{method}: part out of range"
+        );
+    });
+}
+
+#[test]
+fn every_method_controls_imbalance() {
+    propcheck::check_with(202, 10, "partition balance bound", |rng| {
+        let mut mesh = random_mesh(rng);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0f64; leaves.len()];
+        let nparts = 2 + rng.gen_range(6);
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let method = ALL_METHODS[rng.gen_range(ALL_METHODS.len())];
+        let p = partitioner_by_name(method).unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let r = p.partition(&input);
+        let mut wsum = vec![0.0; nparts];
+        for (i, &part) in r.parts.iter().enumerate() {
+            wsum[part as usize] += weights[i];
+        }
+        let lam = phg_dlb::util::stats::imbalance(&wsum);
+        // generous uniform bound: every method should stay under 1.35
+        // on unit weights at these sizes (graph methods allow epsilon,
+        // geometric methods can strand a few elements at splitters)
+        assert!(lam < 1.35, "{method}: imbalance {lam} (p={nparts})");
+    });
+}
+
+#[test]
+fn remap_never_increases_migration() {
+    propcheck::check_with(303, 10, "remap reduces TotalV", |rng| {
+        let mut mesh = random_mesh(rng);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0f64; leaves.len()];
+        let nparts = 2 + rng.gen_range(8);
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let method = ALL_METHODS[rng.gen_range(ALL_METHODS.len())];
+        let p = partitioner_by_name(method).unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let r = p.partition(&input);
+
+        let before = migration_volume(&owners, &r.parts, &weights, nparts);
+        let sim = SimilarityMatrix::build(&owners, &r.parts, &weights, nparts, nparts);
+        let remap = oliker_biswas(&sim);
+        let mut parts = r.parts.clone();
+        apply_map(&mut parts, &remap.map);
+        let after = migration_volume(&owners, &parts, &weights, nparts);
+        assert!(
+            after.total_v <= before.total_v + 1e-9,
+            "{method}: remap increased TotalV {} -> {}",
+            before.total_v,
+            after.total_v
+        );
+    });
+}
+
+#[test]
+fn refinement_preserves_volume_and_conformity_under_random_marking() {
+    propcheck::check_with(404, 10, "refine/coarsen fuzz", |rng| {
+        let mut mesh = generator::cube_mesh(2);
+        let v0 = mesh.total_volume();
+        for _ in 0..3 {
+            let leaves = mesh.leaves_unordered();
+            if rng.gen_bool(0.7) {
+                let marked: Vec<_> = leaves
+                    .into_iter()
+                    .filter(|_| rng.gen_bool(0.3))
+                    .collect();
+                mesh.refine(&marked);
+            } else {
+                let marked: Vec<_> = leaves
+                    .into_iter()
+                    .filter(|_| rng.gen_bool(0.5))
+                    .collect();
+                mesh.coarsen(&marked);
+            }
+            mesh.check_invariants().unwrap();
+            assert!((mesh.total_volume() - v0).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn rtk_respects_dfs_contiguity_on_random_weights() {
+    propcheck::check_with(505, 10, "rtk contiguity", |rng| {
+        let mut mesh = random_mesh(rng);
+        let leaves = mesh.leaves_unordered();
+        let weights: Vec<f64> = (0..leaves.len())
+            .map(|_| rng.gen_uniform(0.1, 3.0))
+            .collect();
+        let nparts = 2 + rng.gen_range(8);
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let p = partitioner_by_name("RTK").unwrap();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+        let r = p.partition(&input);
+        let index_of: std::collections::HashMap<u32, usize> = leaves
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, i))
+            .collect();
+        let dfs = mesh.leaves_dfs();
+        let seq: Vec<u16> = dfs.iter().map(|id| r.parts[index_of[id]]).collect();
+        for w in seq.windows(2) {
+            assert!(w[0] <= w[1], "RTK parts not monotone in DFS order");
+        }
+    });
+}
+
+#[test]
+fn failure_injection_degenerate_inputs() {
+    // zero weights, single part, more parts than elements
+    let mut mesh = generator::cube_mesh(1);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(2).assign_blocks(&mut mesh, &leaves);
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+
+    for method in ALL_METHODS {
+        let p = partitioner_by_name(method).unwrap();
+        // all-zero weights must not panic or divide by zero
+        let zero_w = vec![0.0f64; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &zero_w, &owners, 3);
+        let r = p.partition(&input);
+        assert_eq!(r.parts.len(), leaves.len(), "{method} zero weights");
+
+        // single part
+        let w = vec![1.0f64; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &w, &owners, 1);
+        let r = p.partition(&input);
+        assert!(r.parts.iter().all(|&x| x == 0), "{method} single part");
+
+        // more parts than elements (6 leaves, 10 parts): must not panic
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &w, &owners, 10);
+        let r = p.partition(&input);
+        assert!(
+            r.parts.iter().all(|&x| (x as usize) < 10),
+            "{method} overpartition"
+        );
+    }
+}
