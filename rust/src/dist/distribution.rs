@@ -1,0 +1,189 @@
+//! Rank ownership of the leaf elements (the virtual process map).
+//!
+//! A [`Distribution`] is the `dist` layer's view of "which rank holds
+//! what": ownership itself is stored on the elements
+//! ([`crate::mesh::Elem::owner`]) so it survives refinement (children
+//! inherit the parent's rank -- the data-locality behaviour whose
+//! erosion the DLB corrects); this type carries the rank count and the
+//! operations over that map.
+//!
+//! Two operations matter to the paper's loop:
+//! * [`Distribution::assign_blocks`] -- the initial decomposition:
+//!   contiguous equal-count blocks along the maintained SFC order of
+//!   the refinement forest (DFS over the SFC-sorted roots, §2.1).
+//! * [`Distribution::imbalance`] -- the load-imbalance factor
+//!   `lambda = max rank load / mean rank load` that the DLB policy
+//!   (DESIGN.md §6) triggers on.
+
+use crate::mesh::{ElemId, TetMesh};
+use crate::util::hash::FxHashSet;
+
+/// The virtual process set: `nparts` ranks owning the mesh's leaves.
+#[derive(Debug, Clone)]
+pub struct Distribution {
+    /// Number of virtual ranks (the paper's p: 128 / 192).
+    pub nparts: usize,
+}
+
+impl Distribution {
+    pub fn new(nparts: usize) -> Self {
+        assert!(
+            (1..=u16::MAX as usize).contains(&nparts),
+            "nparts {nparts} out of range"
+        );
+        Self { nparts }
+    }
+
+    /// The maintained SFC order of the given leaves: refinement-forest
+    /// DFS (left child first) over the SFC-sorted roots. For the usual
+    /// whole-mesh call this is exactly [`TetMesh::leaves_dfs`]; a
+    /// subset keeps the DFS relative order.
+    fn sfc_order(&self, mesh: &TetMesh, leaves: &[ElemId]) -> Vec<ElemId> {
+        let dfs = mesh.leaves_dfs();
+        if dfs.len() == leaves.len() {
+            return dfs;
+        }
+        let keep: FxHashSet<ElemId> = leaves.iter().copied().collect();
+        dfs.into_iter().filter(|id| keep.contains(id)).collect()
+    }
+
+    /// Initial decomposition: split the maintained SFC order of
+    /// `leaves` into `nparts` contiguous blocks of (near-)equal leaf
+    /// count and write the block index into each element's `owner`.
+    /// Block `i` gets the slice `[i*n/p, (i+1)*n/p)`, so counts differ
+    /// by at most one and lambda -> 1 under uniform weights.
+    pub fn assign_blocks(&self, mesh: &mut TetMesh, leaves: &[ElemId]) {
+        let ordered = self.sfc_order(mesh, leaves);
+        let n = ordered.len();
+        for (i, &id) in ordered.iter().enumerate() {
+            mesh.elems[id as usize].owner = (i * self.nparts / n) as u16;
+        }
+    }
+
+    /// Per-rank load: sum of `weights` over the leaves each rank owns.
+    pub fn rank_loads(&self, mesh: &TetMesh, leaves: &[ElemId], weights: &[f64]) -> Vec<f64> {
+        assert_eq!(leaves.len(), weights.len());
+        let mut loads = vec![0.0f64; self.nparts];
+        for (&id, &w) in leaves.iter().zip(weights) {
+            let owner = mesh.elem(id).owner as usize;
+            assert!(
+                owner < self.nparts,
+                "element {id} owned by rank {owner} >= nparts {}",
+                self.nparts
+            );
+            loads[owner] += w;
+        }
+        loads
+    }
+
+    /// The load-imbalance factor `lambda = max_i load_i / mean_i
+    /// load_i` over all `nparts` ranks (empty ranks count toward the
+    /// mean). 1.0 is perfect balance; the DLB policy repartitions when
+    /// lambda exceeds its trigger (DESIGN.md §6).
+    pub fn imbalance(&self, mesh: &TetMesh, leaves: &[ElemId], weights: &[f64]) -> f64 {
+        crate::util::stats::imbalance(&self.rank_loads(mesh, leaves, weights))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator;
+
+    #[test]
+    fn block_assignment_balances_uniform_weights() {
+        // lambda -> 1 under block assignment with unit weights, even
+        // when nparts does not divide the leaf count
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        for nparts in [2usize, 3, 7, 13] {
+            let dist = Distribution::new(nparts);
+            dist.assign_blocks(&mut mesh, &leaves);
+            let weights = vec![1.0f64; leaves.len()];
+            let lam = dist.imbalance(&mesh, &leaves, &weights);
+            // counts differ by <= 1, so lambda <= ceil(n/p)/(n/p)
+            let n = leaves.len() as f64;
+            let bound = (n / nparts as f64).ceil() / (n / nparts as f64);
+            assert!(
+                lam <= bound + 1e-12,
+                "p={nparts}: lambda {lam} > bound {bound}"
+            );
+            assert!(lam < 1.1, "p={nparts}: lambda {lam}");
+        }
+    }
+
+    #[test]
+    fn blocks_are_contiguous_along_sfc_order() {
+        let mut mesh = generator::cube_mesh(2);
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .filter(|&id| mesh.centroid(id).x < 0.7)
+            .collect();
+        mesh.refine(&marked);
+        let leaves = mesh.leaves_unordered();
+        let dist = Distribution::new(5);
+        dist.assign_blocks(&mut mesh, &leaves);
+        // owners must be monotone non-decreasing along the DFS order
+        let owners: Vec<u16> = mesh
+            .leaves_dfs()
+            .iter()
+            .map(|&id| mesh.elem(id).owner)
+            .collect();
+        for w in owners.windows(2) {
+            assert!(w[0] <= w[1], "blocks not contiguous in SFC order");
+        }
+        assert_eq!(owners.first(), Some(&0));
+        assert_eq!(owners.last(), Some(&4));
+    }
+
+    #[test]
+    fn imbalance_matches_lambda_definition() {
+        // 6 leaves on 3 ranks, skewed by hand: loads (4, 1, 1),
+        // mean 2 -> lambda = 2
+        let mut mesh = generator::cube_mesh(1);
+        let leaves = mesh.leaves_unordered();
+        assert_eq!(leaves.len(), 6);
+        let owners = [0u16, 0, 0, 0, 1, 2];
+        for (&id, &o) in leaves.iter().zip(owners.iter()) {
+            mesh.elems[id as usize].owner = o;
+        }
+        let dist = Distribution::new(3);
+        let weights = vec![1.0f64; 6];
+        let loads = dist.rank_loads(&mesh, &leaves, &weights);
+        assert_eq!(loads, vec![4.0, 1.0, 1.0]);
+        let lam = dist.imbalance(&mesh, &leaves, &weights);
+        assert!((lam - 2.0).abs() < 1e-12, "lambda {lam}");
+    }
+
+    #[test]
+    fn empty_ranks_count_toward_the_mean() {
+        // all weight on rank 0 of 4 -> lambda = 4 (not 1): stranding
+        // ranks idle IS imbalance
+        let mut mesh = generator::cube_mesh(1);
+        let leaves = mesh.leaves_unordered();
+        for &id in &leaves {
+            mesh.elems[id as usize].owner = 0;
+        }
+        let dist = Distribution::new(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let lam = dist.imbalance(&mesh, &leaves, &weights);
+        assert!((lam - 4.0).abs() < 1e-12, "lambda {lam}");
+    }
+
+    #[test]
+    fn more_parts_than_leaves_does_not_panic() {
+        let mut mesh = generator::cube_mesh(1); // 6 leaves
+        let leaves = mesh.leaves_unordered();
+        let dist = Distribution::new(10);
+        dist.assign_blocks(&mut mesh, &leaves);
+        for &id in &leaves {
+            assert!((mesh.elem(id).owner as usize) < 10);
+        }
+        let weights = vec![1.0f64; leaves.len()];
+        // 6 non-empty ranks of 10: lambda = 1 / (6/10)
+        let lam = dist.imbalance(&mesh, &leaves, &weights);
+        assert!((lam - 10.0 / 6.0).abs() < 1e-12, "lambda {lam}");
+    }
+}

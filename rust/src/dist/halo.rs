@@ -1,0 +1,174 @@
+//! The exact ghost layer of a partition (DESIGN.md §5).
+//!
+//! Built from the leaf face adjacency ([`LeafTopology`]): every
+//! interior face whose two leaves live on different ranks is an
+//! interface face, and each (rank, neighbour-rank) pair accumulates
+//! the faces it shares. The solver's per-CG-iteration halo exchange is
+//! then priced as one message per neighbour rank plus the bottleneck
+//! rank's interface bytes -- which is how partition quality (interface
+//! size, neighbour counts) feeds the modeled solve time, exactly as in
+//! the paper's Fig 3.4.
+
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::{TetMesh, NONE};
+use crate::util::hash::FxHashMap;
+
+/// Bytes shipped across one interface face in one direction per halo
+/// update: the 3 shared P1 vertex values in f64. (Vertices shared by
+/// several interface faces are counted per face -- a deliberate,
+/// documented simplification; see DESIGN.md §5.)
+pub const FACE_BYTES: usize = 24;
+
+/// Ghost-layer summary of one partition over `nparts` ranks.
+#[derive(Debug, Clone)]
+pub struct Halo {
+    pub nparts: usize,
+    /// Total partition-boundary faces, each counted once.
+    pub interface_faces: usize,
+    /// Interface faces per unordered rank pair, keyed (lo, hi).
+    pub faces_between: FxHashMap<(u16, u16), usize>,
+    /// Per rank: sorted distinct neighbour ranks.
+    pub neighbors: Vec<Vec<u16>>,
+    /// Per rank: interface faces incident to the rank.
+    pub rank_faces: Vec<usize>,
+}
+
+impl Halo {
+    /// Build the exact ghost layer for the partition `owners` (one
+    /// entry per `topo.leaves` element, values `< nparts`).
+    pub fn build(mesh: &TetMesh, topo: &LeafTopology, owners: &[u16], nparts: usize) -> Self {
+        assert_eq!(owners.len(), topo.n_leaves(), "owners/topology mismatch");
+        debug_assert!(topo.leaves.iter().all(|&id| mesh.elem(id).is_leaf()));
+        let mut faces_between: FxHashMap<(u16, u16), usize> = FxHashMap::default();
+        let mut neighbor_sets: Vec<std::collections::BTreeSet<u16>> =
+            vec![std::collections::BTreeSet::new(); nparts];
+        let mut rank_faces = vec![0usize; nparts];
+        let mut interface_faces = 0usize;
+
+        for (i, nb) in topo.neighbors.iter().enumerate() {
+            for &j in nb {
+                // each interior face once: local index pair i < j
+                if j == NONE || (j as usize) <= i {
+                    continue;
+                }
+                let (a, b) = (owners[i], owners[j as usize]);
+                if a == b {
+                    continue;
+                }
+                assert!(
+                    (a as usize) < nparts && (b as usize) < nparts,
+                    "owner out of range: {a} / {b} >= {nparts}"
+                );
+                interface_faces += 1;
+                let key = (a.min(b), a.max(b));
+                *faces_between.entry(key).or_insert(0) += 1;
+                rank_faces[a as usize] += 1;
+                rank_faces[b as usize] += 1;
+                neighbor_sets[a as usize].insert(b);
+                neighbor_sets[b as usize].insert(a);
+            }
+        }
+        Self {
+            nparts,
+            interface_faces,
+            faces_between,
+            neighbors: neighbor_sets
+                .into_iter()
+                .map(|s| s.into_iter().collect())
+                .collect(),
+            rank_faces,
+        }
+    }
+
+    /// Largest neighbour count over all ranks: the per-iteration
+    /// latency charge of the bottleneck rank.
+    pub fn max_neighbors(&self) -> usize {
+        self.neighbors.iter().map(|n| n.len()).max().unwrap_or(0)
+    }
+
+    /// Largest per-rank halo traffic in bytes (send + receive, i.e.
+    /// `2 * FACE_BYTES` over each of the rank's interface faces): the
+    /// bandwidth charge of the bottleneck rank.
+    pub fn max_rank_bytes(&self) -> usize {
+        self.rank_faces
+            .iter()
+            .map(|&f| 2 * f * FACE_BYTES)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total halo bytes moved per update over all ranks (each face
+    /// exchanges both directions).
+    pub fn total_bytes(&self) -> usize {
+        2 * self.interface_faces * FACE_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::mesh::generator;
+
+    fn setup(nparts: usize) -> (TetMesh, LeafTopology, Vec<u16>) {
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let topo = LeafTopology::build(&mesh);
+        let owners: Vec<u16> = topo
+            .leaves
+            .iter()
+            .map(|&id| mesh.elem(id).owner)
+            .collect();
+        (mesh, topo, owners)
+    }
+
+    #[test]
+    fn neighbor_lists_are_symmetric() {
+        let (mesh, topo, owners) = setup(6);
+        let halo = Halo::build(&mesh, &topo, &owners, 6);
+        for (r, nbs) in halo.neighbors.iter().enumerate() {
+            for &q in nbs {
+                assert_ne!(q as usize, r, "rank {r} lists itself");
+                assert!(
+                    halo.neighbors[q as usize].contains(&(r as u16)),
+                    "rank {r} lists {q} but not vice versa"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn interface_faces_counted_once_and_match_topology() {
+        let (mesh, topo, owners) = setup(6);
+        let halo = Halo::build(&mesh, &topo, &owners, 6);
+        assert_eq!(halo.interface_faces, topo.interface_faces(&owners));
+        let pair_sum: usize = halo.faces_between.values().sum();
+        assert_eq!(pair_sum, halo.interface_faces);
+        let per_rank_sum: usize = halo.rank_faces.iter().sum();
+        assert_eq!(per_rank_sum, 2 * halo.interface_faces);
+        assert!(halo.interface_faces > 0);
+    }
+
+    #[test]
+    fn single_part_has_empty_halo() {
+        let (mesh, topo, _) = setup(2);
+        let owners = vec![0u16; topo.n_leaves()];
+        let halo = Halo::build(&mesh, &topo, &owners, 1);
+        assert_eq!(halo.interface_faces, 0);
+        assert_eq!(halo.max_neighbors(), 0);
+        assert_eq!(halo.max_rank_bytes(), 0);
+        assert_eq!(halo.total_bytes(), 0);
+    }
+
+    #[test]
+    fn bottleneck_bytes_scale_with_rank_faces() {
+        let (mesh, topo, owners) = setup(6);
+        let halo = Halo::build(&mesh, &topo, &owners, 6);
+        let max_faces = *halo.rank_faces.iter().max().unwrap();
+        assert_eq!(halo.max_rank_bytes(), 2 * max_faces * FACE_BYTES);
+        assert!(halo.max_neighbors() <= 5);
+        assert!(halo.max_neighbors() >= 1);
+    }
+}

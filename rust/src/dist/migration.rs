@@ -1,0 +1,173 @@
+//! Element migration: execute a (remapped) partition (DESIGN.md §5).
+//!
+//! The paper's DLB phase ends by actually moving elements: every leaf
+//! whose new part differs from its current owner is shipped to the new
+//! rank. In the virtual-SPMD layer that is an ownership rewrite plus
+//! an accounting of what a real run would have sent: the Oliker-Biswas
+//! migration volumes (TotalV / MaxV, via
+//! [`crate::partition::metrics::migration_volume`]) and one modeled
+//! `MPI_Alltoallv` carrying every moved element's payload.
+
+use super::NetworkModel;
+use crate::mesh::{ElemId, TetMesh};
+use crate::partition::metrics::{migration_volume, MigrationVolume};
+use crate::partition::CommOp;
+use crate::util::hash::FxHashMap;
+
+/// Bytes shipped per unit of element weight: 4 vertex coordinates
+/// (96 B) rounded up to cover connectivity, tree and owner metadata.
+/// Solution transfer is charged separately by the solver model.
+pub const ELEM_BYTES: usize = 128;
+
+/// What one migration did: the volumes it moved and the modeled
+/// network time of moving them.
+#[derive(Debug, Clone)]
+pub struct MigrateOutcome {
+    /// TotalV / MaxV / moved fraction between old owners and `parts`.
+    pub volume: MigrationVolume,
+    /// Modeled wall time of the transfer (seconds).
+    pub modeled_time: f64,
+    /// The collectives a real SPMD migration would have performed
+    /// (empty when nothing moved).
+    pub comm: Vec<CommOp>,
+}
+
+/// Rewrite each leaf's owner to its new part and price the transfer.
+///
+/// `parts[i]` is the (already remapped, DESIGN.md §6) destination rank
+/// of `leaves[i]`; `weights[i]` its payload weight. Returns the
+/// migration volumes computed against the owners *before* the rewrite,
+/// so callers measure exactly what moved.
+pub fn migrate(
+    mesh: &mut TetMesh,
+    leaves: &[ElemId],
+    parts: &[u16],
+    weights: &[f64],
+    net: &NetworkModel,
+) -> MigrateOutcome {
+    assert_eq!(leaves.len(), parts.len());
+    assert_eq!(leaves.len(), weights.len());
+    let nparts = net.nparts;
+    for &p in parts {
+        assert!(
+            (p as usize) < nparts,
+            "destination part {p} >= nparts {nparts}"
+        );
+    }
+
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+    let volume = migration_volume(&owners, parts, weights, nparts);
+
+    // largest single (src -> dst) message, for the bottleneck term
+    let mut pair_w: FxHashMap<(u16, u16), f64> = FxHashMap::default();
+    for ((&o, &p), &w) in owners.iter().zip(parts).zip(weights) {
+        if o != p {
+            *pair_w.entry((o, p)).or_insert(0.0) += w;
+        }
+    }
+    let max_pair_w = pair_w.values().fold(0.0f64, |acc, &w| acc.max(w));
+
+    for (&id, &p) in leaves.iter().zip(parts) {
+        mesh.elems[id as usize].owner = p;
+    }
+
+    let total_bytes = (volume.total_v * ELEM_BYTES as f64).ceil() as usize;
+    let max_msg = (max_pair_w * ELEM_BYTES as f64).ceil() as usize;
+    let comm = if volume.total_v > 0.0 {
+        vec![CommOp::AllToAllV {
+            total_bytes,
+            max_msg,
+        }]
+    } else {
+        Vec::new()
+    };
+    let modeled_time = net.sequence_time(&comm);
+    MigrateOutcome {
+        volume,
+        modeled_time,
+        comm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::mesh::generator;
+
+    fn setup(nparts: usize) -> (TetMesh, Vec<ElemId>, Vec<f64>) {
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let weights = vec![1.0f64; leaves.len()];
+        (mesh, leaves, weights)
+    }
+
+    #[test]
+    fn owners_match_parts_after_migrate() {
+        let (mut mesh, leaves, weights) = setup(4);
+        let net = NetworkModel::infiniband(4);
+        // move everything one rank to the right (wrap-around)
+        let parts: Vec<u16> = leaves
+            .iter()
+            .map(|&id| (mesh.elem(id).owner + 1) % 4)
+            .collect();
+        let out = migrate(&mut mesh, &leaves, &parts, &weights, &net);
+        for (&id, &p) in leaves.iter().zip(&parts) {
+            assert_eq!(mesh.elem(id).owner, p);
+        }
+        assert!((out.volume.moved_fraction - 1.0).abs() < 1e-12);
+        assert!(out.modeled_time > 0.0);
+        assert_eq!(out.comm.len(), 1);
+    }
+
+    #[test]
+    fn identity_partition_moves_nothing() {
+        let (mut mesh, leaves, weights) = setup(4);
+        let net = NetworkModel::infiniband(4);
+        let parts: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let out = migrate(&mut mesh, &leaves, &parts, &weights, &net);
+        assert_eq!(out.volume.total_v, 0.0);
+        assert_eq!(out.volume.max_v, 0.0);
+        assert_eq!(out.modeled_time, 0.0);
+        assert!(out.comm.is_empty());
+        for (&id, &p) in leaves.iter().zip(&parts) {
+            assert_eq!(mesh.elem(id).owner, p);
+        }
+    }
+
+    #[test]
+    fn volume_matches_metrics_against_pre_state() {
+        let (mut mesh, leaves, _) = setup(3);
+        let net = NetworkModel::infiniband(3);
+        let weights: Vec<f64> = (0..leaves.len()).map(|i| 1.0 + (i % 3) as f64).collect();
+        let owners_before: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let parts: Vec<u16> = (0..leaves.len()).map(|i| (i % 3) as u16).collect();
+        let expect = migration_volume(&owners_before, &parts, &weights, 3);
+        let out = migrate(&mut mesh, &leaves, &parts, &weights, &net);
+        assert_eq!(out.volume, expect);
+    }
+
+    #[test]
+    fn modeled_time_prices_the_logged_alltoallv() {
+        let (mut mesh, leaves, weights) = setup(5);
+        let net = NetworkModel::infiniband(5);
+        let parts: Vec<u16> = (0..leaves.len()).map(|i| (i % 5) as u16).collect();
+        let out = migrate(&mut mesh, &leaves, &parts, &weights, &net);
+        assert!((out.modeled_time - net.sequence_time(&out.comm)).abs() < 1e-18);
+        match out.comm[0] {
+            CommOp::AllToAllV {
+                total_bytes,
+                max_msg,
+            } => {
+                assert_eq!(
+                    total_bytes,
+                    (out.volume.total_v * ELEM_BYTES as f64).ceil() as usize
+                );
+                assert!(max_msg > 0 && max_msg <= total_bytes);
+            }
+            ref other => panic!("expected AllToAllV, got {other:?}"),
+        }
+    }
+}

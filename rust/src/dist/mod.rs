@@ -1,0 +1,79 @@
+//! The virtual-SPMD execution layer: rank ownership, the alpha-beta
+//! network model, the exact ghost (halo) layer, and element migration.
+//!
+//! The whole computation lives in one address space, but every element
+//! carries an owning *virtual rank* ([`crate::mesh::Elem::owner`]).
+//! Partitioners and the remapper run sequentially and log the MPI
+//! collectives their SPMD formulations would have performed
+//! ([`crate::partition::CommOp`]); this module prices those logs
+//! against a latency-bandwidth network model, so partition quality and
+//! communication cost show up in the reported times exactly as they do
+//! on a real cluster (DESIGN.md §2-§5).
+//!
+//! Pieces:
+//! * [`Distribution`] -- the leaf -> rank map: initial contiguous block
+//!   assignment along the maintained SFC order, and the load-imbalance
+//!   factor lambda that the DLB policy (DESIGN.md §6) triggers on.
+//! * [`NetworkModel`] -- alpha-beta pricing of the five [`CommOp`]
+//!   collectives; [`NetworkModel::infiniband`] is the paper-like preset.
+//! * [`Halo`] -- the exact ghost layer of the current partition, built
+//!   from face adjacency; feeds the modeled per-CG-iteration halo
+//!   exchange (paper Fig 3.4).
+//! * [`migrate`] -- executes a new (remapped) partition: rewrites
+//!   element ownership, reports the Oliker-Biswas migration volumes
+//!   (TotalV / MaxV) and the modeled all-to-all transfer time.
+//!
+//! [`CommOp`]: crate::partition::CommOp
+
+pub mod distribution;
+pub mod halo;
+pub mod migration;
+pub mod network;
+
+pub use distribution::Distribution;
+pub use halo::{Halo, FACE_BYTES};
+pub use migration::{migrate, MigrateOutcome, ELEM_BYTES};
+pub use network::NetworkModel;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator;
+
+    /// End-to-end over the whole layer: skew a block distribution by
+    /// local refinement, migrate to a balanced partition, and check
+    /// lambda collapses back to ~1 with a consistent modeled cost.
+    #[test]
+    fn rebalance_roundtrip_restores_lambda() {
+        let nparts = 4usize;
+        let mut mesh = generator::cube_mesh(2);
+        let dist = Distribution::new(nparts);
+        let initial = mesh.leaves_unordered();
+        dist.assign_blocks(&mut mesh, &initial);
+
+        // skew: refine rank 0's elements twice
+        for _ in 0..2 {
+            let marked: Vec<_> = mesh
+                .leaves_unordered()
+                .into_iter()
+                .filter(|&id| mesh.elem(id).owner == 0)
+                .collect();
+            mesh.refine(&marked);
+        }
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0f64; leaves.len()];
+        let lam_skew = dist.imbalance(&mesh, &leaves, &weights);
+        assert!(lam_skew > 1.3, "skew not induced: {lam_skew}");
+
+        // a perfectly balanced (if cut-oblivious) new partition
+        let n = leaves.len();
+        let parts: Vec<u16> = (0..n).map(|i| (i * nparts / n) as u16).collect();
+        let net = NetworkModel::infiniband(nparts);
+        let out = migrate(&mut mesh, &leaves, &parts, &weights, &net);
+        assert!(out.volume.total_v > 0.0);
+        assert!(out.modeled_time > 0.0);
+
+        let lam = dist.imbalance(&mesh, &leaves, &weights);
+        assert!(lam < 1.05, "lambda {lam} after rebalance");
+    }
+}

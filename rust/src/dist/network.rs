@@ -1,0 +1,183 @@
+//! The alpha-beta (latency-bandwidth) network model that prices the
+//! collectives logged by the partitioners, the remapper and the
+//! migration (DESIGN.md §4).
+//!
+//! A message of `b` bytes costs `alpha + b * beta`; collectives are
+//! priced from the standard tree/butterfly algorithm shapes:
+//! `ceil(log2 p)` stages for Scan / Allreduce / Bcast and the latency
+//! part of Gather, one round of up to `p - 1` messages with a
+//! bottleneck-rank bandwidth term for AllToAllV. With one rank there
+//! is no network and every collective is free.
+
+use crate::partition::CommOp;
+
+/// Latency-bandwidth model of the interconnect between the `nparts`
+/// virtual ranks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Number of virtual ranks (p).
+    pub nparts: usize,
+    /// Per-message latency in seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time in seconds (1 / bandwidth).
+    pub beta: f64,
+}
+
+impl NetworkModel {
+    pub fn new(nparts: usize, alpha: f64, beta: f64) -> Self {
+        assert!(nparts >= 1, "nparts must be >= 1");
+        assert!(alpha >= 0.0 && beta >= 0.0, "negative network parameters");
+        Self {
+            nparts,
+            alpha,
+            beta,
+        }
+    }
+
+    /// QDR-InfiniBand-like preset (the paper's cluster class):
+    /// ~1.7 us MPI latency, ~3.2 GB/s effective per-link bandwidth.
+    pub fn infiniband(nparts: usize) -> Self {
+        Self::new(nparts, 1.7e-6, 1.0 / 3.2e9)
+    }
+
+    /// Stages of a binomial-tree / butterfly collective: ceil(log2 p).
+    fn stages(&self) -> f64 {
+        (self.nparts as f64).log2().ceil()
+    }
+
+    /// Modeled wall time of one collective (seconds).
+    pub fn cost(&self, op: &CommOp) -> f64 {
+        if self.nparts <= 1 {
+            return 0.0;
+        }
+        let p = self.nparts as f64;
+        match *op {
+            // prefix scan: log2(p) stages, full payload each stage
+            CommOp::Scan { bytes } => self.stages() * (self.alpha + bytes as f64 * self.beta),
+            // reduce + broadcast butterfly: 2 log2(p) stages
+            CommOp::Allreduce { bytes } => {
+                2.0 * self.stages() * (self.alpha + bytes as f64 * self.beta)
+            }
+            // binomial gather: log2(p) latency stages; the root link
+            // still moves every byte once
+            CommOp::Gather { bytes } => self.stages() * self.alpha + bytes as f64 * self.beta,
+            // binomial broadcast
+            CommOp::Bcast { bytes } => self.stages() * (self.alpha + bytes as f64 * self.beta),
+            // personalized all-to-all: up to p-1 messages per rank;
+            // bandwidth is set by the bottleneck rank -- at least the
+            // mean per-rank traffic, at least the largest message
+            CommOp::AllToAllV {
+                total_bytes,
+                max_msg,
+            } => {
+                (p - 1.0) * self.alpha
+                    + (total_bytes as f64 / p).max(max_msg as f64) * self.beta
+            }
+        }
+    }
+
+    /// Modeled time of a sequence of collectives, executed in order.
+    pub fn sequence_time(&self, ops: &[CommOp]) -> f64 {
+        ops.iter().map(|op| self.cost(op)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_ops(bytes: usize) -> [CommOp; 5] {
+        [
+            CommOp::Scan { bytes },
+            CommOp::Allreduce { bytes },
+            CommOp::Gather { bytes },
+            CommOp::Bcast { bytes },
+            CommOp::AllToAllV {
+                total_bytes: bytes,
+                max_msg: bytes / 4,
+            },
+        ]
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let net = NetworkModel::infiniband(1);
+        for op in all_ops(1 << 20) {
+            assert_eq!(net.cost(&op), 0.0, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn cost_is_monotone_in_bytes() {
+        let net = NetworkModel::infiniband(32);
+        for (small, large) in all_ops(1_000).iter().zip(all_ops(100_000).iter()) {
+            assert!(
+                net.cost(small) < net.cost(large),
+                "{small:?} -> {large:?} not monotone"
+            );
+        }
+    }
+
+    #[test]
+    fn cost_is_monotone_in_nparts() {
+        // latency-bound collectives get strictly slower as p grows
+        // across powers of two (more stages / more messages)
+        for op in [
+            CommOp::Scan { bytes: 4096 },
+            CommOp::Allreduce { bytes: 4096 },
+            CommOp::Gather { bytes: 4096 },
+            CommOp::Bcast { bytes: 4096 },
+            // one dominant message pins the bandwidth term, so the
+            // per-message latency growth is visible
+            CommOp::AllToAllV {
+                total_bytes: 1 << 20,
+                max_msg: 1 << 20,
+            },
+        ] {
+            let mut last = 0.0;
+            for p in [2usize, 4, 16, 64, 256] {
+                let c = NetworkModel::infiniband(p).cost(&op);
+                assert!(c > last, "{op:?}: cost({p}) = {c} <= {last}");
+                last = c;
+            }
+        }
+    }
+
+    #[test]
+    fn scan_matches_closed_form() {
+        let net = NetworkModel::new(8, 2e-6, 1e-9);
+        // 3 stages * (alpha + 100 bytes * beta)
+        let c = net.cost(&CommOp::Scan { bytes: 100 });
+        assert!((c - 3.0 * (2e-6 + 100.0 * 1e-9)).abs() < 1e-15);
+        // non-power-of-two rounds stages up
+        let net9 = NetworkModel::new(9, 2e-6, 1e-9);
+        let c9 = net9.cost(&CommOp::Scan { bytes: 100 });
+        assert!((c9 - 4.0 * (2e-6 + 100.0 * 1e-9)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn alltoallv_prices_bottleneck() {
+        let net = NetworkModel::new(4, 1e-6, 1e-9);
+        // mean traffic dominates when messages are uniform
+        let c = net.cost(&CommOp::AllToAllV {
+            total_bytes: 4000,
+            max_msg: 100,
+        });
+        assert!((c - (3.0 * 1e-6 + 1000.0 * 1e-9)).abs() < 1e-15);
+        // a single huge message dominates when skewed
+        let c = net.cost(&CommOp::AllToAllV {
+            total_bytes: 4000,
+            max_msg: 3000,
+        });
+        assert!((c - (3.0 * 1e-6 + 3000.0 * 1e-9)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sequence_time_sums() {
+        let net = NetworkModel::infiniband(16);
+        let ops = all_ops(10_000);
+        let total: f64 = ops.iter().map(|op| net.cost(op)).sum();
+        assert!((net.sequence_time(&ops) - total).abs() < 1e-18);
+        assert_eq!(net.sequence_time(&[]), 0.0);
+    }
+}

@@ -31,7 +31,7 @@ pub mod sfc;
 use crate::mesh::{ElemId, TetMesh};
 
 /// A collective operation the SPMD algorithm performs, logged by the
-/// partitioners and priced by `dist::cost`.
+/// partitioners and priced by [`crate::dist::NetworkModel::cost`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum CommOp {
     /// Prefix scan over ranks (payload bytes per rank).
