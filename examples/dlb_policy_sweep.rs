@@ -1,86 +1,153 @@
 //! DLB policy sweep: the paper's closing discussion made executable.
 //!
 //! "In practice one must weigh partitioning time, migration cost and
-//! solver time together" (§4). This example sweeps the imbalance
-//! trigger lambda for one method and prints the resulting trade-off:
-//! a low trigger repartitions constantly (ParMETIS-style quality
-//! chasing -- more DLB time, best balance), a high trigger tolerates
-//! skew (less DLB, worse solve balance). The sweet spot depends on how
-//! expensive the method's partition+migration is -- which is exactly
-//! why the paper pairs cheap incremental partitioners with moderate
-//! triggers.
+//! solver time together" (§4). This example sweeps the *trigger
+//! policies* and *element weight models* of the `dlb` subsystem for
+//! one method on the parabolic moving-peak scenario and prints the
+//! resulting trade-off: always-repartitioning buys perfect balance
+//! with DLB time every step; a lambda threshold tolerates bounded
+//! skew; a fixed cadence ignores lambda entirely; the cost/benefit
+//! policy pays for a rebalance only when the modeled
+//! partition+remap+migration cost is beaten by the modeled solve time
+//! it recovers -- and therefore lands the lowest modeled total time.
 //!
 //! ```sh
 //! cargo run --release --example dlb_policy_sweep [method]
 //! ```
 
+use phg_dlb::coordinator::report::format_rebalance_table;
 use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dlb::RebalanceReport;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
+
+struct SweepRow {
+    trigger: String,
+    weights: String,
+    repartitions: usize,
+    dlb_total: f64,
+    mean_lambda: f64,
+    tal: f64,
+    last_report: Option<RebalanceReport>,
+}
+
+fn run_policy(method: &str, trigger: &str, weights: &str) -> SweepRow {
+    let cfg = DriverConfig {
+        nparts: 32,
+        method: method.to_string(),
+        trigger: trigger.to_string(),
+        weights: weights.to_string(),
+        lambda_trigger: 1.2,
+        theta_refine: 0.45,
+        theta_coarsen: 0.04,
+        max_elements: 30_000,
+        solver: SolverOpts {
+            tol: 1e-5,
+            max_iter: 600,
+        },
+        use_pjrt: true,
+        nsteps: 12,
+        dt: 1.0 / 512.0,
+    };
+    let mut d = AdaptiveDriver::new(generator::cube_mesh(4), cfg).expect("valid policy specs");
+    d.run_parabolic(0.0);
+    let n = d.timeline.records.len() as f64;
+    let mean_lambda = d
+        .timeline
+        .records
+        .iter()
+        .map(|r| r.solve_imbalance)
+        .sum::<f64>()
+        / n;
+    let (tal, _, _, _) = d.timeline.table_columns();
+    SweepRow {
+        trigger: trigger.to_string(),
+        weights: weights.to_string(),
+        repartitions: d.timeline.repartition_count(),
+        dlb_total: d.timeline.records.iter().map(|r| r.dlb_time()).sum(),
+        mean_lambda,
+        tal,
+        last_report: d
+            .timeline
+            .records
+            .iter()
+            .rev()
+            .find_map(|r| r.rebalance.clone()),
+    }
+}
 
 fn main() {
     let method = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "PHG/HSFC".to_string());
-    let triggers = [1.02, 1.05, 1.1, 1.2, 1.5, 2.5];
+    let triggers = ["always", "lambda:1.05", "lambda:1.2", "every:4", "costbenefit:2"];
+    let weight_models = ["unit", "dof", "measured"];
 
     println!("== DLB policy sweep: method {method}, parabolic moving peak, p = 32 ==\n");
     println!(
-        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>10}",
-        "trigger", "repartitions", "DLB total(s)", "mean lambda", "STP mean(s)", "TAL(s)"
+        "{:<16} {:<10} {:>12} {:>12} {:>12} {:>12}",
+        "trigger", "weights", "repartitions", "DLB total(s)", "mean lambda", "TAL(s)"
     );
 
-    let mut rows: Vec<(f64, usize, f64, f64, f64, f64)> = Vec::new();
-    for &trigger in &triggers {
-        let cfg = DriverConfig {
-            nparts: 32,
-            method: method.clone(),
-            lambda_trigger: trigger,
-            theta_refine: 0.45,
-            theta_coarsen: 0.04,
-            max_elements: 30_000,
-            solver: SolverOpts {
-                tol: 1e-5,
-                max_iter: 600,
-            },
-            use_pjrt: true,
-            nsteps: 12,
-            dt: 1.0 / 512.0,
-        };
-        let mut d = AdaptiveDriver::new(generator::cube_mesh(4), cfg);
-        d.run_parabolic(0.0);
-        let reps = d.timeline.repartition_count();
-        let dlb: f64 = d.timeline.records.iter().map(|r| r.dlb_time()).sum();
-        let mean_lambda: f64 = d
-            .timeline
-            .records
-            .iter()
-            .map(|r| r.imbalance_after)
-            .sum::<f64>()
-            / d.timeline.records.len() as f64;
-        let (tal, _, _, stp) = d.timeline.table_columns();
-        println!(
-            "{:>8.2} {:>12} {:>12.4} {:>12.3} {:>12.4} {:>10.3}",
-            trigger, reps, dlb, mean_lambda, stp, tal
-        );
-        rows.push((trigger, reps, dlb, mean_lambda, stp, tal));
+    let mut rows: Vec<SweepRow> = Vec::new();
+    for trigger in triggers {
+        for weights in weight_models {
+            let row = run_policy(&method, trigger, weights);
+            println!(
+                "{:<16} {:<10} {:>12} {:>12.4} {:>12.3} {:>12.4}",
+                row.trigger, row.weights, row.repartitions, row.dlb_total, row.mean_lambda, row.tal
+            );
+            rows.push(row);
+        }
     }
 
-    // the qualitative law the paper states: tighter triggers buy
-    // balance with DLB time
-    let first = &rows[0];
-    let last = &rows[rows.len() - 1];
+    // per-policy RebalanceReport of the final rebalance (unit weights)
+    println!("\nlast rebalance per trigger policy (unit weights):");
+    let report_rows: Vec<(String, RebalanceReport)> = rows
+        .iter()
+        .filter(|r| r.weights == "unit")
+        .filter_map(|r| r.last_report.clone().map(|rep| (r.trigger.clone(), rep)))
+        .collect();
+    print!("{}", format_rebalance_table(&report_rows));
+
+    let get = |trigger: &str, weights: &str| {
+        rows.iter()
+            .find(|r| r.trigger == trigger && r.weights == weights)
+            .unwrap()
+    };
+
+    // the qualitative law of the paper's discussion: tighter triggers
+    // buy balance with DLB time
+    let always = get("always", "unit");
+    let loose = get("lambda:1.2", "unit");
     assert!(
-        first.1 >= last.1,
-        "low trigger should repartition at least as often"
+        always.repartitions >= loose.repartitions,
+        "always-repartitioning should repartition at least as often ({} vs {})",
+        always.repartitions,
+        loose.repartitions
     );
     assert!(
-        first.3 <= last.3 + 0.35,
-        "low trigger should hold lambda lower on average"
+        always.mean_lambda <= loose.mean_lambda + 0.35,
+        "always-repartitioning should hold lambda lower on average"
+    );
+    assert_eq!(
+        always.repartitions, 12,
+        "the always policy must fire every step"
+    );
+
+    // the new quantitative law: paying for a rebalance only when the
+    // modeled saving beats the modeled cost yields a lower modeled
+    // total time than repartitioning unconditionally
+    let cb = get("costbenefit:2", "unit");
+    assert!(
+        cb.tal < always.tal,
+        "cost/benefit TAL {:.4}s should beat always-repartitioning TAL {:.4}s",
+        cb.tal,
+        always.tal
     );
     println!(
-        "\ntrade-off confirmed: trigger {:.2} -> {} repartitions, mean lambda {:.3}; \
-         trigger {:.2} -> {} repartitions, mean lambda {:.3}",
-        first.0, first.1, first.3, last.0, last.1, last.3
+        "\ncost/benefit vs always: TAL {:.4}s vs {:.4}s with {} vs {} repartitions",
+        cb.tal, always.tal, cb.repartitions, always.repartitions
     );
+    println!("trade-off confirmed: the trigger policy, not just the method, sets the bill");
 }

@@ -41,6 +41,8 @@ fn main() {
     let cfg = DriverConfig {
         nparts: 32,
         method: method.clone(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
         lambda_trigger: 1.15,
         theta_refine: 0.4,
         theta_coarsen: 0.0,
@@ -53,7 +55,7 @@ fn main() {
         nsteps,
         dt: 0.0,
     };
-    let mut driver = AdaptiveDriver::new(mesh, cfg);
+    let mut driver = AdaptiveDriver::new(mesh, cfg).unwrap();
     if driver.runtime.is_none() {
         eprintln!("WARNING: artifacts missing; using native engines (run `make artifacts`)");
     }

@@ -27,6 +27,8 @@ fn main() {
     let cfg = DriverConfig {
         nparts: 16,
         method: method.clone(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
         lambda_trigger: 1.15,
         theta_refine: 0.45,
         theta_coarsen: 0.04,
@@ -39,7 +41,7 @@ fn main() {
         nsteps,
         dt: 1.0 / 512.0,
     };
-    let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg.clone());
+    let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg.clone()).unwrap();
     if driver.runtime.is_none() {
         eprintln!("WARNING: artifacts missing; using native engines (run `make artifacts`)");
     }

@@ -7,8 +7,8 @@
 //! cargo run --release --example partition_gallery   # writes out/*.vtk
 //! ```
 
-use phg_dlb::coordinator::{partitioner_by_name, METHOD_NAMES};
 use phg_dlb::dist::Distribution;
+use phg_dlb::dlb::Registry;
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::io::write_vtk;
 use phg_dlb::partition::sfc::{sfc_keys, Curve, Normalization};
@@ -32,8 +32,8 @@ fn main() {
     let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
 
     std::fs::create_dir_all("out").unwrap();
-    for name in METHOD_NAMES.iter().chain(["RIB"].iter()) {
-        let p = partitioner_by_name(name).unwrap();
+    for name in Registry::names() {
+        let p = Registry::create(name).unwrap();
         let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
         let r = p.partition(&input);
         let data: Vec<f64> = r.parts.iter().map(|&x| x as f64).collect();

@@ -8,8 +8,9 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use phg_dlb::coordinator::{partitioner_by_name, AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
 use phg_dlb::dist::Distribution;
+use phg_dlb::dlb::Registry;
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::partition::{metrics, PartitionInput};
@@ -41,8 +42,8 @@ fn main() {
         "{:<12} {:>9} {:>10} {:>12} {:>9}",
         "method", "time(ms)", "imbalance", "iface-faces", "surface%"
     );
-    for name in METHOD_NAMES {
-        let p = partitioner_by_name(name).unwrap();
+    for name in Registry::paper_names() {
+        let p = Registry::create(name).unwrap();
         let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
         let sw = Stopwatch::start();
         let r = p.partition(&input);
@@ -66,7 +67,7 @@ fn main() {
         max_elements: 60_000,
         ..DriverConfig::default()
     };
-    let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg);
+    let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg).unwrap();
     driver.run_helmholtz();
     for r in &driver.timeline.records {
         println!(

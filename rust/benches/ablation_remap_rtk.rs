@@ -18,7 +18,7 @@
 mod common;
 
 use common::{median_time, save_csv, MeshSequence};
-use phg_dlb::coordinator::partitioner_by_name;
+use phg_dlb::dlb::Registry;
 use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::partition::metrics::migration_volume;
 use phg_dlb::partition::PartitionInput;
@@ -39,7 +39,7 @@ fn main() {
             seq.advance();
         }
         let (leaves, weights, owners) = seq.leaves_weights_owners();
-        let p = partitioner_by_name(name).unwrap();
+        let p = Registry::create(name).unwrap();
         let input = PartitionInput::from_mesh(&seq.mesh, &leaves, &weights, &owners, nparts);
         let r = p.partition(&input);
 
@@ -69,8 +69,8 @@ fn main() {
         "{:<10} {:>9} {:>14} {:>14} {:>12} {:>12}",
         "elements", "parts", "RTK ms", "Mitchell ms", "RTK cut", "Mitchell cut"
     );
-    let rtk = partitioner_by_name("RTK").unwrap();
-    let mit = partitioner_by_name("Mitchell-RT").unwrap();
+    let rtk = Registry::create("RTK").unwrap();
+    let mit = Registry::create("Mitchell-RT").unwrap();
     let mut seq = MeshSequence::cylinder(3, 64, 500_000);
     for round in 0..5 {
         for _ in 0..2 {

@@ -13,7 +13,7 @@
 mod common;
 
 use common::{arg_usize, median_time, save_csv, MeshSequence};
-use phg_dlb::coordinator::{partitioner_by_name, METHOD_NAMES};
+use phg_dlb::dlb::Registry;
 use phg_dlb::partition::PartitionInput;
 use phg_dlb::util::stats::coeff_of_variation;
 
@@ -23,8 +23,9 @@ fn main() {
     let nparts = arg_usize("--nparts", 64);
 
     println!("== Fig 3.2: partition time per adaptive step (p = {nparts}) ==\n");
+    let methods = Registry::paper_names();
     let mut seq = MeshSequence::cylinder(scale, nparts, 400_000);
-    let mut series: Vec<(String, Vec<(f64, f64)>)> = METHOD_NAMES
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = methods
         .iter()
         .map(|m| (m.to_string(), Vec::new()))
         .collect();
@@ -33,8 +34,8 @@ fn main() {
     for step in 0..steps {
         let (leaves, weights, owners) = seq.leaves_weights_owners();
         sizes.push(leaves.len());
-        for (mi, name) in METHOD_NAMES.iter().enumerate() {
-            let p = partitioner_by_name(name).unwrap();
+        for (mi, &name) in methods.iter().enumerate() {
+            let p = Registry::create(name).unwrap();
             let input = PartitionInput::from_mesh(&seq.mesh, &leaves, &weights, &owners, nparts);
             let t = median_time(3, || {
                 let _ = p.partition(&input);
@@ -48,7 +49,7 @@ fn main() {
 
     // table: per-step partition times
     print!("{:>5} {:>9}", "step", "elements");
-    for name in METHOD_NAMES {
+    for &name in &methods {
         print!(" {name:>12}");
     }
     println!("   (ms)");

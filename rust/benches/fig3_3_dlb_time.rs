@@ -1,5 +1,6 @@
 //! Figure 3.3: dynamic load balancing time (partition + remap +
-//! migration) per adaptive step.
+//! migration) per adaptive step, measured through the `dlb` subsystem's
+//! [`RebalancePipeline`] -- the same code path the adaptive driver runs.
 //!
 //! Paper shape: RTK lowest and smoothest (most incremental -> least
 //! migration); geometric methods stable; Zoltan/HSFC worst of the SFC
@@ -16,48 +17,31 @@
 mod common;
 
 use common::{arg_usize, save_csv, MeshSequence};
-use phg_dlb::coordinator::{partitioner_by_name, METHOD_NAMES};
-use phg_dlb::dist::{migrate, NetworkModel};
-use phg_dlb::partition::PartitionInput;
-use phg_dlb::remap::{apply_map, oliker_biswas, SimilarityMatrix};
-use phg_dlb::util::timer::Stopwatch;
+use phg_dlb::dlb::{RebalancePipeline, Registry};
 
 fn main() {
     let steps = arg_usize("--steps", 10);
     let scale = arg_usize("--scale", 3);
     let nparts = arg_usize("--nparts", 64);
-    let net = NetworkModel::infiniband(nparts);
 
     println!("== Fig 3.3: DLB time (partition + remap + migrate) per step (p = {nparts}) ==\n");
 
+    let methods = Registry::paper_names();
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
     let mut moved_frac: Vec<(String, f64)> = Vec::new();
 
-    for name in METHOD_NAMES {
+    for &name in &methods {
         let mut seq = MeshSequence::cylinder(scale, nparts, 400_000);
-        let p = partitioner_by_name(name).unwrap();
+        let pipeline = RebalancePipeline::from_method(name, nparts).unwrap();
         let mut pts = Vec::new();
         let mut total_moved = 0.0;
         let mut total_weight = 0.0;
         for step in 0..steps {
             seq.advance();
-            let (leaves, weights, owners) = seq.leaves_weights_owners();
-            let input =
-                PartitionInput::from_mesh(&seq.mesh, &leaves, &weights, &owners, nparts);
-            let sw = Stopwatch::start();
-            let result = p.partition(&input);
-            let sim =
-                SimilarityMatrix::build(&owners, &result.parts, &weights, nparts, nparts);
-            let remap = oliker_biswas(&sim);
-            let mut parts = result.parts;
-            apply_map(&mut parts, &remap.map);
-            let out = migrate(&mut seq.mesh, &leaves, &parts, &weights, &net);
-            let measured = sw.elapsed();
-            let modeled = net.sequence_time(&result.comm)
-                + net.sequence_time(&remap.comm)
-                + out.modeled_time;
-            pts.push((step as f64, (measured + modeled) * 1e3));
-            total_moved += out.volume.total_v;
+            let (leaves, weights, _owners) = seq.leaves_weights_owners();
+            let report = pipeline.rebalance(&mut seq.mesh, &leaves, &weights);
+            pts.push((step as f64, report.dlb_time() * 1e3));
+            total_moved += report.volume.total_v;
             total_weight += weights.iter().sum::<f64>();
         }
         series.push((name.to_string(), pts));
@@ -65,7 +49,7 @@ fn main() {
     }
 
     print!("{:>5}", "step");
-    for name in METHOD_NAMES {
+    for &name in &methods {
         print!(" {name:>12}");
     }
     println!("   (ms, measured + modeled)");

@@ -15,7 +15,8 @@
 mod common;
 
 use common::{arg_usize, save_csv};
-use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
@@ -27,10 +28,12 @@ fn main() {
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
     let mut comm_share: Vec<(String, f64)> = Vec::new();
 
-    for name in METHOD_NAMES {
+    for name in Registry::paper_names() {
         let cfg = DriverConfig {
             nparts,
             method: name.to_string(),
+            trigger: "lambda".to_string(),
+            weights: "unit".to_string(),
             lambda_trigger: 1.1,
             theta_refine: 0.4,
             theta_coarsen: 0.0,
@@ -43,7 +46,7 @@ fn main() {
             nsteps: steps,
             dt: 0.0,
         };
-        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg);
+        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg).unwrap();
         driver.run_helmholtz();
         let pts: Vec<(f64, f64)> = driver
             .timeline

@@ -12,7 +12,8 @@
 mod common;
 
 use common::{arg_usize, save_csv};
-use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
@@ -21,12 +22,15 @@ fn main() {
     let nparts = arg_usize("--nparts", 32);
 
     println!("== Fig 3.5: per-adaptive-step time (p = {nparts}) ==\n");
+    let methods = Registry::paper_names();
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
 
-    for name in METHOD_NAMES {
+    for &name in &methods {
         let cfg = DriverConfig {
             nparts,
             method: name.to_string(),
+            trigger: "lambda".to_string(),
+            weights: "unit".to_string(),
             lambda_trigger: 1.1,
             theta_refine: 0.4,
             theta_coarsen: 0.0,
@@ -39,7 +43,7 @@ fn main() {
             nsteps: steps,
             dt: 0.0,
         };
-        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg);
+        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg).unwrap();
         driver.run_helmholtz();
         let pts: Vec<(f64, f64)> = driver
             .timeline
@@ -51,7 +55,7 @@ fn main() {
     }
 
     print!("{:>5}", "step");
-    for name in METHOD_NAMES {
+    for &name in &methods {
         print!(" {name:>12}");
     }
     println!("   (ms)");

@@ -16,8 +16,8 @@
 mod common;
 
 use common::{median_time, save_csv};
-use phg_dlb::coordinator::partitioner_by_name;
 use phg_dlb::dist::Distribution;
+use phg_dlb::dlb::Registry;
 use phg_dlb::fem::{assemble, DofMap};
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
@@ -112,7 +112,7 @@ fn main() {
     let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
 
     for method in ["RTK", "MSFC", "PHG/HSFC", "RCB", "ParMETIS"] {
-        let p = partitioner_by_name(method).unwrap();
+        let p = Registry::create(method).unwrap();
         let input = PartitionInput::from_mesh(&mesh, &leaves, &w, &owners, 64);
         let t = median_time(3, || {
             let r = p.partition(&input);

@@ -15,7 +15,8 @@ mod common;
 
 use common::{arg_usize, save_csv};
 use phg_dlb::coordinator::report::{format_table1, Table1Row};
-use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
@@ -26,10 +27,12 @@ fn main() {
     println!("== Table 1: total running time & repartitionings (p = {nparts}, {steps} adaptive steps) ==\n");
 
     let mut rows = Vec::new();
-    for name in METHOD_NAMES {
+    for name in Registry::paper_names() {
         let cfg = DriverConfig {
             nparts,
             method: name.to_string(),
+            trigger: "lambda".to_string(),
+            weights: "unit".to_string(),
             // ParMETIS-style quality-first policy: much lower trigger
             // -> many more repartitions (the paper's 189 vs ~60)
             lambda_trigger: if name == "ParMETIS" { 1.02 } else { 1.1 },
@@ -44,7 +47,7 @@ fn main() {
             nsteps: steps,
             dt: 0.0,
         };
-        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg);
+        let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg).unwrap();
         driver.run_helmholtz();
         let (tal, _, _, _) = driver.timeline.table_columns();
         rows.push(Table1Row {

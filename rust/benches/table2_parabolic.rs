@@ -17,7 +17,8 @@ mod common;
 
 use common::{arg_usize, save_csv};
 use phg_dlb::coordinator::report::{format_table2, Table2Row};
-use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
@@ -31,10 +32,12 @@ fn main() {
     );
 
     let mut rows = Vec::new();
-    for name in METHOD_NAMES {
+    for name in Registry::paper_names() {
         let cfg = DriverConfig {
             nparts,
             method: name.to_string(),
+            trigger: "lambda".to_string(),
+            weights: "unit".to_string(),
             lambda_trigger: if name == "ParMETIS" { 1.05 } else { 1.15 },
             theta_refine: 0.45,
             theta_coarsen: 0.04,
@@ -47,7 +50,7 @@ fn main() {
             nsteps: steps,
             dt: 1.0 / 512.0,
         };
-        let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg);
+        let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg).unwrap();
         driver.run_parabolic(0.0);
         rows.push(Table2Row::from_timeline(name, &driver.timeline));
     }

@@ -101,6 +101,8 @@ impl Config {
         Ok(crate::coordinator::DriverConfig {
             nparts: self.get_usize("nparts", 16)?,
             method: self.get_str("method", "PHG/HSFC"),
+            trigger: self.get_str("trigger", "lambda"),
+            weights: self.get_str("weights", "unit"),
             lambda_trigger: self.get_f64("lambda_trigger", 1.2)?,
             theta_refine: self.get_f64("theta_refine", 0.5)?,
             theta_coarsen: self.get_f64("theta_coarsen", 0.0)?,
@@ -181,5 +183,16 @@ mod tests {
         assert_eq!(d.method, "RCB");
         assert_eq!(d.nsteps, 5);
         assert_eq!(d.lambda_trigger, 1.2); // default
+        assert_eq!(d.trigger, "lambda"); // default
+        assert_eq!(d.weights, "unit"); // default
+    }
+
+    #[test]
+    fn trigger_and_weights_keys_flow_through() {
+        let mut c = Config::parse("trigger = costbenefit:4\n").unwrap();
+        c.apply_args(&["--weights".into(), "measured".into()]).unwrap();
+        let d = c.driver_config().unwrap();
+        assert_eq!(d.trigger, "costbenefit:4");
+        assert_eq!(d.weights, "measured");
     }
 }

@@ -2,68 +2,44 @@
 //! balancing as a first-class phase.
 //!
 //! Per adaptive step:  solve -> estimate -> mark -> refine/coarsen ->
-//! check imbalance -> (partition -> remap -> migrate)?  with every
-//! phase timed into a [`timeline::StepRecord`]. The DLB policy (§6 of
-//! DESIGN.md) triggers on the load imbalance factor lambda; the
-//! per-method trigger mirrors the paper's repartition counts (Table 1:
-//! the graph method repartitions ~3x more often because it chases
-//! partition quality).
+//! evaluate the trigger policy -> (partition -> remap -> migrate)?
+//! with every phase timed into a [`timeline::StepRecord`]. The DLB
+//! machinery is composed from the [`crate::dlb`] subsystem: a
+//! [`TriggerPolicy`] decides *when*, a [`WeightModel`] decides what
+//! load means, and the [`RebalancePipeline`] executes the paper's
+//! partition -> Oliker-Biswas remap -> migrate sequence (DESIGN.md §6).
 
 pub mod report;
 pub mod timeline;
 
 use crate::adapt::{mark_coarsen_threshold, mark_max, residual_indicator};
-use crate::dist::{migrate, Distribution, NetworkModel};
-use crate::fem::problems::{
-    parabolic_exact, parabolic_step, solve_helmholtz,
+use crate::dist::{Distribution, NetworkModel};
+use crate::dlb::{
+    dof_shares, trigger_by_name, weight_model_by_name, CostEstimate, Registry,
+    RebalancePipeline, TriggerContext, TriggerPolicy, WeightModel,
 };
+use crate::fem::problems::{parabolic_exact, parabolic_step, solve_helmholtz};
 use crate::fem::{DofMap, SolverOpts};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::{ElemId, TetMesh};
-use crate::partition::sfc::{sfc_keys, Curve, Normalization, SfcPartitioner};
-use crate::partition::{
-    graph::MultilevelGraph, rcb::Rcb, rib::Rib, rtk::RefinementTree, CommOp, PartitionInput,
-    Partitioner,
-};
-use crate::remap::{apply_map, oliker_biswas, SimilarityMatrix};
+use crate::partition::sfc::{sfc_keys, Curve, Normalization};
 use crate::runtime::Runtime;
 use crate::util::timer::Stopwatch;
+use anyhow::Result;
 use timeline::{StepRecord, Timeline};
-
-/// Look up a partitioner by its paper name.
-pub fn partitioner_by_name(name: &str) -> Option<Box<dyn Partitioner>> {
-    match name {
-        "RTK" => Some(Box::new(RefinementTree::new())),
-        "MSFC" => Some(Box::new(SfcPartitioner::msfc())),
-        "PHG/HSFC" => Some(Box::new(SfcPartitioner::phg_hsfc())),
-        "Zoltan/HSFC" => Some(Box::new(SfcPartitioner::zoltan_hsfc())),
-        "RCB" => Some(Box::new(Rcb::new())),
-        "RIB" => Some(Box::new(Rib::new())),
-        "ParMETIS" => Some(Box::new(MultilevelGraph::parmetis_like())),
-        "Mitchell-RT" => Some(Box::new(
-            crate::partition::mitchell::MitchellRefinementTree::new(),
-        )),
-        _ => None,
-    }
-}
-
-/// All method names in the paper's presentation order.
-pub const METHOD_NAMES: [&str; 6] = [
-    "RCB",
-    "ParMETIS",
-    "RTK",
-    "MSFC",
-    "PHG/HSFC",
-    "Zoltan/HSFC",
-];
 
 #[derive(Debug, Clone)]
 pub struct DriverConfig {
     /// virtual process count (the paper: 128 / 192)
     pub nparts: usize,
-    /// partitioning method name
+    /// partitioning method name (see [`Registry`])
     pub method: String,
-    /// DLB trigger: repartition when lambda exceeds this
+    /// trigger policy spec: `lambda[:t]` | `every[:n]` | `always` |
+    /// `costbenefit[:h]` (see [`crate::dlb::trigger_by_name`])
+    pub trigger: String,
+    /// weight model spec: `unit` | `dof` | `measured`
+    pub weights: String,
+    /// threshold used by the default `lambda` trigger
     pub lambda_trigger: f64,
     /// marking fraction for refinement (max-strategy theta)
     pub theta_refine: f64,
@@ -83,6 +59,8 @@ impl Default for DriverConfig {
         Self {
             nparts: 16,
             method: "PHG/HSFC".to_string(),
+            trigger: "lambda".to_string(),
+            weights: "unit".to_string(),
             lambda_trigger: 1.2,
             theta_refine: 0.5,
             theta_coarsen: 0.0,
@@ -95,26 +73,38 @@ impl Default for DriverConfig {
     }
 }
 
-/// The driver owns the mesh, the virtual distribution, and the method.
+/// The driver owns the mesh, the virtual distribution, and the DLB
+/// composition (pipeline + trigger + weight model).
 pub struct AdaptiveDriver {
     pub mesh: TetMesh,
     pub cfg: DriverConfig,
-    pub net: NetworkModel,
-    pub dist: Distribution,
-    pub partitioner: Box<dyn Partitioner>,
+    pub pipeline: RebalancePipeline,
+    pub trigger: Box<dyn TriggerPolicy>,
+    pub weight_model: Box<dyn WeightModel>,
     pub timeline: Timeline,
     pub runtime: Option<Runtime>,
     /// current solution (dof vector) and its dof map, for transfer
     u: Vec<f64>,
     dof: Option<DofMap>,
+    /// EWMA of measured partitioner wall time; feeds the CostBenefit
+    /// estimate (0 until the first rebalance)
+    partition_wall_ewma: f64,
+    /// previous step's SPMD-scaled solve time; feeds the CostBenefit
+    /// estimate
+    last_solve_parallel: f64,
 }
 
 impl AdaptiveDriver {
-    pub fn new(mut mesh: TetMesh, cfg: DriverConfig) -> Self {
-        let partitioner =
-            partitioner_by_name(&cfg.method).unwrap_or_else(|| panic!("unknown method {}", cfg.method));
-        let net = NetworkModel::infiniband(cfg.nparts);
-        let dist = Distribution::new(cfg.nparts);
+    /// Errors on an unknown method, trigger or weight-model name (the
+    /// message lists the valid ones).
+    pub fn new(mut mesh: TetMesh, cfg: DriverConfig) -> Result<Self> {
+        let pipeline = RebalancePipeline::new(
+            Registry::create(&cfg.method)?,
+            NetworkModel::infiniband(cfg.nparts),
+            Distribution::new(cfg.nparts),
+        );
+        let trigger = trigger_by_name(&cfg.trigger, cfg.lambda_trigger)?;
+        let weight_model = weight_model_by_name(&cfg.weights)?;
         // the paper: order the initial mesh (tree roots) along an SFC
         // and maintain that order for the whole computation
         let leaves = mesh.leaves_unordered();
@@ -127,67 +117,69 @@ impl AdaptiveDriver {
         let key_of: std::collections::HashMap<ElemId, u64> =
             mesh.roots.iter().copied().zip(keys).collect();
         mesh.sort_roots_by_key(|r| key_of[&r]);
-        dist.assign_blocks(&mut mesh, &leaves);
+        pipeline.dist.assign_blocks(&mut mesh, &leaves);
 
         let runtime = if cfg.use_pjrt {
             Runtime::open_default().ok()
         } else {
             None
         };
-        Self {
+        Ok(Self {
             mesh,
             cfg,
-            net,
-            dist,
-            partitioner,
+            pipeline,
+            trigger,
+            weight_model,
             timeline: Timeline::new(),
             runtime,
             u: Vec::new(),
             dof: None,
-        }
+            partition_wall_ewma: 0.0,
+            last_solve_parallel: 0.0,
+        })
     }
 
-    fn modeled_comm(&self, ops: &[CommOp]) -> f64 {
-        self.net.sequence_time(ops)
-    }
-
-    /// Run the DLB phase if the imbalance exceeds the trigger.
-    /// Returns the updated record.
-    fn maybe_rebalance(
-        &mut self,
-        leaves: &[ElemId],
-        weights: &[f64],
-        rec: &mut StepRecord,
-    ) {
-        rec.imbalance_before = self.dist.imbalance(&self.mesh, leaves, weights);
-        if rec.imbalance_before <= self.cfg.lambda_trigger {
+    /// Evaluate the trigger policy and, if it fires, run the full
+    /// rebalance pipeline, folding its report into the step record.
+    fn maybe_rebalance(&mut self, leaves: &[ElemId], weights: &[f64], rec: &mut StepRecord) {
+        rec.imbalance_before = self.pipeline.dist.imbalance(&self.mesh, leaves, weights);
+        // the cost-model pass is O(n); only pay for it when the policy
+        // actually reads it
+        let estimate = if self.trigger.needs_estimate() {
+            self.pipeline.estimate(
+                &self.mesh,
+                leaves,
+                weights,
+                self.last_solve_parallel,
+                self.partition_wall_ewma,
+            )
+        } else {
+            CostEstimate::default()
+        };
+        let ctx = TriggerContext {
+            step: rec.step,
+            lambda: rec.imbalance_before,
+            estimate,
+        };
+        if !self.trigger.should_rebalance(&ctx) {
             rec.imbalance_after = rec.imbalance_before;
             return;
         }
-        let owners: Vec<u16> = leaves.iter().map(|&id| self.mesh.elem(id).owner).collect();
-        let input = PartitionInput::from_mesh(&self.mesh, leaves, weights, &owners, self.cfg.nparts);
-
-        let sw = Stopwatch::start();
-        let result = self.partitioner.partition(&input);
-        rec.partition_time = sw.elapsed();
-        rec.partition_comm_modeled = self.modeled_comm(&result.comm);
-
-        // subgrid -> process mapping (§2.4)
-        let sw = Stopwatch::start();
-        let sim = SimilarityMatrix::build(&owners, &result.parts, weights, self.cfg.nparts, self.cfg.nparts);
-        let remap = oliker_biswas(&sim);
-        let mut parts = result.parts;
-        apply_map(&mut parts, &remap.map);
-        rec.partition_comm_modeled += self.modeled_comm(&remap.comm);
-        let total_w: f64 = weights.iter().sum();
-        rec.remap_kept_fraction = if total_w > 0.0 { remap.kept / total_w } else { 1.0 };
-
-        let out = migrate(&mut self.mesh, leaves, &parts, weights, &self.net);
-        rec.migrate_time = sw.elapsed();
-        rec.migrate_modeled = out.modeled_time;
-        rec.migration = Some(out.volume);
+        let report = self.pipeline.rebalance(&mut self.mesh, leaves, weights);
+        self.partition_wall_ewma = if self.partition_wall_ewma > 0.0 {
+            0.5 * self.partition_wall_ewma + 0.5 * report.partition_wall
+        } else {
+            report.partition_wall
+        };
+        rec.partition_time = report.partition_wall;
+        rec.partition_comm_modeled = report.partition_comm_modeled + report.remap_comm_modeled;
+        rec.migrate_time = report.migrate_wall;
+        rec.migrate_modeled = report.migrate_modeled;
+        rec.migration = Some(report.volume);
+        rec.remap_kept_fraction = report.remap_kept_fraction;
+        rec.imbalance_after = report.lambda_after;
         rec.repartitioned = true;
-        rec.imbalance_after = self.dist.imbalance(&self.mesh, leaves, weights);
+        rec.rebalance = Some(report);
     }
 
     /// Modeled per-iteration halo exchange from the *exact* ghost
@@ -196,9 +188,27 @@ impl AdaptiveDriver {
     /// iteration. Partition quality enters the solve time through
     /// here, exactly as in the paper's Fig 3.4.
     fn solve_comm_model(&self, halo: &crate::dist::Halo, iterations: usize) -> f64 {
+        let net = &self.pipeline.net;
         iterations as f64
-            * (halo.max_neighbors() as f64 * self.net.alpha
-                + halo.max_rank_bytes() as f64 * self.net.beta)
+            * (halo.max_neighbors() as f64 * net.alpha + halo.max_rank_bytes() as f64 * net.beta)
+    }
+
+    /// Feed the measured solve wall time back to the weight model as
+    /// per-element costs (apportioned by each element's dof share) and
+    /// remember the SPMD-scaled solve time for the CostBenefit trigger.
+    fn record_solve_feedback(&mut self, leaves: &[ElemId], solve_wall: f64) {
+        self.last_solve_parallel = solve_wall / self.cfg.nparts.max(1) as f64;
+        // the apportionment pass is O(n); only pay for it when the
+        // model actually records it
+        if !self.weight_model.learns() {
+            return;
+        }
+        let shares = dof_shares(&self.mesh, leaves);
+        let total: f64 = shares.iter().sum();
+        if total > 0.0 {
+            let costs: Vec<f64> = shares.iter().map(|s| solve_wall * s / total).collect();
+            self.weight_model.observe(&self.mesh, leaves, &costs);
+        }
     }
 
     /// One adaptive step of the Helmholtz experiment (example 3.1).
@@ -211,9 +221,17 @@ impl AdaptiveDriver {
         let sw_topo = Stopwatch::start();
         let topo = LeafTopology::build(&self.mesh);
         let dof = DofMap::build(&self.mesh, &topo);
-        let mut setup_time = sw_topo.elapsed();
+        let setup_time = sw_topo.elapsed();
         rec.n_elements = topo.n_leaves();
         rec.n_dofs = dof.n_dofs;
+
+        // imbalance the solve actually ran under (feeds the lambda
+        // factor in the timeline's SPMD solve-time accounting, §3)
+        let solve_weights = self.weight_model.weights(&self.mesh, &topo.leaves);
+        rec.solve_imbalance = self
+            .pipeline
+            .dist
+            .imbalance(&self.mesh, &topo.leaves, &solve_weights);
 
         // ---- solve
         let sw = Stopwatch::start();
@@ -237,6 +255,7 @@ impl AdaptiveDriver {
         rec.solve_iterations = sol.stats.iterations;
         rec.l2_error = sol.l2_error;
         rec.max_error = sol.max_error;
+        self.record_solve_feedback(&topo.leaves, solve_wall);
 
         // partition quality affects the halo model
         let owners_parts: Vec<u16> = topo
@@ -273,14 +292,12 @@ impl AdaptiveDriver {
             self.mesh.refine(&marked);
         }
         rec.adapt_time = sw.elapsed() + setup_time;
-        setup_time = 0.0;
-        let _ = setup_time;
 
         // ---- DLB
         self.u = sol.u;
         self.dof = Some(dof);
         let leaves = self.mesh.leaves_unordered();
-        let weights = vec![1.0f64; leaves.len()];
+        let weights = self.weight_model.weights(&self.mesh, &leaves);
         self.maybe_rebalance(&leaves, &weights, &mut rec);
 
         self.timeline.push(rec);
@@ -301,6 +318,12 @@ impl AdaptiveDriver {
         rec.n_elements = topo.n_leaves();
         rec.n_dofs = dof.n_dofs;
 
+        let solve_weights = self.weight_model.weights(&self.mesh, &topo.leaves);
+        rec.solve_imbalance = self
+            .pipeline
+            .dist
+            .imbalance(&self.mesh, &topo.leaves, &solve_weights);
+
         // transfer previous solution (or initial condition)
         let u_prev = match (&self.dof, self.u.len()) {
             (Some(old), n) if n > 0 => dof.transfer_from(old, &self.u, &self.mesh, 0.0),
@@ -318,10 +341,12 @@ impl AdaptiveDriver {
             t_next,
             self.cfg.dt,
         );
-        rec.solve_time = sw.elapsed();
+        let solve_wall = sw.elapsed();
+        rec.solve_time = solve_wall;
         rec.solve_iterations = out.stats.iterations;
         rec.l2_error = out.l2_error;
         rec.max_error = out.max_error;
+        self.record_solve_feedback(&topo.leaves, solve_wall);
 
         let owners_parts: Vec<u16> = topo
             .leaves
@@ -365,7 +390,7 @@ impl AdaptiveDriver {
         self.dof = Some(dof);
 
         let leaves = self.mesh.leaves_unordered();
-        let weights = vec![1.0f64; leaves.len()];
+        let weights = self.weight_model.weights(&self.mesh, &leaves);
         self.maybe_rebalance(&leaves, &weights, &mut rec);
 
         self.timeline.push(rec);
@@ -397,6 +422,8 @@ mod tests {
         DriverConfig {
             nparts: 4,
             method: method.to_string(),
+            trigger: "lambda".to_string(),
+            weights: "unit".to_string(),
             lambda_trigger: 1.1,
             theta_refine: 0.5,
             theta_coarsen: 0.0,
@@ -412,18 +439,29 @@ mod tests {
     }
 
     #[test]
-    fn registry_knows_all_methods() {
-        for name in METHOD_NAMES {
-            assert!(partitioner_by_name(name).is_some(), "missing {name}");
-        }
-        assert!(partitioner_by_name("RIB").is_some());
-        assert!(partitioner_by_name("nope").is_none());
+    fn unknown_names_error_cleanly() {
+        let mesh = generator::cube_mesh(2);
+        let err = AdaptiveDriver::new(mesh, quick_cfg("nope"))
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("RTK"), "error should list methods: {err}");
+
+        let mesh = generator::cube_mesh(2);
+        let mut cfg = quick_cfg("RTK");
+        cfg.trigger = "bogus".into();
+        assert!(AdaptiveDriver::new(mesh, cfg).is_err());
+
+        let mesh = generator::cube_mesh(2);
+        let mut cfg = quick_cfg("RTK");
+        cfg.weights = "bogus".into();
+        assert!(AdaptiveDriver::new(mesh, cfg).is_err());
     }
 
     #[test]
     fn helmholtz_loop_runs_and_rebalances() {
         let mesh = generator::cube_mesh(2);
-        let mut d = AdaptiveDriver::new(mesh, quick_cfg("RTK"));
+        let mut d = AdaptiveDriver::new(mesh, quick_cfg("RTK")).unwrap();
         d.run_helmholtz();
         assert_eq!(d.timeline.records.len(), 3);
         // mesh grew
@@ -435,22 +473,26 @@ mod tests {
             if r.repartitioned {
                 assert!(r.imbalance_after <= r.imbalance_before + 1e-9);
                 assert!(r.partition_time > 0.0);
+                let rep = r.rebalance.as_ref().expect("report recorded");
+                assert_eq!(rep.lambda_before, r.imbalance_before);
+                assert_eq!(rep.lambda_after, r.imbalance_after);
             }
         }
         // solves happened and converged
         for r in &d.timeline.records {
             assert!(r.solve_iterations > 0);
             assert!(r.n_dofs > 0);
+            assert!(r.solve_imbalance >= 1.0);
         }
     }
 
     #[test]
     fn all_methods_drive_the_loop() {
-        for name in METHOD_NAMES {
+        for name in Registry::paper_names() {
             let mesh = generator::cube_mesh(2);
             let mut cfg = quick_cfg(name);
             cfg.nsteps = 2;
-            let mut d = AdaptiveDriver::new(mesh, cfg);
+            let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
             d.run_helmholtz();
             assert_eq!(d.timeline.records.len(), 2, "method {name}");
             let last = d.timeline.records.last().unwrap();
@@ -469,7 +511,7 @@ mod tests {
         cfg.theta_coarsen = 0.02;
         cfg.nsteps = 4;
         cfg.dt = 2e-3;
-        let mut d = AdaptiveDriver::new(mesh, cfg);
+        let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
         d.run_parabolic(0.0);
         assert_eq!(d.timeline.records.len(), 4);
         for r in &d.timeline.records {
@@ -484,7 +526,7 @@ mod tests {
         let mut cfg = quick_cfg("RTK");
         cfg.nsteps = 4;
         cfg.theta_refine = 0.3;
-        let mut d = AdaptiveDriver::new(mesh, cfg);
+        let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
         d.run_helmholtz();
         let first = d.timeline.records.first().unwrap().l2_error;
         let last = d.timeline.records.last().unwrap().l2_error;
@@ -499,7 +541,7 @@ mod tests {
         let mesh = generator::cube_mesh(2);
         let mut cfg = quick_cfg("MSFC");
         cfg.nsteps = 2;
-        let mut d = AdaptiveDriver::new(mesh, cfg);
+        let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
         d.run_helmholtz();
         let csv = d.timeline.to_csv();
         assert_eq!(csv.lines().count(), 3); // header + 2 rows

@@ -2,6 +2,7 @@
 //! series for the figures. The bench targets print these.
 
 use super::timeline::Timeline;
+use crate::dlb::RebalanceReport;
 
 /// A row of the paper's Table 1 (total running time + repartitionings).
 #[derive(Debug, Clone)]
@@ -59,6 +60,44 @@ pub fn format_table2(rows: &[Table2Row]) -> String {
         out.push_str(&format!(
             "{:<12} {:>12.4} {:>12.4} {:>12.4} {:>12.4}\n",
             r.method, r.tal, r.dlb, r.sol, r.stp
+        ));
+    }
+    out
+}
+
+/// Table of labelled [`RebalanceReport`]s: one row per rebalance with
+/// lambda before/after, migration volumes, kept fraction and the
+/// per-phase modeled cost split (the `dlb_policy_sweep` output).
+pub fn format_rebalance_table(rows: &[(String, RebalanceReport)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22} {:<12} {:>7} {:>7} {:>9} {:>9} {:>6} {:>11} {:>11} {:>11} {:>8}\n",
+        "policy",
+        "method",
+        "lam_in",
+        "lam_out",
+        "TotalV",
+        "MaxV",
+        "kept%",
+        "part(us)",
+        "remap(us)",
+        "migr(us)",
+        "ops"
+    ));
+    for (label, r) in rows {
+        out.push_str(&format!(
+            "{:<22} {:<12} {:>7.3} {:>7.3} {:>9.1} {:>9.1} {:>6.1} {:>11.2} {:>11.2} {:>11.2} {:>8}\n",
+            label,
+            r.method,
+            r.lambda_before,
+            r.lambda_after,
+            r.volume.total_v,
+            r.volume.max_v,
+            100.0 * r.remap_kept_fraction,
+            1e6 * r.partition_comm_modeled,
+            1e6 * r.remap_comm_modeled,
+            1e6 * r.migrate_modeled,
+            r.comm_log.len()
         ));
     }
     out
@@ -125,6 +164,34 @@ mod tests {
         assert!(s.contains("PHG/HSFC"));
         assert!(s.contains("0.0734"));
         assert!(s.contains("Time STP"));
+    }
+
+    #[test]
+    fn rebalance_table_formats() {
+        use crate::partition::metrics::MigrationVolume;
+        let rep = RebalanceReport {
+            method: "RTK".into(),
+            lambda_before: 1.42,
+            lambda_after: 1.01,
+            volume: MigrationVolume {
+                total_v: 120.0,
+                max_v: 40.0,
+                moved_fraction: 0.2,
+            },
+            remap_kept_fraction: 0.8,
+            partition_wall: 1e-3,
+            migrate_wall: 2e-3,
+            partition_comm_modeled: 3e-6,
+            remap_comm_modeled: 4e-6,
+            migrate_modeled: 5e-6,
+            comm_log: Vec::new(),
+        };
+        let s = format_rebalance_table(&[("lambda:1.20".into(), rep)]);
+        assert!(s.contains("lambda:1.20"));
+        assert!(s.contains("RTK"));
+        assert!(s.contains("1.420"));
+        assert!(s.contains("120.0"));
+        assert_eq!(s.lines().count(), 2);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! paper's figures and tables aggregate (partition time, DLB time,
 //! solve time, step time, repartition counts, quality metrics).
 
+use crate::dlb::RebalanceReport;
 use crate::partition::metrics::MigrationVolume;
 
 /// One adaptive (or time) step's accounting. Times in seconds;
@@ -17,7 +18,12 @@ pub struct StepRecord {
     /// load imbalance before any DLB this step
     pub imbalance_before: f64,
     pub imbalance_after: f64,
+    /// load imbalance the solve actually ran under (before this
+    /// step's refinement); scales the bottleneck rank's solve compute
+    pub solve_imbalance: f64,
     pub repartitioned: bool,
+    /// full phase-by-phase report of this step's rebalance, if any
+    pub rebalance: Option<RebalanceReport>,
     /// measured partitioner wall time
     pub partition_time: f64,
     /// modeled collectives of the partitioner + remap
@@ -51,7 +57,9 @@ impl StepRecord {
             n_dofs: 0,
             imbalance_before: 1.0,
             imbalance_after: 1.0,
+            solve_imbalance: 1.0,
             repartitioned: false,
+            rebalance: None,
             partition_time: 0.0,
             partition_comm_modeled: 0.0,
             migrate_time: 0.0,
@@ -78,11 +86,14 @@ impl StepRecord {
 
     /// Parallel solve time (Fig 3.4 / the SOL column): the measured
     /// single-address-space solve is divided by the virtual process
-    /// count (perfect compute scaling -- the substitution documented in
-    /// DESIGN.md §3), then the partition-dependent modeled halo time is
-    /// added. This is where partition quality shows up, as in the paper.
+    /// count and multiplied by the load-imbalance factor the solve ran
+    /// under (the bottleneck rank holds `lambda x` the mean load --
+    /// DESIGN.md §3), then the partition-dependent modeled halo time
+    /// is added. This is where partition quality *and* the trigger
+    /// policy's tolerance of skew show up, as in the paper.
     pub fn total_solve_time(&self) -> f64 {
-        self.solve_time / self.nparts.max(1) as f64 + self.solve_comm_modeled
+        self.solve_time * self.solve_imbalance.max(1.0) / self.nparts.max(1) as f64
+            + self.solve_comm_modeled
     }
 
     /// Parallel assembly/estimate/adapt compute, same SPMD scaling.
@@ -137,7 +148,8 @@ impl Timeline {
     /// CSV dump (one row per step) for the figure benches.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "step,n_elements,n_dofs,imbalance_before,imbalance_after,repartitioned,\
+            "step,n_elements,n_dofs,imbalance_before,imbalance_after,solve_imbalance,\
+             repartitioned,\
              partition_time,partition_comm_modeled,migrate_time,migrate_modeled,\
              moved_fraction,remap_kept_fraction,interface_faces,assemble_time,\
              solve_time,solve_comm_modeled,solve_iterations,estimate_time,adapt_time,\
@@ -145,12 +157,13 @@ impl Timeline {
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{:.4},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{:.6},{:.3e},{:.3e}\n",
+                "{},{},{},{:.4},{:.4},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{:.6},{:.3e},{:.3e}\n",
                 r.step,
                 r.n_elements,
                 r.n_dofs,
                 r.imbalance_before,
                 r.imbalance_after,
+                r.solve_imbalance,
                 r.repartitioned as u8,
                 r.partition_time,
                 r.partition_comm_modeled,
@@ -193,6 +206,22 @@ mod tests {
         assert!((r.dlb_time() - 3.5).abs() < 1e-12);
         assert!((r.total_solve_time() - 4.25).abs() < 1e-12);
         assert!((r.step_time() - 11.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_imbalance_scales_bottleneck_compute() {
+        let mut r = StepRecord::new(0);
+        r.nparts = 4;
+        r.solve_time = 8.0;
+        r.solve_comm_modeled = 0.5;
+        // balanced: mean compute per rank
+        assert!((r.total_solve_time() - 2.5).abs() < 1e-12);
+        // bottleneck rank holds 1.5x the mean load
+        r.solve_imbalance = 1.5;
+        assert!((r.total_solve_time() - 3.5).abs() < 1e-12);
+        // values below 1 are clamped (lambda >= 1 by definition)
+        r.solve_imbalance = 0.5;
+        assert!((r.total_solve_time() - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,35 @@
+//! The dynamic load-balancing subsystem: *when* to rebalance
+//! ([`TriggerPolicy`]), *what* load means ([`WeightModel`]), *which*
+//! method runs ([`Registry`]), and *how* the pieces compose
+//! ([`RebalancePipeline`]).
+//!
+//! The paper's core claim is that DLB quality comes from the whole
+//! loop -- trigger policy, element weights, partitioning method and
+//! the migration-minimizing remap together -- not from any single
+//! phase. This module makes each of those a first-class, pluggable
+//! part:
+//!
+//! * [`registry`] -- the one name -> partitioner table (replacing the
+//!   three copies that used to disagree across the crate);
+//! * [`trigger`] -- lambda-threshold (the paper), fixed cadence, and
+//!   cost/benefit policies priced against [`crate::dist::NetworkModel`];
+//! * [`weights`] -- unit, dof-proportional, and runtime-measured
+//!   element weight models;
+//! * [`pipeline`] -- partition -> Oliker-Biswas remap -> migrate as
+//!   one call returning a structured [`RebalanceReport`].
+//!
+//! The adaptive driver ([`crate::coordinator`]), the CLI, the examples
+//! and the benches all compose their DLB loops from these pieces.
+
+pub mod pipeline;
+pub mod registry;
+pub mod trigger;
+pub mod weights;
+
+pub use pipeline::{RebalancePipeline, RebalanceReport};
+pub use registry::{MethodSpec, Registry, METHODS};
+pub use trigger::{
+    trigger_by_name, AfterAdaptation, CostBenefit, CostEstimate, LambdaThreshold, TriggerContext,
+    TriggerPolicy,
+};
+pub use weights::{dof_shares, weight_model_by_name, DofWeighted, Measured, Unit, WeightModel};

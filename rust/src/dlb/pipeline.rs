@@ -1,0 +1,266 @@
+//! The unified rebalance pipeline: partition -> Oliker-Biswas remap ->
+//! migrate, as one call with one structured report.
+//!
+//! Before this module the coordinator hand-wired the three phases
+//! inline; the benches and examples each re-implemented the same
+//! sequence with their own accounting. [`RebalancePipeline`] owns the
+//! composition and [`RebalanceReport`] carries everything the paper's
+//! tables aggregate: lambda before/after, TotalV/MaxV, the kept-data
+//! fraction, per-phase measured wall and modeled network time, and the
+//! full collective log.
+
+use super::registry::Registry;
+use super::trigger::CostEstimate;
+use crate::dist::{migrate, Distribution, NetworkModel, ELEM_BYTES};
+use crate::mesh::{ElemId, TetMesh};
+use crate::partition::metrics::MigrationVolume;
+use crate::partition::{CommOp, PartitionInput, Partitioner};
+use crate::remap::{apply_map, oliker_biswas, SimilarityMatrix};
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+/// What one full rebalance did, phase by phase.
+#[derive(Debug, Clone)]
+pub struct RebalanceReport {
+    /// Partitioning method that produced the new subgrids.
+    pub method: String,
+    /// Load-imbalance factor before / after migration.
+    pub lambda_before: f64,
+    pub lambda_after: f64,
+    /// Oliker-Biswas migration volumes (TotalV / MaxV / moved fraction).
+    pub volume: MigrationVolume,
+    /// Fraction of total weight the remap kept in place.
+    pub remap_kept_fraction: f64,
+    /// Measured partitioner wall time (s).
+    pub partition_wall: f64,
+    /// Measured remap + migration wall time (s).
+    pub migrate_wall: f64,
+    /// Modeled network time of the partitioner's collectives (s).
+    pub partition_comm_modeled: f64,
+    /// Modeled network time of the remap's gather + broadcast (s).
+    pub remap_comm_modeled: f64,
+    /// Modeled network time of the migration `AllToAllV` (s).
+    pub migrate_modeled: f64,
+    /// Every collective the SPMD formulation would have performed, in
+    /// execution order (partition, then remap, then migration).
+    pub comm_log: Vec<CommOp>,
+}
+
+impl RebalanceReport {
+    /// Total modeled network time over all three phases (s).
+    pub fn modeled_comm_total(&self) -> f64 {
+        self.partition_comm_modeled + self.remap_comm_modeled + self.migrate_modeled
+    }
+
+    /// Full DLB time of this rebalance: measured wall + modeled
+    /// network (the per-step quantity of the paper's Fig 3.3).
+    pub fn dlb_time(&self) -> f64 {
+        self.partition_wall + self.migrate_wall + self.modeled_comm_total()
+    }
+}
+
+/// Partitioner + network model + distribution, composed into the
+/// paper's partition -> remap -> migrate sequence.
+pub struct RebalancePipeline {
+    pub partitioner: Box<dyn Partitioner>,
+    pub net: NetworkModel,
+    pub dist: Distribution,
+}
+
+impl RebalancePipeline {
+    pub fn new(partitioner: Box<dyn Partitioner>, net: NetworkModel, dist: Distribution) -> Self {
+        assert_eq!(net.nparts, dist.nparts, "network/distribution disagree");
+        Self {
+            partitioner,
+            net,
+            dist,
+        }
+    }
+
+    /// Convenience: method by registry name, InfiniBand-class network.
+    pub fn from_method(name: &str, nparts: usize) -> Result<Self> {
+        Ok(Self::new(
+            Registry::create(name)?,
+            NetworkModel::infiniband(nparts),
+            Distribution::new(nparts),
+        ))
+    }
+
+    /// Run the full sequence: partition `leaves` under `weights`,
+    /// remap the new subgrids onto the ranks already holding their
+    /// data, migrate, and report.
+    pub fn rebalance(
+        &self,
+        mesh: &mut TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+    ) -> RebalanceReport {
+        let nparts = self.dist.nparts;
+        let lambda_before = self.dist.imbalance(mesh, leaves, weights);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let input = PartitionInput::from_mesh(mesh, leaves, weights, &owners, nparts);
+
+        let sw = Stopwatch::start();
+        let result = self.partitioner.partition(&input);
+        let partition_wall = sw.elapsed();
+        let mut parts = result.parts;
+        let mut comm_log = result.comm;
+        let partition_comm_modeled = self.net.sequence_time(&comm_log);
+
+        let sw = Stopwatch::start();
+        let sim = SimilarityMatrix::build(&owners, &parts, weights, nparts, nparts);
+        let remap = oliker_biswas(&sim);
+        apply_map(&mut parts, &remap.map);
+        let remap_comm_modeled = self.net.sequence_time(&remap.comm);
+        let total_w: f64 = weights.iter().sum();
+        let remap_kept_fraction = if total_w > 0.0 {
+            remap.kept / total_w
+        } else {
+            1.0
+        };
+        comm_log.extend(remap.comm);
+
+        let out = migrate(mesh, leaves, &parts, weights, &self.net);
+        let migrate_wall = sw.elapsed();
+        comm_log.extend(out.comm);
+
+        RebalanceReport {
+            method: self.partitioner.name().to_string(),
+            lambda_before,
+            lambda_after: self.dist.imbalance(mesh, leaves, weights),
+            volume: out.volume,
+            remap_kept_fraction,
+            partition_wall,
+            migrate_wall,
+            partition_comm_modeled,
+            remap_comm_modeled,
+            migrate_modeled: out.modeled_time,
+            comm_log,
+        }
+    }
+
+    /// A-priori economics of rebalancing *now*, for the
+    /// [`super::CostBenefit`] trigger -- computed without running the
+    /// partitioner.
+    ///
+    /// * Saving: local solve compute on the bottleneck rank costs
+    ///   `lambda x` the balanced mean (DESIGN.md §3), so restoring
+    ///   balance recovers `solve_parallel_time * (lambda - 1)` per
+    ///   step, where `solve_parallel_time` is the previous step's
+    ///   SPMD-scaled solve time.
+    /// * Cost: the measured-wall estimate of the partitioner (EWMA fed
+    ///   by the driver; 0 until the first rebalance) plus the modeled
+    ///   collectives of a Scan-class partitioner, the remap's
+    ///   gather + broadcast, and an `AllToAllV` moving exactly the
+    ///   excess weight above the per-rank mean.
+    pub fn estimate(
+        &self,
+        mesh: &TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+        solve_parallel_time: f64,
+        partition_wall_estimate: f64,
+    ) -> CostEstimate {
+        let p = self.dist.nparts;
+        let loads = self.dist.rank_loads(mesh, leaves, weights);
+        let total: f64 = loads.iter().sum();
+        if total <= 0.0 {
+            return CostEstimate::default();
+        }
+        let mean = total / p as f64;
+        let lambda = loads.iter().cloned().fold(0.0f64, f64::max) / mean;
+        let saving_per_step = solve_parallel_time * (lambda - 1.0).max(0.0);
+
+        let excess: f64 = loads.iter().map(|&l| (l - mean).max(0.0)).sum();
+        let max_excess = loads
+            .iter()
+            .map(|&l| (l - mean).max(0.0))
+            .fold(0.0f64, f64::max);
+        let ops = [
+            CommOp::Scan { bytes: 8 },
+            CommOp::Gather { bytes: p * p * 8 },
+            CommOp::Bcast { bytes: p * 2 },
+            CommOp::AllToAllV {
+                total_bytes: (excess * ELEM_BYTES as f64).ceil() as usize,
+                max_msg: (max_excess * ELEM_BYTES as f64).ceil() as usize,
+            },
+        ];
+        CostEstimate {
+            rebalance_cost: partition_wall_estimate + self.net.sequence_time(&ops),
+            saving_per_step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator;
+
+    /// A mesh skewed by refining rank 0's block twice.
+    fn skewed(nparts: usize) -> (TetMesh, Vec<ElemId>) {
+        let mut mesh = generator::cube_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        for _ in 0..2 {
+            let marked: Vec<_> = mesh
+                .leaves_unordered()
+                .into_iter()
+                .filter(|&id| mesh.elem(id).owner == 0)
+                .collect();
+            mesh.refine(&marked);
+        }
+        let leaves = mesh.leaves_unordered();
+        (mesh, leaves)
+    }
+
+    #[test]
+    fn rebalance_restores_lambda_and_reports_phases() {
+        let (mut mesh, leaves) = skewed(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("PHG/HSFC", 4).unwrap();
+        let rep = pipe.rebalance(&mut mesh, &leaves, &weights);
+        assert_eq!(rep.method, "PHG/HSFC");
+        assert!(rep.lambda_before > 1.3, "skew missing: {}", rep.lambda_before);
+        assert!(rep.lambda_after < 1.2, "lambda {}", rep.lambda_after);
+        assert!(rep.lambda_after <= rep.lambda_before);
+        assert!(rep.volume.total_v > 0.0);
+        assert!(rep.partition_wall > 0.0);
+        assert!(rep.partition_comm_modeled > 0.0);
+        assert!(rep.remap_comm_modeled > 0.0);
+        assert!(rep.migrate_modeled > 0.0);
+        assert!(rep.dlb_time() >= rep.modeled_comm_total());
+        assert!(!rep.comm_log.is_empty());
+        assert!(rep.remap_kept_fraction > 0.0 && rep.remap_kept_fraction <= 1.0);
+        // owners really were rewritten
+        let lam = pipe.dist.imbalance(&mesh, &leaves, &weights);
+        assert!((lam - rep.lambda_after).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimate_is_zero_saving_when_balanced() {
+        let mut mesh = generator::cube_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        // 48 leaves over 4 ranks: exactly balanced under unit weights
+        Distribution::new(4).assign_blocks(&mut mesh, &leaves);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("RTK", 4).unwrap();
+        let est = pipe.estimate(&mesh, &leaves, &weights, 1.0, 0.0);
+        assert_eq!(est.saving_per_step, 0.0);
+        assert!(est.rebalance_cost > 0.0, "a rebalance is never free");
+    }
+
+    #[test]
+    fn estimate_saving_scales_with_skew_and_solve_time() {
+        let (mesh, leaves) = skewed(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("RTK", 4).unwrap();
+        let est1 = pipe.estimate(&mesh, &leaves, &weights, 1.0, 0.0);
+        assert!(est1.saving_per_step > 0.0);
+        let est2 = pipe.estimate(&mesh, &leaves, &weights, 2.0, 0.0);
+        assert!((est2.saving_per_step - 2.0 * est1.saving_per_step).abs() < 1e-12);
+        // the wall estimate adds straight into the cost
+        let est3 = pipe.estimate(&mesh, &leaves, &weights, 1.0, 0.5);
+        assert!((est3.rebalance_cost - est1.rebalance_cost - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! The single method registry: every partitioning method reachable by
+//! name lives in exactly one table.
+//!
+//! Before this module existed the crate carried three disagreeing
+//! copies of the name -> partitioner mapping (`partition::paper_lineup`,
+//! `coordinator::partitioner_by_name`, `coordinator::METHOD_NAMES`);
+//! RIB and Mitchell-RT were reachable by name but missing from the
+//! lineup. [`METHODS`] is now the only source of truth: the paper's
+//! six-method lineup in Table-1 presentation order, followed by the
+//! ablation-only methods.
+
+use crate::partition::{
+    graph::MultilevelGraph, mitchell::MitchellRefinementTree, rcb::Rcb, rib::Rib,
+    rtk::RefinementTree, sfc::SfcPartitioner, Partitioner,
+};
+use anyhow::{bail, Result};
+
+/// One registered method: its paper name, whether it belongs to the
+/// §3 experiment lineup, and its constructor.
+pub struct MethodSpec {
+    pub name: &'static str,
+    /// In the paper's six-method comparison (Tables 1-3, Figs 3.2-3.5).
+    pub in_lineup: bool,
+    pub make: fn() -> Box<dyn Partitioner>,
+}
+
+/// Every method, lineup first (Table-1 presentation order), then the
+/// ablation-only extras.
+pub const METHODS: [MethodSpec; 8] = [
+    MethodSpec {
+        name: "RCB",
+        in_lineup: true,
+        make: || Box::new(Rcb::new()),
+    },
+    MethodSpec {
+        name: "ParMETIS",
+        in_lineup: true,
+        make: || Box::new(MultilevelGraph::parmetis_like()),
+    },
+    MethodSpec {
+        name: "RTK",
+        in_lineup: true,
+        make: || Box::new(RefinementTree::new()),
+    },
+    MethodSpec {
+        name: "MSFC",
+        in_lineup: true,
+        make: || Box::new(SfcPartitioner::msfc()),
+    },
+    MethodSpec {
+        name: "PHG/HSFC",
+        in_lineup: true,
+        make: || Box::new(SfcPartitioner::phg_hsfc()),
+    },
+    MethodSpec {
+        name: "Zoltan/HSFC",
+        in_lineup: true,
+        make: || Box::new(SfcPartitioner::zoltan_hsfc()),
+    },
+    MethodSpec {
+        name: "RIB",
+        in_lineup: false,
+        make: || Box::new(Rib::new()),
+    },
+    MethodSpec {
+        name: "Mitchell-RT",
+        in_lineup: false,
+        make: || Box::new(MitchellRefinementTree::new()),
+    },
+];
+
+/// Namespace for method lookup over [`METHODS`].
+pub struct Registry;
+
+impl Registry {
+    /// Instantiate a method by its paper name. Unknown names error
+    /// with the full list of valid ones.
+    pub fn create(name: &str) -> Result<Box<dyn Partitioner>> {
+        match METHODS.iter().find(|m| m.name == name) {
+            Some(spec) => Ok((spec.make)()),
+            None => bail!(
+                "unknown method {name:?}; valid methods: {}",
+                Self::names().join(", ")
+            ),
+        }
+    }
+
+    /// All registered method names, lineup first.
+    pub fn names() -> Vec<&'static str> {
+        METHODS.iter().map(|m| m.name).collect()
+    }
+
+    /// The paper's six-method lineup names, presentation order.
+    pub fn paper_names() -> Vec<&'static str> {
+        METHODS
+            .iter()
+            .filter(|m| m.in_lineup)
+            .map(|m| m.name)
+            .collect()
+    }
+
+    /// Instantiate the full paper lineup, presentation order.
+    pub fn paper_lineup() -> Vec<Box<dyn Partitioner>> {
+        METHODS
+            .iter()
+            .filter(|m| m.in_lineup)
+            .map(|m| (m.make)())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_all_methods() {
+        for spec in &METHODS {
+            let p = Registry::create(spec.name).unwrap();
+            assert_eq!(p.name(), spec.name, "registry name mismatch");
+        }
+        assert!(Registry::create("RIB").is_ok());
+        assert!(Registry::create("Mitchell-RT").is_ok());
+    }
+
+    #[test]
+    fn unknown_method_lists_valid_names() {
+        let err = Registry::create("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+        for name in Registry::names() {
+            assert!(err.contains(name), "error does not list {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn paper_lineup_has_six_methods_in_order() {
+        assert_eq!(
+            Registry::paper_names(),
+            ["RCB", "ParMETIS", "RTK", "MSFC", "PHG/HSFC", "Zoltan/HSFC"]
+        );
+        let lineup = Registry::paper_lineup();
+        assert_eq!(lineup.len(), 6);
+        for (p, name) in lineup.iter().zip(Registry::paper_names()) {
+            assert_eq!(p.name(), name);
+        }
+    }
+}

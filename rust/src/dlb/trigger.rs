@@ -1,0 +1,265 @@
+//! Trigger policies: *when* the DLB phase runs (DESIGN.md §6).
+//!
+//! The paper operates a single lambda threshold; Liu's thesis
+//! (arXiv:1611.08266) compares threshold, cadence and cost-model
+//! triggers and shows the choice changes the method verdict. Three
+//! policies:
+//!
+//! * [`LambdaThreshold`] -- repartition when the load-imbalance factor
+//!   exceeds a fixed threshold (the paper's policy);
+//! * [`AfterAdaptation`] -- repartition every `interval` adaptations,
+//!   regardless of lambda (the classic AMR cadence policy; interval 1
+//!   is "always repartition");
+//! * [`CostBenefit`] -- repartition only when the modeled cost of
+//!   partition + remap + migration (priced via
+//!   [`crate::dist::NetworkModel`], see
+//!   [`crate::dlb::RebalancePipeline::estimate`]) is smaller than the
+//!   modeled solve time recovered by restoring balance over a
+//!   lookahead horizon of steps.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A-priori modeled economics of rebalancing *now*, produced by
+/// [`crate::dlb::RebalancePipeline::estimate`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostEstimate {
+    /// Modeled one-off cost of partition + remap + migration (s).
+    pub rebalance_cost: f64,
+    /// Modeled solve time recovered per subsequent step if balance is
+    /// restored: `solve_parallel_time * (lambda - 1)` (s).
+    pub saving_per_step: f64,
+}
+
+impl CostEstimate {
+    /// Steps until a rebalance pays for itself (infinite when nothing
+    /// is saved per step).
+    pub fn break_even_steps(&self) -> f64 {
+        if self.saving_per_step > 0.0 {
+            self.rebalance_cost / self.saving_per_step
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Everything a trigger policy may look at for one decision.
+#[derive(Debug, Clone, Copy)]
+pub struct TriggerContext {
+    /// Adaptive step index.
+    pub step: usize,
+    /// Load-imbalance factor of the current distribution.
+    pub lambda: f64,
+    pub estimate: CostEstimate,
+}
+
+/// Decides, once per adaptive step, whether the rebalance pipeline
+/// runs. `&mut self` so cadence policies can keep counters.
+pub trait TriggerPolicy: Send + Sync {
+    /// Display name including parameters (e.g. `lambda:1.20`).
+    fn name(&self) -> String;
+    fn should_rebalance(&mut self, ctx: &TriggerContext) -> bool;
+
+    /// Whether this policy reads [`TriggerContext::estimate`]. Lets
+    /// the driver skip the O(n) cost-model pass for policies that
+    /// trigger on lambda or cadence alone.
+    fn needs_estimate(&self) -> bool {
+        false
+    }
+}
+
+/// The paper's policy: fire when lambda exceeds a fixed threshold.
+#[derive(Debug, Clone, Copy)]
+pub struct LambdaThreshold {
+    pub lambda: f64,
+}
+
+impl TriggerPolicy for LambdaThreshold {
+    fn name(&self) -> String {
+        format!("lambda:{:.2}", self.lambda)
+    }
+
+    fn should_rebalance(&mut self, ctx: &TriggerContext) -> bool {
+        ctx.lambda > self.lambda
+    }
+}
+
+/// Fire every `interval`-th adaptation, regardless of lambda.
+#[derive(Debug, Clone, Copy)]
+pub struct AfterAdaptation {
+    pub interval: usize,
+    seen: usize,
+}
+
+impl AfterAdaptation {
+    pub fn new(interval: usize) -> Self {
+        Self {
+            interval: interval.max(1),
+            seen: 0,
+        }
+    }
+}
+
+impl TriggerPolicy for AfterAdaptation {
+    fn name(&self) -> String {
+        format!("every:{}", self.interval)
+    }
+
+    fn should_rebalance(&mut self, _ctx: &TriggerContext) -> bool {
+        self.seen += 1;
+        self.seen % self.interval == 0
+    }
+}
+
+/// Fire only when the modeled saving over the lookahead horizon beats
+/// the modeled rebalance cost. Never fires on a balanced mesh: with
+/// lambda = 1 the saving is zero and no positive cost is worth paying.
+#[derive(Debug, Clone, Copy)]
+pub struct CostBenefit {
+    /// Lookahead horizon in adaptive steps over which the restored
+    /// balance is assumed to persist.
+    pub horizon: usize,
+}
+
+impl TriggerPolicy for CostBenefit {
+    fn name(&self) -> String {
+        format!("costbenefit:{}", self.horizon)
+    }
+
+    fn should_rebalance(&mut self, ctx: &TriggerContext) -> bool {
+        ctx.lambda > 1.0 + 1e-9
+            && ctx.estimate.saving_per_step * self.horizon as f64 > ctx.estimate.rebalance_cost
+    }
+
+    fn needs_estimate(&self) -> bool {
+        true
+    }
+}
+
+/// Instantiate a trigger policy from its config/CLI spec:
+/// `lambda[:threshold]` (threshold defaults to `default_lambda`),
+/// `every[:interval]`, `always` (= `every:1`), `costbenefit[:horizon]`.
+pub fn trigger_by_name(spec: &str, default_lambda: f64) -> Result<Box<dyn TriggerPolicy>> {
+    let (kind, param) = match spec.split_once(':') {
+        Some((k, p)) => (k, Some(p)),
+        None => (spec, None),
+    };
+    match kind {
+        "lambda" => {
+            let t = match param {
+                Some(p) => p
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("trigger {spec:?}: bad float threshold"))?,
+                None => default_lambda,
+            };
+            Ok(Box::new(LambdaThreshold { lambda: t }))
+        }
+        "every" => {
+            let n = match param {
+                Some(p) => p
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("trigger {spec:?}: bad integer interval"))?,
+                None => 1,
+            };
+            Ok(Box::new(AfterAdaptation::new(n)))
+        }
+        "always" => Ok(Box::new(AfterAdaptation::new(1))),
+        "costbenefit" => {
+            let h = match param {
+                Some(p) => p
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("trigger {spec:?}: bad integer horizon"))?,
+                None => 8,
+            };
+            Ok(Box::new(CostBenefit { horizon: h.max(1) }))
+        }
+        other => bail!(
+            "unknown trigger policy {other:?}; valid: lambda[:threshold], \
+             every[:interval], always, costbenefit[:horizon]"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(lambda: f64, cost: f64, saving: f64) -> TriggerContext {
+        TriggerContext {
+            step: 0,
+            lambda,
+            estimate: CostEstimate {
+                rebalance_cost: cost,
+                saving_per_step: saving,
+            },
+        }
+    }
+
+    #[test]
+    fn lambda_threshold_matches_paper_policy() {
+        let mut t = LambdaThreshold { lambda: 1.2 };
+        assert!(!t.should_rebalance(&ctx(1.0, 0.0, 0.0)));
+        assert!(!t.should_rebalance(&ctx(1.2, 0.0, 0.0)));
+        assert!(t.should_rebalance(&ctx(1.21, 0.0, 0.0)));
+    }
+
+    #[test]
+    fn after_adaptation_fires_on_cadence() {
+        let mut t = AfterAdaptation::new(3);
+        let fired: Vec<bool> = (0..7).map(|i| t.should_rebalance(&ctx(1.0 + i as f64, 0.0, 0.0))).collect();
+        assert_eq!(fired, [false, false, true, false, false, true, false]);
+        let mut always = AfterAdaptation::new(1);
+        assert!(always.should_rebalance(&ctx(1.0, 0.0, 0.0)));
+        assert!(always.should_rebalance(&ctx(1.0, 0.0, 0.0)));
+    }
+
+    #[test]
+    fn cost_benefit_never_fires_when_balanced() {
+        let mut t = CostBenefit { horizon: 100 };
+        // even with a (bogus) positive saving, lambda = 1 means no fire
+        assert!(!t.should_rebalance(&ctx(1.0, 0.0, 10.0)));
+        // the honest balanced estimate: zero saving, positive cost
+        assert!(!t.should_rebalance(&ctx(1.0, 1e-3, 0.0)));
+    }
+
+    #[test]
+    fn cost_benefit_fires_exactly_above_break_even() {
+        let mut t = CostBenefit { horizon: 4 };
+        // saving 2e-3/step over 4 steps = 8e-3 vs cost 1e-2: keep
+        assert!(!t.should_rebalance(&ctx(1.5, 1e-2, 2e-3)));
+        // saving 3e-3/step over 4 steps = 1.2e-2 > 1e-2: fire
+        assert!(t.should_rebalance(&ctx(1.5, 1e-2, 3e-3)));
+        // horizon scales the verdict
+        let mut t8 = CostBenefit { horizon: 8 };
+        assert!(t8.should_rebalance(&ctx(1.5, 1e-2, 2e-3)));
+    }
+
+    #[test]
+    fn break_even_steps() {
+        let e = CostEstimate {
+            rebalance_cost: 6.0,
+            saving_per_step: 2.0,
+        };
+        assert_eq!(e.break_even_steps(), 3.0);
+        assert_eq!(CostEstimate::default().break_even_steps(), f64::INFINITY);
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(trigger_by_name("lambda", 1.2).unwrap().name(), "lambda:1.20");
+        assert_eq!(trigger_by_name("lambda:1.5", 1.2).unwrap().name(), "lambda:1.50");
+        assert_eq!(trigger_by_name("every:4", 1.2).unwrap().name(), "every:4");
+        assert_eq!(trigger_by_name("always", 1.2).unwrap().name(), "every:1");
+        assert_eq!(
+            trigger_by_name("costbenefit", 1.2).unwrap().name(),
+            "costbenefit:8"
+        );
+        assert_eq!(
+            trigger_by_name("costbenefit:3", 1.2).unwrap().name(),
+            "costbenefit:3"
+        );
+        assert!(trigger_by_name("nope", 1.2).is_err());
+        assert!(trigger_by_name("lambda:abc", 1.2).is_err());
+        let err = trigger_by_name("frob", 1.2).unwrap_err().to_string();
+        assert!(err.contains("costbenefit"), "{err}");
+    }
+}

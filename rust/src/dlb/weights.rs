@@ -1,0 +1,358 @@
+//! Element weight models: what "load" means to the DLB loop.
+//!
+//! The paper's experiments weight every element equally, but follow-up
+//! work (Liu's thesis, arXiv:1611.08266; the particulate-flow DLB
+//! study, arXiv:1811.12742) shows the method verdict can flip once
+//! elements are weighted by what they actually cost. Three models:
+//!
+//! * [`Unit`] -- every leaf weighs 1 (the paper's setting);
+//! * [`DofWeighted`] -- each leaf weighs its share of the global P1
+//!   dof count (refined regions carry proportionally more dofs per
+//!   element *neighbourhood*, which is what the solver iterates over);
+//! * [`Measured`] -- m-AIA-style dynamic weights: per-element costs
+//!   fed back from the timed assembly/solve phases, EWMA-smoothed,
+//!   inherited through the refinement forest so fresh children start
+//!   from their parent's observed cost.
+//!
+//! All models return weights normalized to mean 1.0, so lambda values
+//! and migration volumes stay comparable across models.
+
+use crate::mesh::{ElemId, TetMesh, NONE};
+use crate::util::hash::{FxHashMap, FxHashSet};
+use anyhow::{bail, Result};
+
+/// A pluggable notion of per-element computational load.
+pub trait WeightModel: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// One weight per entry of `leaves`, normalized to mean 1.0.
+    fn weights(&self, mesh: &TetMesh, leaves: &[ElemId]) -> Vec<f64>;
+
+    /// Feed back measured per-element costs (seconds). Models that do
+    /// not learn from runtime measurements ignore this.
+    fn observe(&mut self, _mesh: &TetMesh, _leaves: &[ElemId], _costs: &[f64]) {}
+
+    /// Whether [`WeightModel::observe`] does anything. Lets the driver
+    /// skip the O(n) cost-apportionment pass for static models.
+    fn learns(&self) -> bool {
+        false
+    }
+}
+
+/// Scale `w` so its mean is 1.0 (no-op for empty or all-zero input).
+fn normalize_mean_one(mut w: Vec<f64>) -> Vec<f64> {
+    if w.is_empty() {
+        return w;
+    }
+    let mean = w.iter().sum::<f64>() / w.len() as f64;
+    if mean > 0.0 {
+        for x in &mut w {
+            *x /= mean;
+        }
+    }
+    w
+}
+
+/// Per-leaf share of the global P1 dof count: each vertex contributes
+/// `1 / valence` to every leaf touching it, so the shares sum to the
+/// number of active vertices. Shared with the coordinator, which uses
+/// the same apportionment to split measured solve time into the
+/// per-element costs it feeds [`Measured`].
+pub fn dof_shares(mesh: &TetMesh, leaves: &[ElemId]) -> Vec<f64> {
+    let mut valence = vec![0u32; mesh.vertices.len()];
+    for &id in leaves {
+        for &v in &mesh.elem(id).verts {
+            valence[v as usize] += 1;
+        }
+    }
+    leaves
+        .iter()
+        .map(|&id| {
+            mesh.elem(id)
+                .verts
+                .iter()
+                .map(|&v| 1.0 / valence[v as usize] as f64)
+                .sum()
+        })
+        .collect()
+}
+
+/// The paper's setting: every leaf weighs 1.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Unit;
+
+impl WeightModel for Unit {
+    fn name(&self) -> &'static str {
+        "unit"
+    }
+
+    fn weights(&self, _mesh: &TetMesh, leaves: &[ElemId]) -> Vec<f64> {
+        vec![1.0; leaves.len()]
+    }
+}
+
+/// Weight = the leaf's share of the global dof count.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DofWeighted;
+
+impl WeightModel for DofWeighted {
+    fn name(&self) -> &'static str {
+        "dof"
+    }
+
+    fn weights(&self, mesh: &TetMesh, leaves: &[ElemId]) -> Vec<f64> {
+        normalize_mean_one(dof_shares(mesh, leaves))
+    }
+}
+
+/// Runtime-measured per-element cost, EWMA-smoothed across steps.
+///
+/// Unobserved elements inherit the nearest observed ancestor's cost
+/// (children are born on their parent's rank with their parent's cost
+/// profile); elements with no observed ancestor get the mean observed
+/// cost, so a cold start reproduces [`Unit`].
+#[derive(Debug, Clone)]
+pub struct Measured {
+    /// EWMA smoothing factor in (0, 1]; 1.0 = keep only the latest.
+    pub alpha: f64,
+    cost: FxHashMap<ElemId, f64>,
+}
+
+impl Measured {
+    pub fn new() -> Self {
+        Self {
+            alpha: 0.5,
+            cost: FxHashMap::default(),
+        }
+    }
+
+    /// Observed cost of `id` or of its nearest observed ancestor.
+    fn ancestor_cost(&self, mesh: &TetMesh, id: ElemId) -> Option<f64> {
+        let mut cur = id;
+        loop {
+            if let Some(&c) = self.cost.get(&cur) {
+                return Some(c);
+            }
+            let parent = mesh.elem(cur).parent;
+            if parent == NONE {
+                return None;
+            }
+            cur = parent;
+        }
+    }
+}
+
+impl Default for Measured {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WeightModel for Measured {
+    fn name(&self) -> &'static str {
+        "measured"
+    }
+
+    fn weights(&self, mesh: &TetMesh, leaves: &[ElemId]) -> Vec<f64> {
+        let mean = if self.cost.is_empty() {
+            1.0
+        } else {
+            self.cost.values().sum::<f64>() / self.cost.len() as f64
+        };
+        let w = leaves
+            .iter()
+            .map(|&id| self.ancestor_cost(mesh, id).unwrap_or(mean).max(0.0))
+            .collect();
+        normalize_mean_one(w)
+    }
+
+    fn observe(&mut self, mesh: &TetMesh, leaves: &[ElemId], costs: &[f64]) {
+        assert_eq!(leaves.len(), costs.len());
+        // Prune entries for elements that are neither current leaves
+        // nor their ancestors: coarsened-away children would otherwise
+        // linger forever and, worse, leak their cost onto unrelated new
+        // elements once the mesh arena recycles their ElemId.
+        let mut live: FxHashSet<ElemId> = FxHashSet::default();
+        for &id in leaves {
+            let mut cur = id;
+            while live.insert(cur) {
+                let parent = mesh.elem(cur).parent;
+                if parent == NONE {
+                    break;
+                }
+                cur = parent;
+            }
+        }
+        self.cost.retain(|id, _| live.contains(id));
+        for (&id, &c) in leaves.iter().zip(costs) {
+            match self.cost.entry(id) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    let v = e.get_mut();
+                    *v = (1.0 - self.alpha) * *v + self.alpha * c;
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(c);
+                }
+            }
+        }
+    }
+
+    fn learns(&self) -> bool {
+        true
+    }
+}
+
+/// Instantiate a weight model from its config/CLI spec.
+pub fn weight_model_by_name(spec: &str) -> Result<Box<dyn WeightModel>> {
+    match spec {
+        "unit" => Ok(Box::new(Unit)),
+        "dof" => Ok(Box::new(DofWeighted)),
+        "measured" => Ok(Box::new(Measured::new())),
+        other => bail!("unknown weight model {other:?}; valid: unit, dof, measured"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::generator;
+
+    #[test]
+    fn unit_weights_are_all_one() {
+        let mesh = generator::cube_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let w = Unit.weights(&mesh, &leaves);
+        assert!(w.iter().all(|&x| x == 1.0));
+        assert_eq!(w.len(), leaves.len());
+    }
+
+    #[test]
+    fn dof_shares_partition_the_global_dof_count() {
+        // sum over elements of the per-element dof share telescopes to
+        // the number of active vertices: each vertex contributes
+        // valence * (1/valence) = 1
+        let mut mesh = generator::cube_mesh(2);
+        for _ in 0..2 {
+            let marked: Vec<_> = mesh
+                .leaves_unordered()
+                .into_iter()
+                .filter(|&id| mesh.centroid(id).norm() < 0.5)
+                .collect();
+            assert!(!marked.is_empty());
+            mesh.refine(&marked);
+        }
+        let leaves = mesh.leaves_unordered();
+        let shares = dof_shares(&mesh, &leaves);
+        let total: f64 = shares.iter().sum();
+        assert!(
+            (total - mesh.n_vertices() as f64).abs() < 1e-9,
+            "shares sum {total} != {} vertices",
+            mesh.n_vertices()
+        );
+        // the normalized model keeps mean 1 and is genuinely nonuniform
+        let w = DofWeighted.weights(&mesh, &leaves);
+        let mean = w.iter().sum::<f64>() / w.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-12, "not normalized: {mean}");
+        let spread = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - w.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread > 1e-6, "dof weights degenerate to unit");
+    }
+
+    #[test]
+    fn measured_uniform_timings_reproduce_unit() {
+        let mesh = generator::cube_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let mut m = Measured::new();
+        m.observe(&mesh, &leaves, &vec![3.7e-4; leaves.len()]);
+        let w = m.weights(&mesh, &leaves);
+        let unit = Unit.weights(&mesh, &leaves);
+        for (a, b) in w.iter().zip(&unit) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn measured_cold_start_reproduces_unit() {
+        let mesh = generator::cube_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        let w = Measured::new().weights(&mesh, &leaves);
+        assert!(w.iter().all(|&x| (x - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn measured_tracks_nonuniform_costs_and_ewma() {
+        let mesh = generator::cube_mesh(1);
+        let leaves = mesh.leaves_unordered();
+        let n = leaves.len();
+        let mut m = Measured::new();
+        // first half twice as expensive as the second
+        let costs: Vec<f64> = (0..n).map(|i| if i < n / 2 { 2.0 } else { 1.0 }).collect();
+        m.observe(&mesh, &leaves, &costs);
+        let w = m.weights(&mesh, &leaves);
+        assert!(w[0] > w[n - 1], "{} !> {}", w[0], w[n - 1]);
+        assert!((w[0] / w[n - 1] - 2.0).abs() < 1e-9);
+        // repeated identical observations are a fixpoint of the EWMA
+        m.observe(&mesh, &leaves, &costs);
+        let w2 = m.weights(&mesh, &leaves);
+        for (a, b) in w.iter().zip(&w2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn measured_children_inherit_parent_cost() {
+        let mut mesh = generator::cube_mesh(1);
+        let leaves = mesh.leaves_unordered();
+        let n = leaves.len();
+        let mut m = Measured::new();
+        let costs: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        m.observe(&mesh, &leaves, &costs);
+        let parent = leaves[n - 1];
+        let [a, b] = mesh.bisect(parent);
+        let leaves2 = mesh.leaves_unordered();
+        let w = m.weights(&mesh, &leaves2);
+        let at = |id: ElemId| w[leaves2.iter().position(|&x| x == id).unwrap()];
+        assert!((at(a) - at(b)).abs() < 1e-12, "siblings differ");
+        assert!(at(a) > at(leaves[0]), "inherited cost lost");
+    }
+
+    #[test]
+    fn measured_prunes_stale_entries_on_observe() {
+        let mut mesh = generator::cube_mesh(1);
+        let roots = mesh.leaves_unordered();
+        let mut m = Measured::new();
+        m.observe(&mesh, &roots, &vec![1.0; roots.len()]);
+        // refine everything and observe the children too
+        mesh.refine(&roots);
+        let fine = mesh.leaves_unordered();
+        m.observe(&mesh, &fine, &vec![2.0; fine.len()]);
+        // coarsen all the way back: the childrens' entries must be
+        // dropped on the next observe, before their ElemIds can be
+        // recycled for unrelated new elements
+        let mut guard = 0;
+        loop {
+            let c = mesh.coarsen(&mesh.leaves_unordered());
+            if c == 0 {
+                break;
+            }
+            guard += 1;
+            assert!(guard < 20);
+        }
+        let coarse = mesh.leaves_unordered();
+        m.observe(&mesh, &coarse, &vec![3.0; coarse.len()]);
+        assert_eq!(
+            m.cost.len(),
+            coarse.len(),
+            "stale entries survived the prune"
+        );
+    }
+
+    #[test]
+    fn model_lookup_by_name() {
+        for name in ["unit", "dof", "measured"] {
+            assert_eq!(weight_model_by_name(name).unwrap().name(), name);
+        }
+        let err = weight_model_by_name("banana").unwrap_err().to_string();
+        assert!(err.contains("unit") && err.contains("measured"), "{err}");
+    }
+}

@@ -8,8 +8,10 @@
 //! Layer map (see DESIGN.md):
 //! * **L3 (this crate)** -- the paper's contribution: the partitioners
 //!   ([`partition`]), subgrid-process remapping ([`remap`]), migration
-//!   and the virtual MPI runtime ([`dist`]), and the adaptive driver
-//!   with its DLB policy ([`coordinator`]) -- plus every substrate they
+//!   and the virtual MPI runtime ([`dist`]), the DLB policy layer
+//!   (triggers, weight models, the rebalance pipeline and the method
+//!   registry: [`dlb`]), and the adaptive driver ([`coordinator`]) --
+//!   plus every substrate they
 //!   need: tet meshes with refinement forests ([`mesh`]), bisection
 //!   refinement ([`mesh::TetMesh::refine`]), error estimation
 //!   ([`adapt`]), and P1 FEM ([`fem`]).
@@ -21,6 +23,7 @@ pub mod adapt;
 pub mod config;
 pub mod coordinator;
 pub mod dist;
+pub mod dlb;
 pub mod fem;
 pub mod geometry;
 pub mod mesh;

@@ -10,8 +10,9 @@
 
 use anyhow::{anyhow, Result};
 use phg_dlb::config::Config;
-use phg_dlb::coordinator::{partitioner_by_name, AdaptiveDriver, METHOD_NAMES};
+use phg_dlb::coordinator::AdaptiveDriver;
 use phg_dlb::dist::Distribution;
+use phg_dlb::dlb::{Registry, METHODS};
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::mesh::TetMesh;
@@ -46,7 +47,7 @@ fn cmd_run(cfg: &Config) -> Result<()> {
         mesh.n_leaves(),
         dc.nsteps
     );
-    let mut driver = AdaptiveDriver::new(mesh, dc);
+    let mut driver = AdaptiveDriver::new(mesh, dc)?;
     let sw = Stopwatch::start();
     match problem.as_str() {
         "helmholtz" => driver.run_helmholtz(),
@@ -83,7 +84,7 @@ fn cmd_partition(cfg: &Config) -> Result<()> {
     let mut mesh = make_domain(cfg)?;
     let nparts = cfg.get_usize("nparts", 16)?;
     let method = cfg.get_str("method", "PHG/HSFC");
-    let p = partitioner_by_name(&method).ok_or_else(|| anyhow!("unknown method {method}"))?;
+    let p = Registry::create(&method)?;
     let leaves = mesh.leaves_unordered();
     let weights = vec![1.0; leaves.len()];
     Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
@@ -124,8 +125,8 @@ fn cmd_compare(cfg: &Config) -> Result<()> {
         "{:<12} {:>10} {:>10} {:>12} {:>10}",
         "method", "time(ms)", "imbalance", "iface-faces", "surface%"
     );
-    for name in METHOD_NAMES {
-        let p = partitioner_by_name(name).unwrap();
+    for name in Registry::paper_names() {
+        let p = Registry::create(name)?;
         let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
         let sw = Stopwatch::start();
         let r = p.partition(&input);
@@ -160,7 +161,15 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
+fn main() {
+    // surface config/registry errors as one clean line, not a panic
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = Config::new();
     if let Some(i) = args.iter().position(|a| a == "--config") {
@@ -176,10 +185,13 @@ fn main() -> Result<()> {
         "partition" => cmd_partition(&cfg),
         "compare" => cmd_compare(&cfg),
         "methods" => {
-            for m in METHOD_NAMES {
-                println!("{m}");
+            for m in &METHODS {
+                println!(
+                    "{}{}",
+                    m.name,
+                    if m.in_lineup { "" } else { "  (ablation only)" }
+                );
             }
-            println!("RIB");
             Ok(())
         }
         "info" => cmd_info(),
@@ -187,6 +199,8 @@ fn main() -> Result<()> {
             println!(
                 "usage: phg-dlb <run|partition|compare|methods|info> [--key value ...]\n\
                  keys: problem domain scale prerefine method nparts nsteps dt\n\
+                 \x20     trigger (lambda[:t]|every[:n]|always|costbenefit[:h])\n\
+                 \x20     weights (unit|dof|measured)\n\
                  \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
                  \x20     solver_tol solver_max_iter use_pjrt csv config"
             );

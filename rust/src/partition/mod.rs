@@ -91,7 +91,9 @@ pub struct PartitionResult {
     pub comm: Vec<CommOp>,
 }
 
-/// The partitioning methods compared in the paper's §3.
+/// The partitioning methods compared in the paper's §3. Instantiate
+/// them by name through [`crate::dlb::Registry`], the crate's single
+/// method table.
 pub trait Partitioner: Send + Sync {
     /// Short name used in reports ("RTK", "PHG/HSFC", ...).
     fn name(&self) -> &'static str;
@@ -101,19 +103,6 @@ pub trait Partitioner: Send + Sync {
     fn incremental(&self) -> bool {
         true
     }
-}
-
-/// The full method lineup of the paper's experiments, in the fig-3.2
-/// presentation order.
-pub fn paper_lineup() -> Vec<Box<dyn Partitioner>> {
-    vec![
-        Box::new(rtk::RefinementTree::new()),
-        Box::new(sfc::SfcPartitioner::msfc()),
-        Box::new(sfc::SfcPartitioner::phg_hsfc()),
-        Box::new(sfc::SfcPartitioner::zoltan_hsfc()),
-        Box::new(rcb::Rcb::new()),
-        Box::new(graph::MultilevelGraph::parmetis_like()),
-    ]
 }
 
 #[cfg(test)]

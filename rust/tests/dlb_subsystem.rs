@@ -1,0 +1,195 @@
+//! Subsystem tests for `dlb`: trigger policies, weight models and the
+//! rebalance pipeline, exercised together through the public API and
+//! the adaptive driver.
+
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dist::Distribution;
+use phg_dlb::dlb::{
+    CostBenefit, RebalancePipeline, Registry, TriggerContext, TriggerPolicy, Unit, WeightModel,
+};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::mesh::{generator, ElemId, TetMesh};
+use phg_dlb::partition::metrics::migration_volume;
+use phg_dlb::partition::PartitionInput;
+
+fn cfg(method: &str, trigger: &str, weights: &str) -> DriverConfig {
+    DriverConfig {
+        nparts: 4,
+        method: method.to_string(),
+        trigger: trigger.to_string(),
+        weights: weights.to_string(),
+        lambda_trigger: 1.1,
+        theta_refine: 0.5,
+        theta_coarsen: 0.0,
+        max_elements: 20_000,
+        solver: SolverOpts {
+            tol: 1e-5,
+            max_iter: 500,
+        },
+        use_pjrt: false,
+        nsteps: 3,
+        dt: 1e-3,
+    }
+}
+
+/// A block-assigned mesh with rank 0's elements refined twice.
+fn skewed_mesh(nparts: usize) -> (TetMesh, Vec<ElemId>) {
+    let mut mesh = generator::cube_mesh(2);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    for _ in 0..2 {
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .filter(|&id| mesh.elem(id).owner == 0)
+            .collect();
+        mesh.refine(&marked);
+    }
+    let leaves = mesh.leaves_unordered();
+    (mesh, leaves)
+}
+
+#[test]
+fn cost_benefit_never_fires_on_balanced_mesh() {
+    // cube_mesh(2) has 48 leaves; 4 | 48, so block assignment is
+    // exactly balanced under unit weights and the modeled saving is 0
+    let mut mesh = generator::cube_mesh(2);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(4).assign_blocks(&mut mesh, &leaves);
+    let weights = vec![1.0f64; leaves.len()];
+    let pipe = RebalancePipeline::from_method("PHG/HSFC", 4).unwrap();
+    let lambda = pipe.dist.imbalance(&mesh, &leaves, &weights);
+    assert!((lambda - 1.0).abs() < 1e-12, "mesh not balanced: {lambda}");
+
+    let mut policy = CostBenefit { horizon: 1000 };
+    // even with a huge previous solve time on the table, a balanced
+    // mesh offers nothing to recover
+    for solve_parallel in [0.0, 1e-3, 10.0] {
+        let estimate = pipe.estimate(&mesh, &leaves, &weights, solve_parallel, 1e-3);
+        let ctx = TriggerContext {
+            step: 0,
+            lambda,
+            estimate,
+        };
+        assert!(
+            !policy.should_rebalance(&ctx),
+            "fired on a balanced mesh (solve_parallel = {solve_parallel})"
+        );
+    }
+}
+
+#[test]
+fn cost_benefit_always_fires_beyond_modeled_break_even() {
+    let (mesh, leaves) = skewed_mesh(4);
+    let weights = vec![1.0f64; leaves.len()];
+    let pipe = RebalancePipeline::from_method("PHG/HSFC", 4).unwrap();
+    let lambda = pipe.dist.imbalance(&mesh, &leaves, &weights);
+    assert!(lambda > 1.3, "skew not induced: {lambda}");
+
+    let mut policy = CostBenefit { horizon: 4 };
+    // pick a solve time whose modeled saving sits exactly at 2x the
+    // modeled cost over the horizon: must fire
+    let probe = pipe.estimate(&mesh, &leaves, &weights, 1.0, 1e-3);
+    assert!(probe.saving_per_step > 0.0);
+    let break_even_solve = probe.rebalance_cost / (probe.saving_per_step * 4.0);
+    let above = pipe.estimate(&mesh, &leaves, &weights, 2.0 * break_even_solve, 1e-3);
+    let ctx = TriggerContext {
+        step: 0,
+        lambda,
+        estimate: above,
+    };
+    assert!(policy.should_rebalance(&ctx), "did not fire above break-even");
+    // and at half the break-even saving it must hold its fire
+    let below = pipe.estimate(&mesh, &leaves, &weights, 0.5 * break_even_solve, 1e-3);
+    let ctx = TriggerContext {
+        step: 0,
+        lambda,
+        estimate: below,
+    };
+    assert!(!policy.should_rebalance(&ctx), "fired below break-even");
+}
+
+#[test]
+fn measured_weights_reproduce_unit_on_uniform_timings() {
+    let (mesh, leaves) = skewed_mesh(4);
+    let mut measured = phg_dlb::dlb::Measured::new();
+    measured.observe(&mesh, &leaves, &vec![2.5e-4; leaves.len()]);
+    let wm = measured.weights(&mesh, &leaves);
+    let wu = Unit.weights(&mesh, &leaves);
+    assert_eq!(wm.len(), wu.len());
+    for (a, b) in wm.iter().zip(&wu) {
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+    }
+    // identical weights => identical partitions through the pipeline
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+    let p = Registry::create("RTK").unwrap();
+    let ru = p.partition(&PartitionInput::from_mesh(&mesh, &leaves, &wu, &owners, 4));
+    let rm = p.partition(&PartitionInput::from_mesh(&mesh, &leaves, &wm, &owners, 4));
+    assert_eq!(ru.parts, rm.parts);
+}
+
+#[test]
+fn pipeline_remap_never_worse_than_identity_mapping() {
+    // the pipeline's migration volume must never exceed what executing
+    // the partitioner's raw (identity-mapped) subgrids would have moved
+    for method in Registry::names() {
+        let (mut mesh, leaves) = skewed_mesh(5);
+        let weights = vec![1.0f64; leaves.len()];
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+
+        // raw partition, identity subgrid -> process mapping
+        let p = Registry::create(method).unwrap();
+        let raw = p.partition(&PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 5));
+        let identity = migration_volume(&owners, &raw.parts, &weights, 5);
+
+        let pipe = RebalancePipeline::from_method(method, 5).unwrap();
+        let report = pipe.rebalance(&mut mesh, &leaves, &weights);
+        assert!(
+            report.volume.total_v <= identity.total_v + 1e-9,
+            "{method}: remapped TotalV {} > identity TotalV {}",
+            report.volume.total_v,
+            identity.total_v
+        );
+    }
+}
+
+#[test]
+fn driver_runs_three_steps_under_every_trigger_policy() {
+    for trigger in ["lambda:1.1", "every:2", "always", "costbenefit:8"] {
+        let mesh = generator::cube_mesh(2);
+        let mut d = AdaptiveDriver::new(mesh, cfg("RTK", trigger, "unit")).unwrap();
+        d.run_helmholtz();
+        assert_eq!(d.timeline.records.len(), 3, "trigger {trigger}");
+        d.mesh.check_invariants().unwrap();
+        for r in &d.timeline.records {
+            assert!(r.solve_iterations > 0, "trigger {trigger}");
+            assert!(r.l2_error.is_finite() && r.l2_error > 0.0);
+            assert_eq!(r.repartitioned, r.rebalance.is_some());
+        }
+        let reps = d.timeline.repartition_count();
+        match trigger {
+            "always" => assert_eq!(reps, 3, "always must fire every step"),
+            "every:2" => assert_eq!(reps, 1, "every:2 fires on the 2nd of 3 steps"),
+            _ => assert!(reps <= 3),
+        }
+        // whatever the policy, the driver must keep the mesh usable
+        let last = d.timeline.records.last().unwrap();
+        assert!(last.n_dofs > 0);
+    }
+}
+
+#[test]
+fn driver_runs_under_every_weight_model() {
+    for weights in ["unit", "dof", "measured"] {
+        let mesh = generator::cube_mesh(2);
+        let mut d = AdaptiveDriver::new(mesh, cfg("PHG/HSFC", "lambda:1.1", weights)).unwrap();
+        d.run_helmholtz();
+        assert_eq!(d.timeline.records.len(), 3, "weights {weights}");
+        let last = d.timeline.records.last().unwrap();
+        assert!(
+            last.imbalance_after < 1.6,
+            "weights {weights}: lambda {} not controlled",
+            last.imbalance_after
+        );
+    }
+}

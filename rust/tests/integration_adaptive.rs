@@ -2,7 +2,8 @@
 //! together (mesh + refine + estimate + partition + remap + migrate +
 //! assemble + solve), on small meshes so the suite stays fast.
 
-use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig, METHOD_NAMES};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
@@ -10,6 +11,8 @@ fn cfg(method: &str, nparts: usize, nsteps: usize) -> DriverConfig {
     DriverConfig {
         nparts,
         method: method.to_string(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
         lambda_trigger: 1.1,
         theta_refine: 0.45,
         theta_coarsen: 0.0,
@@ -28,9 +31,9 @@ fn cfg(method: &str, nparts: usize, nsteps: usize) -> DriverConfig {
 fn full_lineup_helmholtz_cylinder() {
     // every method must drive the paper's primary experiment without
     // losing mesh invariants or load control
-    for name in METHOD_NAMES {
+    for name in Registry::paper_names() {
         let mesh = generator::omega1_cylinder(2);
-        let mut d = AdaptiveDriver::new(mesh, cfg(name, 8, 3));
+        let mut d = AdaptiveDriver::new(mesh, cfg(name, 8, 3)).unwrap();
         d.run_helmholtz();
         d.mesh.check_invariants().unwrap();
         assert_eq!(d.timeline.records.len(), 3, "{name}");
@@ -47,7 +50,7 @@ fn full_lineup_helmholtz_cylinder() {
 #[test]
 fn helmholtz_error_converges_with_dlb_active() {
     let mesh = generator::cube_mesh(3);
-    let mut d = AdaptiveDriver::new(mesh, cfg("RTK", 6, 5));
+    let mut d = AdaptiveDriver::new(mesh, cfg("RTK", 6, 5)).unwrap();
     d.run_helmholtz();
     let first = &d.timeline.records[0];
     let last = d.timeline.records.last().unwrap();
@@ -66,7 +69,7 @@ fn parabolic_with_coarsening_stays_bounded() {
     let mut c = cfg("PHG/HSFC", 6, 6);
     c.theta_coarsen = 0.05;
     c.max_elements = 20_000;
-    let mut d = AdaptiveDriver::new(mesh, c);
+    let mut d = AdaptiveDriver::new(mesh, c).unwrap();
     d.run_parabolic(0.0);
     d.mesh.check_invariants().unwrap();
     for r in &d.timeline.records {
@@ -79,9 +82,9 @@ fn parabolic_with_coarsening_stays_bounded() {
 fn dlb_actually_reduces_imbalance_on_skewed_load() {
     // refine only one corner so one rank becomes heavily overloaded,
     // then verify a single DLB pass restores balance for each method
-    for name in METHOD_NAMES {
+    for name in Registry::paper_names() {
         let mesh = generator::cube_mesh(3);
-        let mut d = AdaptiveDriver::new(mesh, cfg(name, 8, 1));
+        let mut d = AdaptiveDriver::new(mesh, cfg(name, 8, 1)).unwrap();
         // induce skew: refine the elements of rank 0 twice
         for _ in 0..2 {
             let marked: Vec<_> = d
@@ -94,7 +97,7 @@ fn dlb_actually_reduces_imbalance_on_skewed_load() {
         }
         let leaves = d.mesh.leaves_unordered();
         let weights = vec![1.0; leaves.len()];
-        let lam0 = d.dist.imbalance(&d.mesh, &leaves, &weights);
+        let lam0 = d.pipeline.dist.imbalance(&d.mesh, &leaves, &weights);
         assert!(lam0 > 1.3, "{name}: skew not induced ({lam0})");
         d.helmholtz_step();
         let rec = d.timeline.records.last().unwrap();
@@ -117,7 +120,7 @@ fn migration_consistency_owner_count_matches_partition() {
     let weights = vec![1.0; leaves.len()];
     phg_dlb::dist::Distribution::new(5).assign_blocks(&mut mesh, &leaves);
     let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
-    let p = phg_dlb::coordinator::partitioner_by_name("PHG/HSFC").unwrap();
+    let p = Registry::create("PHG/HSFC").unwrap();
     let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 5);
     let r = p.partition(&input);
     let net = NetworkModel::infiniband(5);
@@ -135,7 +138,7 @@ fn pjrt_and_native_drivers_agree_on_errors() {
         let mesh = generator::cube_mesh(2);
         let mut c = cfg("RTK", 4, 3);
         c.use_pjrt = use_pjrt;
-        let mut d = AdaptiveDriver::new(mesh, c);
+        let mut d = AdaptiveDriver::new(mesh, c).unwrap();
         d.run_helmholtz();
         d.timeline.records.iter().map(|r| r.l2_error).collect()
     };

@@ -3,7 +3,7 @@
 //! counts -- the proptest-style layer over the whole L3 coordinator
 //! surface (see util::propcheck; the proptest crate is not vendored).
 
-use phg_dlb::coordinator::partitioner_by_name;
+use phg_dlb::dlb::Registry;
 use phg_dlb::dist::Distribution;
 use phg_dlb::mesh::{generator, TetMesh};
 use phg_dlb::partition::metrics::migration_volume;
@@ -54,7 +54,7 @@ fn every_method_assigns_every_leaf_in_range() {
         Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
         let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
         let method = ALL_METHODS[rng.gen_range(ALL_METHODS.len())];
-        let p = partitioner_by_name(method).unwrap();
+        let p = Registry::create(method).unwrap();
         let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
         let r = p.partition(&input);
         assert_eq!(r.parts.len(), leaves.len(), "{method}");
@@ -75,7 +75,7 @@ fn every_method_controls_imbalance() {
         Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
         let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
         let method = ALL_METHODS[rng.gen_range(ALL_METHODS.len())];
-        let p = partitioner_by_name(method).unwrap();
+        let p = Registry::create(method).unwrap();
         let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
         let r = p.partition(&input);
         let mut wsum = vec![0.0; nparts];
@@ -100,7 +100,7 @@ fn remap_never_increases_migration() {
         Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
         let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
         let method = ALL_METHODS[rng.gen_range(ALL_METHODS.len())];
-        let p = partitioner_by_name(method).unwrap();
+        let p = Registry::create(method).unwrap();
         let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
         let r = p.partition(&input);
 
@@ -156,7 +156,7 @@ fn rtk_respects_dfs_contiguity_on_random_weights() {
         let nparts = 2 + rng.gen_range(8);
         Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
         let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
-        let p = partitioner_by_name("RTK").unwrap();
+        let p = Registry::create("RTK").unwrap();
         let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
         let r = p.partition(&input);
         let index_of: std::collections::HashMap<u32, usize> = leaves
@@ -181,7 +181,7 @@ fn failure_injection_degenerate_inputs() {
     let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
 
     for method in ALL_METHODS {
-        let p = partitioner_by_name(method).unwrap();
+        let p = Registry::create(method).unwrap();
         // all-zero weights must not panic or divide by zero
         let zero_w = vec![0.0f64; leaves.len()];
         let input = PartitionInput::from_mesh(&mesh, &leaves, &zero_w, &owners, 3);
