@@ -37,6 +37,7 @@ fn run_policy(method: &str, trigger: &str, weights: &str) -> SweepRow {
         method: method.to_string(),
         trigger: trigger.to_string(),
         weights: weights.to_string(),
+        strategy: "scratch".to_string(),
         lambda_trigger: 1.2,
         theta_refine: 0.45,
         theta_coarsen: 0.04,

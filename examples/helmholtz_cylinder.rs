@@ -43,6 +43,7 @@ fn main() {
         method: method.clone(),
         trigger: "lambda".to_string(),
         weights: "unit".to_string(),
+        strategy: "scratch".to_string(),
         lambda_trigger: 1.15,
         theta_refine: 0.4,
         theta_coarsen: 0.0,

@@ -29,6 +29,7 @@ fn main() {
         method: method.clone(),
         trigger: "lambda".to_string(),
         weights: "unit".to_string(),
+        strategy: "auto".to_string(),
         lambda_trigger: 1.15,
         theta_refine: 0.45,
         theta_coarsen: 0.04,

@@ -13,7 +13,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::save_csv;
+use common::{quick_or, save_csv, write_bench_json, BenchRow};
 use phg_dlb::dist::Distribution;
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
@@ -91,15 +91,21 @@ fn main() {
     println!("== Ablation: SFC bounding-box normalization (paper §2.2) ==");
     let mut csv = String::from("domain,curve,normalization,interface_faces,surface_index\n");
 
-    run_domain("cylinder_AR8", generator::omega1_cylinder(4), 32, &mut csv);
+    run_domain(
+        "cylinder_AR8",
+        generator::omega1_cylinder(quick_or(4, 2)),
+        32,
+        &mut csv,
+    );
 
     // extra: an even more extreme aspect ratio to show the trend
+    let bar = quick_or(64, 16);
     run_domain(
         "bar_AR16",
         generator::box_mesh(
-            64,
-            4,
-            4,
+            bar,
+            bar / 16,
+            bar / 16,
             phg_dlb::geometry::Vec3::ZERO,
             phg_dlb::geometry::Vec3::new(16.0, 1.0, 1.0),
         ),
@@ -107,7 +113,22 @@ fn main() {
         &mut csv,
     );
 
-    run_domain("cube_AR1", generator::cube_mesh(10), 32, &mut csv);
+    run_domain("cube_AR1", generator::cube_mesh(quick_or(10, 4)), 32, &mut csv);
 
     save_csv("ablation_aspect_ratio.csv", &csv);
+    // machine-readable summary: one row per csv data line
+    let rows: Vec<BenchRow> = csv
+        .lines()
+        .skip(1)
+        .filter_map(|l| {
+            let f: Vec<&str> = l.split(',').collect();
+            if f.len() != 5 {
+                return None;
+            }
+            let mut row = BenchRow::new(format!("{}/{}/{}", f[0], f[1], f[2]));
+            row.extra = f[3].parse().ok().map(|v| ("interface_faces", v));
+            Some(row)
+        })
+        .collect();
+    write_bench_json("ablation_aspect_ratio", &rows);
 }

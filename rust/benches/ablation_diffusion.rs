@@ -1,0 +1,204 @@
+//! Ablation: scratch vs diffusive repartitioning across imbalance
+//! severity (DESIGN.md §7).
+//!
+//! Two scenario families sweep how concentrated the new load is:
+//!
+//! * **scattered(k)** -- every other rank refines a fraction of its
+//!   elements k times: lots of small, *local* surpluses. The balancing
+//!   flow is short-haul, so diffusion moves (almost) only the excess
+//!   weight while a scratch partition + remap reshuffles far more.
+//! * **front(k)** -- the cylinder's refinement front advances k times
+//!   at one end: a deep, *distant* surplus. The flow must haul weight
+//!   across many rank-chain hops, its volume grows with the distance,
+//!   and the from-scratch partition (which pays no transport) wins.
+//!
+//! `Auto` should track the winner on both ends of the sweep.
+//!
+//! ```sh
+//! cargo bench --bench ablation_diffusion [-- --nparts 16 --quick]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{arg_usize, quick_or, save_csv, write_bench_json, BenchRow, MeshSequence};
+use phg_dlb::dlb::{RebalancePipeline, RepartitionStrategy};
+use phg_dlb::mesh::TetMesh;
+
+/// Scattered mild skew: ranks 0, 2, 4, ... refine a slice of their
+/// elements `rounds` times.
+fn scattered(nparts: usize, rounds: usize) -> TetMesh {
+    let seq = MeshSequence::cube(quick_or(4, 3), nparts, 1_000_000);
+    let mut mesh = seq.mesh;
+    for _ in 0..rounds {
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .enumerate()
+            .filter(|(i, id)| {
+                let owner = mesh.elem(*id).owner;
+                owner % 2 == 0 && i % 3 == 0
+            })
+            .map(|(_, id)| id)
+            .collect();
+        mesh.refine(&marked);
+    }
+    mesh
+}
+
+/// Severe refinement front: the MeshSequence band advances `rounds`
+/// times near one end of the cylinder.
+fn front(nparts: usize, rounds: usize) -> TetMesh {
+    let mut seq = MeshSequence::cylinder(quick_or(3, 2), nparts, 1_000_000);
+    for _ in 0..rounds {
+        seq.advance();
+    }
+    seq.mesh
+}
+
+struct Outcome {
+    strategy: String,
+    lambda_before: f64,
+    lambda_after: f64,
+    total_v: f64,
+    dlb_ms: f64,
+}
+
+fn run(mesh: &TetMesh, nparts: usize, strategy: RepartitionStrategy, method: &str) -> Outcome {
+    let mut mesh = mesh.clone();
+    let pipe = RebalancePipeline::from_method(method, nparts)
+        .unwrap()
+        .with_strategy(strategy);
+    let leaves = mesh.leaves_unordered();
+    let weights = vec![1.0f64; leaves.len()];
+    let rep = pipe.rebalance(&mut mesh, &leaves, &weights);
+    Outcome {
+        strategy: format!("{}={}", strategy.name(), rep.strategy.name()),
+        lambda_before: rep.lambda_before,
+        lambda_after: rep.lambda_after,
+        total_v: rep.volume.total_v,
+        dlb_ms: rep.dlb_time() * 1e3,
+    }
+}
+
+fn main() {
+    let nparts = arg_usize("--nparts", quick_or(16, 8));
+    let method = "RCB"; // the scratch partitioner being priced against
+    println!("== Ablation: scratch vs diffusive vs auto across imbalance severity ==");
+    println!("   scratch method {method}, p = {nparts}\n");
+
+    let severities: Vec<usize> = if common::is_quick() {
+        vec![1, 3]
+    } else {
+        vec![1, 2, 4, 6]
+    };
+
+    let mut csv = String::from(
+        "scenario,severity,strategy,resolved,lambda_before,lambda_after,total_v,dlb_ms\n",
+    );
+    let mut json_rows: Vec<BenchRow> = Vec::new();
+    let mut mild_scratch_v = f64::NAN;
+    let mut mild_diff_v = f64::NAN;
+    let mut severe_scratch_lam = f64::NAN;
+    let mut severe_diff_lam = f64::NAN;
+
+    println!(
+        "{:<12} {:>8} {:<10} {:>8} {:>8} {:>10} {:>10}",
+        "scenario", "severity", "strategy", "lam_in", "lam_out", "TotalV", "dlb(ms)"
+    );
+    for (scenario, meshes) in [
+        (
+            "scattered",
+            severities
+                .iter()
+                .map(|&s| (s, scattered(nparts, s)))
+                .collect::<Vec<_>>(),
+        ),
+        (
+            "front",
+            severities
+                .iter()
+                .map(|&s| (s, front(nparts, s)))
+                .collect::<Vec<_>>(),
+        ),
+    ] {
+        for (severity, mesh) in &meshes {
+            for strategy in [
+                RepartitionStrategy::Scratch,
+                RepartitionStrategy::Diffusive,
+                RepartitionStrategy::Auto,
+            ] {
+                let o = run(mesh, nparts, strategy, method);
+                println!(
+                    "{:<12} {:>8} {:<10} {:>8.3} {:>8.3} {:>10.1} {:>10.3}",
+                    scenario,
+                    severity,
+                    strategy.name(),
+                    o.lambda_before,
+                    o.lambda_after,
+                    o.total_v,
+                    o.dlb_ms
+                );
+                csv.push_str(&format!(
+                    "{scenario},{severity},{},{},{:.4},{:.4},{:.1},{:.4}\n",
+                    strategy.name(),
+                    o.strategy,
+                    o.lambda_before,
+                    o.lambda_after,
+                    o.total_v,
+                    o.dlb_ms
+                ));
+                let mut row =
+                    BenchRow::new(format!("{scenario}/s{severity}/{}", strategy.name()));
+                row.lambda_before = Some(o.lambda_before);
+                row.lambda_after = Some(o.lambda_after);
+                row.total_v = Some(o.total_v);
+                row.wall_ms = Some(o.dlb_ms);
+                json_rows.push(row);
+
+                let mildest = *severity == severities[0];
+                let severest = *severity == *severities.last().unwrap();
+                match (scenario, strategy) {
+                    ("scattered", RepartitionStrategy::Scratch) if mildest => {
+                        mild_scratch_v = o.total_v
+                    }
+                    ("scattered", RepartitionStrategy::Diffusive) if mildest => {
+                        mild_diff_v = o.total_v
+                    }
+                    ("front", RepartitionStrategy::Scratch) if severest => {
+                        severe_scratch_lam = o.lambda_after
+                    }
+                    ("front", RepartitionStrategy::Diffusive) if severest => {
+                        severe_diff_lam = o.lambda_after
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    println!(
+        "\nmild scattered skew: diffusive TotalV {mild_diff_v:.1} vs scratch {mild_scratch_v:.1} ({})",
+        if mild_diff_v <= mild_scratch_v {
+            "REPRODUCED: diffusion migrates less"
+        } else {
+            "DIVERGED"
+        }
+    );
+    println!(
+        "severe front: scratch lambda {severe_scratch_lam:.3} vs diffusive {severe_diff_lam:.3} ({})",
+        if severe_scratch_lam <= severe_diff_lam + 0.05 {
+            "REPRODUCED: scratch quality holds up"
+        } else {
+            "DIVERGED"
+        }
+    );
+    assert!(
+        mild_diff_v <= mild_scratch_v + 1e-9,
+        "diffusion must not out-migrate scratch on scattered mild skew \
+         ({mild_diff_v} vs {mild_scratch_v})"
+    );
+
+    save_csv("ablation_diffusion.csv", &csv);
+    write_bench_json("ablation_diffusion", &json_rows);
+}

@@ -17,7 +17,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{median_time, save_csv, MeshSequence};
+use common::{median_time, quick_or, save_csv, write_bench_json, BenchRow, MeshSequence};
 use phg_dlb::dlb::Registry;
 use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::partition::metrics::migration_volume;
@@ -33,9 +33,10 @@ fn main() {
         "{:<12} {:>16} {:>16} {:>10}",
         "method", "TotalV no-remap", "TotalV remap", "kept gain"
     );
+    let mut json_rows: Vec<BenchRow> = Vec::new();
     for name in ["RTK", "MSFC", "PHG/HSFC", "RCB", "ParMETIS"] {
-        let mut seq = MeshSequence::cylinder(3, nparts, 200_000);
-        for _ in 0..4 {
+        let mut seq = MeshSequence::cylinder(quick_or(3, 2), nparts, 200_000);
+        for _ in 0..quick_or(4, 2) {
             seq.advance();
         }
         let (leaves, weights, owners) = seq.leaves_weights_owners();
@@ -62,6 +63,9 @@ fn main() {
             no_remap.total_v, with_remap.total_v
         ));
         assert!(with_remap.total_v <= no_remap.total_v + 1e-9);
+        let mut row = BenchRow::new(name);
+        row.total_v = Some(with_remap.total_v);
+        json_rows.push(row);
     }
 
     println!("\n== Ablation B: prefix-sum RTK (paper §2.1) vs Mitchell's original ==\n");
@@ -71,8 +75,8 @@ fn main() {
     );
     let rtk = Registry::create("RTK").unwrap();
     let mit = Registry::create("Mitchell-RT").unwrap();
-    let mut seq = MeshSequence::cylinder(3, 64, 500_000);
-    for round in 0..5 {
+    let mut seq = MeshSequence::cylinder(quick_or(3, 2), 64, 500_000);
+    for round in 0..quick_or(5, 2) {
         for _ in 0..2 {
             seq.advance();
         }
@@ -106,4 +110,5 @@ fn main() {
         "\npaper shape: prefix-sum RTK is the cheaper equal-quality formulation"
     );
     save_csv("ablation_remap_rtk.csv", &csv);
+    write_bench_json("ablation_remap_rtk", &json_rows);
 }

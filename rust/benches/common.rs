@@ -101,3 +101,105 @@ pub fn arg_usize(key: &str, default: usize) -> usize {
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
 }
+
+/// True when the bench was invoked with `--quick`: the CI bench-smoke
+/// mode that shrinks every `MeshSequence`/driver budget so the whole
+/// suite runs in seconds while still producing `BENCH_*.json`
+/// summaries.
+pub fn is_quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+/// `full` normally, `quick` under `--quick`.
+pub fn quick_or(full: usize, quick: usize) -> usize {
+    if is_quick() {
+        quick
+    } else {
+        full
+    }
+}
+
+/// One row of a `BENCH_*.json` summary. Fields a bench cannot supply
+/// stay `None` and serialize as `null`; a metric that fits none of
+/// the shared fields goes into `extra` under its own label (never
+/// mislabel a count or a throughput as `total_v`/`wall_ms`).
+pub struct BenchRow {
+    pub method: String,
+    pub lambda_before: Option<f64>,
+    pub lambda_after: Option<f64>,
+    pub total_v: Option<f64>,
+    pub wall_ms: Option<f64>,
+    pub extra: Option<(&'static str, f64)>,
+}
+
+impl BenchRow {
+    pub fn new(method: impl Into<String>) -> Self {
+        Self {
+            method: method.into(),
+            lambda_before: None,
+            lambda_after: None,
+            total_v: None,
+            wall_ms: None,
+            extra: None,
+        }
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_f64(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x}"),
+        _ => "null".to_string(),
+    }
+}
+
+/// Write the machine-readable summary `out/BENCH_<bench>.json` that
+/// the CI bench-smoke job uploads as an artifact (the perf
+/// trajectory's data points).
+pub fn write_bench_json(bench: &str, rows: &[BenchRow]) {
+    let safe: String = bench
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str(&format!("  \"bench\": {},\n", json_str(bench)));
+    body.push_str(&format!("  \"quick\": {},\n", is_quick()));
+    body.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let extra = match r.extra {
+            Some((label, v)) => format!(", {}: {}", json_str(label), json_f64(Some(v))),
+            None => String::new(),
+        };
+        body.push_str(&format!(
+            "    {{\"method\": {}, \"lambda_before\": {}, \"lambda_after\": {}, \
+             \"total_v\": {}, \"wall_ms\": {}{}}}{}\n",
+            json_str(&r.method),
+            json_f64(r.lambda_before),
+            json_f64(r.lambda_after),
+            json_f64(r.total_v),
+            json_f64(r.wall_ms),
+            extra,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match phg_dlb::coordinator::report::write_report(&format!("BENCH_{safe}.json"), &body) {
+        Ok(p) => println!("[json] {}", p.display()),
+        Err(e) => eprintln!("[json] write failed: {e}"),
+    }
+}

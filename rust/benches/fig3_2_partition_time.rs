@@ -12,15 +12,15 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{arg_usize, median_time, save_csv, MeshSequence};
+use common::{arg_usize, median_time, quick_or, save_csv, write_bench_json, BenchRow, MeshSequence};
 use phg_dlb::dlb::Registry;
 use phg_dlb::partition::PartitionInput;
 use phg_dlb::util::stats::coeff_of_variation;
 
 fn main() {
-    let steps = arg_usize("--steps", 12);
-    let scale = arg_usize("--scale", 3);
-    let nparts = arg_usize("--nparts", 64);
+    let steps = arg_usize("--steps", quick_or(12, 4));
+    let scale = arg_usize("--scale", quick_or(3, 2));
+    let nparts = arg_usize("--nparts", quick_or(64, 16));
 
     println!("== Fig 3.2: partition time per adaptive step (p = {nparts}) ==\n");
     let methods = Registry::paper_names();
@@ -86,5 +86,16 @@ fn main() {
     save_csv(
         "fig3_2_partition_time.csv",
         &phg_dlb::coordinator::report::format_figure_csv("step", "partition_ms", &series),
+    );
+    write_bench_json(
+        "fig3_2_partition_time",
+        &means
+            .iter()
+            .map(|(name, mean, _)| {
+                let mut row = BenchRow::new(name.clone());
+                row.wall_ms = Some(*mean);
+                row
+            })
+            .collect::<Vec<_>>(),
     );
 }

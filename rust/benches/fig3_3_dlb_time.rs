@@ -16,19 +16,20 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{arg_usize, save_csv, MeshSequence};
+use common::{arg_usize, quick_or, save_csv, write_bench_json, BenchRow, MeshSequence};
 use phg_dlb::dlb::{RebalancePipeline, Registry};
 
 fn main() {
-    let steps = arg_usize("--steps", 10);
-    let scale = arg_usize("--scale", 3);
-    let nparts = arg_usize("--nparts", 64);
+    let steps = arg_usize("--steps", quick_or(10, 4));
+    let scale = arg_usize("--scale", quick_or(3, 2));
+    let nparts = arg_usize("--nparts", quick_or(64, 8));
 
     println!("== Fig 3.3: DLB time (partition + remap + migrate) per step (p = {nparts}) ==\n");
 
     let methods = Registry::paper_names();
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
     let mut moved_frac: Vec<(String, f64)> = Vec::new();
+    let mut json_rows: Vec<BenchRow> = Vec::new();
 
     for &name in &methods {
         let mut seq = MeshSequence::cylinder(scale, nparts, 400_000);
@@ -36,6 +37,7 @@ fn main() {
         let mut pts = Vec::new();
         let mut total_moved = 0.0;
         let mut total_weight = 0.0;
+        let mut last_lambda = (1.0, 1.0);
         for step in 0..steps {
             seq.advance();
             let (leaves, weights, _owners) = seq.leaves_weights_owners();
@@ -43,7 +45,15 @@ fn main() {
             pts.push((step as f64, report.dlb_time() * 1e3));
             total_moved += report.volume.total_v;
             total_weight += weights.iter().sum::<f64>();
+            last_lambda = (report.lambda_before, report.lambda_after);
         }
+        let mean_ms = pts.iter().map(|p| p.1).sum::<f64>() / pts.len().max(1) as f64;
+        let mut row = BenchRow::new(name);
+        row.lambda_before = Some(last_lambda.0);
+        row.lambda_after = Some(last_lambda.1);
+        row.total_v = Some(total_moved);
+        row.wall_ms = Some(mean_ms);
+        json_rows.push(row);
         series.push((name.to_string(), pts));
         moved_frac.push((name.to_string(), total_moved / total_weight));
     }
@@ -81,4 +91,5 @@ fn main() {
         "fig3_3_dlb_time.csv",
         &phg_dlb::coordinator::report::format_figure_csv("step", "dlb_ms", &series),
     );
+    write_bench_json("fig3_3_dlb_time", &json_rows);
 }

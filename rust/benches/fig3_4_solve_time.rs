@@ -14,15 +14,15 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{arg_usize, save_csv};
+use common::{arg_usize, quick_or, save_csv, write_bench_json, BenchRow};
 use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
 use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
 fn main() {
-    let steps = arg_usize("--steps", 8);
-    let nparts = arg_usize("--nparts", 32);
+    let steps = arg_usize("--steps", quick_or(8, 3));
+    let nparts = arg_usize("--nparts", quick_or(32, 8));
 
     println!("== Fig 3.4: solve time vs #DOFs (p = {nparts}) ==\n");
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
@@ -34,10 +34,11 @@ fn main() {
             method: name.to_string(),
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
+            strategy: "scratch".to_string(),
             lambda_trigger: 1.1,
             theta_refine: 0.4,
             theta_coarsen: 0.0,
-            max_elements: 60_000,
+            max_elements: quick_or(60_000, 6_000),
             solver: SolverOpts {
                 tol: 1e-5,
                 max_iter: 1200,
@@ -93,5 +94,16 @@ fn main() {
     save_csv(
         "fig3_4_solve_time.csv",
         &phg_dlb::coordinator::report::format_figure_csv("dofs", "solve_ms", &series),
+    );
+    write_bench_json(
+        "fig3_4_solve_time",
+        &series
+            .iter()
+            .map(|(name, pts)| {
+                let mut row = BenchRow::new(name.clone());
+                row.wall_ms = Some(pts.iter().map(|p| p.1).sum::<f64>() / pts.len().max(1) as f64);
+                row
+            })
+            .collect::<Vec<_>>(),
     );
 }

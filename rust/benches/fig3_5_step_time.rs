@@ -11,15 +11,15 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{arg_usize, save_csv};
+use common::{arg_usize, quick_or, save_csv, write_bench_json, BenchRow};
 use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
 use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
 fn main() {
-    let steps = arg_usize("--steps", 8);
-    let nparts = arg_usize("--nparts", 32);
+    let steps = arg_usize("--steps", quick_or(8, 3));
+    let nparts = arg_usize("--nparts", quick_or(32, 8));
 
     println!("== Fig 3.5: per-adaptive-step time (p = {nparts}) ==\n");
     let methods = Registry::paper_names();
@@ -31,10 +31,11 @@ fn main() {
             method: name.to_string(),
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
+            strategy: "scratch".to_string(),
             lambda_trigger: 1.1,
             theta_refine: 0.4,
             theta_coarsen: 0.0,
-            max_elements: 60_000,
+            max_elements: quick_or(60_000, 6_000),
             solver: SolverOpts {
                 tol: 1e-5,
                 max_iter: 1200,
@@ -80,5 +81,16 @@ fn main() {
     save_csv(
         "fig3_5_step_time.csv",
         &phg_dlb::coordinator::report::format_figure_csv("step", "step_ms", &series),
+    );
+    write_bench_json(
+        "fig3_5_step_time",
+        &series
+            .iter()
+            .map(|(name, pts)| {
+                let mut row = BenchRow::new(name.clone());
+                row.wall_ms = Some(pts.iter().map(|p| p.1).sum::<f64>());
+                row
+            })
+            .collect::<Vec<_>>(),
     );
 }

@@ -15,7 +15,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{median_time, save_csv};
+use common::{median_time, quick_or, save_csv, write_bench_json, BenchRow};
 use phg_dlb::dist::Distribution;
 use phg_dlb::dlb::Registry;
 use phg_dlb::fem::{assemble, DofMap};
@@ -44,7 +44,7 @@ fn main() {
     println!("== §Perf hot-path microbenchmarks ==\n");
 
     // ---------- L3: SFC keys ----------
-    let n = 1_000_000usize;
+    let n = quick_or(1_000_000, 100_000);
     let mut rng = Pcg32::new(42);
     let coords: Vec<(u32, u32, u32)> = (0..n)
         .map(|_| {
@@ -62,7 +62,8 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    rep.add("morton keys", n as f64 / t / 1e6, "Mkeys/s");
+    let nk = format!("{}k", n / 1000);
+    rep.add(&format!("morton keys ({nk})"), n as f64 / t / 1e6, "Mkeys/s");
 
     let t = median_time(3, || {
         let mut acc = 0u64;
@@ -71,7 +72,7 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    rep.add("hilbert keys", n as f64 / t / 1e6, "Mkeys/s");
+    rep.add(&format!("hilbert keys ({nk})"), n as f64 / t / 1e6, "Mkeys/s");
 
     // ---------- L3: sorting ----------
     let base: Vec<(u64, u32)> = (0..n).map(|i| (rng.next_u64(), i as u32)).collect();
@@ -80,13 +81,13 @@ fn main() {
         radix_sort_by_key(&mut v);
         std::hint::black_box(v.len());
     });
-    rep.add("radix sort 1M (u64,u32)", n as f64 / t / 1e6, "Mitems/s");
+    rep.add(&format!("radix sort {nk} (u64,u32)"), n as f64 / t / 1e6, "Mitems/s");
     let t = median_time(3, || {
         let mut v = base.clone();
         v.sort_unstable_by_key(|&(k, _)| k);
         std::hint::black_box(v.len());
     });
-    rep.add("std sort 1M (u64,u32)", n as f64 / t / 1e6, "Mitems/s");
+    rep.add(&format!("std sort {nk} (u64,u32)"), n as f64 / t / 1e6, "Mitems/s");
 
     // ---------- L3: 1-D partitioner ----------
     let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
@@ -95,10 +96,10 @@ fn main() {
         let r = partition_1d(&keys, &weights, 64, 8, 1e-4);
         std::hint::black_box(r.splitters.len());
     });
-    rep.add("1-D partition 1M items, p=64", n as f64 / t / 1e6, "Mitems/s");
+    rep.add(&format!("1-D partition {nk} items, p=64"), n as f64 / t / 1e6, "Mitems/s");
 
     // ---------- L3: whole partitioners on a real mesh ----------
-    let mut mesh = generator::omega1_cylinder(4);
+    let mut mesh = generator::omega1_cylinder(quick_or(4, 2));
     let marked: Vec<_> = mesh
         .leaves_unordered()
         .into_iter()
@@ -201,4 +202,18 @@ fn main() {
         csv.push_str(&format!("{n},{v},{u}\n"));
     }
     save_csv("perf_hotpath.csv", &csv);
+    // values are throughputs or per-iter times depending on the row --
+    // keep them under a neutral label with the unit in the name rather
+    // than mislabeling a Mkeys/s figure as a wall time
+    write_bench_json(
+        "perf_hotpath",
+        &rep.rows
+            .iter()
+            .map(|(name, value, unit)| {
+                let mut row = BenchRow::new(format!("{name} [{unit}]"));
+                row.extra = Some(("value", *value));
+                row
+            })
+            .collect::<Vec<_>>(),
+    );
 }

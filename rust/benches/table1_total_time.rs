@@ -13,7 +13,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{arg_usize, save_csv};
+use common::{arg_usize, quick_or, save_csv, write_bench_json, BenchRow};
 use phg_dlb::coordinator::report::{format_table1, Table1Row};
 use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
 use phg_dlb::dlb::Registry;
@@ -21,8 +21,8 @@ use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
 fn main() {
-    let steps = arg_usize("--steps", 12);
-    let nparts = arg_usize("--nparts", 32);
+    let steps = arg_usize("--steps", quick_or(12, 3));
+    let nparts = arg_usize("--nparts", quick_or(32, 8));
 
     println!("== Table 1: total running time & repartitionings (p = {nparts}, {steps} adaptive steps) ==\n");
 
@@ -35,10 +35,11 @@ fn main() {
             weights: "unit".to_string(),
             // ParMETIS-style quality-first policy: much lower trigger
             // -> many more repartitions (the paper's 189 vs ~60)
+            strategy: "scratch".to_string(),
             lambda_trigger: if name == "ParMETIS" { 1.02 } else { 1.1 },
             theta_refine: 0.6,
             theta_coarsen: 0.0,
-            max_elements: 60_000,
+            max_elements: quick_or(60_000, 6_000),
             solver: SolverOpts {
                 tol: 1e-5,
                 max_iter: 1200,
@@ -82,4 +83,15 @@ fn main() {
         ));
     }
     save_csv("table1_total_time.csv", &csv);
+    write_bench_json(
+        "table1_total_time",
+        &rows
+            .iter()
+            .map(|r| {
+                let mut row = BenchRow::new(r.method.clone());
+                row.wall_ms = Some(r.total_time * 1e3);
+                row
+            })
+            .collect::<Vec<_>>(),
+    );
 }

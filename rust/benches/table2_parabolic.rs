@@ -15,7 +15,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{arg_usize, save_csv};
+use common::{arg_usize, quick_or, save_csv, write_bench_json, BenchRow};
 use phg_dlb::coordinator::report::{format_table2, Table2Row};
 use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
 use phg_dlb::dlb::Registry;
@@ -23,8 +23,8 @@ use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
 fn main() {
-    let nparts = arg_usize("--procs", 64);
-    let steps = arg_usize("--steps", 14);
+    let nparts = arg_usize("--procs", quick_or(64, 8));
+    let steps = arg_usize("--steps", quick_or(14, 3));
 
     println!(
         "== Table {}: parabolic moving peak, p = {nparts}, {steps} time steps ==\n",
@@ -38,10 +38,11 @@ fn main() {
             method: name.to_string(),
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
+            strategy: "scratch".to_string(),
             lambda_trigger: if name == "ParMETIS" { 1.05 } else { 1.15 },
             theta_refine: 0.45,
             theta_coarsen: 0.04,
-            max_elements: 40_000,
+            max_elements: quick_or(40_000, 6_000),
             solver: SolverOpts {
                 tol: 1e-5,
                 max_iter: 800,
@@ -76,4 +77,15 @@ fn main() {
         ));
     }
     save_csv(&format!("table2_parabolic_p{nparts}.csv"), &csv);
+    write_bench_json(
+        "table2_parabolic",
+        &rows
+            .iter()
+            .map(|r| {
+                let mut row = BenchRow::new(r.method.clone());
+                row.wall_ms = Some(r.tal * 1e3);
+                row
+            })
+            .collect::<Vec<_>>(),
+    );
 }

@@ -3,7 +3,8 @@
 //! `--key value` overrides. The launcher (`main.rs`) and the benches
 //! build [`crate::coordinator::DriverConfig`]s from this.
 
-use anyhow::{anyhow, Result};
+use crate::format_err;
+use crate::util::error::Result;
 use std::collections::BTreeMap;
 
 /// Parsed configuration: flat string map with typed accessors.
@@ -27,7 +28,7 @@ impl Config {
             }
             let (k, v) = line
                 .split_once('=')
-                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+                .ok_or_else(|| format_err!("line {}: expected key = value", lineno + 1))?;
             values.insert(
                 k.trim().to_string(),
                 v.trim().trim_matches('"').to_string(),
@@ -48,7 +49,7 @@ impl Config {
             if let Some(key) = a.strip_prefix("--") {
                 let v = it
                     .next()
-                    .ok_or_else(|| anyhow!("missing value for --{key}"))?;
+                    .ok_or_else(|| format_err!("missing value for --{key}"))?;
                 self.values.insert(key.replace('-', "_"), v.clone());
             } else {
                 rest.push(a.clone());
@@ -73,7 +74,7 @@ impl Config {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow!("config {key} = {v}: expected integer")),
+                .map_err(|_| format_err!("config {key} = {v}: expected integer")),
         }
     }
 
@@ -82,7 +83,7 @@ impl Config {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow!("config {key} = {v}: expected float")),
+                .map_err(|_| format_err!("config {key} = {v}: expected float")),
         }
     }
 
@@ -91,7 +92,7 @@ impl Config {
             None => Ok(default),
             Some("true") | Some("1") | Some("yes") => Ok(true),
             Some("false") | Some("0") | Some("no") => Ok(false),
-            Some(v) => Err(anyhow!("config {key} = {v}: expected bool")),
+            Some(v) => Err(format_err!("config {key} = {v}: expected bool")),
         }
     }
 
@@ -103,6 +104,7 @@ impl Config {
             method: self.get_str("method", "PHG/HSFC"),
             trigger: self.get_str("trigger", "lambda"),
             weights: self.get_str("weights", "unit"),
+            strategy: self.get_str("strategy", "scratch"),
             lambda_trigger: self.get_f64("lambda_trigger", 1.2)?,
             theta_refine: self.get_f64("theta_refine", 0.5)?,
             theta_coarsen: self.get_f64("theta_coarsen", 0.0)?,
@@ -185,14 +187,19 @@ mod tests {
         assert_eq!(d.lambda_trigger, 1.2); // default
         assert_eq!(d.trigger, "lambda"); // default
         assert_eq!(d.weights, "unit"); // default
+        assert_eq!(d.strategy, "scratch"); // default
     }
 
     #[test]
-    fn trigger_and_weights_keys_flow_through() {
-        let mut c = Config::parse("trigger = costbenefit:4\n").unwrap();
+    fn trigger_weights_and_strategy_keys_flow_through() {
+        let mut c = Config::parse("trigger = costbenefit:4\nstrategy = auto\n").unwrap();
         c.apply_args(&["--weights".into(), "measured".into()]).unwrap();
         let d = c.driver_config().unwrap();
         assert_eq!(d.trigger, "costbenefit:4");
         assert_eq!(d.weights, "measured");
+        assert_eq!(d.strategy, "auto");
+        let mut c = Config::new();
+        c.apply_args(&["--strategy".into(), "diffusive".into()]).unwrap();
+        assert_eq!(c.driver_config().unwrap().strategy, "diffusive");
     }
 }

@@ -16,7 +16,7 @@ use crate::adapt::{mark_coarsen_threshold, mark_max, residual_indicator};
 use crate::dist::{Distribution, NetworkModel};
 use crate::dlb::{
     dof_shares, trigger_by_name, weight_model_by_name, CostEstimate, Registry,
-    RebalancePipeline, TriggerContext, TriggerPolicy, WeightModel,
+    RebalancePipeline, RepartitionStrategy, TriggerContext, TriggerPolicy, WeightModel,
 };
 use crate::fem::problems::{parabolic_exact, parabolic_step, solve_helmholtz};
 use crate::fem::{DofMap, SolverOpts};
@@ -24,8 +24,8 @@ use crate::mesh::topology::LeafTopology;
 use crate::mesh::{ElemId, TetMesh};
 use crate::partition::sfc::{sfc_keys, Curve, Normalization};
 use crate::runtime::Runtime;
+use crate::util::error::Result;
 use crate::util::timer::Stopwatch;
-use anyhow::Result;
 use timeline::{StepRecord, Timeline};
 
 #[derive(Debug, Clone)]
@@ -39,6 +39,9 @@ pub struct DriverConfig {
     pub trigger: String,
     /// weight model spec: `unit` | `dof` | `measured`
     pub weights: String,
+    /// repartitioning strategy spec: `scratch` | `diffusive` | `auto`
+    /// (see [`RepartitionStrategy`], DESIGN.md §7)
+    pub strategy: String,
     /// threshold used by the default `lambda` trigger
     pub lambda_trigger: f64,
     /// marking fraction for refinement (max-strategy theta)
@@ -61,6 +64,7 @@ impl Default for DriverConfig {
             method: "PHG/HSFC".to_string(),
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
+            strategy: "scratch".to_string(),
             lambda_trigger: 1.2,
             theta_refine: 0.5,
             theta_coarsen: 0.0,
@@ -95,14 +99,15 @@ pub struct AdaptiveDriver {
 }
 
 impl AdaptiveDriver {
-    /// Errors on an unknown method, trigger or weight-model name (the
-    /// message lists the valid ones).
+    /// Errors on an unknown method, trigger, weight-model or strategy
+    /// name (the message lists the valid ones).
     pub fn new(mut mesh: TetMesh, cfg: DriverConfig) -> Result<Self> {
         let pipeline = RebalancePipeline::new(
             Registry::create(&cfg.method)?,
             NetworkModel::infiniband(cfg.nparts),
             Distribution::new(cfg.nparts),
-        );
+        )
+        .with_strategy(RepartitionStrategy::parse(&cfg.strategy)?);
         let trigger = trigger_by_name(&cfg.trigger, cfg.lambda_trigger)?;
         let weight_model = weight_model_by_name(&cfg.weights)?;
         // the paper: order the initial mesh (tree roots) along an SFC
@@ -143,16 +148,21 @@ impl AdaptiveDriver {
     /// rebalance pipeline, folding its report into the step record.
     fn maybe_rebalance(&mut self, leaves: &[ElemId], weights: &[f64], rec: &mut StepRecord) {
         rec.imbalance_before = self.pipeline.dist.imbalance(&self.mesh, leaves, weights);
-        // the cost-model pass is O(n); only pay for it when the policy
-        // actually reads it
+        // the cost-model / strategy-resolution pass is O(n); run it at
+        // most once per step, and only up front when the policy reads
+        // the estimate (`auto` resolves against the solve history,
+        // DESIGN.md §7)
+        let mut resolved = None;
         let estimate = if self.trigger.needs_estimate() {
-            self.pipeline.estimate(
+            let (strategy, estimate) = self.pipeline.resolve_and_estimate(
                 &self.mesh,
                 leaves,
                 weights,
                 self.last_solve_parallel,
                 self.partition_wall_ewma,
-            )
+            );
+            resolved = Some(strategy);
+            estimate
         } else {
             CostEstimate::default()
         };
@@ -165,12 +175,28 @@ impl AdaptiveDriver {
             rec.imbalance_after = rec.imbalance_before;
             return;
         }
-        let report = self.pipeline.rebalance(&mut self.mesh, leaves, weights);
-        self.partition_wall_ewma = if self.partition_wall_ewma > 0.0 {
-            0.5 * self.partition_wall_ewma + 0.5 * report.partition_wall
-        } else {
-            report.partition_wall
-        };
+        let strategy = resolved.unwrap_or_else(|| {
+            self.pipeline.resolve_strategy(
+                &self.mesh,
+                leaves,
+                weights,
+                self.last_solve_parallel,
+                self.partition_wall_ewma,
+            )
+        });
+        let report = self
+            .pipeline
+            .rebalance_as(strategy, &mut self.mesh, leaves, weights);
+        // the EWMA prices *scratch* partitioner walls for the cost
+        // model; a diffusive flow solve would poison it with ~0s
+        if report.strategy == RepartitionStrategy::Scratch {
+            self.partition_wall_ewma = if self.partition_wall_ewma > 0.0 {
+                0.5 * self.partition_wall_ewma + 0.5 * report.partition_wall
+            } else {
+                report.partition_wall
+            };
+        }
+        rec.strategy = Some(report.strategy);
         rec.partition_time = report.partition_wall;
         rec.partition_comm_modeled = report.partition_comm_modeled + report.remap_comm_modeled;
         rec.migrate_time = report.migrate_wall;
@@ -424,6 +450,7 @@ mod tests {
             method: method.to_string(),
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
+            strategy: "scratch".to_string(),
             lambda_trigger: 1.1,
             theta_refine: 0.5,
             theta_coarsen: 0.0,
@@ -456,6 +483,41 @@ mod tests {
         let mut cfg = quick_cfg("RTK");
         cfg.weights = "bogus".into();
         assert!(AdaptiveDriver::new(mesh, cfg).is_err());
+
+        let mesh = generator::cube_mesh(2);
+        let mut cfg = quick_cfg("RTK");
+        cfg.strategy = "bogus".into();
+        let err = AdaptiveDriver::new(mesh, cfg).err().unwrap().to_string();
+        assert!(err.contains("diffusive"), "error should list strategies: {err}");
+    }
+
+    #[test]
+    fn every_strategy_drives_the_loop() {
+        for strategy in ["scratch", "diffusive", "auto"] {
+            let mesh = generator::cube_mesh(2);
+            let mut cfg = quick_cfg("PHG/HSFC");
+            cfg.strategy = strategy.to_string();
+            let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
+            d.run_helmholtz();
+            assert_eq!(d.timeline.records.len(), 3, "strategy {strategy}");
+            let last = d.timeline.records.last().unwrap();
+            assert!(
+                last.imbalance_after < 1.6,
+                "strategy {strategy}: lambda {} not controlled",
+                last.imbalance_after
+            );
+            for r in &d.timeline.records {
+                assert_eq!(r.repartitioned, r.strategy.is_some(), "strategy {strategy}");
+                if let (Some(s), Some(rep)) = (r.strategy, r.rebalance.as_ref()) {
+                    assert_eq!(s, rep.strategy);
+                    match strategy {
+                        "scratch" => assert_eq!(s, RepartitionStrategy::Scratch),
+                        "diffusive" => assert_eq!(s, RepartitionStrategy::Diffusive),
+                        _ => assert_ne!(s, RepartitionStrategy::Auto),
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -71,9 +71,10 @@ pub fn format_table2(rows: &[Table2Row]) -> String {
 pub fn format_rebalance_table(rows: &[(String, RebalanceReport)]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<22} {:<12} {:>7} {:>7} {:>9} {:>9} {:>6} {:>11} {:>11} {:>11} {:>8}\n",
+        "{:<22} {:<12} {:<10} {:>7} {:>7} {:>9} {:>9} {:>6} {:>11} {:>11} {:>11} {:>8}\n",
         "policy",
         "method",
+        "strategy",
         "lam_in",
         "lam_out",
         "TotalV",
@@ -86,9 +87,10 @@ pub fn format_rebalance_table(rows: &[(String, RebalanceReport)]) -> String {
     ));
     for (label, r) in rows {
         out.push_str(&format!(
-            "{:<22} {:<12} {:>7.3} {:>7.3} {:>9.1} {:>9.1} {:>6.1} {:>11.2} {:>11.2} {:>11.2} {:>8}\n",
+            "{:<22} {:<12} {:<10} {:>7.3} {:>7.3} {:>9.1} {:>9.1} {:>6.1} {:>11.2} {:>11.2} {:>11.2} {:>8}\n",
             label,
             r.method,
+            r.strategy.name(),
             r.lambda_before,
             r.lambda_after,
             r.volume.total_v,
@@ -168,9 +170,11 @@ mod tests {
 
     #[test]
     fn rebalance_table_formats() {
+        use crate::dlb::RepartitionStrategy;
         use crate::partition::metrics::MigrationVolume;
         let rep = RebalanceReport {
             method: "RTK".into(),
+            strategy: RepartitionStrategy::Scratch,
             lambda_before: 1.42,
             lambda_after: 1.01,
             volume: MigrationVolume {

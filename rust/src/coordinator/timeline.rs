@@ -2,7 +2,7 @@
 //! paper's figures and tables aggregate (partition time, DLB time,
 //! solve time, step time, repartition counts, quality metrics).
 
-use crate::dlb::RebalanceReport;
+use crate::dlb::{RebalanceReport, RepartitionStrategy};
 use crate::partition::metrics::MigrationVolume;
 
 /// One adaptive (or time) step's accounting. Times in seconds;
@@ -22,6 +22,9 @@ pub struct StepRecord {
     /// step's refinement); scales the bottleneck rank's solve compute
     pub solve_imbalance: f64,
     pub repartitioned: bool,
+    /// repartitioning strategy that ran this step's rebalance, if any
+    /// (never `Auto`: the pipeline resolves it per event)
+    pub strategy: Option<RepartitionStrategy>,
     /// full phase-by-phase report of this step's rebalance, if any
     pub rebalance: Option<RebalanceReport>,
     /// measured partitioner wall time
@@ -59,6 +62,7 @@ impl StepRecord {
             imbalance_after: 1.0,
             solve_imbalance: 1.0,
             repartitioned: false,
+            strategy: None,
             rebalance: None,
             partition_time: 0.0,
             partition_comm_modeled: 0.0,
@@ -149,7 +153,7 @@ impl Timeline {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "step,n_elements,n_dofs,imbalance_before,imbalance_after,solve_imbalance,\
-             repartitioned,\
+             repartitioned,strategy,\
              partition_time,partition_comm_modeled,migrate_time,migrate_modeled,\
              moved_fraction,remap_kept_fraction,interface_faces,assemble_time,\
              solve_time,solve_comm_modeled,solve_iterations,estimate_time,adapt_time,\
@@ -157,7 +161,7 @@ impl Timeline {
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{:.4},{:.4},{:.4},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{:.6},{:.3e},{:.3e}\n",
+                "{},{},{},{:.4},{:.4},{:.4},{},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{:.6},{:.3e},{:.3e}\n",
                 r.step,
                 r.n_elements,
                 r.n_dofs,
@@ -165,6 +169,7 @@ impl Timeline {
                 r.imbalance_after,
                 r.solve_imbalance,
                 r.repartitioned as u8,
+                r.strategy.map(|s| s.name()).unwrap_or("-"),
                 r.partition_time,
                 r.partition_comm_modeled,
                 r.migrate_time,

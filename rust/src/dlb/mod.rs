@@ -15,19 +15,24 @@
 //!   cost/benefit policies priced against [`crate::dist::NetworkModel`];
 //! * [`weights`] -- unit, dof-proportional, and runtime-measured
 //!   element weight models;
-//! * [`pipeline`] -- partition -> Oliker-Biswas remap -> migrate as
-//!   one call returning a structured [`RebalanceReport`].
+//! * [`strategy`] -- scratch vs diffusive vs auto repartitioning
+//!   ([`RepartitionStrategy`], DESIGN.md §7);
+//! * [`pipeline`] -- partition -> Oliker-Biswas remap -> migrate (or
+//!   the remap-free diffusive path) as one call returning a structured
+//!   [`RebalanceReport`].
 //!
 //! The adaptive driver ([`crate::coordinator`]), the CLI, the examples
 //! and the benches all compose their DLB loops from these pieces.
 
 pub mod pipeline;
 pub mod registry;
+pub mod strategy;
 pub mod trigger;
 pub mod weights;
 
 pub use pipeline::{RebalancePipeline, RebalanceReport};
 pub use registry::{MethodSpec, Registry, METHODS};
+pub use strategy::RepartitionStrategy;
 pub use trigger::{
     trigger_by_name, AfterAdaptation, CostBenefit, CostEstimate, LambdaThreshold, TriggerContext,
     TriggerPolicy,

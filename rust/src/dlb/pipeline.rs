@@ -1,35 +1,44 @@
-//! The unified rebalance pipeline: partition -> Oliker-Biswas remap ->
-//! migrate, as one call with one structured report.
+//! The unified rebalance pipeline, now strategy-aware (DESIGN.md §7):
+//! *scratch* (partition -> Oliker-Biswas remap -> migrate, the paper's
+//! path), *diffusive* (incremental flow on the rank chain -> migrate,
+//! no remap needed), or *auto* (URP-style per-event selection of
+//! whichever path the network model prices cheaper).
 //!
-//! Before this module the coordinator hand-wired the three phases
-//! inline; the benches and examples each re-implemented the same
-//! sequence with their own accounting. [`RebalancePipeline`] owns the
-//! composition and [`RebalanceReport`] carries everything the paper's
-//! tables aggregate: lambda before/after, TotalV/MaxV, the kept-data
-//! fraction, per-phase measured wall and modeled network time, and the
-//! full collective log.
+//! Before this module the coordinator hand-wired the phases inline;
+//! the benches and examples each re-implemented the same sequence with
+//! their own accounting. [`RebalancePipeline`] owns the composition
+//! and [`RebalanceReport`] carries everything the paper's tables
+//! aggregate: the strategy that ran, lambda before/after, TotalV/MaxV,
+//! the kept-data fraction, per-phase measured wall and modeled network
+//! time, and the full collective log.
 
 use super::registry::Registry;
+use super::strategy::RepartitionStrategy;
 use super::trigger::CostEstimate;
 use crate::dist::{migrate, Distribution, NetworkModel, ELEM_BYTES};
 use crate::mesh::{ElemId, TetMesh};
+use crate::partition::diffusion::{chain_loads, solve_flow, DiffusionRepartitioner};
 use crate::partition::metrics::MigrationVolume;
 use crate::partition::{CommOp, PartitionInput, Partitioner};
 use crate::remap::{apply_map, oliker_biswas, SimilarityMatrix};
+use crate::util::error::Result;
 use crate::util::timer::Stopwatch;
-use anyhow::Result;
 
 /// What one full rebalance did, phase by phase.
 #[derive(Debug, Clone)]
 pub struct RebalanceReport {
-    /// Partitioning method that produced the new subgrids.
+    /// Partitioning method that produced the new subgrids
+    /// (`"Diffusion"` when the diffusive path ran).
     pub method: String,
+    /// Which repartitioning path actually ran (never `Auto`).
+    pub strategy: RepartitionStrategy,
     /// Load-imbalance factor before / after migration.
     pub lambda_before: f64,
     pub lambda_after: f64,
     /// Oliker-Biswas migration volumes (TotalV / MaxV / moved fraction).
     pub volume: MigrationVolume,
-    /// Fraction of total weight the remap kept in place.
+    /// Fraction of total weight the rebalance kept in place (for the
+    /// diffusive path: 1 - moved fraction, since there is no remap).
     pub remap_kept_fraction: f64,
     /// Measured partitioner wall time (s).
     pub partition_wall: f64,
@@ -37,7 +46,8 @@ pub struct RebalanceReport {
     pub migrate_wall: f64,
     /// Modeled network time of the partitioner's collectives (s).
     pub partition_comm_modeled: f64,
-    /// Modeled network time of the remap's gather + broadcast (s).
+    /// Modeled network time of the remap's gather + broadcast (s);
+    /// zero on the diffusive path, which needs no remap.
     pub remap_comm_modeled: f64,
     /// Modeled network time of the migration `AllToAllV` (s).
     pub migrate_modeled: f64,
@@ -59,12 +69,19 @@ impl RebalanceReport {
     }
 }
 
-/// Partitioner + network model + distribution, composed into the
-/// paper's partition -> remap -> migrate sequence.
+/// Partitioner + network model + distribution + strategy, composed
+/// into the paper's partition -> remap -> migrate sequence or its
+/// diffusive alternative.
 pub struct RebalancePipeline {
     pub partitioner: Box<dyn Partitioner>,
     pub net: NetworkModel,
     pub dist: Distribution,
+    /// Which path [`RebalancePipeline::rebalance`] takes; `Auto`
+    /// resolves per event via [`RebalancePipeline::resolve_strategy`].
+    pub strategy: RepartitionStrategy,
+    /// The diffusive repartitioner the `Diffusive`/`Auto` paths run
+    /// (its sweep bound is the quality-vs-cost knob).
+    pub diffusion: DiffusionRepartitioner,
 }
 
 impl RebalancePipeline {
@@ -74,6 +91,8 @@ impl RebalancePipeline {
             partitioner,
             net,
             dist,
+            strategy: RepartitionStrategy::Scratch,
+            diffusion: DiffusionRepartitioner::new(),
         }
     }
 
@@ -86,10 +105,51 @@ impl RebalancePipeline {
         ))
     }
 
-    /// Run the full sequence: partition `leaves` under `weights`,
-    /// remap the new subgrids onto the ranks already holding their
-    /// data, migrate, and report.
+    /// Builder: set the repartitioning strategy.
+    pub fn with_strategy(mut self, strategy: RepartitionStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Run the configured strategy: partition `leaves` under
+    /// `weights`, place the result on the ranks already holding the
+    /// data (remap for scratch; by construction for diffusive),
+    /// migrate, and report. `Auto` resolves with the pure network
+    /// model (no solve-time context); the driver passes its solve
+    /// history through [`RebalancePipeline::resolve_strategy`] +
+    /// [`RebalancePipeline::rebalance_as`] instead.
     pub fn rebalance(
+        &self,
+        mesh: &mut TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+    ) -> RebalanceReport {
+        let strategy = self.resolve_strategy(mesh, leaves, weights, 0.0, 0.0);
+        self.rebalance_as(strategy, mesh, leaves, weights)
+    }
+
+    /// Run one *concrete* strategy (`Auto` is resolved first).
+    pub fn rebalance_as(
+        &self,
+        strategy: RepartitionStrategy,
+        mesh: &mut TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+    ) -> RebalanceReport {
+        match strategy {
+            RepartitionStrategy::Scratch => self.rebalance_scratch(mesh, leaves, weights),
+            RepartitionStrategy::Diffusive => self.rebalance_diffusive(mesh, leaves, weights),
+            RepartitionStrategy::Auto => {
+                let s = self.resolve_strategy(mesh, leaves, weights, 0.0, 0.0);
+                debug_assert_ne!(s, RepartitionStrategy::Auto);
+                self.rebalance_as(s, mesh, leaves, weights)
+            }
+        }
+    }
+
+    /// The paper's path: scratch partition -> Oliker-Biswas remap ->
+    /// migrate.
+    fn rebalance_scratch(
         &self,
         mesh: &mut TetMesh,
         leaves: &[ElemId],
@@ -126,6 +186,7 @@ impl RebalancePipeline {
 
         RebalanceReport {
             method: self.partitioner.name().to_string(),
+            strategy: RepartitionStrategy::Scratch,
             lambda_before,
             lambda_after: self.dist.imbalance(mesh, leaves, weights),
             volume: out.volume,
@@ -139,20 +200,52 @@ impl RebalancePipeline {
         }
     }
 
-    /// A-priori economics of rebalancing *now*, for the
-    /// [`super::CostBenefit`] trigger -- computed without running the
-    /// partitioner.
-    ///
-    /// * Saving: local solve compute on the bottleneck rank costs
-    ///   `lambda x` the balanced mean (DESIGN.md §3), so restoring
-    ///   balance recovers `solve_parallel_time * (lambda - 1)` per
-    ///   step, where `solve_parallel_time` is the previous step's
-    ///   SPMD-scaled solve time.
-    /// * Cost: the measured-wall estimate of the partitioner (EWMA fed
-    ///   by the driver; 0 until the first rebalance) plus the modeled
-    ///   collectives of a Scan-class partitioner, the remap's
-    ///   gather + broadcast, and an `AllToAllV` moving exactly the
-    ///   excess weight above the per-rank mean.
+    /// The incremental path: diffusive flow on the rank chain ->
+    /// migrate. No remap phase exists -- the flow already targets the
+    /// ranks holding the data, so everything off-flow stays in place.
+    fn rebalance_diffusive(
+        &self,
+        mesh: &mut TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+    ) -> RebalanceReport {
+        let nparts = self.dist.nparts;
+        let lambda_before = self.dist.imbalance(mesh, leaves, weights);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let input = PartitionInput::from_mesh(mesh, leaves, weights, &owners, nparts);
+
+        let sw = Stopwatch::start();
+        let result = self.diffusion.partition(&input);
+        let partition_wall = sw.elapsed();
+        let parts = result.parts;
+        let mut comm_log = result.comm;
+        let partition_comm_modeled = self.net.sequence_time(&comm_log);
+
+        let sw = Stopwatch::start();
+        let out = migrate(mesh, leaves, &parts, weights, &self.net);
+        let migrate_wall = sw.elapsed();
+        comm_log.extend(out.comm);
+
+        RebalanceReport {
+            method: self.diffusion.name().to_string(),
+            strategy: RepartitionStrategy::Diffusive,
+            lambda_before,
+            lambda_after: self.dist.imbalance(mesh, leaves, weights),
+            remap_kept_fraction: 1.0 - out.volume.moved_fraction,
+            volume: out.volume,
+            partition_wall,
+            migrate_wall,
+            partition_comm_modeled,
+            remap_comm_modeled: 0.0,
+            migrate_modeled: out.modeled_time,
+            comm_log,
+        }
+    }
+
+    /// A-priori economics of rebalancing *now* with the configured
+    /// strategy (`Auto` prices both paths and reports the chosen one),
+    /// for the [`super::CostBenefit`] trigger -- computed without
+    /// running a partitioner.
     pub fn estimate(
         &self,
         mesh: &TetMesh,
@@ -161,33 +254,176 @@ impl RebalancePipeline {
         solve_parallel_time: f64,
         partition_wall_estimate: f64,
     ) -> CostEstimate {
+        self.resolve_and_estimate(
+            mesh,
+            leaves,
+            weights,
+            solve_parallel_time,
+            partition_wall_estimate,
+        )
+        .1
+    }
+
+    /// Modeled (cost, predicted lambda-after) of one concrete
+    /// strategy.
+    ///
+    /// * **Scratch** -- saving: local solve compute on the bottleneck
+    ///   rank costs `lambda x` the balanced mean (DESIGN.md §3), so
+    ///   restoring balance recovers `solve_parallel_time * (lambda -
+    ///   1)` per step. Cost: the measured-wall estimate of the
+    ///   partitioner (EWMA fed by the driver; 0 until the first
+    ///   rebalance) plus the modeled collectives of a Scan-class
+    ///   partitioner, the remap's gather + broadcast, and an
+    ///   `AllToAllV` moving exactly the excess weight above the
+    ///   per-rank mean.
+    /// * **Diffusive** -- the flow system is actually solved (O(p)
+    ///   sweeps): cost is one `Allreduce` of the rank loads plus an
+    ///   `AllToAllV` carrying the flow volume; the predicted lambda is
+    ///   what the bounded sweeps leave behind, so the saving honestly
+    ///   degrades when the sweep budget cannot even out a severe
+    ///   front.
+    pub fn estimate_for(
+        &self,
+        strategy: RepartitionStrategy,
+        mesh: &TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+        solve_parallel_time: f64,
+        partition_wall_estimate: f64,
+    ) -> (CostEstimate, f64) {
         let p = self.dist.nparts;
         let loads = self.dist.rank_loads(mesh, leaves, weights);
         let total: f64 = loads.iter().sum();
         if total <= 0.0 {
-            return CostEstimate::default();
+            return (CostEstimate::default(), 1.0);
         }
         let mean = total / p as f64;
         let lambda = loads.iter().cloned().fold(0.0f64, f64::max) / mean;
-        let saving_per_step = solve_parallel_time * (lambda - 1.0).max(0.0);
 
-        let excess: f64 = loads.iter().map(|&l| (l - mean).max(0.0)).sum();
-        let max_excess = loads
-            .iter()
-            .map(|&l| (l - mean).max(0.0))
-            .fold(0.0f64, f64::max);
-        let ops = [
-            CommOp::Scan { bytes: 8 },
-            CommOp::Gather { bytes: p * p * 8 },
-            CommOp::Bcast { bytes: p * 2 },
-            CommOp::AllToAllV {
-                total_bytes: (excess * ELEM_BYTES as f64).ceil() as usize,
-                max_msg: (max_excess * ELEM_BYTES as f64).ceil() as usize,
-            },
-        ];
-        CostEstimate {
-            rebalance_cost: partition_wall_estimate + self.net.sequence_time(&ops),
-            saving_per_step,
+        match strategy {
+            RepartitionStrategy::Scratch => {
+                let excess: f64 = loads.iter().map(|&l| (l - mean).max(0.0)).sum();
+                let max_excess = loads
+                    .iter()
+                    .map(|&l| (l - mean).max(0.0))
+                    .fold(0.0f64, f64::max);
+                let ops = [
+                    CommOp::Scan { bytes: 8 },
+                    CommOp::Gather { bytes: p * p * 8 },
+                    CommOp::Bcast { bytes: p * 2 },
+                    CommOp::AllToAllV {
+                        total_bytes: (excess * ELEM_BYTES as f64).ceil() as usize,
+                        max_msg: (max_excess * ELEM_BYTES as f64).ceil() as usize,
+                    },
+                ];
+                (
+                    CostEstimate {
+                        rebalance_cost: partition_wall_estimate + self.net.sequence_time(&ops),
+                        saving_per_step: solve_parallel_time * (lambda - 1.0).max(0.0),
+                    },
+                    1.0,
+                )
+            }
+            RepartitionStrategy::Diffusive => {
+                let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+                let (_, chain) = chain_loads(mesh, leaves, &owners, weights, p);
+                let flow = solve_flow(&chain, self.diffusion.max_sweeps, self.diffusion.lambda_tol);
+                let lambda_after = flow.lambda_after().max(1.0);
+                let ops = [
+                    CommOp::Allreduce { bytes: p * 8 },
+                    CommOp::AllToAllV {
+                        total_bytes: (flow.total_volume() * ELEM_BYTES as f64).ceil() as usize,
+                        max_msg: (flow.max_edge() * ELEM_BYTES as f64).ceil() as usize,
+                    },
+                ];
+                // the O(p) flow solve is negligible next to a scratch
+                // partition pass, so no wall-time charge
+                (
+                    CostEstimate {
+                        rebalance_cost: self.net.sequence_time(&ops),
+                        saving_per_step: solve_parallel_time * (lambda - lambda_after).max(0.0),
+                    },
+                    lambda_after,
+                )
+            }
+            RepartitionStrategy::Auto => unreachable!("estimate_for needs a concrete strategy"),
+        }
+    }
+
+    /// Resolve the pipeline's strategy for one rebalance event.
+    /// `Scratch`/`Diffusive` pass through; `Auto` prices both paths
+    /// URP-style -- rebalance cost plus the residual-imbalance solve
+    /// penalty of the next step -- and picks the cheaper (ties go to
+    /// diffusion, which migrates less).
+    pub fn resolve_strategy(
+        &self,
+        mesh: &TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+        solve_parallel_time: f64,
+        partition_wall_estimate: f64,
+    ) -> RepartitionStrategy {
+        self.resolve_and_estimate(
+            mesh,
+            leaves,
+            weights,
+            solve_parallel_time,
+            partition_wall_estimate,
+        )
+        .0
+    }
+
+    /// Resolve the strategy *and* return its cost estimate in one
+    /// pass, so the driver's cost/benefit trigger and its subsequent
+    /// rebalance do not re-run the O(n) load/flow analysis per step.
+    pub fn resolve_and_estimate(
+        &self,
+        mesh: &TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+        solve_parallel_time: f64,
+        partition_wall_estimate: f64,
+    ) -> (RepartitionStrategy, CostEstimate) {
+        match self.strategy {
+            RepartitionStrategy::Scratch | RepartitionStrategy::Diffusive => {
+                let (est, _) = self.estimate_for(
+                    self.strategy,
+                    mesh,
+                    leaves,
+                    weights,
+                    solve_parallel_time,
+                    partition_wall_estimate,
+                );
+                (self.strategy, est)
+            }
+            RepartitionStrategy::Auto => {
+                let (scratch, scratch_lambda) = self.estimate_for(
+                    RepartitionStrategy::Scratch,
+                    mesh,
+                    leaves,
+                    weights,
+                    solve_parallel_time,
+                    partition_wall_estimate,
+                );
+                let (diff, diff_lambda) = self.estimate_for(
+                    RepartitionStrategy::Diffusive,
+                    mesh,
+                    leaves,
+                    weights,
+                    solve_parallel_time,
+                    partition_wall_estimate,
+                );
+                let penalty = |lambda_after: f64| {
+                    solve_parallel_time * (lambda_after - 1.0).max(0.0)
+                };
+                let scratch_total = scratch.rebalance_cost + penalty(scratch_lambda);
+                let diff_total = diff.rebalance_cost + penalty(diff_lambda);
+                if diff_total <= scratch_total {
+                    (RepartitionStrategy::Diffusive, diff)
+                } else {
+                    (RepartitionStrategy::Scratch, scratch)
+                }
+            }
         }
     }
 }
@@ -221,6 +457,7 @@ mod tests {
         let pipe = RebalancePipeline::from_method("PHG/HSFC", 4).unwrap();
         let rep = pipe.rebalance(&mut mesh, &leaves, &weights);
         assert_eq!(rep.method, "PHG/HSFC");
+        assert_eq!(rep.strategy, RepartitionStrategy::Scratch);
         assert!(rep.lambda_before > 1.3, "skew missing: {}", rep.lambda_before);
         assert!(rep.lambda_after < 1.2, "lambda {}", rep.lambda_after);
         assert!(rep.lambda_after <= rep.lambda_before);
@@ -235,6 +472,29 @@ mod tests {
         // owners really were rewritten
         let lam = pipe.dist.imbalance(&mesh, &leaves, &weights);
         assert!((lam - rep.lambda_after).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diffusive_rebalance_runs_without_remap_phase() {
+        let (mut mesh, leaves) = skewed(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("PHG/HSFC", 4)
+            .unwrap()
+            .with_strategy(RepartitionStrategy::Diffusive);
+        let rep = pipe.rebalance(&mut mesh, &leaves, &weights);
+        assert_eq!(rep.method, "Diffusion");
+        assert_eq!(rep.strategy, RepartitionStrategy::Diffusive);
+        assert!(rep.lambda_after < 1.1, "lambda {}", rep.lambda_after);
+        assert_eq!(rep.remap_comm_modeled, 0.0, "diffusion has no remap");
+        assert!(rep.volume.total_v > 0.0);
+        assert!(
+            (rep.remap_kept_fraction - (1.0 - rep.volume.moved_fraction)).abs() < 1e-12
+        );
+        // one Allreduce + one AllToAllV, nothing else
+        assert!(rep
+            .comm_log
+            .iter()
+            .all(|op| matches!(op, CommOp::Allreduce { .. } | CommOp::AllToAllV { .. })));
     }
 
     #[test]
@@ -262,5 +522,67 @@ mod tests {
         // the wall estimate adds straight into the cost
         let est3 = pipe.estimate(&mesh, &leaves, &weights, 1.0, 0.5);
         assert!((est3.rebalance_cost - est1.rebalance_cost - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diffusive_estimate_is_cheaper_on_local_skew() {
+        // a single overloaded rank next to its underloaded neighbours:
+        // the diffusive path prices one Allreduce + a flow-sized
+        // AllToAllV against scratch's Scan+Gather+Bcast+AllToAllV and
+        // must come out cheaper per event
+        let (mesh, leaves) = skewed(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("PHG/HSFC", 4)
+            .unwrap()
+            .with_strategy(RepartitionStrategy::Auto);
+        let (scratch, _) = pipe.estimate_for(
+            RepartitionStrategy::Scratch,
+            &mesh,
+            &leaves,
+            &weights,
+            0.0,
+            1e-3, // a realistic measured partitioner wall
+        );
+        let (diff, lambda_after) = pipe.estimate_for(
+            RepartitionStrategy::Diffusive,
+            &mesh,
+            &leaves,
+            &weights,
+            0.0,
+            1e-3,
+        );
+        assert!(
+            diff.rebalance_cost < scratch.rebalance_cost,
+            "diffusive {} !< scratch {}",
+            diff.rebalance_cost,
+            scratch.rebalance_cost
+        );
+        assert!(lambda_after < 1.05, "flow left lambda {lambda_after}");
+        assert_eq!(
+            pipe.resolve_strategy(&mesh, &leaves, &weights, 0.0, 1e-3),
+            RepartitionStrategy::Diffusive
+        );
+    }
+
+    #[test]
+    fn auto_falls_back_to_scratch_when_sweep_budget_cannot_balance() {
+        // starve the diffusion of sweeps on a multi-hop imbalance: the
+        // residual-lambda penalty then prices the diffusive path out
+        let (mesh, leaves) = skewed(8);
+        let weights = vec![1.0f64; leaves.len()];
+        let mut pipe = RebalancePipeline::from_method("PHG/HSFC", 8)
+            .unwrap()
+            .with_strategy(RepartitionStrategy::Auto);
+        pipe.diffusion.max_sweeps = 1;
+        // huge solve time: residual imbalance is expensive
+        let chosen = pipe.resolve_strategy(&mesh, &leaves, &weights, 10.0, 1e-3);
+        assert_eq!(chosen, RepartitionStrategy::Scratch);
+        // with a generous sweep budget the flow balances (tight
+        // tolerance, so the residual penalty vanishes) and diffusion
+        // wins again
+        pipe.diffusion.max_sweeps = 4096;
+        pipe.diffusion.lambda_tol = 1e-6;
+        let chosen = pipe.resolve_strategy(&mesh, &leaves, &weights, 10.0, 1e-3);
+        assert_eq!(chosen, RepartitionStrategy::Diffusive);
     }
 }

@@ -7,64 +7,83 @@
 //! RIB and Mitchell-RT were reachable by name but missing from the
 //! lineup. [`METHODS`] is now the only source of truth: the paper's
 //! six-method lineup in Table-1 presentation order, followed by the
-//! ablation-only methods.
+//! ablation-only methods (including the diffusive incremental
+//! repartitioner that backs the `Diffusive`/`Auto` strategies).
 
+use crate::bail;
 use crate::partition::{
-    graph::MultilevelGraph, mitchell::MitchellRefinementTree, rcb::Rcb, rib::Rib,
-    rtk::RefinementTree, sfc::SfcPartitioner, Partitioner,
+    diffusion::DiffusionRepartitioner, graph::MultilevelGraph, mitchell::MitchellRefinementTree,
+    rcb::Rcb, rib::Rib, rtk::RefinementTree, sfc::SfcPartitioner, Partitioner,
 };
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 /// One registered method: its paper name, whether it belongs to the
-/// §3 experiment lineup, and its constructor.
+/// §3 experiment lineup, a one-line description (the `phg-dlb methods`
+/// listing), and its constructor.
 pub struct MethodSpec {
     pub name: &'static str,
     /// In the paper's six-method comparison (Tables 1-3, Figs 3.2-3.5).
     pub in_lineup: bool,
+    /// One-line description for listings and docs.
+    pub description: &'static str,
     pub make: fn() -> Box<dyn Partitioner>,
 }
 
 /// Every method, lineup first (Table-1 presentation order), then the
 /// ablation-only extras.
-pub const METHODS: [MethodSpec; 8] = [
+pub const METHODS: [MethodSpec; 9] = [
     MethodSpec {
         name: "RCB",
         in_lineup: true,
+        description: "recursive coordinate bisection (Zoltan-style geometric baseline)",
         make: || Box::new(Rcb::new()),
     },
     MethodSpec {
         name: "ParMETIS",
         in_lineup: true,
+        description: "multilevel k-way partitioning of the dual graph (ParMETIS stand-in)",
         make: || Box::new(MultilevelGraph::parmetis_like()),
     },
     MethodSpec {
         name: "RTK",
         in_lineup: true,
+        description: "refinement-tree partitioner, prefix-sum formulation (paper §2.1)",
         make: || Box::new(RefinementTree::new()),
     },
     MethodSpec {
         name: "MSFC",
         in_lineup: true,
+        description: "Morton SFC with aspect-preserving normalization (paper §2.2)",
         make: || Box::new(SfcPartitioner::msfc()),
     },
     MethodSpec {
         name: "PHG/HSFC",
         in_lineup: true,
+        description: "Hilbert SFC with PHG's aspect-preserving normalization (paper §2.2)",
         make: || Box::new(SfcPartitioner::phg_hsfc()),
     },
     MethodSpec {
         name: "Zoltan/HSFC",
         in_lineup: true,
+        description: "Hilbert SFC with Zoltan's per-axis normalization (paper §2.2)",
         make: || Box::new(SfcPartitioner::zoltan_hsfc()),
+    },
+    MethodSpec {
+        name: "Diffusion",
+        in_lineup: false,
+        description: "diffusive incremental repartitioning on the rank chain (DESIGN.md §7)",
+        make: || Box::new(DiffusionRepartitioner::new()),
     },
     MethodSpec {
         name: "RIB",
         in_lineup: false,
+        description: "recursive inertial bisection (geometric ablation baseline)",
         make: || Box::new(Rib::new()),
     },
     MethodSpec {
         name: "Mitchell-RT",
         in_lineup: false,
+        description: "Mitchell's original refinement-tree bisection (§2.1 ablation)",
         make: || Box::new(MitchellRefinementTree::new()),
     },
 ];
@@ -107,6 +126,15 @@ impl Registry {
             .map(|m| (m.make)())
             .collect()
     }
+
+    /// Every spec in sorted (byte-order) name order: the deterministic
+    /// listing that `phg-dlb methods` prints, so CI log diffs and docs
+    /// stay stable across registry edits.
+    pub fn sorted_specs() -> Vec<&'static MethodSpec> {
+        let mut specs: Vec<&'static MethodSpec> = METHODS.iter().collect();
+        specs.sort_by_key(|m| m.name);
+        specs
+    }
 }
 
 #[cfg(test)]
@@ -118,9 +146,11 @@ mod tests {
         for spec in &METHODS {
             let p = Registry::create(spec.name).unwrap();
             assert_eq!(p.name(), spec.name, "registry name mismatch");
+            assert!(!spec.description.is_empty(), "{} undescribed", spec.name);
         }
         assert!(Registry::create("RIB").is_ok());
         assert!(Registry::create("Mitchell-RT").is_ok());
+        assert!(Registry::create("Diffusion").is_ok());
     }
 
     #[test]
@@ -142,6 +172,15 @@ mod tests {
         assert_eq!(lineup.len(), 6);
         for (p, name) in lineup.iter().zip(Registry::paper_names()) {
             assert_eq!(p.name(), name);
+        }
+    }
+
+    #[test]
+    fn sorted_specs_are_sorted_and_complete() {
+        let specs = Registry::sorted_specs();
+        assert_eq!(specs.len(), METHODS.len());
+        for w in specs.windows(2) {
+            assert!(w[0].name < w[1].name, "{} !< {}", w[0].name, w[1].name);
         }
     }
 }

@@ -1,0 +1,89 @@
+//! Repartitioning strategies: *how* a rebalance produces the new
+//! partition (DESIGN.md §7).
+//!
+//! The paper's pipeline always partitions from scratch and then glues
+//! the result to an Oliker-Biswas remap; ParMETIS's `AdaptiveRepart`
+//! lineage (unified repartitioning, URP) shows the real design space is
+//! scratch-vs-diffusive, traded per event. This module names that
+//! choice; the mechanics live in
+//! [`crate::partition::diffusion`] and
+//! [`crate::dlb::RebalancePipeline`].
+
+use crate::bail;
+use crate::util::error::Result;
+use std::fmt;
+
+/// Which repartitioning path [`crate::dlb::RebalancePipeline::rebalance`]
+/// takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepartitionStrategy {
+    /// Today's path: full partition from scratch, then the
+    /// Oliker-Biswas remap, then migration.
+    Scratch,
+    /// Diffusive incremental repartitioning: move load along the rank
+    /// chain from the *current* distribution; migration volume is
+    /// minimized by construction and no remap phase is needed.
+    Diffusive,
+    /// URP-style per-event selection: price both paths with the
+    /// network model and run whichever is modeled cheaper.
+    Auto,
+}
+
+impl RepartitionStrategy {
+    /// Stable lowercase name (config/CLI spelling and report label).
+    pub fn name(self) -> &'static str {
+        match self {
+            RepartitionStrategy::Scratch => "scratch",
+            RepartitionStrategy::Diffusive => "diffusive",
+            RepartitionStrategy::Auto => "auto",
+        }
+    }
+
+    /// Parse a config/CLI spec. Unknown specs error with the valid
+    /// names.
+    pub fn parse(spec: &str) -> Result<Self> {
+        match spec {
+            "scratch" => Ok(RepartitionStrategy::Scratch),
+            "diffusive" => Ok(RepartitionStrategy::Diffusive),
+            "auto" => Ok(RepartitionStrategy::Auto),
+            other => bail!("unknown strategy {other:?}; valid: scratch, diffusive, auto"),
+        }
+    }
+
+    /// Every strategy, in documentation order.
+    pub fn all() -> [RepartitionStrategy; 3] {
+        [
+            RepartitionStrategy::Scratch,
+            RepartitionStrategy::Diffusive,
+            RepartitionStrategy::Auto,
+        ]
+    }
+}
+
+impl fmt::Display for RepartitionStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_strategy() {
+        for s in RepartitionStrategy::all() {
+            assert_eq!(RepartitionStrategy::parse(s.name()).unwrap(), s);
+            assert_eq!(format!("{s}"), s.name());
+        }
+    }
+
+    #[test]
+    fn unknown_spec_lists_valid_names() {
+        let err = RepartitionStrategy::parse("urp").unwrap_err().to_string();
+        assert!(err.contains("urp"), "{err}");
+        for s in RepartitionStrategy::all() {
+            assert!(err.contains(s.name()), "{err}");
+        }
+    }
+}

@@ -17,7 +17,8 @@
 //!   modeled solve time recovered by restoring balance over a
 //!   lookahead horizon of steps.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, format_err};
 
 /// A-priori modeled economics of rebalancing *now*, produced by
 /// [`crate::dlb::RebalancePipeline::estimate`].
@@ -148,7 +149,7 @@ pub fn trigger_by_name(spec: &str, default_lambda: f64) -> Result<Box<dyn Trigge
             let t = match param {
                 Some(p) => p
                     .parse::<f64>()
-                    .map_err(|_| anyhow!("trigger {spec:?}: bad float threshold"))?,
+                    .map_err(|_| format_err!("trigger {spec:?}: bad float threshold"))?,
                 None => default_lambda,
             };
             Ok(Box::new(LambdaThreshold { lambda: t }))
@@ -157,7 +158,7 @@ pub fn trigger_by_name(spec: &str, default_lambda: f64) -> Result<Box<dyn Trigge
             let n = match param {
                 Some(p) => p
                     .parse::<usize>()
-                    .map_err(|_| anyhow!("trigger {spec:?}: bad integer interval"))?,
+                    .map_err(|_| format_err!("trigger {spec:?}: bad integer interval"))?,
                 None => 1,
             };
             Ok(Box::new(AfterAdaptation::new(n)))
@@ -167,7 +168,7 @@ pub fn trigger_by_name(spec: &str, default_lambda: f64) -> Result<Box<dyn Trigge
             let h = match param {
                 Some(p) => p
                     .parse::<usize>()
-                    .map_err(|_| anyhow!("trigger {spec:?}: bad integer horizon"))?,
+                    .map_err(|_| format_err!("trigger {spec:?}: bad integer horizon"))?,
                 None => 8,
             };
             Ok(Box::new(CostBenefit { horizon: h.max(1) }))

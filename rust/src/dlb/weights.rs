@@ -17,9 +17,10 @@
 //! All models return weights normalized to mean 1.0, so lambda values
 //! and migration volumes stay comparable across models.
 
+use crate::bail;
 use crate::mesh::{ElemId, TetMesh, NONE};
+use crate::util::error::Result;
 use crate::util::hash::{FxHashMap, FxHashSet};
-use anyhow::{bail, Result};
 
 /// A pluggable notion of per-element computational load.
 pub trait WeightModel: Send + Sync {

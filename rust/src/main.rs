@@ -8,16 +8,17 @@
 //! phg-dlb methods | info
 //! ```
 
-use anyhow::{anyhow, Result};
 use phg_dlb::config::Config;
 use phg_dlb::coordinator::AdaptiveDriver;
 use phg_dlb::dist::Distribution;
-use phg_dlb::dlb::{Registry, METHODS};
+use phg_dlb::dlb::{Registry, RepartitionStrategy};
+use phg_dlb::format_err;
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::mesh::TetMesh;
 use phg_dlb::partition::{metrics, PartitionInput};
 use phg_dlb::runtime::Runtime;
+use phg_dlb::util::error::Result;
 use phg_dlb::util::timer::Stopwatch;
 
 fn make_domain(cfg: &Config) -> Result<TetMesh> {
@@ -27,7 +28,7 @@ fn make_domain(cfg: &Config) -> Result<TetMesh> {
     let mut mesh = match domain.as_str() {
         "cube" => generator::cube_mesh(scale.max(1) * 2),
         "cylinder" => generator::omega1_cylinder(scale.max(2)),
-        other => return Err(anyhow!("unknown domain {other} (cube|cylinder)")),
+        other => return Err(format_err!("unknown domain {other} (cube|cylinder)")),
     };
     for _ in 0..refine {
         let leaves = mesh.leaves_unordered();
@@ -52,7 +53,7 @@ fn cmd_run(cfg: &Config) -> Result<()> {
     match problem.as_str() {
         "helmholtz" => driver.run_helmholtz(),
         "parabolic" => driver.run_parabolic(0.0),
-        other => return Err(anyhow!("unknown problem {other} (helmholtz|parabolic)")),
+        other => return Err(format_err!("unknown problem {other} (helmholtz|parabolic)")),
     }
     let wall = sw.elapsed();
 
@@ -175,7 +176,7 @@ fn run() -> Result<()> {
     if let Some(i) = args.iter().position(|a| a == "--config") {
         let path = args
             .get(i + 1)
-            .ok_or_else(|| anyhow!("--config needs a path"))?;
+            .ok_or_else(|| format_err!("--config needs a path"))?;
         cfg = Config::load(std::path::Path::new(path))?;
     }
     let rest = cfg.apply_args(&args)?;
@@ -185,12 +186,19 @@ fn run() -> Result<()> {
         "partition" => cmd_partition(&cfg),
         "compare" => cmd_compare(&cfg),
         "methods" => {
-            for m in &METHODS {
+            // sorted + described, so CI log diffs and docs stay stable
+            println!("methods:");
+            for m in Registry::sorted_specs() {
                 println!(
-                    "{}{}",
+                    "  {:<12} {}{}",
                     m.name,
-                    if m.in_lineup { "" } else { "  (ablation only)" }
+                    m.description,
+                    if m.in_lineup { "" } else { "  [ablation only]" }
                 );
+            }
+            println!("\nstrategies (--strategy, DESIGN.md \u{a7}7):");
+            for s in RepartitionStrategy::all() {
+                println!("  {}", s.name());
             }
             Ok(())
         }
@@ -201,6 +209,7 @@ fn run() -> Result<()> {
                  keys: problem domain scale prerefine method nparts nsteps dt\n\
                  \x20     trigger (lambda[:t]|every[:n]|always|costbenefit[:h])\n\
                  \x20     weights (unit|dof|measured)\n\
+                 \x20     strategy (scratch|diffusive|auto)\n\
                  \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
                  \x20     solver_tol solver_max_iter use_pjrt csv config"
             );

@@ -11,6 +11,10 @@
 //!   (the Zoltan-style geometric baselines).
 //! * [`graph`] -- a multilevel k-way graph partitioner over the dual
 //!   graph (the ParMETIS stand-in).
+//! * [`diffusion`] -- diffusive incremental repartitioning from the
+//!   *current* distribution (the ParMETIS `AdaptiveRepart` family):
+//!   the migration-minimizing alternative the `Diffusive`/`Auto`
+//!   strategies of [`crate::dlb::RebalancePipeline`] run.
 //! * [`metrics`] -- partition quality measures (imbalance, edge cut,
 //!   interface faces, TotalV/MaxV migration volumes).
 //!
@@ -19,6 +23,7 @@
 //! version of the algorithm would have performed; the [`crate::dist`]
 //! layer prices those against its alpha-beta network model.
 
+pub mod diffusion;
 pub mod graph;
 pub mod metrics;
 pub mod mitchell;

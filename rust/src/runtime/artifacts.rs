@@ -3,7 +3,8 @@
 //! Line format: `name kind file key=value...`, e.g.
 //! `cg_step_n4096_w32 cg_step cg_step_n4096_w32.hlo.txt n=4096 w=32`.
 
-use anyhow::{anyhow, Context, Result};
+use crate::format_err;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -35,21 +36,21 @@ impl Manifest {
             let mut it = line.split_whitespace();
             let name = it
                 .next()
-                .ok_or_else(|| anyhow!("manifest line {lineno}: missing name"))?
+                .ok_or_else(|| format_err!("manifest line {lineno}: missing name"))?
                 .to_string();
             let kind = it
                 .next()
-                .ok_or_else(|| anyhow!("manifest line {lineno}: missing kind"))?
+                .ok_or_else(|| format_err!("manifest line {lineno}: missing kind"))?
                 .to_string();
             let file = it
                 .next()
-                .ok_or_else(|| anyhow!("manifest line {lineno}: missing file"))?
+                .ok_or_else(|| format_err!("manifest line {lineno}: missing file"))?
                 .to_string();
             let mut params = HashMap::new();
             for kv in it {
                 let (k, v) = kv
                     .split_once('=')
-                    .ok_or_else(|| anyhow!("manifest line {lineno}: bad param {kv}"))?;
+                    .ok_or_else(|| format_err!("manifest line {lineno}: bad param {kv}"))?;
                 params.insert(k.to_string(), v.parse::<usize>()?);
             }
             entries.push(ArtifactEntry {

@@ -10,7 +10,8 @@
 //! device buffers across iterations (`execute_b`), so each iteration
 //! moves only the four state vectors.
 
-use anyhow::{anyhow, Result};
+use crate::format_err;
+use crate::util::error::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
@@ -52,7 +53,7 @@ impl Runtime {
     /// Open the runtime against an artifact directory.
     pub fn new(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format_err!("PJRT cpu client: {e:?}"))?;
         Ok(Self {
             client,
             manifest,
@@ -64,7 +65,7 @@ impl Runtime {
     /// Open against the default artifact location.
     pub fn open_default() -> Result<Self> {
         let dir = find_artifacts_dir()
-            .ok_or_else(|| anyhow!("artifacts not found: run `make artifacts`"))?;
+            .ok_or_else(|| format_err!("artifacts not found: run `make artifacts`"))?;
         Self::new(&dir)
     }
 
@@ -96,14 +97,14 @@ impl Runtime {
             return Ok(e.clone());
         }
         let proto = xla::HloModuleProto::from_text_file(
-            file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            file.to_str().ok_or_else(|| format_err!("non-utf8 path"))?,
         )
-        .map_err(|e| anyhow!("parse {}: {e:?}", file.display()))?;
+        .map_err(|e| format_err!("parse {}: {e:?}", file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            .map_err(|e| format_err!("compile {name}: {e:?}"))?;
         let exe = Rc::new(exe);
         self.exes.borrow_mut().insert(name.to_string(), exe.clone());
         *self.compile_count.borrow_mut() += 1;
@@ -114,7 +115,7 @@ impl Runtime {
         let entry = self
             .manifest
             .find(kind, param, value)
-            .ok_or_else(|| anyhow!("no {kind} artifact with {param}={value}"))?;
+            .ok_or_else(|| format_err!("no {kind} artifact with {param}={value}"))?;
         let path = self.manifest.hlo_path(entry);
         self.executable(&entry.name.clone(), &path)
     }
@@ -127,7 +128,7 @@ impl Runtime {
         assert_eq!(fvals.len(), n * 4);
         let ladder = self.elem_ladder();
         let rung = next_rung(&ladder, n)
-            .ok_or_else(|| anyhow!("element batch {n} exceeds largest rung {ladder:?}"))?;
+            .ok_or_else(|| format_err!("element batch {n} exceeds largest rung {ladder:?}"))?;
         let exe = self.kind_exe("elem_tet", "batch", rung)?;
 
         let mut c = coords.to_vec();
@@ -137,22 +138,22 @@ impl Runtime {
 
         let lc = xla::Literal::vec1(&c)
             .reshape(&[rung as i64, 4, 3])
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let lf = xla::Literal::vec1(&f)
             .reshape(&[rung as i64, 4])
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let result = exe
             .execute::<xla::Literal>(&[lc, lf])
-            .map_err(|e| anyhow!("elem_tet execute: {e:?}"))?[0][0]
+            .map_err(|e| format_err!("elem_tet execute: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| format_err!("{e:?}"))?;
         if parts.len() != 3 {
-            return Err(anyhow!("elem_tet returned {} outputs", parts.len()));
+            return Err(format_err!("elem_tet returned {} outputs", parts.len()));
         }
-        let mut k = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let mut m = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let mut b = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let mut k = parts[0].to_vec::<f32>().map_err(|e| format_err!("{e:?}"))?;
+        let mut m = parts[1].to_vec::<f32>().map_err(|e| format_err!("{e:?}"))?;
+        let mut b = parts[2].to_vec::<f32>().map_err(|e| format_err!("{e:?}"))?;
         k.truncate(n * 16);
         m.truncate(n * 16);
         b.truncate(n * 4);
@@ -178,14 +179,14 @@ impl Runtime {
         let to_buf_f32 = |data: &[f32], dims: &[usize]| -> Result<xla::PjRtBuffer> {
             self.client
                 .buffer_from_host_buffer(data, dims, Some(dev))
-                .map_err(|e| anyhow!("stage buffer: {e:?}"))
+                .map_err(|e| format_err!("stage buffer: {e:?}"))
         };
         let vals_b = to_buf_f32(vals, &[n_pad, w])?;
         let dinv_b = to_buf_f32(diag_inv, &[n_pad])?;
         let cols_b = self
             .client
             .buffer_from_host_buffer(cols, &[n_pad, w], Some(dev))
-            .map_err(|e| anyhow!("stage cols: {e:?}"))?;
+            .map_err(|e| format_err!("stage cols: {e:?}"))?;
         Ok(CgBuffers {
             exe,
             vals: vals_b,
@@ -203,18 +204,18 @@ impl Runtime {
         let exe = self.kind_exe("spmv", "n", n_pad)?;
         let lv = xla::Literal::vec1(vals)
             .reshape(&[n_pad as i64, w as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let lc = xla::Literal::vec1(cols)
             .reshape(&[n_pad as i64, w as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let lx = xla::Literal::vec1(x);
         let result = exe
             .execute::<xla::Literal>(&[lv, lc, lx])
-            .map_err(|e| anyhow!("spmv execute: {e:?}"))?[0][0]
+            .map_err(|e| format_err!("spmv execute: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+            .map_err(|e| format_err!("{e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| format_err!("{e:?}"))?;
+        parts[0].to_vec::<f32>().map_err(|e| format_err!("{e:?}"))
     }
 }
 
@@ -237,16 +238,16 @@ impl CgBuffers {
         let dev = &client.devices()[0];
         let xb = client
             .buffer_from_host_buffer(x, &[n], Some(dev))
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let rb = client
             .buffer_from_host_buffer(r, &[n], Some(dev))
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let pb = client
             .buffer_from_host_buffer(p, &[n], Some(dev))
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let rzb = client
             .buffer_from_host_buffer(&[rz], &[], Some(dev))
-            .map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
         let result = self
             .exe
             .execute_b::<&xla::PjRtBuffer>(&[
@@ -258,23 +259,23 @@ impl CgBuffers {
                 &pb,
                 &rzb,
             ])
-            .map_err(|e| anyhow!("cg_step execute: {e:?}"))?[0][0]
+            .map_err(|e| format_err!("cg_step execute: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            .map_err(|e| format_err!("{e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| format_err!("{e:?}"))?;
         if parts.len() != 5 {
-            return Err(anyhow!("cg_step returned {} outputs", parts.len()));
+            return Err(format_err!("cg_step returned {} outputs", parts.len()));
         }
         Ok(CgStepOut {
-            x: parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            r: parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            p: parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            x: parts[0].to_vec::<f32>().map_err(|e| format_err!("{e:?}"))?,
+            r: parts[1].to_vec::<f32>().map_err(|e| format_err!("{e:?}"))?,
+            p: parts[2].to_vec::<f32>().map_err(|e| format_err!("{e:?}"))?,
             rz: parts[3]
                 .get_first_element::<f32>()
-                .map_err(|e| anyhow!("{e:?}"))?,
+                .map_err(|e| format_err!("{e:?}"))?,
             rnorm2: parts[4]
                 .get_first_element::<f32>()
-                .map_err(|e| anyhow!("{e:?}"))?,
+                .map_err(|e| format_err!("{e:?}"))?,
         })
     }
 }

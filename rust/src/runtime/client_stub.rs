@@ -1,0 +1,109 @@
+//! Stub PJRT client, compiled when the `pjrt` cargo feature is off
+//! (the default). The real client (`client.rs`) binds the unvendored
+//! `xla` crate; this stub carries the identical public surface but its
+//! constructors always error, so [`Runtime`] can never be obtained and
+//! every caller takes its native-engine fallback path
+//! (`Runtime::open_default().ok()` is `None` everywhere).
+
+use super::artifacts::Manifest;
+use crate::util::error::{Error, Result};
+use std::cell::RefCell;
+use std::path::Path;
+
+const DISABLED: &str = "PJRT runtime disabled: built without the `pjrt` cargo feature \
+     (the `xla` crate is not vendored); native engines are used instead";
+
+/// Unconstructible placeholder for the PJRT runtime.
+pub struct Runtime {
+    manifest: Manifest,
+    /// executables compiled so far (always 0 in the stub)
+    pub compile_count: RefCell<usize>,
+}
+
+/// Batched element matrices result (flattened f32, row-major).
+#[derive(Debug, Clone)]
+pub struct ElemBatchOut {
+    /// (B,4,4) stiffness
+    pub k: Vec<f32>,
+    /// (B,4,4) mass
+    pub m: Vec<f32>,
+    /// (B,4) load
+    pub b: Vec<f32>,
+}
+
+/// One CG iteration's outputs.
+#[derive(Debug, Clone)]
+pub struct CgStepOut {
+    pub x: Vec<f32>,
+    pub r: Vec<f32>,
+    pub p: Vec<f32>,
+    pub rz: f32,
+    pub rnorm2: f32,
+}
+
+impl Runtime {
+    pub fn new(_dir: &Path) -> Result<Self> {
+        Err(Error::msg(DISABLED))
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Err(Error::msg(DISABLED))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn elem_ladder(&self) -> Vec<usize> {
+        self.manifest.ladder("elem_tet", "batch")
+    }
+
+    pub fn cg_ladder(&self) -> Vec<usize> {
+        self.manifest.ladder("cg_step", "n")
+    }
+
+    pub fn ell_width(&self) -> usize {
+        32
+    }
+
+    pub fn elem_tet(&self, _coords: &[f32], _fvals: &[f32], _n: usize) -> Result<ElemBatchOut> {
+        Err(Error::msg(DISABLED))
+    }
+
+    pub fn stage_cg(
+        &self,
+        _vals: &[f32],
+        _cols: &[i32],
+        _diag_inv: &[f32],
+        _n_pad: usize,
+    ) -> Result<CgBuffers> {
+        Err(Error::msg(DISABLED))
+    }
+
+    pub fn spmv(&self, _vals: &[f32], _cols: &[i32], _x: &[f32], _n_pad: usize) -> Result<Vec<f32>> {
+        Err(Error::msg(DISABLED))
+    }
+}
+
+/// Placeholder for a staged CG system (never constructed).
+pub struct CgBuffers {
+    pub n_pad: usize,
+}
+
+impl CgBuffers {
+    pub fn step(&self, _x: &[f32], _r: &[f32], _p: &[f32], _rz: f32) -> Result<CgStepOut> {
+        Err(Error::msg(DISABLED))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_is_unobtainable() {
+        let err = Runtime::open_default().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        assert!(Runtime::new(Path::new("/nonexistent")).is_err());
+    }
+}

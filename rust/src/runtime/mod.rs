@@ -10,10 +10,16 @@
 //! binary is self-contained.
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod client;
+#[cfg(not(feature = "pjrt"))]
+mod client_stub;
 
 pub use artifacts::{find_artifacts_dir, ArtifactEntry, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::{CgBuffers, CgStepOut, ElemBatchOut, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use client_stub::{CgBuffers, CgStepOut, ElemBatchOut, Runtime};
 
 /// Pick the smallest rung >= `n` from a sorted ladder.
 pub fn next_rung(ladder: &[usize], n: usize) -> Option<usize> {

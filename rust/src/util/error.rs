@@ -1,0 +1,134 @@
+//! Minimal error handling for the crate: a message-carrying error
+//! type, a `Result` alias, a `Context` extension trait, and the
+//! [`format_err!`]/[`bail!`] macros.
+//!
+//! This replaces the crate's earlier `anyhow` dependency. The build
+//! environment has no crates.io access, so the crate must be hermetic:
+//! zero external dependencies, a trivially-correct committed
+//! `Cargo.lock`, and a CI build that never touches the network.
+//! Errors here are plain formatted messages -- exactly how the crate
+//! used `anyhow` -- so nothing is lost at the call sites.
+//!
+//! [`format_err!`]: crate::format_err
+//! [`bail!`]: crate::bail
+
+use std::fmt;
+
+/// A string-message error. Construct with [`Error::msg`] or the
+/// [`crate::format_err!`] macro; chain context with [`Context`].
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug prints the message (not a struct dump) so `unwrap()`/`expect()`
+// panics and `{e:?}` logs stay readable, as they were under anyhow.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result type (error defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach a message in front of an underlying error, `anyhow`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f().into())))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("bad {} of {}", "state", 42)
+    }
+
+    #[test]
+    fn display_and_debug_show_the_message() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "bad state of 42");
+        assert_eq!(format!("{e:?}"), "bad state of 42");
+        assert_eq!(format!("{e:#}"), "bad state of 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.with_context(|| "reading manifest".to_string()).unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("reading manifest: "), "{s}");
+        assert!(s.contains("gone"), "{s}");
+    }
+}

@@ -1,6 +1,8 @@
 //! Foundation utilities: deterministic PRNGs, timers, statistics, a
-//! radix sort for SFC keys, and a tiny property-testing harness.
+//! radix sort for SFC keys, a tiny property-testing harness, and the
+//! crate's dependency-free error type.
 
+pub mod error;
 pub mod hash;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,267 @@
+//! Subsystem tests for diffusive incremental repartitioning: flow
+//! conservation, convergence under the trigger threshold, the
+//! migration bound, the acceptance comparison against scratch+remap on
+//! mild skew, and the `Auto` strategy's per-event selection.
+
+use phg_dlb::dist::Distribution;
+use phg_dlb::dlb::{RebalancePipeline, RepartitionStrategy};
+use phg_dlb::mesh::{generator, ElemId, TetMesh};
+use phg_dlb::partition::diffusion::{chain_loads, solve_flow, DiffusionRepartitioner};
+use phg_dlb::partition::metrics::migration_volume;
+use phg_dlb::partition::{PartitionInput, Partitioner};
+use phg_dlb::util::stats::imbalance;
+
+fn owners_of(mesh: &TetMesh, leaves: &[ElemId]) -> Vec<u16> {
+    leaves.iter().map(|&id| mesh.elem(id).owner).collect()
+}
+
+fn rank_loads(parts: &[u16], weights: &[f64], p: usize) -> Vec<f64> {
+    let mut l = vec![0.0; p];
+    for (&r, &w) in parts.iter().zip(weights) {
+        l[r as usize] += w;
+    }
+    l
+}
+
+/// Mild *scattered* skew: every other rank refines every third of its
+/// elements once -- many small local surpluses, the diffusion-friendly
+/// regime.
+fn mild_scattered(nparts: usize) -> (TetMesh, Vec<ElemId>) {
+    let mut mesh = generator::cube_mesh(4);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    let marked: Vec<_> = mesh
+        .leaves_unordered()
+        .into_iter()
+        .enumerate()
+        .filter(|(i, id)| mesh.elem(*id).owner % 2 == 0 && i % 3 == 0)
+        .map(|(_, id)| id)
+        .collect();
+    mesh.refine(&marked);
+    let leaves = mesh.leaves_unordered();
+    (mesh, leaves)
+}
+
+/// Severe refinement front: one end of the block distribution refined
+/// twice -- a deep, distant surplus that must travel many chain hops.
+fn refinement_front(nparts: usize) -> (TetMesh, Vec<ElemId>) {
+    let mut mesh = generator::cube_mesh(3);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    for _ in 0..2 {
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .filter(|&id| mesh.elem(id).owner == 0)
+            .collect();
+        mesh.refine(&marked);
+    }
+    let leaves = mesh.leaves_unordered();
+    (mesh, leaves)
+}
+
+#[test]
+fn diffusion_flow_conserves_total_load() {
+    let (mesh, leaves) = mild_scattered(8);
+    let weights = vec![1.0f64; leaves.len()];
+    let owners = owners_of(&mesh, &leaves);
+    let (_, chain) = chain_loads(&mesh, &leaves, &owners, &weights, 8);
+    let total_before: f64 = chain.iter().sum();
+    let flow = solve_flow(&chain, 4096, 1e-6);
+    let total_after: f64 = flow.loads_after.iter().sum();
+    assert!(
+        (total_after - total_before).abs() < 1e-9 * total_before,
+        "flow lost load: {total_before} -> {total_after}"
+    );
+    // and the realized partition conserves it too (it only relabels)
+    let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 8);
+    let r = DiffusionRepartitioner::new().partition(&input);
+    let realized: f64 = rank_loads(&r.parts, &weights, 8).iter().sum();
+    assert!((realized - total_before).abs() < 1e-9 * total_before);
+}
+
+#[test]
+fn diffusion_beats_trigger_threshold_on_two_rank_step() {
+    // two ranks, one refined: the canonical step imbalance. A small
+    // sweep budget must already land under the lambda = 1.1 trigger.
+    let mut mesh = generator::cube_mesh(3);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(2).assign_blocks(&mut mesh, &leaves);
+    let marked: Vec<_> = mesh
+        .leaves_unordered()
+        .into_iter()
+        .filter(|&id| mesh.elem(id).owner == 0)
+        .collect();
+    mesh.refine(&marked);
+    let leaves = mesh.leaves_unordered();
+    let weights = vec![1.0f64; leaves.len()];
+    let owners = owners_of(&mesh, &leaves);
+    let before = imbalance(&rank_loads(&owners, &weights, 2));
+    assert!(before > 1.2, "skew not induced: {before}");
+
+    let d = DiffusionRepartitioner {
+        max_sweeps: 8,
+        lambda_tol: 0.0,
+    };
+    let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 2);
+    let r = d.partition(&input);
+    let after = imbalance(&rank_loads(&r.parts, &weights, 2));
+    assert!(after < 1.1, "lambda {after} after {} sweeps", d.max_sweeps);
+}
+
+#[test]
+fn diffusion_never_migrates_more_than_the_flow_solution() {
+    for (p, (mesh, leaves)) in [(8, mild_scattered(8)), (6, refinement_front(6))] {
+        let weights = vec![1.0f64; leaves.len()];
+        let owners = owners_of(&mesh, &leaves);
+        let d = DiffusionRepartitioner::new();
+        let (_, chain) = chain_loads(&mesh, &leaves, &owners, &weights, p);
+        let flow = solve_flow(&chain, d.max_sweeps, d.lambda_tol);
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, p);
+        let r = d.partition(&input);
+        let mv = migration_volume(&owners, &r.parts, &weights, p);
+        assert!(
+            mv.total_v <= flow.total_volume() + 1e-9,
+            "TotalV {} exceeds the flow volume {}",
+            mv.total_v,
+            flow.total_volume()
+        );
+    }
+}
+
+#[test]
+fn diffusive_matches_scratch_quality_at_half_the_migration_on_mild_skew() {
+    // the acceptance comparison: lambda within 1.1x of the scratch
+    // partitioner's while moving no more than half of scratch+remap's
+    // TotalV (ParMETIS-class scratch: global relabeling churn)
+    let nparts = 8;
+    let (mesh, leaves) = mild_scattered(nparts);
+    let weights = vec![1.0f64; leaves.len()];
+    let owners = owners_of(&mesh, &leaves);
+    let lam0 = imbalance(&rank_loads(&owners, &weights, nparts));
+    assert!(lam0 > 1.05, "mild skew missing: {lam0}");
+
+    let scratch_pipe = RebalancePipeline::from_method("ParMETIS", nparts).unwrap();
+    let mut scratch_mesh = mesh.clone();
+    let scratch = scratch_pipe.rebalance(&mut scratch_mesh, &leaves, &weights);
+
+    let diff_pipe = RebalancePipeline::from_method("ParMETIS", nparts)
+        .unwrap()
+        .with_strategy(RepartitionStrategy::Diffusive);
+    let mut diff_mesh = mesh.clone();
+    let diff = diff_pipe.rebalance(&mut diff_mesh, &leaves, &weights);
+
+    assert!(
+        diff.lambda_after <= 1.1 * scratch.lambda_after + 1e-9,
+        "diffusive lambda {} vs scratch {}",
+        diff.lambda_after,
+        scratch.lambda_after
+    );
+    assert!(
+        diff.volume.total_v <= 0.5 * scratch.volume.total_v,
+        "diffusive TotalV {} > 50% of scratch's {}",
+        diff.volume.total_v,
+        scratch.volume.total_v
+    );
+}
+
+#[test]
+fn auto_equals_the_cheaper_strategy_on_both_regimes() {
+    // mild scattered skew: the flow is short-haul, diffusion is the
+    // modeled-cheaper event and Auto must both choose it and produce
+    // exactly its rebalance
+    let nparts = 8;
+    for (scenario, (mesh, leaves)) in [
+        ("mild", mild_scattered(nparts)),
+        ("front", refinement_front(nparts)),
+    ] {
+        let weights = vec![1.0f64; leaves.len()];
+
+        let mut auto_pipe = RebalancePipeline::from_method("PHG/HSFC", nparts)
+            .unwrap()
+            .with_strategy(RepartitionStrategy::Auto);
+        if scenario == "front" {
+            // starve the sweep budget so the distant surplus cannot be
+            // evened out: the residual-lambda penalty must price the
+            // diffusive path out under a large solve time
+            auto_pipe.diffusion.max_sweeps = 1;
+        }
+        let solve_parallel = if scenario == "front" { 10.0 } else { 0.0 };
+        let chosen =
+            auto_pipe.resolve_strategy(&mesh, &leaves, &weights, solve_parallel, 1e-3);
+        let expected = if scenario == "front" {
+            RepartitionStrategy::Scratch
+        } else {
+            RepartitionStrategy::Diffusive
+        };
+        assert_eq!(chosen, expected, "scenario {scenario}");
+
+        // Auto's rebalance equals running the chosen strategy directly
+        let mut auto_mesh = mesh.clone();
+        let auto_rep = auto_pipe.rebalance_as(chosen, &mut auto_mesh, &leaves, &weights);
+        let mut direct_pipe = RebalancePipeline::from_method("PHG/HSFC", nparts)
+            .unwrap()
+            .with_strategy(chosen);
+        if scenario == "front" {
+            direct_pipe.diffusion.max_sweeps = 1;
+        }
+        let mut direct_mesh = mesh.clone();
+        let direct_rep = direct_pipe.rebalance(&mut direct_mesh, &leaves, &weights);
+        assert_eq!(auto_rep.strategy, direct_rep.strategy, "scenario {scenario}");
+        assert_eq!(auto_rep.method, direct_rep.method, "scenario {scenario}");
+        assert!(
+            (auto_rep.lambda_after - direct_rep.lambda_after).abs() < 1e-12,
+            "scenario {scenario}: {} vs {}",
+            auto_rep.lambda_after,
+            direct_rep.lambda_after
+        );
+        assert!(
+            (auto_rep.volume.total_v - direct_rep.volume.total_v).abs() < 1e-9,
+            "scenario {scenario}"
+        );
+    }
+}
+
+#[test]
+fn diffusive_driver_controls_imbalance_end_to_end() {
+    use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+    use phg_dlb::fem::SolverOpts;
+
+    let cfg = DriverConfig {
+        nparts: 4,
+        method: "PHG/HSFC".to_string(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
+        strategy: "diffusive".to_string(),
+        lambda_trigger: 1.1,
+        theta_refine: 0.5,
+        theta_coarsen: 0.0,
+        max_elements: 20_000,
+        solver: SolverOpts {
+            tol: 1e-5,
+            max_iter: 500,
+        },
+        use_pjrt: false,
+        nsteps: 3,
+        dt: 1e-3,
+    };
+    let mut d = AdaptiveDriver::new(generator::cube_mesh(2), cfg).unwrap();
+    d.run_helmholtz();
+    assert_eq!(d.timeline.records.len(), 3);
+    d.mesh.check_invariants().unwrap();
+    for r in &d.timeline.records {
+        if r.repartitioned {
+            assert_eq!(r.strategy, Some(RepartitionStrategy::Diffusive));
+            let rep = r.rebalance.as_ref().unwrap();
+            assert_eq!(rep.method, "Diffusion");
+            assert_eq!(rep.remap_comm_modeled, 0.0);
+            assert!(r.imbalance_after <= r.imbalance_before + 1e-9);
+        }
+    }
+    let last = d.timeline.records.last().unwrap();
+    assert!(
+        last.imbalance_after < 1.6,
+        "diffusive driver left lambda {}",
+        last.imbalance_after
+    );
+}

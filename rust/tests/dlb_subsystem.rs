@@ -18,6 +18,7 @@ fn cfg(method: &str, trigger: &str, weights: &str) -> DriverConfig {
         method: method.to_string(),
         trigger: trigger.to_string(),
         weights: weights.to_string(),
+        strategy: "scratch".to_string(),
         lambda_trigger: 1.1,
         theta_refine: 0.5,
         theta_coarsen: 0.0,

@@ -13,6 +13,7 @@ fn cfg(method: &str, nparts: usize, nsteps: usize) -> DriverConfig {
         method: method.to_string(),
         trigger: "lambda".to_string(),
         weights: "unit".to_string(),
+        strategy: "scratch".to_string(),
         lambda_trigger: 1.1,
         theta_refine: 0.45,
         theta_coarsen: 0.0,
