@@ -33,6 +33,7 @@ struct SweepRow {
 
 fn run_policy(method: &str, trigger: &str, weights: &str) -> SweepRow {
     let cfg = DriverConfig {
+        problem: "parabolic".to_string(),
         nparts: 32,
         method: method.to_string(),
         trigger: trigger.to_string(),
@@ -46,12 +47,12 @@ fn run_policy(method: &str, trigger: &str, weights: &str) -> SweepRow {
             tol: 1e-5,
             max_iter: 600,
         },
-        use_pjrt: true,
+        use_pjrt: cfg!(feature = "pjrt"),
         nsteps: 12,
         dt: 1.0 / 512.0,
     };
     let mut d = AdaptiveDriver::new(generator::cube_mesh(4), cfg).expect("valid policy specs");
-    d.run_parabolic(0.0);
+    d.run();
     let n = d.timeline.records.len() as f64;
     let mean_lambda = d
         .timeline

@@ -39,6 +39,7 @@ fn main() {
     );
 
     let cfg = DriverConfig {
+        problem: "helmholtz".to_string(),
         nparts: 32,
         method: method.clone(),
         trigger: "lambda".to_string(),
@@ -52,12 +53,12 @@ fn main() {
             tol: 1e-5,
             max_iter: 1500,
         },
-        use_pjrt: true,
+        use_pjrt: cfg!(feature = "pjrt"),
         nsteps,
         dt: 0.0,
     };
     let mut driver = AdaptiveDriver::new(mesh, cfg).unwrap();
-    if driver.runtime.is_none() {
+    if cfg!(feature = "pjrt") && driver.runtime.is_none() {
         eprintln!("WARNING: artifacts missing; using native engines (run `make artifacts`)");
     }
 
@@ -67,7 +68,7 @@ fn main() {
     );
     let sw = Stopwatch::start();
     for _ in 0..nsteps {
-        let more = driver.helmholtz_step();
+        let more = driver.step();
         let r = driver.timeline.records.last().unwrap();
         println!(
             "{:>4} {:>9} {:>9} {:>7.3} {:>7.3} {:>5} {:>10.1} {:>6} {:>10.3e} {:>10.3e}",

@@ -25,6 +25,7 @@ fn main() {
     let nsteps: usize = args.get(2 - 1).and_then(|s| s.parse().ok()).unwrap_or(20);
 
     let cfg = DriverConfig {
+        problem: "parabolic".to_string(),
         nparts: 16,
         method: method.clone(),
         trigger: "lambda".to_string(),
@@ -38,12 +39,12 @@ fn main() {
             tol: 1e-5,
             max_iter: 800,
         },
-        use_pjrt: true,
+        use_pjrt: cfg!(feature = "pjrt"),
         nsteps,
         dt: 1.0 / 512.0,
     };
     let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg.clone()).unwrap();
-    if driver.runtime.is_none() {
+    if cfg!(feature = "pjrt") && driver.runtime.is_none() {
         eprintln!("WARNING: artifacts missing; using native engines (run `make artifacts`)");
     }
 
@@ -54,7 +55,7 @@ fn main() {
     let sw = Stopwatch::start();
     for n in 1..=nsteps {
         let t = n as f64 * cfg.dt;
-        driver.parabolic_time_step(t);
+        driver.step();
         let r = driver.timeline.records.last().unwrap();
         let c = peak_center(t);
         println!(

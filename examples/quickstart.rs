@@ -58,9 +58,11 @@ fn main() {
         );
     }
 
-    // 3. Three adaptive Helmholtz steps with DLB (RTK method).
-    println!("\nadaptive loop (RTK, 8 virtual procs):");
+    // 3. Three adaptive steps of the `helmholtz` scenario with DLB
+    //    (RTK method); swap `problem` for any `phg-dlb methods` entry.
+    println!("\nadaptive loop (helmholtz scenario, RTK, 8 virtual procs):");
     let cfg = DriverConfig {
+        problem: "helmholtz".into(),
         nparts: 8,
         method: "RTK".into(),
         nsteps: 3,
@@ -68,7 +70,7 @@ fn main() {
         ..DriverConfig::default()
     };
     let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg).unwrap();
-    driver.run_helmholtz();
+    driver.run();
     for r in &driver.timeline.records {
         println!(
             "step {}: {} tets, {} dofs, lambda {:.3} -> {:.3}{}, solve {:.1} ms ({} iters), L2 err {:.2e}",

@@ -167,9 +167,12 @@ fn json_f64(v: Option<f64>) -> String {
     }
 }
 
-/// Write the machine-readable summary `out/BENCH_<bench>.json` that
-/// the CI bench-smoke job uploads as an artifact (the perf
-/// trajectory's data points).
+/// Write the machine-readable summary `BENCH_<bench>.json` that the
+/// CI bench-smoke job uploads as an artifact and, on main, commits
+/// to the repo root (the perf trajectory's data points). Lands under
+/// `out/` by default; a `BENCH_OUT` environment variable overrides
+/// the target directory for tooling that wants the JSON somewhere
+/// else directly.
 pub fn write_bench_json(bench: &str, rows: &[BenchRow]) {
     let safe: String = bench
         .chars()
@@ -198,7 +201,18 @@ pub fn write_bench_json(bench: &str, rows: &[BenchRow]) {
         ));
     }
     body.push_str("  ]\n}\n");
-    match phg_dlb::coordinator::report::write_report(&format!("BENCH_{safe}.json"), &body) {
+    let name = format!("BENCH_{safe}.json");
+    let written = match std::env::var("BENCH_OUT") {
+        Ok(dir) if !dir.is_empty() => {
+            let dir = std::path::PathBuf::from(dir);
+            std::fs::create_dir_all(&dir).and_then(|()| {
+                let p = dir.join(&name);
+                std::fs::write(&p, &body).map(|()| p)
+            })
+        }
+        _ => phg_dlb::coordinator::report::write_report(&name, &body),
+    };
+    match written {
         Ok(p) => println!("[json] {}", p.display()),
         Err(e) => eprintln!("[json] write failed: {e}"),
     }

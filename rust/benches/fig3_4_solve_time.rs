@@ -30,6 +30,7 @@ fn main() {
 
     for name in Registry::paper_names() {
         let cfg = DriverConfig {
+            problem: "helmholtz".to_string(),
             nparts,
             method: name.to_string(),
             trigger: "lambda".to_string(),
@@ -43,12 +44,12 @@ fn main() {
                 tol: 1e-5,
                 max_iter: 1200,
             },
-            use_pjrt: true,
+            use_pjrt: cfg!(feature = "pjrt"),
             nsteps: steps,
             dt: 0.0,
         };
         let mut driver = AdaptiveDriver::new(generator::omega1_cylinder(2), cfg).unwrap();
-        driver.run_helmholtz();
+        driver.run();
         let pts: Vec<(f64, f64)> = driver
             .timeline
             .records

@@ -1,0 +1,80 @@
+//! Bench-smoke over the scenario registry: every registered scenario
+//! runs the generic driver end to end on its own default mesh and
+//! reports lambda control, repartition count and wall time -- so CI
+//! proves each `--problem` entry works, not just the two paper
+//! examples.
+//!
+//! ```sh
+//! cargo bench --bench scenario_smoke [-- --quick]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{arg_usize, quick_or, write_bench_json, BenchRow};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::scenario::ScenarioRegistry;
+use phg_dlb::util::timer::Stopwatch;
+
+fn main() {
+    let nsteps = arg_usize("--steps", quick_or(6, 2));
+
+    println!("== scenario smoke: every registered scenario through the generic loop ==\n");
+    let mut rows = Vec::new();
+    for spec in ScenarioRegistry::sorted_specs() {
+        let cfg = DriverConfig {
+            problem: spec.name.to_string(),
+            nparts: 8,
+            method: "PHG/HSFC".to_string(),
+            trigger: "lambda".to_string(),
+            weights: "unit".to_string(),
+            strategy: "auto".to_string(),
+            lambda_trigger: 1.1,
+            theta_refine: 0.4,
+            theta_coarsen: 0.03,
+            max_elements: quick_or(40_000, 5_000),
+            solver: SolverOpts {
+                tol: 1e-5,
+                max_iter: 600,
+            },
+            use_pjrt: cfg!(feature = "pjrt"),
+            nsteps,
+            dt: 1.5e-3,
+        };
+        let mut d = AdaptiveDriver::for_scenario(cfg).expect("registered scenario");
+        let sw = Stopwatch::start();
+        d.run();
+        let wall = sw.elapsed();
+
+        assert!(!d.timeline.records.is_empty(), "{}: no steps ran", spec.name);
+        let first = d.timeline.records.first().unwrap();
+        let last = d.timeline.records.last().unwrap();
+        assert!(
+            last.imbalance_after < 1.8,
+            "{}: lambda {} uncontrolled",
+            spec.name,
+            last.imbalance_after
+        );
+        println!(
+            "{:<12} steps {:>2}  elements {:>6} -> {:>6}  lambda {:.3} -> {:.3}  \
+             repartitions {}  wall {:.2}s",
+            spec.name,
+            d.timeline.records.len(),
+            first.n_elements,
+            last.n_elements,
+            first.imbalance_before,
+            last.imbalance_after,
+            d.timeline.repartition_count(),
+            wall
+        );
+
+        let mut row = BenchRow::new(spec.name);
+        row.lambda_before = Some(first.imbalance_before);
+        row.lambda_after = Some(last.imbalance_after);
+        row.wall_ms = Some(wall * 1e3);
+        row.extra = Some(("repartitions", d.timeline.repartition_count() as f64));
+        rows.push(row);
+    }
+    write_bench_json("scenario_smoke", &rows);
+}

@@ -34,6 +34,7 @@ fn main() {
     let mut rows = Vec::new();
     for name in Registry::paper_names() {
         let cfg = DriverConfig {
+            problem: "parabolic".to_string(),
             nparts,
             method: name.to_string(),
             trigger: "lambda".to_string(),
@@ -47,12 +48,12 @@ fn main() {
                 tol: 1e-5,
                 max_iter: 800,
             },
-            use_pjrt: true,
+            use_pjrt: cfg!(feature = "pjrt"),
             nsteps: steps,
             dt: 1.0 / 512.0,
         };
         let mut driver = AdaptiveDriver::new(generator::cube_mesh(4), cfg).unwrap();
-        driver.run_parabolic(0.0);
+        driver.run();
         rows.push(Table2Row::from_timeline(name, &driver.timeline));
     }
     rows.sort_by(|a, b| a.tal.partial_cmp(&b.tal).unwrap());

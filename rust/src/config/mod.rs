@@ -62,6 +62,12 @@ impl Config {
         self.values.insert(key.to_string(), value.to_string());
     }
 
+    /// Whether the key was given (file or CLI), as opposed to an
+    /// accessor falling back to its default.
+    pub fn contains(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.values
             .get(key)
@@ -100,6 +106,7 @@ impl Config {
     pub fn driver_config(&self) -> Result<crate::coordinator::DriverConfig> {
         use crate::fem::SolverOpts;
         Ok(crate::coordinator::DriverConfig {
+            problem: self.get_str("problem", "helmholtz"),
             nparts: self.get_usize("nparts", 16)?,
             method: self.get_str("method", "PHG/HSFC"),
             trigger: self.get_str("trigger", "lambda"),
@@ -113,7 +120,9 @@ impl Config {
                 tol: self.get_f64("solver_tol", 1e-6)?,
                 max_iter: self.get_usize("solver_max_iter", 2000)?,
             },
-            use_pjrt: self.get_bool("use_pjrt", true)?,
+            // default build: only the always-erroring stub exists, so
+            // constructing a PJRT client would be a pure error path
+            use_pjrt: self.get_bool("use_pjrt", cfg!(feature = "pjrt"))?,
             nsteps: self.get_usize("nsteps", 10)?,
             dt: self.get_f64("dt", 1e-3)?,
         })
@@ -188,6 +197,19 @@ mod tests {
         assert_eq!(d.trigger, "lambda"); // default
         assert_eq!(d.weights, "unit"); // default
         assert_eq!(d.strategy, "scratch"); // default
+        assert_eq!(d.problem, "helmholtz"); // default
+        // PJRT only engages when the feature (and so a real client)
+        // is compiled in
+        assert_eq!(d.use_pjrt, cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn problem_key_flows_through() {
+        let mut c = Config::parse("problem = lshape\n").unwrap();
+        assert_eq!(c.driver_config().unwrap().problem, "lshape");
+        c.apply_args(&["--problem".into(), "oscillator".into()])
+            .unwrap();
+        assert_eq!(c.driver_config().unwrap().problem, "oscillator");
     }
 
     #[test]

@@ -3,33 +3,38 @@
 //!
 //! Per adaptive step:  solve -> estimate -> mark -> refine/coarsen ->
 //! evaluate the trigger policy -> (partition -> remap -> migrate)?
-//! with every phase timed into a [`timeline::StepRecord`]. The DLB
-//! machinery is composed from the [`crate::dlb`] subsystem: a
-//! [`TriggerPolicy`] decides *when*, a [`WeightModel`] decides what
-//! load means, and the [`RebalancePipeline`] executes the paper's
-//! partition -> Oliker-Biswas remap -> migrate sequence (DESIGN.md §6).
+//! with every phase timed into a [`timeline::StepRecord`]. The loop
+//! is written exactly once ([`AdaptiveDriver::step`]) and is generic
+//! over the problem: a [`Scenario`] owns the solve and the
+//! refinement signals (DESIGN.md §8), while the DLB machinery is
+//! composed from the [`crate::dlb`] subsystem: a [`TriggerPolicy`]
+//! decides *when*, a [`WeightModel`] decides what load means, and
+//! the [`RebalancePipeline`] executes the paper's partition ->
+//! Oliker-Biswas remap -> migrate sequence (DESIGN.md §6).
 
 pub mod report;
 pub mod timeline;
 
-use crate::adapt::{mark_coarsen_threshold, mark_max, residual_indicator};
+use crate::adapt::{mark_coarsen_threshold, mark_max};
 use crate::dist::{Distribution, NetworkModel};
 use crate::dlb::{
     dof_shares, trigger_by_name, weight_model_by_name, CostEstimate, Registry,
     RebalancePipeline, RepartitionStrategy, TriggerContext, TriggerPolicy, WeightModel,
 };
-use crate::fem::problems::{parabolic_exact, parabolic_step, solve_helmholtz};
 use crate::fem::{DofMap, SolverOpts};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::{ElemId, TetMesh};
 use crate::partition::sfc::{sfc_keys, Curve, Normalization};
 use crate::runtime::Runtime;
+use crate::scenario::{Scenario, ScenarioRegistry, StepContext};
 use crate::util::error::Result;
 use crate::util::timer::Stopwatch;
 use timeline::{StepRecord, Timeline};
 
 #[derive(Debug, Clone)]
 pub struct DriverConfig {
+    /// problem scenario name (see [`ScenarioRegistry`])
+    pub problem: String,
     /// virtual process count (the paper: 128 / 192)
     pub nparts: usize,
     /// partitioning method name (see [`Registry`])
@@ -51,15 +56,21 @@ pub struct DriverConfig {
     /// stop refining past this many leaves
     pub max_elements: usize,
     pub solver: SolverOpts,
+    /// run solves through the PJRT artifacts when available; defaults
+    /// to the `pjrt` cargo feature (the default build only has the
+    /// always-erroring stub, so constructing a client would pay a
+    /// pointless error/fallback path)
     pub use_pjrt: bool,
     pub nsteps: usize,
-    /// parabolic time step (example 3.2); ignored by Helmholtz
+    /// time step for time-dependent scenarios; ignored by stationary
+    /// ones
     pub dt: f64,
 }
 
 impl Default for DriverConfig {
     fn default() -> Self {
         Self {
+            problem: "helmholtz".to_string(),
             nparts: 16,
             method: "PHG/HSFC".to_string(),
             trigger: "lambda".to_string(),
@@ -70,23 +81,28 @@ impl Default for DriverConfig {
             theta_coarsen: 0.0,
             max_elements: 200_000,
             solver: SolverOpts::default(),
-            use_pjrt: true,
+            use_pjrt: cfg!(feature = "pjrt"),
             nsteps: 10,
             dt: 1e-3,
         }
     }
 }
 
-/// The driver owns the mesh, the virtual distribution, and the DLB
-/// composition (pipeline + trigger + weight model).
+/// The driver owns the mesh, the virtual distribution, the problem
+/// scenario, and the DLB composition (pipeline + trigger + weight
+/// model).
 pub struct AdaptiveDriver {
     pub mesh: TetMesh,
     pub cfg: DriverConfig,
+    pub scenario: Box<dyn Scenario>,
     pub pipeline: RebalancePipeline,
     pub trigger: Box<dyn TriggerPolicy>,
     pub weight_model: Box<dyn WeightModel>,
     pub timeline: Timeline,
     pub runtime: Option<Runtime>,
+    /// simulation clock: advanced by `dt` per step for time-dependent
+    /// scenarios, frozen at 0 for stationary ones
+    pub t: f64,
     /// current solution (dof vector) and its dof map, for transfer
     u: Vec<f64>,
     dof: Option<DofMap>,
@@ -99,9 +115,25 @@ pub struct AdaptiveDriver {
 }
 
 impl AdaptiveDriver {
-    /// Errors on an unknown method, trigger, weight-model or strategy
-    /// name (the message lists the valid ones).
-    pub fn new(mut mesh: TetMesh, cfg: DriverConfig) -> Result<Self> {
+    /// Errors on an unknown problem, method, trigger, weight-model or
+    /// strategy name (the message lists the valid ones).
+    pub fn new(mesh: TetMesh, cfg: DriverConfig) -> Result<Self> {
+        let scenario = ScenarioRegistry::create(&cfg.problem)?;
+        Self::with_scenario(mesh, cfg, scenario)
+    }
+
+    /// Build a driver on the scenario's own default mesh.
+    pub fn for_scenario(cfg: DriverConfig) -> Result<Self> {
+        let scenario = ScenarioRegistry::create(&cfg.problem)?;
+        let mesh = scenario.default_mesh();
+        Self::with_scenario(mesh, cfg, scenario)
+    }
+
+    fn with_scenario(
+        mut mesh: TetMesh,
+        cfg: DriverConfig,
+        scenario: Box<dyn Scenario>,
+    ) -> Result<Self> {
         let pipeline = RebalancePipeline::new(
             Registry::create(&cfg.method)?,
             NetworkModel::infiniband(cfg.nparts),
@@ -132,11 +164,13 @@ impl AdaptiveDriver {
         Ok(Self {
             mesh,
             cfg,
+            scenario,
             pipeline,
             trigger,
             weight_model,
             timeline: Timeline::new(),
             runtime,
+            t: 0.0,
             u: Vec::new(),
             dof: None,
             partition_wall_ewma: 0.0,
@@ -237,17 +271,27 @@ impl AdaptiveDriver {
         }
     }
 
-    /// One adaptive step of the Helmholtz experiment (example 3.1).
-    /// Returns false when the growth budget is exhausted.
-    pub fn helmholtz_step(&mut self) -> bool {
+    /// One adaptive step of the configured scenario: solve ->
+    /// estimate -> mark -> refine/coarsen -> DLB, all problem-specific
+    /// pieces delegated to the [`Scenario`]. Returns false when a
+    /// stationary scenario's growth budget is exhausted (the run
+    /// loop's stop signal); time-dependent scenarios always continue
+    /// and advance the clock by `dt`.
+    pub fn step(&mut self) -> bool {
         let step = self.timeline.records.len();
         let mut rec = StepRecord::new(step);
         rec.nparts = self.cfg.nparts;
+        let time_dependent = self.scenario.time_dependent();
+        let t_next = if time_dependent {
+            self.t + self.cfg.dt
+        } else {
+            0.0
+        };
 
-        let sw_topo = Stopwatch::start();
+        let sw_setup = Stopwatch::start();
         let topo = LeafTopology::build(&self.mesh);
         let dof = DofMap::build(&self.mesh, &topo);
-        let setup_time = sw_topo.elapsed();
+        let setup_time = sw_setup.elapsed();
         rec.n_elements = topo.n_leaves();
         rec.n_dofs = dof.n_dofs;
 
@@ -259,28 +303,56 @@ impl AdaptiveDriver {
             .dist
             .imbalance(&self.mesh, &topo.leaves, &solve_weights);
 
-        // ---- solve
-        let sw = Stopwatch::start();
-        let u0 = self
-            .dof
-            .as_ref()
-            .map(|old| dof.transfer_from(old, &self.u, &self.mesh, 0.0));
-        let sol = solve_helmholtz(
-            &self.mesh,
-            &topo,
-            &dof,
-            self.runtime.as_ref(),
-            &self.cfg.solver,
-            u0.as_deref(),
-        );
-        let solve_wall = sw.elapsed();
-        // split: assembly happens inside solve_helmholtz; attribute by
-        // re-measuring is overkill -- charge it all to solve, keep
-        // assemble_time for the explicit assembly benches
+        // the scenario reads the step through an immutable context;
+        // scope it so the mutations below can borrow self again
+        let (sol, eta, estimate_time, solve_wall) = {
+            let ctx = StepContext {
+                mesh: &self.mesh,
+                topo: &topo,
+                dof: &dof,
+                runtime: self.runtime.as_ref(),
+                solver: &self.cfg.solver,
+                t: t_next,
+                dt: self.cfg.dt,
+            };
+
+            // previous solution transferred onto the new mesh, else
+            // the scenario's seed (initial condition / cold start)
+            let u_prev = match (&self.dof, self.u.len()) {
+                (Some(old), n) if n > 0 => {
+                    Some(dof.transfer_from(old, &self.u, &self.mesh, 0.0))
+                }
+                _ => self.scenario.initial_guess(&ctx),
+            };
+
+            // ---- solve (assembly happens inside the scenario's
+            // solve; charge it all to solve_time, assemble_time is
+            // for the explicit assembly benches)
+            let sw = Stopwatch::start();
+            let sol = self.scenario.solve(&ctx, u_prev.as_deref());
+            let solve_wall = sw.elapsed();
+
+            // ---- estimate: scatter the solution to vertex ids (the
+            // layout the estimators consume) only when the scenario's
+            // indicator reads it, then ask the scenario
+            let sw = Stopwatch::start();
+            let u_vertex = if self.scenario.refine_indicator_reads_solution() {
+                let mut by_vertex = vec![0.0; self.mesh.vertices.len()];
+                for (d, &v) in dof.vertex_of_dof.iter().enumerate() {
+                    by_vertex[v as usize] = sol.u[d];
+                }
+                by_vertex
+            } else {
+                Vec::new()
+            };
+            let eta = self.scenario.refine_indicator(&ctx, &u_vertex);
+            (sol, eta, sw.elapsed(), solve_wall)
+        };
         rec.solve_time = solve_wall;
         rec.solve_iterations = sol.stats.iterations;
         rec.l2_error = sol.l2_error;
         rec.max_error = sol.max_error;
+        rec.estimate_time = estimate_time;
         self.record_solve_feedback(&topo.leaves, solve_wall);
 
         // partition quality affects the halo model
@@ -293,148 +365,46 @@ impl AdaptiveDriver {
         rec.interface_faces = halo.interface_faces;
         rec.solve_comm_modeled = self.solve_comm_model(&halo, sol.stats.iterations);
 
-        // ---- estimate + mark + refine
-        let sw = Stopwatch::start();
-        let eta = residual_indicator(
-            &self.mesh,
-            &topo,
-            &{
-                // indicator needs vertex-indexed values
-                let mut by_vertex = vec![0.0; self.mesh.vertices.len()];
-                for (d, &v) in dof.vertex_of_dof.iter().enumerate() {
-                    by_vertex[v as usize] = sol.u[d];
-                }
-                by_vertex
-            },
-            crate::fem::problems::helmholtz_source,
-            1.0,
-        );
-        rec.estimate_time = sw.elapsed();
-
+        // ---- mark + refine, then coarsen where the scenario has a
+        // solution-free signal for the fresh leaf set
         let sw = Stopwatch::start();
         let can_grow = self.mesh.n_leaves() < self.cfg.max_elements;
         if can_grow {
             let marked = mark_max(&topo.leaves, &eta, self.cfg.theta_refine);
             self.mesh.refine(&marked);
         }
+        if self.cfg.theta_coarsen > 0.0 {
+            let leaves2 = self.mesh.leaves_unordered();
+            let eta2 = self.scenario.coarsen_indicator(&self.mesh, &leaves2, t_next);
+            if let Some(eta2) = eta2 {
+                let cmarks = mark_coarsen_threshold(&leaves2, &eta2, self.cfg.theta_coarsen);
+                self.mesh.coarsen(&cmarks);
+            }
+        }
         rec.adapt_time = sw.elapsed() + setup_time;
 
         // ---- DLB
         self.u = sol.u;
         self.dof = Some(dof);
+        if time_dependent {
+            self.t = t_next;
+        }
         let leaves = self.mesh.leaves_unordered();
         let weights = self.weight_model.weights(&self.mesh, &leaves);
         self.maybe_rebalance(&leaves, &weights, &mut rec);
 
         self.timeline.push(rec);
-        can_grow
+        time_dependent || can_grow
     }
 
-    /// One time step of the parabolic experiment (example 3.2):
-    /// advance, then refine ahead of / coarsen behind the moving peak.
-    pub fn parabolic_time_step(&mut self, t_next: f64) {
-        let step = self.timeline.records.len();
-        let mut rec = StepRecord::new(step);
-        rec.nparts = self.cfg.nparts;
-
-        let sw_setup = Stopwatch::start();
-        let topo = LeafTopology::build(&self.mesh);
-        let dof = DofMap::build(&self.mesh, &topo);
-        let setup = sw_setup.elapsed();
-        rec.n_elements = topo.n_leaves();
-        rec.n_dofs = dof.n_dofs;
-
-        let solve_weights = self.weight_model.weights(&self.mesh, &topo.leaves);
-        rec.solve_imbalance = self
-            .pipeline
-            .dist
-            .imbalance(&self.mesh, &topo.leaves, &solve_weights);
-
-        // transfer previous solution (or initial condition)
-        let u_prev = match (&self.dof, self.u.len()) {
-            (Some(old), n) if n > 0 => dof.transfer_from(old, &self.u, &self.mesh, 0.0),
-            _ => dof.eval_at_dofs(&self.mesh, |p| parabolic_exact(p, t_next - self.cfg.dt)),
-        };
-
-        let sw = Stopwatch::start();
-        let out = parabolic_step(
-            &self.mesh,
-            &topo,
-            &dof,
-            self.runtime.as_ref(),
-            &self.cfg.solver,
-            &u_prev,
-            t_next,
-            self.cfg.dt,
-        );
-        let solve_wall = sw.elapsed();
-        rec.solve_time = solve_wall;
-        rec.solve_iterations = out.stats.iterations;
-        rec.l2_error = out.l2_error;
-        rec.max_error = out.max_error;
-        self.record_solve_feedback(&topo.leaves, solve_wall);
-
-        let owners_parts: Vec<u16> = topo
-            .leaves
-            .iter()
-            .map(|&id| self.mesh.elem(id).owner)
-            .collect();
-        let halo = crate::dist::Halo::build(&self.mesh, &topo, &owners_parts, self.cfg.nparts);
-        rec.interface_faces = halo.interface_faces;
-        rec.solve_comm_modeled = self.solve_comm_model(&halo, out.stats.iterations);
-
-        // ---- adapt around the moving peak: geometric indicator
-        let sw = Stopwatch::start();
-        let eta = crate::adapt::geometric_indicator(
-            &self.mesh,
-            &topo.leaves,
-            crate::fem::problems::peak_center(t_next),
-            0.25,
-        );
-        rec.estimate_time = sw.elapsed();
-
-        let sw = Stopwatch::start();
-        if self.mesh.n_leaves() < self.cfg.max_elements {
-            let marked = mark_max(&topo.leaves, &eta, self.cfg.theta_refine);
-            self.mesh.refine(&marked);
-        }
-        if self.cfg.theta_coarsen > 0.0 {
-            // recompute over the *new* leaf set
-            let leaves2 = self.mesh.leaves_unordered();
-            let eta2 = crate::adapt::geometric_indicator(
-                &self.mesh,
-                &leaves2,
-                crate::fem::problems::peak_center(t_next),
-                0.25,
-            );
-            let cmarks = mark_coarsen_threshold(&leaves2, &eta2, self.cfg.theta_coarsen);
-            self.mesh.coarsen(&cmarks);
-        }
-        rec.adapt_time = sw.elapsed() + setup;
-
-        self.u = out.u;
-        self.dof = Some(dof);
-
-        let leaves = self.mesh.leaves_unordered();
-        let weights = self.weight_model.weights(&self.mesh, &leaves);
-        self.maybe_rebalance(&leaves, &weights, &mut rec);
-
-        self.timeline.push(rec);
-    }
-
-    /// Run the full Helmholtz experiment.
-    pub fn run_helmholtz(&mut self) {
+    /// Run the configured scenario: `nsteps` adaptive (or time) steps,
+    /// stopping early only when a stationary scenario exhausts its
+    /// growth budget.
+    pub fn run(&mut self) {
         for _ in 0..self.cfg.nsteps {
-            if !self.helmholtz_step() {
+            if !self.step() {
                 break;
             }
-        }
-    }
-
-    /// Run the full parabolic experiment over [t0, t0 + nsteps*dt].
-    pub fn run_parabolic(&mut self, t0: f64) {
-        for n in 1..=self.cfg.nsteps {
-            self.parabolic_time_step(t0 + n as f64 * self.cfg.dt);
         }
     }
 }
@@ -446,6 +416,7 @@ mod tests {
 
     fn quick_cfg(method: &str) -> DriverConfig {
         DriverConfig {
+            problem: "helmholtz".to_string(),
             nparts: 4,
             method: method.to_string(),
             trigger: "lambda".to_string(),
@@ -476,6 +447,15 @@ mod tests {
 
         let mesh = generator::cube_mesh(2);
         let mut cfg = quick_cfg("RTK");
+        cfg.problem = "bogus".into();
+        let err = AdaptiveDriver::new(mesh, cfg).err().unwrap().to_string();
+        assert!(
+            err.contains("oscillator"),
+            "error should list scenarios: {err}"
+        );
+
+        let mesh = generator::cube_mesh(2);
+        let mut cfg = quick_cfg("RTK");
         cfg.trigger = "bogus".into();
         assert!(AdaptiveDriver::new(mesh, cfg).is_err());
 
@@ -498,7 +478,7 @@ mod tests {
             let mut cfg = quick_cfg("PHG/HSFC");
             cfg.strategy = strategy.to_string();
             let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
-            d.run_helmholtz();
+            d.run();
             assert_eq!(d.timeline.records.len(), 3, "strategy {strategy}");
             let last = d.timeline.records.last().unwrap();
             assert!(
@@ -524,7 +504,7 @@ mod tests {
     fn helmholtz_loop_runs_and_rebalances() {
         let mesh = generator::cube_mesh(2);
         let mut d = AdaptiveDriver::new(mesh, quick_cfg("RTK")).unwrap();
-        d.run_helmholtz();
+        d.run();
         assert_eq!(d.timeline.records.len(), 3);
         // mesh grew
         let n0 = d.timeline.records[0].n_elements;
@@ -555,7 +535,7 @@ mod tests {
             let mut cfg = quick_cfg(name);
             cfg.nsteps = 2;
             let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
-            d.run_helmholtz();
+            d.run();
             assert_eq!(d.timeline.records.len(), 2, "method {name}");
             let last = d.timeline.records.last().unwrap();
             assert!(
@@ -570,12 +550,15 @@ mod tests {
     fn parabolic_loop_refines_and_coarsens() {
         let mesh = generator::cube_mesh(3);
         let mut cfg = quick_cfg("PHG/HSFC");
+        cfg.problem = "parabolic".to_string();
         cfg.theta_coarsen = 0.02;
         cfg.nsteps = 4;
         cfg.dt = 2e-3;
         let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
-        d.run_parabolic(0.0);
+        d.run();
         assert_eq!(d.timeline.records.len(), 4);
+        // the clock marched with the run
+        assert!((d.t - 4.0 * 2e-3).abs() < 1e-12);
         for r in &d.timeline.records {
             assert!(r.max_error < 0.2, "error {}", r.max_error);
         }
@@ -589,7 +572,7 @@ mod tests {
         cfg.nsteps = 4;
         cfg.theta_refine = 0.3;
         let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
-        d.run_helmholtz();
+        d.run();
         let first = d.timeline.records.first().unwrap().l2_error;
         let last = d.timeline.records.last().unwrap().l2_error;
         assert!(
@@ -604,7 +587,7 @@ mod tests {
         let mut cfg = quick_cfg("MSFC");
         cfg.nsteps = 2;
         let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
-        d.run_helmholtz();
+        d.run();
         let csv = d.timeline.to_csv();
         assert_eq!(csv.lines().count(), 3); // header + 2 rows
     }

@@ -1,15 +1,20 @@
-//! The paper's two test problems.
+//! Problem definitions: the reusable FEM solves the scenarios
+//! ([`crate::scenario`]) are built from.
 //!
-//! **Example 3.1** (Helmholtz): -lap u + u = f on the cylinder with
-//! Dirichlet data, exact solution u = cos(2 pi x) cos(2 pi y) cos(2 pi z),
-//! so f = (12 pi^2 + 1) u. Smooth -> near-uniform refinement.
-//!
-//! **Example 3.2** (parabolic): u_t - lap u = f on (0,1)^3 x (0,1],
-//! exact solution a narrow moving peak circling in the x-y plane near
-//! z = 1: the mesh must refine around the peak and coarsen behind it
-//! every step. f is derived from the exact solution by high-order
-//! finite differences (method of manufactured solutions; the paper
-//! does the same analytically).
+//! * [`solve_stationary`] -- one solve of the reaction-diffusion form
+//!   -lap u + u = f with Dirichlet data and errors taken from a
+//!   manufactured exact solution. [`solve_helmholtz`] instantiates it
+//!   with the paper's example 3.1: exact solution
+//!   u = cos(2 pi x) cos(2 pi y) cos(2 pi z), so f = (12 pi^2 + 1) u.
+//!   Smooth -> near-uniform refinement.
+//! * [`parabolic_step`] -- one implicit-Euler step of u_t - lap u = f
+//!   whose exact solution is a narrow moving peak carried along a
+//!   trajectory `center: fn(t) -> Vec3`; f is derived from the exact
+//!   solution by high-order finite differences (method of
+//!   manufactured solutions; the paper does the same analytically).
+//!   [`peak_center`] is the paper's example 3.2 trajectory (a circle
+//!   near z = 1); [`oscillating_center`] sweeps back and forth
+//!   through the cube center, revisiting old regions.
 
 use super::assemble::{assemble, Assembled};
 use super::csr::Csr;
@@ -32,9 +37,9 @@ pub fn helmholtz_source(p: Vec3) -> f64 {
     (12.0 * pi2 + 1.0) * helmholtz_exact(p)
 }
 
-/// Result of one Helmholtz solve on the current mesh.
+/// Result of one stationary solve on the current mesh.
 #[derive(Debug, Clone)]
-pub struct HelmholtzSolution {
+pub struct StationarySolution {
     /// solution per dof
     pub u: Vec<f64>,
     pub stats: SolveStats,
@@ -45,21 +50,25 @@ pub struct HelmholtzSolution {
     pub l2_error: f64,
 }
 
-/// Assemble A = K + M (the Helmholtz form), apply Dirichlet data from
-/// the exact solution, solve, and report errors. `u0` optionally warm
-/// starts the solver.
-pub fn solve_helmholtz(
+/// Assemble A = K + M (the reaction-diffusion form -lap u + u = f),
+/// apply Dirichlet data from the manufactured `exact` solution, solve,
+/// and report errors against it. `u0` optionally warm starts the
+/// solver.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_stationary(
     mesh: &TetMesh,
     topo: &LeafTopology,
     dof: &DofMap,
     rt: Option<&Runtime>,
     opts: &SolverOpts,
     u0: Option<&[f64]>,
-) -> HelmholtzSolution {
-    let source = dof.eval_at_dofs(mesh, helmholtz_source);
+    source_fn: impl Fn(Vec3) -> f64,
+    exact: impl Fn(Vec3) -> f64,
+) -> StationarySolution {
+    let source = dof.eval_at_dofs(mesh, &source_fn);
     let Assembled { k, m, b } = assemble(mesh, topo, dof, &source, rt);
     let mut a = Csr::linear_combination(1.0, &k, 1.0, &m);
-    let g = dof.eval_at_dofs(mesh, helmholtz_exact);
+    let g = dof.eval_at_dofs(mesh, &exact);
     let bc: Vec<f64> = g
         .iter()
         .zip(&dof.on_boundary)
@@ -80,14 +89,36 @@ pub fn solve_helmholtz(
     }
     let stats = solve(rt, &a, &rhs, &mut u, opts);
 
-    let (max_error, l2_error) = errors_against(mesh, dof, &u, &m, helmholtz_exact);
-    HelmholtzSolution {
+    let (max_error, l2_error) = errors_against(mesh, dof, &u, &m, &exact);
+    StationarySolution {
         u,
         stats,
         n_dofs: dof.n_dofs,
         max_error,
         l2_error,
     }
+}
+
+/// Example 3.1: [`solve_stationary`] with the paper's smooth
+/// manufactured solution.
+pub fn solve_helmholtz(
+    mesh: &TetMesh,
+    topo: &LeafTopology,
+    dof: &DofMap,
+    rt: Option<&Runtime>,
+    opts: &SolverOpts,
+    u0: Option<&[f64]>,
+) -> StationarySolution {
+    solve_stationary(
+        mesh,
+        topo,
+        dof,
+        rt,
+        opts,
+        u0,
+        helmholtz_source,
+        helmholtz_exact,
+    )
 }
 
 /// (max vertex error, sqrt(e'Me)) against an exact solution.
@@ -116,23 +147,38 @@ pub fn peak_center(t: f64) -> Vec3 {
     Vec3::new(0.5 + 0.4 * w.sin(), 0.5 + 0.4 * w.cos(), 1.0)
 }
 
-/// The paper's exact solution:
-/// u = exp( (25*((x-cx)^2 + (y-cy)^2 + (z-1)^2) + 0.9)^-1 - 2.5 ).
-pub fn parabolic_exact(p: Vec3, t: f64) -> f64 {
-    let c = peak_center(t);
+/// Oscillating trajectory (the `oscillator` scenario): the peak
+/// sweeps back and forth along x through the cube center, so the
+/// refinement hotspot repeatedly revisits regions it has already
+/// left (and the mesh has since coarsened).
+pub fn oscillating_center(t: f64) -> Vec3 {
+    let w = 32.0 * std::f64::consts::PI * t;
+    Vec3::new(0.5 + 0.4 * w.sin(), 0.5, 0.5)
+}
+
+/// The paper's peak profile around a center `c`:
+/// u = exp( (25*|p - c|^2 + 0.9)^-1 - 2.5 ).
+pub fn moving_peak_exact(p: Vec3, c: Vec3) -> f64 {
     let d2 = (p.x - c.x).powi(2) + (p.y - c.y).powi(2) + (p.z - c.z).powi(2);
     (1.0 / (25.0 * d2 + 0.9) - 2.5).exp()
 }
 
-/// f = u_t - lap u by 4th-order central differences (manufactured
-/// source; h chosen so FD error ~1e-9 is far below discretization
-/// error).
-pub fn parabolic_source(p: Vec3, t: f64) -> f64 {
+/// Example 3.2's exact solution: the peak carried along
+/// [`peak_center`].
+pub fn parabolic_exact(p: Vec3, t: f64) -> f64 {
+    moving_peak_exact(p, peak_center(t))
+}
+
+/// f = u_t - lap u for the peak carried along `center`, by central
+/// finite differences (manufactured source; h chosen so FD error
+/// ~1e-9 is far below discretization error).
+pub fn moving_peak_source(p: Vec3, t: f64, center: fn(f64) -> Vec3) -> f64 {
+    let ex = |p: Vec3, t: f64| moving_peak_exact(p, center(t));
     let h = 1e-3;
-    let ut = (parabolic_exact(p, t + h) - parabolic_exact(p, t - h)) / (2.0 * h);
+    let ut = (ex(p, t + h) - ex(p, t - h)) / (2.0 * h);
     let mut lap = 0.0;
     let hs = 1e-3;
-    let u0 = parabolic_exact(p, t);
+    let u0 = ex(p, t);
     for axis in 0..3 {
         let mut dp = p;
         let mut dm = p;
@@ -150,9 +196,14 @@ pub fn parabolic_source(p: Vec3, t: f64) -> f64 {
                 dm.z -= hs;
             }
         }
-        lap += (parabolic_exact(dp, t) - 2.0 * u0 + parabolic_exact(dm, t)) / (hs * hs);
+        lap += (ex(dp, t) - 2.0 * u0 + ex(dm, t)) / (hs * hs);
     }
     ut - lap
+}
+
+/// [`moving_peak_source`] along the paper's circling trajectory.
+pub fn parabolic_source(p: Vec3, t: f64) -> f64 {
+    moving_peak_source(p, t, peak_center)
 }
 
 /// One implicit-Euler step: (M/dt + K) u^{n+1} = M (u^n/dt + f^{n+1}),
@@ -164,6 +215,9 @@ pub struct ParabolicStep {
     pub l2_error: f64,
 }
 
+/// Advance the moving-peak problem one time step. `center` selects
+/// the trajectory (and with it the whole manufactured problem:
+/// source, Dirichlet data and errors).
 #[allow(clippy::too_many_arguments)]
 pub fn parabolic_step(
     mesh: &TetMesh,
@@ -174,9 +228,11 @@ pub fn parabolic_step(
     u_prev: &[f64],
     t_next: f64,
     dt: f64,
+    center: fn(f64) -> Vec3,
 ) -> ParabolicStep {
     assert_eq!(u_prev.len(), dof.n_dofs);
-    let source = dof.eval_at_dofs(mesh, |p| parabolic_source(p, t_next));
+    let c_next = center(t_next);
+    let source = dof.eval_at_dofs(mesh, |p| moving_peak_source(p, t_next, center));
     let Assembled { k, m, b } = assemble(mesh, topo, dof, &source, rt);
     // A = M/dt + K ; rhs = M u_prev / dt + b  (b = M f already)
     let mut a = Csr::linear_combination(1.0, &k, 1.0 / dt, &m);
@@ -191,10 +247,7 @@ pub fn parabolic_step(
         .enumerate()
         .map(|(i, &ob)| {
             if ob {
-                parabolic_exact(
-                    mesh.vertices[dof.vertex_of_dof[i] as usize],
-                    t_next,
-                )
+                moving_peak_exact(mesh.vertices[dof.vertex_of_dof[i] as usize], c_next)
             } else {
                 0.0
             }
@@ -209,7 +262,7 @@ pub fn parabolic_step(
         }
     }
     let stats = solve(rt, &a, &rhs, &mut u, opts);
-    let (max_error, l2_error) = errors_against(mesh, dof, &u, &m, |p| parabolic_exact(p, t_next));
+    let (max_error, l2_error) = errors_against(mesh, dof, &u, &m, |p| moving_peak_exact(p, c_next));
     ParabolicStep {
         u,
         stats,
@@ -321,6 +374,7 @@ mod tests {
                 &u,
                 n as f64 * dt,
                 dt,
+                peak_center,
             );
             u = last.u.clone();
         }
@@ -349,7 +403,40 @@ mod tests {
             &u0,
             dt,
             dt,
+            peak_center,
         );
         assert!(s.max_error < 0.03, "max err {}", s.max_error);
+    }
+
+    #[test]
+    fn oscillating_center_revisits_the_middle() {
+        // the sweep passes back through x = 0.5 every half period
+        let c0 = oscillating_center(0.0);
+        assert!((c0.x - 0.5).abs() < 1e-12 && (c0.z - 0.5).abs() < 1e-12);
+        let quarter = 1.0 / 64.0; // 32 pi t = pi/2: turnaround
+        assert!(oscillating_center(quarter).x > 0.89);
+        let half = 1.0 / 32.0; // 32 pi t = pi: back through the middle
+        assert!((oscillating_center(half).x - 0.5).abs() < 1e-9);
+        assert!(oscillating_center(3.0 * quarter).x < 0.11);
+    }
+
+    #[test]
+    fn oscillator_step_tracks_exact_solution() {
+        let (m, topo, dof) = setup(2);
+        let dt = 1e-3;
+        let u0 = dof.eval_at_dofs(&m, |p| moving_peak_exact(p, oscillating_center(0.0)));
+        let s = parabolic_step(
+            &m,
+            &topo,
+            &dof,
+            None,
+            &SolverOpts::default(),
+            &u0,
+            dt,
+            dt,
+            oscillating_center,
+        );
+        assert!(s.max_error < 0.03, "max err {}", s.max_error);
+        assert!(s.stats.rel_residual < 1e-5);
     }
 }

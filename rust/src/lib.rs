@@ -10,8 +10,9 @@
 //!   ([`partition`]), subgrid-process remapping ([`remap`]), migration
 //!   and the virtual MPI runtime ([`dist`]), the DLB policy layer
 //!   (triggers, weight models, the rebalance pipeline and the method
-//!   registry: [`dlb`]), and the adaptive driver ([`coordinator`]) --
-//!   plus every substrate they
+//!   registry: [`dlb`]), the problem scenarios behind `--problem`
+//!   ([`scenario`]), and the generic adaptive driver ([`coordinator`])
+//!   -- plus every substrate they
 //!   need: tet meshes with refinement forests ([`mesh`]), bisection
 //!   refinement ([`mesh::TetMesh::refine`]), error estimation
 //!   ([`adapt`]), and P1 FEM ([`fem`]).
@@ -30,4 +31,5 @@ pub mod mesh;
 pub mod partition;
 pub mod remap;
 pub mod runtime;
+pub mod scenario;
 pub mod util;

@@ -3,6 +3,7 @@
 //! ```text
 //! phg-dlb run --problem helmholtz --domain cylinder --method RTK \
 //!             --nparts 32 --nsteps 10 [--config file.toml]
+//! phg-dlb run --problem lshape                     # scenario's own domain
 //! phg-dlb partition --domain cylinder --method PHG/HSFC --nparts 64
 //! phg-dlb compare --domain cylinder --nparts 32          # all methods
 //! phg-dlb methods | info
@@ -18,29 +19,46 @@ use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::mesh::TetMesh;
 use phg_dlb::partition::{metrics, PartitionInput};
 use phg_dlb::runtime::Runtime;
+use phg_dlb::scenario::ScenarioRegistry;
 use phg_dlb::util::error::Result;
 use phg_dlb::util::timer::Stopwatch;
 
-fn make_domain(cfg: &Config) -> Result<TetMesh> {
-    let domain = cfg.get_str("domain", "cube");
-    let scale = cfg.get_usize("scale", 3)?;
-    let refine = cfg.get_usize("prerefine", 0)?;
-    let mut mesh = match domain.as_str() {
-        "cube" => generator::cube_mesh(scale.max(1) * 2),
-        "cylinder" => generator::omega1_cylinder(scale.max(2)),
-        other => return Err(format_err!("unknown domain {other} (cube|cylinder)")),
-    };
-    for _ in 0..refine {
+fn prerefine(cfg: &Config, mut mesh: TetMesh) -> Result<TetMesh> {
+    for _ in 0..cfg.get_usize("prerefine", 0)? {
         let leaves = mesh.leaves_unordered();
         mesh.refine(&leaves);
     }
     Ok(mesh)
 }
 
+fn make_domain(cfg: &Config, default_domain: &str) -> Result<TetMesh> {
+    let domain = cfg.get_str("domain", default_domain);
+    let scale = cfg.get_usize("scale", 3)?;
+    let mesh = match domain.as_str() {
+        "cube" => generator::cube_mesh(scale.max(1) * 2),
+        "cylinder" => generator::omega1_cylinder(scale.max(2)),
+        "lshape" => generator::lshape_mesh(scale.max(1) * 2),
+        other => return Err(format_err!("unknown domain {other} (cube|cylinder|lshape)")),
+    };
+    prerefine(cfg, mesh)
+}
+
 fn cmd_run(cfg: &Config) -> Result<()> {
-    let problem = cfg.get_str("problem", "helmholtz");
-    let mesh = make_domain(cfg)?;
     let dc = cfg.driver_config()?;
+    let problem = dc.problem.clone();
+    // --domain auto (the default) = the scenario's own domain
+    let mesh = match cfg.get_str("domain", "auto").as_str() {
+        "auto" => {
+            if cfg.contains("scale") {
+                eprintln!(
+                    "note: scale only applies to an explicit --domain; \
+                     --domain auto uses the scenario's own mesh (use --prerefine to grow it)"
+                );
+            }
+            prerefine(cfg, ScenarioRegistry::create(&problem)?.default_mesh())?
+        }
+        _ => make_domain(cfg, "auto")?,
+    };
     println!(
         "# problem={problem} method={} nparts={} elements0={} nsteps={}",
         dc.method,
@@ -50,11 +68,7 @@ fn cmd_run(cfg: &Config) -> Result<()> {
     );
     let mut driver = AdaptiveDriver::new(mesh, dc)?;
     let sw = Stopwatch::start();
-    match problem.as_str() {
-        "helmholtz" => driver.run_helmholtz(),
-        "parabolic" => driver.run_parabolic(0.0),
-        other => return Err(format_err!("unknown problem {other} (helmholtz|parabolic)")),
-    }
+    driver.run();
     let wall = sw.elapsed();
 
     let (tal, dlb, sol, stp) = driver.timeline.table_columns();
@@ -82,7 +96,7 @@ fn cmd_run(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_partition(cfg: &Config) -> Result<()> {
-    let mut mesh = make_domain(cfg)?;
+    let mut mesh = make_domain(cfg, "cube")?;
     let nparts = cfg.get_usize("nparts", 16)?;
     let method = cfg.get_str("method", "PHG/HSFC");
     let p = Registry::create(&method)?;
@@ -115,7 +129,7 @@ fn cmd_partition(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_compare(cfg: &Config) -> Result<()> {
-    let mut mesh = make_domain(cfg)?;
+    let mut mesh = make_domain(cfg, "cube")?;
     let nparts = cfg.get_usize("nparts", 16)?;
     let leaves = mesh.leaves_unordered();
     let weights = vec![1.0; leaves.len()];
@@ -200,13 +214,18 @@ fn run() -> Result<()> {
             for s in RepartitionStrategy::all() {
                 println!("  {}", s.name());
             }
+            println!("\nscenarios (--problem, DESIGN.md \u{a7}8):");
+            for s in ScenarioRegistry::sorted_specs() {
+                println!("  {:<12} {}", s.name, s.description);
+            }
             Ok(())
         }
         "info" => cmd_info(),
         _ => {
             println!(
                 "usage: phg-dlb <run|partition|compare|methods|info> [--key value ...]\n\
-                 keys: problem domain scale prerefine method nparts nsteps dt\n\
+                 keys: problem (see `phg-dlb methods`) domain (auto|cube|cylinder|lshape)\n\
+                 \x20     scale (explicit domains only) prerefine method nparts nsteps dt\n\
                  \x20     trigger (lambda[:t]|every[:n]|always|costbenefit[:h])\n\
                  \x20     weights (unit|dof|measured)\n\
                  \x20     strategy (scratch|diffusive|auto)\n\

@@ -27,6 +27,23 @@ const PERMS: [[usize; 3]; 6] = [
     [2, 1, 0],
 ];
 
+/// The 6 Kuhn tets of cell (i, j, k) as grid-index paths from the
+/// cell's low corner to its high corner, one per axis permutation --
+/// the single source of the subdivision shared by every structured
+/// generator, so they can never diverge.
+fn kuhn_cell_paths(i: usize, j: usize, k: usize) -> [[[usize; 3]; 4]; 6] {
+    let mut out = [[[0usize; 3]; 4]; 6];
+    for (t, perm) in PERMS.iter().enumerate() {
+        let mut idx = [i, j, k];
+        out[t][0] = idx;
+        for (step, &axis) in perm.iter().enumerate() {
+            idx[axis] += 1;
+            out[t][step + 1] = idx;
+        }
+    }
+    out
+}
+
 /// Structured box mesh: nx*ny*nz cells, 6 tets each, over [lo, hi].
 pub fn box_mesh(nx: usize, ny: usize, nz: usize, lo: Vec3, hi: Vec3) -> TetMesh {
     assert!(nx > 0 && ny > 0 && nz > 0);
@@ -53,13 +70,10 @@ pub fn box_mesh(nx: usize, ny: usize, nz: usize, lo: Vec3, hi: Vec3) -> TetMesh 
     for i in 0..nx {
         for j in 0..ny {
             for k in 0..nz {
-                for perm in PERMS {
-                    // path from low corner to high corner of the cell
-                    let mut idx = [i, j, k];
-                    let mut verts = [vid(idx[0], idx[1], idx[2]); 4];
-                    for (step, &axis) in perm.iter().enumerate() {
-                        idx[axis] += 1;
-                        verts[step + 1] = vid(idx[0], idx[1], idx[2]);
+                for path in kuhn_cell_paths(i, j, k) {
+                    let mut verts = [0 as VertId; 4];
+                    for (v, ijk) in verts.iter_mut().zip(path) {
+                        *v = vid(ijk[0], ijk[1], ijk[2]);
                     }
                     tets.push(verts);
                 }
@@ -104,6 +118,49 @@ pub fn cylinder_mesh(nx: usize, ns: usize, radius: f64, length: f64) -> TetMesh 
 /// n_elems = 6 * (8*scale) * scale^2.
 pub fn omega1_cylinder(scale: usize) -> TetMesh {
     cylinder_mesh(8 * scale, scale.max(2), 0.5, 8.0)
+}
+
+/// L-shaped prism (the corner-singularity domain): the unit cube with
+/// the quadrant x > 1/2, y > 1/2 removed, leaving a reentrant edge
+/// along (1/2, 1/2, z). `n` cells per side, rounded up to even so the
+/// edge lies on the grid; only vertices of kept cells are emitted, so
+/// every mesh vertex is active. Kuhn cells are face-consistent across
+/// any cell subset, so the mesh is conforming and compatibly tagged
+/// like [`box_mesh`].
+pub fn lshape_mesh(n: usize) -> TetMesh {
+    let n = (n.max(2) + 1) & !1usize;
+    let nv = n + 1;
+    let h = 1.0 / n as f64;
+    let gidx = |i: usize, j: usize, k: usize| (i * nv + j) * nv + k;
+    let mut grid = vec![u32::MAX; nv * nv * nv];
+    let mut vertices: Vec<Vec3> = Vec::new();
+    let mut tets: Vec<[VertId; 4]> = Vec::new();
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                if i >= n / 2 && j >= n / 2 {
+                    continue; // the removed quadrant
+                }
+                for path in kuhn_cell_paths(i, j, k) {
+                    let mut verts = [0 as VertId; 4];
+                    for (v, ijk) in verts.iter_mut().zip(path) {
+                        let g = gidx(ijk[0], ijk[1], ijk[2]);
+                        if grid[g] == u32::MAX {
+                            grid[g] = vertices.len() as u32;
+                            vertices.push(Vec3::new(
+                                ijk[0] as f64 * h,
+                                ijk[1] as f64 * h,
+                                ijk[2] as f64 * h,
+                            ));
+                        }
+                        *v = grid[g];
+                    }
+                    tets.push(verts);
+                }
+            }
+        }
+    }
+    TetMesh::from_raw(vertices, tets)
 }
 
 #[cfg(test)]
@@ -180,6 +237,41 @@ mod tests {
         for _ in 0..2 {
             m.refine(&m.leaves_unordered());
             m.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn lshape_counts_and_volume() {
+        let m = lshape_mesh(4);
+        // 3/4 of the cells survive
+        assert_eq!(m.n_leaves(), 4 * 4 * 4 * 6 * 3 / 4);
+        assert!((m.total_volume() - 0.75).abs() < 1e-9);
+        // no orphan vertices: every emitted vertex belongs to a tet
+        let mut used = vec![false; m.n_vertices()];
+        for id in m.leaves_unordered() {
+            for &v in &m.elem(id).verts {
+                used[v as usize] = true;
+            }
+        }
+        assert!(used.iter().all(|&u| u));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lshape_odd_n_rounds_up_and_refines_conformingly() {
+        let mut m = lshape_mesh(3); // rounds to 4
+        assert_eq!(m.n_leaves(), 4 * 4 * 4 * 6 * 3 / 4);
+        for _ in 0..2 {
+            m.refine(&m.leaves_unordered());
+            m.check_invariants().unwrap();
+        }
+        // the reentrant quadrant stays empty
+        for id in m.leaves_unordered() {
+            let c = m.centroid(id);
+            assert!(
+                c.x < 0.5 + 1e-9 || c.y < 0.5 + 1e-9,
+                "element centroid {c:?} inside the removed quadrant"
+            );
         }
     }
 }

@@ -1,0 +1,31 @@
+//! Example 3.1: stationary Helmholtz -lap u + u = f on the long
+//! cylinder Omega_1, exact solution
+//! u = cos(2 pi x) cos(2 pi y) cos(2 pi z). The solution is smooth, so
+//! the residual estimator spreads refinement near-uniformly and the
+//! load grows everywhere at once -- the mild-skew baseline of the
+//! paper's Tables 1 and Figs 3.2-3.5.
+
+use super::{Scenario, SolveOutput, StepContext};
+use crate::adapt::residual_indicator;
+use crate::fem::problems::{helmholtz_source, solve_helmholtz};
+use crate::mesh::{generator, TetMesh};
+
+pub struct Helmholtz;
+
+impl Scenario for Helmholtz {
+    fn name(&self) -> &'static str {
+        "helmholtz"
+    }
+
+    fn default_mesh(&self) -> TetMesh {
+        generator::omega1_cylinder(2)
+    }
+
+    fn solve(&self, ctx: &StepContext, u_prev: Option<&[f64]>) -> SolveOutput {
+        solve_helmholtz(ctx.mesh, ctx.topo, ctx.dof, ctx.runtime, ctx.solver, u_prev).into()
+    }
+
+    fn refine_indicator(&self, ctx: &StepContext, u_vertex: &[f64]) -> Vec<f64> {
+        residual_indicator(ctx.mesh, ctx.topo, u_vertex, helmholtz_source, 1.0)
+    }
+}

@@ -1,0 +1,141 @@
+//! Corner-singularity scenario: -lap u + u = f on the L-shaped prism
+//! (the unit cube minus its x > 1/2, y > 1/2 quadrant), manufactured
+//! exact solution u = r^(2/3) sin(2 phi / 3) around the reentrant
+//! edge. u is harmonic, so f = u, but grad u blows up like r^(-1/3)
+//! at the edge: the residual estimator keeps marking the same few
+//! elements no matter how deep the mesh gets.
+//!
+//! DLB-wise this is the opposite stress of the smooth Helmholtz
+//! problem: load does not spread, it re-concentrates in place on the
+//! ranks owning the edge -- short repeated imbalance spikes that the
+//! diffusive strategy can discharge to the neighbouring ranks without
+//! a global repartition.
+
+use super::{Scenario, SolveOutput, StepContext};
+use crate::adapt::residual_indicator;
+use crate::fem::problems::solve_stationary;
+use crate::geometry::Vec3;
+use crate::mesh::{generator, TetMesh};
+
+/// u = r^(2/3) sin(2 phi / 3) in cylindrical coordinates around the
+/// reentrant edge (x, y) = (1/2, 1/2): harmonic in the plane,
+/// constant along z, vanishing on both faces that meet at the edge.
+/// `phi` is measured from the face x = 1/2 (y > 1/2) and grows
+/// through the domain to 3 pi / 2 on the face y = 1/2 (x > 1/2).
+pub fn corner_exact(p: Vec3) -> f64 {
+    let dx = p.x - 0.5;
+    let dy = p.y - 0.5;
+    let r = (dx * dx + dy * dy).sqrt();
+    if r < 1e-300 {
+        return 0.0;
+    }
+    let mut phi = dy.atan2(dx) - 0.5 * std::f64::consts::PI;
+    if phi < 0.0 {
+        phi += 2.0 * std::f64::consts::PI;
+    }
+    r.powf(2.0 / 3.0) * (2.0 * phi / 3.0).sin()
+}
+
+/// -lap u + u = f with harmonic u gives f = u.
+pub fn corner_source(p: Vec3) -> f64 {
+    corner_exact(p)
+}
+
+pub struct LShape;
+
+impl Scenario for LShape {
+    fn name(&self) -> &'static str {
+        "lshape"
+    }
+
+    fn default_mesh(&self) -> TetMesh {
+        generator::lshape_mesh(4)
+    }
+
+    fn solve(&self, ctx: &StepContext, u_prev: Option<&[f64]>) -> SolveOutput {
+        solve_stationary(
+            ctx.mesh,
+            ctx.topo,
+            ctx.dof,
+            ctx.runtime,
+            ctx.solver,
+            u_prev,
+            corner_source,
+            corner_exact,
+        )
+        .into()
+    }
+
+    fn refine_indicator(&self, ctx: &StepContext, u_vertex: &[f64]) -> Vec<f64> {
+        residual_indicator(ctx.mesh, ctx.topo, u_vertex, corner_source, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corner_solution_is_harmonic_inside_the_domain() {
+        // FD Laplacian ~ 0 away from the singular edge
+        for p in [
+            Vec3::new(0.2, 0.3, 0.5),
+            Vec3::new(0.7, 0.2, 0.1),
+            Vec3::new(0.2, 0.8, 0.9),
+        ] {
+            let h = 1e-4;
+            let mut lap = 0.0;
+            for axis in 0..3 {
+                let mut dp = p;
+                let mut dm = p;
+                match axis {
+                    0 => {
+                        dp.x += h;
+                        dm.x -= h;
+                    }
+                    1 => {
+                        dp.y += h;
+                        dm.y -= h;
+                    }
+                    _ => {
+                        dp.z += h;
+                        dm.z -= h;
+                    }
+                }
+                lap += (corner_exact(dp) - 2.0 * corner_exact(p) + corner_exact(dm)) / (h * h);
+            }
+            assert!(lap.abs() < 1e-4, "lap u = {lap} at {p:?}");
+        }
+    }
+
+    #[test]
+    fn corner_solution_vanishes_on_reentrant_faces() {
+        // face x = 1/2, y > 1/2 (phi = 0) and face y = 1/2, x > 1/2
+        // (phi = 3 pi / 2)
+        for t in [0.6, 0.8, 0.99] {
+            assert!(corner_exact(Vec3::new(0.5, t, 0.3)).abs() < 1e-12);
+            assert!(corner_exact(Vec3::new(t, 0.5, 0.7)).abs() < 1e-12);
+        }
+        // and is positive inside the domain
+        assert!(corner_exact(Vec3::new(0.2, 0.2, 0.5)) > 0.0);
+        assert!(corner_exact(Vec3::new(0.1, 0.9, 0.5)) > 0.0);
+        assert!(corner_exact(Vec3::new(0.9, 0.1, 0.5)) > 0.0);
+    }
+
+    #[test]
+    fn gradient_grows_toward_the_edge() {
+        // |grad u| ~ r^(-1/3): halving r must grow the FD gradient
+        let grad_mag = |r: f64| {
+            let p = Vec3::new(0.5 - r / 2f64.sqrt(), 0.5 - r / 2f64.sqrt(), 0.5);
+            let h = r * 1e-3;
+            let gx = (corner_exact(Vec3::new(p.x + h, p.y, p.z))
+                - corner_exact(Vec3::new(p.x - h, p.y, p.z)))
+                / (2.0 * h);
+            let gy = (corner_exact(Vec3::new(p.x, p.y + h, p.z))
+                - corner_exact(Vec3::new(p.x, p.y - h, p.z)))
+                / (2.0 * h);
+            (gx * gx + gy * gy).sqrt()
+        };
+        assert!(grad_mag(0.01) > 1.2 * grad_mag(0.02));
+    }
+}

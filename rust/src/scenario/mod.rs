@@ -1,0 +1,253 @@
+//! Problem scenarios: the pluggable "what are we solving" axis of the
+//! adaptive driver.
+//!
+//! The paper's point is that the solve -> estimate -> adapt ->
+//! rebalance loop is problem-independent: the grid and the basis
+//! functions change, the DLB machinery reacts. A [`Scenario`] owns
+//! everything problem-specific -- the default mesh, the stepping mode
+//! (stationary vs. time marching), the solve itself, and the
+//! refinement/coarsening signals -- while the generic
+//! [`crate::coordinator::AdaptiveDriver::step`] owns the shared
+//! skeleton. Adding a workload is a [`SCENARIOS`] registry entry, not
+//! a driver fork (DESIGN.md SS8).
+//!
+//! [`ScenarioRegistry`] mirrors [`crate::dlb::Registry`]: the single
+//! name -> constructor table behind `--problem`, with sorted described
+//! listings for `phg-dlb methods`.
+
+mod helmholtz;
+mod lshape;
+mod parabolic;
+
+pub use helmholtz::Helmholtz;
+pub use lshape::{corner_exact, corner_source, LShape};
+pub use parabolic::MovingPeak;
+
+use crate::bail;
+use crate::fem::problems::{ParabolicStep, StationarySolution};
+use crate::fem::{DofMap, SolveStats, SolverOpts};
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::{ElemId, TetMesh};
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+
+/// Everything a scenario may read during one adaptive step: the
+/// current mesh/topology/dof triple, the execution runtime, the
+/// solver options, and the simulation clock.
+pub struct StepContext<'a> {
+    pub mesh: &'a TetMesh,
+    pub topo: &'a LeafTopology,
+    pub dof: &'a DofMap,
+    pub runtime: Option<&'a Runtime>,
+    pub solver: &'a SolverOpts,
+    /// time at the *end* of this step for time-dependent scenarios
+    /// (`t_prev + dt`); 0 for stationary ones.
+    pub t: f64,
+    pub dt: f64,
+}
+
+/// What a scenario's solve hands back to the generic loop; the driver
+/// copies these straight onto the step record, so their meanings match
+/// [`crate::coordinator::timeline::StepRecord`].
+pub struct SolveOutput {
+    /// solution per dof
+    pub u: Vec<f64>,
+    pub stats: SolveStats,
+    /// sqrt(e' M e) against the manufactured exact solution
+    pub l2_error: f64,
+    /// max vertex error against the manufactured exact solution
+    pub max_error: f64,
+}
+
+impl From<StationarySolution> for SolveOutput {
+    fn from(sol: StationarySolution) -> Self {
+        Self {
+            u: sol.u,
+            stats: sol.stats,
+            l2_error: sol.l2_error,
+            max_error: sol.max_error,
+        }
+    }
+}
+
+impl From<ParabolicStep> for SolveOutput {
+    fn from(out: ParabolicStep) -> Self {
+        Self {
+            u: out.u,
+            stats: out.stats,
+            l2_error: out.l2_error,
+            max_error: out.max_error,
+        }
+    }
+}
+
+/// A problem scenario: everything the generic adaptive loop does
+/// *not* own. Implementations must be deterministic given (mesh, t)
+/// so runs are reproducible across methods, triggers and strategies.
+pub trait Scenario {
+    /// Registry name (`--problem <name>`).
+    fn name(&self) -> &'static str;
+
+    /// Time-dependent scenarios march `nsteps` time steps of size
+    /// `dt` (the driver advances the clock and never stops early);
+    /// stationary ones iterate solve -> refine and stop once the
+    /// element budget is exhausted.
+    fn time_dependent(&self) -> bool {
+        false
+    }
+
+    /// Whether [`SolveOutput::l2_error`] / `max_error` measure a real
+    /// manufactured-solution error (every built-in scenario: yes).
+    fn has_exact(&self) -> bool {
+        true
+    }
+
+    /// The domain this scenario is defined on (`--domain auto`).
+    fn default_mesh(&self) -> TetMesh;
+
+    /// Seed for a solve with no previous solution to transfer:
+    /// time-dependent scenarios return their initial condition at
+    /// `ctx.t - ctx.dt`; stationary ones default to a cold start.
+    fn initial_guess(&self, ctx: &StepContext) -> Option<Vec<f64>> {
+        let _ = ctx;
+        None
+    }
+
+    /// Solve the problem on the current mesh. `u_prev` is the
+    /// previous solution transferred onto this mesh (or the
+    /// [`Scenario::initial_guess`]); stationary scenarios may use it
+    /// as a warm start, time-dependent ones step from it.
+    fn solve(&self, ctx: &StepContext, u_prev: Option<&[f64]>) -> SolveOutput;
+
+    /// Whether [`Scenario::refine_indicator`] reads the solution.
+    /// Scenarios with a purely geometric signal return false and the
+    /// driver skips the O(n) dof -> vertex scatter (and hands them an
+    /// empty `u_vertex`), so `estimate_time` stays a faithful
+    /// indicator cost.
+    fn refine_indicator_reads_solution(&self) -> bool {
+        true
+    }
+
+    /// Per-leaf refinement signal in `ctx.topo.leaves` order.
+    /// `u_vertex` is the fresh solution scattered to vertex ids (the
+    /// layout every estimator in [`crate::adapt`] consumes); empty
+    /// when [`Scenario::refine_indicator_reads_solution`] is false.
+    fn refine_indicator(&self, ctx: &StepContext, u_vertex: &[f64]) -> Vec<f64>;
+
+    /// Solution-free signal over a *fresh* leaf set, evaluated after
+    /// refinement for `theta_coarsen` marking. `None` (the stationary
+    /// default) disables coarsening: a residual estimator is stale by
+    /// then, an analytic feature location is not.
+    fn coarsen_indicator(&self, mesh: &TetMesh, leaves: &[ElemId], t: f64) -> Option<Vec<f64>> {
+        let _ = (mesh, leaves, t);
+        None
+    }
+}
+
+/// One registered scenario: its `--problem` name, a one-line
+/// description (the `phg-dlb methods` listing), and its constructor.
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    /// One-line description for listings and docs.
+    pub description: &'static str,
+    pub make: fn() -> Box<dyn Scenario>,
+}
+
+/// Every scenario, paper examples first, then the DLB stress tests.
+pub const SCENARIOS: [ScenarioSpec; 4] = [
+    ScenarioSpec {
+        name: "helmholtz",
+        description: "stationary Helmholtz on the long cylinder, smooth solution (example 3.1)",
+        make: || Box::new(Helmholtz),
+    },
+    ScenarioSpec {
+        name: "parabolic",
+        description: "moving-peak parabolic, hotspot circling near z = 1 (example 3.2)",
+        make: || Box::new(MovingPeak::parabolic()),
+    },
+    ScenarioSpec {
+        name: "lshape",
+        description: "corner singularity on the L-shaped prism: persistent localized refinement",
+        make: || Box::new(LShape),
+    },
+    ScenarioSpec {
+        name: "oscillator",
+        description: "oscillating-source parabolic: the hotspot revisits coarsened regions",
+        make: || Box::new(MovingPeak::oscillator()),
+    },
+];
+
+/// Namespace for scenario lookup over [`SCENARIOS`], mirroring
+/// [`crate::dlb::Registry`].
+pub struct ScenarioRegistry;
+
+impl ScenarioRegistry {
+    /// Instantiate a scenario by name. Unknown names error with the
+    /// full list of valid ones.
+    pub fn create(name: &str) -> Result<Box<dyn Scenario>> {
+        match SCENARIOS.iter().find(|s| s.name == name) {
+            Some(spec) => Ok((spec.make)()),
+            None => bail!(
+                "unknown problem {name:?}; valid problems: {}",
+                Self::names().join(", ")
+            ),
+        }
+    }
+
+    /// All registered scenario names, registry order.
+    pub fn names() -> Vec<&'static str> {
+        SCENARIOS.iter().map(|s| s.name).collect()
+    }
+
+    /// Every spec in sorted (byte-order) name order: the
+    /// deterministic listing that `phg-dlb methods` prints.
+    pub fn sorted_specs() -> Vec<&'static ScenarioSpec> {
+        let mut specs: Vec<&'static ScenarioSpec> = SCENARIOS.iter().collect();
+        specs.sort_by_key(|s| s.name);
+        specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_all_scenarios() {
+        for spec in &SCENARIOS {
+            let s = ScenarioRegistry::create(spec.name).unwrap();
+            assert_eq!(s.name(), spec.name, "registry name mismatch");
+            assert!(!spec.description.is_empty(), "{} undescribed", spec.name);
+            // the default mesh is non-trivial and usable
+            let mesh = s.default_mesh();
+            assert!(mesh.n_leaves() > 0, "{}: empty default mesh", spec.name);
+            mesh.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_lists_valid_names() {
+        let err = ScenarioRegistry::create("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+        for name in ScenarioRegistry::names() {
+            assert!(err.contains(name), "error does not list {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn sorted_specs_are_sorted_and_complete() {
+        let specs = ScenarioRegistry::sorted_specs();
+        assert_eq!(specs.len(), SCENARIOS.len());
+        for w in specs.windows(2) {
+            assert!(w[0].name < w[1].name, "{} !< {}", w[0].name, w[1].name);
+        }
+    }
+
+    #[test]
+    fn stepping_modes_are_declared() {
+        assert!(!ScenarioRegistry::create("helmholtz").unwrap().time_dependent());
+        assert!(!ScenarioRegistry::create("lshape").unwrap().time_dependent());
+        assert!(ScenarioRegistry::create("parabolic").unwrap().time_dependent());
+        assert!(ScenarioRegistry::create("oscillator").unwrap().time_dependent());
+    }
+}

@@ -228,6 +228,7 @@ fn diffusive_driver_controls_imbalance_end_to_end() {
     use phg_dlb::fem::SolverOpts;
 
     let cfg = DriverConfig {
+        problem: "helmholtz".to_string(),
         nparts: 4,
         method: "PHG/HSFC".to_string(),
         trigger: "lambda".to_string(),
@@ -246,7 +247,7 @@ fn diffusive_driver_controls_imbalance_end_to_end() {
         dt: 1e-3,
     };
     let mut d = AdaptiveDriver::new(generator::cube_mesh(2), cfg).unwrap();
-    d.run_helmholtz();
+    d.run();
     assert_eq!(d.timeline.records.len(), 3);
     d.mesh.check_invariants().unwrap();
     for r in &d.timeline.records {

@@ -14,6 +14,7 @@ use phg_dlb::partition::PartitionInput;
 
 fn cfg(method: &str, trigger: &str, weights: &str) -> DriverConfig {
     DriverConfig {
+        problem: "helmholtz".to_string(),
         nparts: 4,
         method: method.to_string(),
         trigger: trigger.to_string(),
@@ -159,7 +160,7 @@ fn driver_runs_three_steps_under_every_trigger_policy() {
     for trigger in ["lambda:1.1", "every:2", "always", "costbenefit:8"] {
         let mesh = generator::cube_mesh(2);
         let mut d = AdaptiveDriver::new(mesh, cfg("RTK", trigger, "unit")).unwrap();
-        d.run_helmholtz();
+        d.run();
         assert_eq!(d.timeline.records.len(), 3, "trigger {trigger}");
         d.mesh.check_invariants().unwrap();
         for r in &d.timeline.records {
@@ -184,7 +185,7 @@ fn driver_runs_under_every_weight_model() {
     for weights in ["unit", "dof", "measured"] {
         let mesh = generator::cube_mesh(2);
         let mut d = AdaptiveDriver::new(mesh, cfg("PHG/HSFC", "lambda:1.1", weights)).unwrap();
-        d.run_helmholtz();
+        d.run();
         assert_eq!(d.timeline.records.len(), 3, "weights {weights}");
         let last = d.timeline.records.last().unwrap();
         assert!(

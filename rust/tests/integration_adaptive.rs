@@ -9,6 +9,7 @@ use phg_dlb::mesh::generator;
 
 fn cfg(method: &str, nparts: usize, nsteps: usize) -> DriverConfig {
     DriverConfig {
+        problem: "helmholtz".to_string(),
         nparts,
         method: method.to_string(),
         trigger: "lambda".to_string(),
@@ -35,7 +36,7 @@ fn full_lineup_helmholtz_cylinder() {
     for name in Registry::paper_names() {
         let mesh = generator::omega1_cylinder(2);
         let mut d = AdaptiveDriver::new(mesh, cfg(name, 8, 3)).unwrap();
-        d.run_helmholtz();
+        d.run();
         d.mesh.check_invariants().unwrap();
         assert_eq!(d.timeline.records.len(), 3, "{name}");
         let last = d.timeline.records.last().unwrap();
@@ -52,7 +53,7 @@ fn full_lineup_helmholtz_cylinder() {
 fn helmholtz_error_converges_with_dlb_active() {
     let mesh = generator::cube_mesh(3);
     let mut d = AdaptiveDriver::new(mesh, cfg("RTK", 6, 5)).unwrap();
-    d.run_helmholtz();
+    d.run();
     let first = &d.timeline.records[0];
     let last = d.timeline.records.last().unwrap();
     assert!(last.n_dofs > first.n_dofs);
@@ -68,10 +69,11 @@ fn helmholtz_error_converges_with_dlb_active() {
 fn parabolic_with_coarsening_stays_bounded() {
     let mesh = generator::cube_mesh(3);
     let mut c = cfg("PHG/HSFC", 6, 6);
+    c.problem = "parabolic".to_string();
     c.theta_coarsen = 0.05;
     c.max_elements = 20_000;
     let mut d = AdaptiveDriver::new(mesh, c).unwrap();
-    d.run_parabolic(0.0);
+    d.run();
     d.mesh.check_invariants().unwrap();
     for r in &d.timeline.records {
         assert!(r.max_error < 0.2, "step {}: err {}", r.step, r.max_error);
@@ -100,7 +102,7 @@ fn dlb_actually_reduces_imbalance_on_skewed_load() {
         let weights = vec![1.0; leaves.len()];
         let lam0 = d.pipeline.dist.imbalance(&d.mesh, &leaves, &weights);
         assert!(lam0 > 1.3, "{name}: skew not induced ({lam0})");
-        d.helmholtz_step();
+        d.step();
         let rec = d.timeline.records.last().unwrap();
         assert!(rec.repartitioned, "{name}: DLB did not trigger");
         assert!(
@@ -140,7 +142,7 @@ fn pjrt_and_native_drivers_agree_on_errors() {
         let mut c = cfg("RTK", 4, 3);
         c.use_pjrt = use_pjrt;
         let mut d = AdaptiveDriver::new(mesh, c).unwrap();
-        d.run_helmholtz();
+        d.run();
         d.timeline.records.iter().map(|r| r.l2_error).collect()
     };
     let native = run(false);

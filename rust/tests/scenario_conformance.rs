@@ -1,0 +1,151 @@
+//! Scenario conformance: every registered scenario must drive the
+//! generic adaptive loop end to end on its own default mesh and keep
+//! the StepRecord contract -- the property suite a new registry entry
+//! has to pass before it counts as a scenario.
+
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::scenario::{ScenarioRegistry, SCENARIOS};
+
+fn quick_cfg(problem: &str) -> DriverConfig {
+    DriverConfig {
+        problem: problem.to_string(),
+        nparts: 4,
+        method: "PHG/HSFC".to_string(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
+        strategy: "scratch".to_string(),
+        lambda_trigger: 1.1,
+        theta_refine: 0.4,
+        theta_coarsen: 0.03,
+        max_elements: 30_000,
+        solver: SolverOpts {
+            tol: 1e-5,
+            max_iter: 600,
+        },
+        use_pjrt: false,
+        nsteps: 3,
+        dt: 1.5e-3,
+    }
+}
+
+#[test]
+fn every_scenario_upholds_the_step_record_contract() {
+    for spec in &SCENARIOS {
+        let mut d = AdaptiveDriver::for_scenario(quick_cfg(spec.name)).unwrap();
+        d.run();
+        assert_eq!(d.timeline.records.len(), 3, "{}: short run", spec.name);
+        d.mesh.check_invariants().unwrap();
+        for r in &d.timeline.records {
+            let name = spec.name;
+            assert!(r.n_dofs > 0, "{name}: step {} has no dofs", r.step);
+            assert!(r.n_elements > 0, "{name}: step {} has no elements", r.step);
+            assert!(r.solve_iterations > 0, "{name}: solver did not run");
+            assert!(
+                r.solve_imbalance >= 1.0,
+                "{name}: solve_imbalance {} < 1",
+                r.solve_imbalance
+            );
+            assert!(
+                r.imbalance_before >= 1.0 && r.imbalance_after >= 1.0,
+                "{name}: lambda below 1"
+            );
+            // a strategy and a full report are recorded exactly when a
+            // rebalance fired
+            assert_eq!(r.repartitioned, r.strategy.is_some(), "{name}");
+            assert_eq!(r.repartitioned, r.rebalance.is_some(), "{name}");
+            if r.repartitioned {
+                assert!(
+                    r.imbalance_after <= r.imbalance_before + 1e-9,
+                    "{name}: rebalance worsened lambda"
+                );
+            }
+            assert!(
+                r.l2_error.is_finite() && r.max_error.is_finite(),
+                "{name}: non-finite error"
+            );
+            if ScenarioRegistry::create(spec.name).unwrap().has_exact() {
+                assert!(r.l2_error > 0.0, "{name}: exact solution but zero error");
+            }
+        }
+    }
+}
+
+#[test]
+fn stationary_scenarios_reduce_error_under_refinement() {
+    for spec in &SCENARIOS {
+        let scenario = ScenarioRegistry::create(spec.name).unwrap();
+        if scenario.time_dependent() || !scenario.has_exact() {
+            continue;
+        }
+        let mut cfg = quick_cfg(spec.name);
+        cfg.nsteps = 4;
+        let mut d = AdaptiveDriver::for_scenario(cfg).unwrap();
+        d.run();
+        let first = d.timeline.records.first().unwrap();
+        let last = d.timeline.records.last().unwrap();
+        assert!(last.n_dofs > first.n_dofs, "{}: mesh did not grow", spec.name);
+        assert!(
+            last.l2_error < first.l2_error,
+            "{}: L2 error not reduced by refinement: {} -> {}",
+            spec.name,
+            first.l2_error,
+            last.l2_error
+        );
+    }
+}
+
+#[test]
+fn time_dependent_scenarios_track_their_exact_solution() {
+    for spec in &SCENARIOS {
+        let scenario = ScenarioRegistry::create(spec.name).unwrap();
+        if !scenario.time_dependent() {
+            continue;
+        }
+        let mut cfg = quick_cfg(spec.name);
+        cfg.nsteps = 4;
+        let mut d = AdaptiveDriver::for_scenario(cfg).unwrap();
+        d.run();
+        assert_eq!(d.timeline.records.len(), 4, "{}: time must march", spec.name);
+        for r in &d.timeline.records {
+            assert!(
+                r.max_error < 0.2,
+                "{}: step {} max error {}",
+                spec.name,
+                r.step,
+                r.max_error
+            );
+        }
+    }
+}
+
+#[test]
+fn rebalance_events_land_in_the_timeline_csv() {
+    // force a rebalance every step; the CSV must carry the events
+    let mut cfg = quick_cfg("lshape");
+    cfg.trigger = "always".to_string();
+    let mut d = AdaptiveDriver::for_scenario(cfg).unwrap();
+    d.run();
+    assert_eq!(d.timeline.repartition_count(), 3);
+    let csv = d.timeline.to_csv();
+    assert_eq!(csv.lines().count(), 4); // header + 3 steps
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("strategy"));
+    for line in csv.lines().skip(1) {
+        assert!(
+            line.contains(",1,scratch,"),
+            "rebalance event missing from CSV row: {line}"
+        );
+    }
+}
+
+#[test]
+fn unknown_problem_fails_construction_with_the_valid_list() {
+    let err = AdaptiveDriver::for_scenario(quick_cfg("nope"))
+        .err()
+        .unwrap()
+        .to_string();
+    for name in ScenarioRegistry::names() {
+        assert!(err.contains(name), "error does not list {name}: {err}");
+    }
+}
