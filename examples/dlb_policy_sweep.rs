@@ -39,6 +39,8 @@ fn run_policy(method: &str, trigger: &str, weights: &str) -> SweepRow {
         trigger: trigger.to_string(),
         weights: weights.to_string(),
         strategy: "scratch".to_string(),
+        exec: "virtual".to_string(),
+        exec_threads: 0,
         lambda_trigger: 1.2,
         theta_refine: 0.45,
         theta_coarsen: 0.04,

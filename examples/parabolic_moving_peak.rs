@@ -31,6 +31,8 @@ fn main() {
         trigger: "lambda".to_string(),
         weights: "unit".to_string(),
         strategy: "auto".to_string(),
+        exec: "virtual".to_string(),
+        exec_threads: 0,
         lambda_trigger: 1.15,
         theta_refine: 0.45,
         theta_coarsen: 0.04,

@@ -36,6 +36,8 @@ fn main() {
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
             strategy: "scratch".to_string(),
+            exec: "virtual".to_string(),
+            exec_threads: 0,
             lambda_trigger: 1.1,
             theta_refine: 0.4,
             theta_coarsen: 0.0,

@@ -1,0 +1,125 @@
+//! Measured wall-clock speedup of the shared-memory executor vs rank
+//! count: the first *real* hardware numbers in the bench trajectory
+//! (everything else prices communication with the alpha-beta model).
+//!
+//! One FEM system (K + M on a uniformly refined cube) is solved by
+//! the distributed Jacobi-PCG under 1, 2, 4 (and 8 in full mode)
+//! virtual ranks, one worker per rank capped at the core count; the
+//! row is the median wall and the speedup against the 1-rank wall.
+//! Because the arithmetic is schedule-independent (DESIGN.md §9),
+//! every configuration computes the identical solution -- the wall
+//! clock is the only thing that changes.
+//!
+//! ```sh
+//! cargo bench --bench fig_speedup [-- --quick]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{is_quick, median_time, quick_or, write_bench_json, BenchRow};
+use phg_dlb::dist::Distribution;
+use phg_dlb::exec::{available_threads, pcg_sequential, pcg_threaded, GhostPlan, RankPlan};
+use phg_dlb::fem::{assemble, Csr, DofMap, SolverOpts};
+use phg_dlb::mesh::generator;
+use phg_dlb::mesh::topology::LeafTopology;
+
+fn main() {
+    // big enough that the SpMV dominates the barrier/channel overhead
+    // even in quick mode (~40k elements / ~9k dofs)
+    let mut mesh = generator::cube_mesh(quick_or(12, 12));
+    for _ in 0..quick_or(3, 2) {
+        mesh.refine(&mesh.leaves_unordered());
+    }
+    let topo = LeafTopology::build(&mesh);
+    let dof = DofMap::build(&mesh, &topo);
+    let src = vec![1.0; dof.n_dofs];
+    let sys = assemble(&mesh, &topo, &dof, &src, None);
+    let a = Csr::linear_combination(1.0, &sys.k, 1.0, &sys.m);
+    let ones = vec![1.0; a.n];
+    let mut b = vec![0.0; a.n];
+    a.spmv(&ones, &mut b);
+    let opts = SolverOpts {
+        tol: 1e-8,
+        max_iter: 2000,
+    };
+    let cores = available_threads();
+    println!(
+        "# fig_speedup: {} elements, {} dofs, {} cores",
+        topo.n_leaves(),
+        dof.n_dofs,
+        cores
+    );
+
+    let rank_counts: &[usize] = if is_quick() { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let reps = quick_or(5, 3);
+    let mut rows = Vec::new();
+    let mut base_wall = 0.0;
+    let mut speedup_at_4 = 1.0;
+    for &p in rank_counts {
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(p).assign_blocks(&mut mesh, &leaves);
+        let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, p);
+        let ghost = GhostPlan::build(&plan, &a);
+        let threads = p.min(cores);
+
+        // the answer must not depend on the schedule: spot-check the
+        // threaded solution against the sequential one at this p
+        let mut x_seq = vec![0.0; a.n];
+        let st_seq = pcg_sequential(&plan, &a, &b, &mut x_seq, &opts);
+        let mut x_thr = vec![0.0; a.n];
+        let (st_thr, _, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut x_thr, &opts, threads);
+        assert_eq!(
+            st_seq.iterations, st_thr.iterations,
+            "p={p}: schedules diverged"
+        );
+        assert!(
+            st_thr.rel_residual < 1e-7,
+            "p={p}: solver did not converge ({})",
+            st_thr.rel_residual
+        );
+        for (s, t) in x_seq.iter().zip(&x_thr) {
+            assert_eq!(s.to_bits(), t.to_bits(), "p={p}: solution differs");
+        }
+
+        let wall = median_time(reps, || {
+            let mut x = vec![0.0; a.n];
+            let (st, _, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut x, &opts, threads);
+            assert!(st.rel_residual < 1e-7);
+        });
+        if p == 1 {
+            base_wall = wall;
+        }
+        let speedup = if wall > 0.0 { base_wall / wall } else { 1.0 };
+        if p == 4 {
+            speedup_at_4 = speedup;
+        }
+        println!(
+            "ranks {p:>2} (workers {threads}): wall {:>8.2} ms  speedup {speedup:>5.2}x  iters {}",
+            wall * 1e3,
+            st_thr.iterations
+        );
+        let mut row = BenchRow::new(format!("threads:{p}"));
+        row.wall_ms = Some(wall * 1e3);
+        row.extra = Some(("speedup", speedup));
+        rows.push(row);
+    }
+    write_bench_json("speedup", &rows);
+
+    // the acceptance bar: real parallel hardware time must beat the
+    // 1-rank wall at 4 ranks. Hard-assert only with >= 4 workers
+    // available (the CI runner class); on 2-3 cores the 4 ranks are
+    // multiplexed and the margin over barrier/channel overhead is not
+    // guaranteed, so report without failing the job spuriously.
+    if cores >= 4 {
+        assert!(
+            speedup_at_4 > 1.0,
+            "no measured speedup at 4 ranks on {cores} cores: {speedup_at_4:.2}x"
+        );
+    } else {
+        println!(
+            "only {cores} cores: speedup {speedup_at_4:.2}x at 4 ranks reported, not asserted"
+        );
+    }
+}

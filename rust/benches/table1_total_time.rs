@@ -37,6 +37,8 @@ fn main() {
             // ParMETIS-style quality-first policy: much lower trigger
             // -> many more repartitions (the paper's 189 vs ~60)
             strategy: "scratch".to_string(),
+            exec: "virtual".to_string(),
+            exec_threads: 0,
             lambda_trigger: if name == "ParMETIS" { 1.02 } else { 1.1 },
             theta_refine: 0.6,
             theta_coarsen: 0.0,

@@ -40,6 +40,8 @@ fn main() {
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
             strategy: "scratch".to_string(),
+            exec: "virtual".to_string(),
+            exec_threads: 0,
             lambda_trigger: if name == "ParMETIS" { 1.05 } else { 1.15 },
             theta_refine: 0.45,
             theta_coarsen: 0.04,

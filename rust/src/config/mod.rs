@@ -112,6 +112,8 @@ impl Config {
             trigger: self.get_str("trigger", "lambda"),
             weights: self.get_str("weights", "unit"),
             strategy: self.get_str("strategy", "scratch"),
+            exec: self.get_str("exec", "virtual"),
+            exec_threads: self.get_usize("exec_threads", 0)?,
             lambda_trigger: self.get_f64("lambda_trigger", 1.2)?,
             theta_refine: self.get_f64("theta_refine", 0.5)?,
             theta_coarsen: self.get_f64("theta_coarsen", 0.0)?,
@@ -223,5 +225,19 @@ mod tests {
         let mut c = Config::new();
         c.apply_args(&["--strategy".into(), "diffusive".into()]).unwrap();
         assert_eq!(c.driver_config().unwrap().strategy, "diffusive");
+    }
+
+    #[test]
+    fn exec_keys_flow_through() {
+        let c = Config::parse("").unwrap();
+        let d = c.driver_config().unwrap();
+        assert_eq!(d.exec, "virtual"); // default
+        assert_eq!(d.exec_threads, 0); // default: auto
+
+        let mut c = Config::parse("exec = threads\n").unwrap();
+        c.apply_args(&["--exec-threads".into(), "4".into()]).unwrap();
+        let d = c.driver_config().unwrap();
+        assert_eq!(d.exec, "threads");
+        assert_eq!(d.exec_threads, 4);
     }
 }

@@ -21,6 +21,7 @@ use crate::dlb::{
     dof_shares, trigger_by_name, weight_model_by_name, CostEstimate, Registry,
     RebalancePipeline, RepartitionStrategy, TriggerContext, TriggerPolicy, WeightModel,
 };
+use crate::exec::{executor_by_name, Executor, RankPlan};
 use crate::fem::{DofMap, SolverOpts};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::{ElemId, TetMesh};
@@ -47,6 +48,12 @@ pub struct DriverConfig {
     /// repartitioning strategy spec: `scratch` | `diffusive` | `auto`
     /// (see [`RepartitionStrategy`], DESIGN.md §7)
     pub strategy: String,
+    /// execution schedule spec: `virtual` | `threads` (see
+    /// [`crate::exec`], DESIGN.md §9)
+    pub exec: String,
+    /// worker budget for `--exec threads`; 0 = auto (one per core,
+    /// capped at `nparts`)
+    pub exec_threads: usize,
     /// threshold used by the default `lambda` trigger
     pub lambda_trigger: f64,
     /// marking fraction for refinement (max-strategy theta)
@@ -76,6 +83,8 @@ impl Default for DriverConfig {
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
             strategy: "scratch".to_string(),
+            exec: "virtual".to_string(),
+            exec_threads: 0,
             lambda_trigger: 1.2,
             theta_refine: 0.5,
             theta_coarsen: 0.0,
@@ -98,6 +107,9 @@ pub struct AdaptiveDriver {
     pub pipeline: RebalancePipeline,
     pub trigger: Box<dyn TriggerPolicy>,
     pub weight_model: Box<dyn WeightModel>,
+    /// the execution schedule the rank-parallel kernels run on
+    /// (`--exec`, DESIGN.md §9)
+    pub executor: Box<dyn Executor>,
     pub timeline: Timeline,
     pub runtime: Option<Runtime>,
     /// simulation clock: advanced by `dt` per step for time-dependent
@@ -142,6 +154,7 @@ impl AdaptiveDriver {
         .with_strategy(RepartitionStrategy::parse(&cfg.strategy)?);
         let trigger = trigger_by_name(&cfg.trigger, cfg.lambda_trigger)?;
         let weight_model = weight_model_by_name(&cfg.weights)?;
+        let executor = executor_by_name(&cfg.exec, cfg.nparts, cfg.exec_threads)?;
         // the paper: order the initial mesh (tree roots) along an SFC
         // and maintain that order for the whole computation
         let leaves = mesh.leaves_unordered();
@@ -168,6 +181,7 @@ impl AdaptiveDriver {
             pipeline,
             trigger,
             weight_model,
+            executor,
             timeline: Timeline::new(),
             runtime,
             t: 0.0,
@@ -256,6 +270,8 @@ impl AdaptiveDriver {
     /// Feed the measured solve wall time back to the weight model as
     /// per-element costs (apportioned by each element's dof share) and
     /// remember the SPMD-scaled solve time for the CostBenefit trigger.
+    /// The virtual executor's path: one sequential wall split across
+    /// all leaves.
     fn record_solve_feedback(&mut self, leaves: &[ElemId], solve_wall: f64) {
         self.last_solve_parallel = solve_wall / self.cfg.nparts.max(1) as f64;
         // the apportionment pass is O(n); only pay for it when the
@@ -269,6 +285,36 @@ impl AdaptiveDriver {
             let costs: Vec<f64> = shares.iter().map(|s| solve_wall * s / total).collect();
             self.weight_model.observe(&self.mesh, leaves, &costs);
         }
+    }
+
+    /// The measured executor's path: each rank's *own* busy seconds
+    /// split over the elements that rank owns (by their dof share
+    /// within the rank), so the weight model sees genuine per-rank
+    /// timings instead of one global apportionment, and the
+    /// CostBenefit trigger prices the real parallel wall.
+    fn record_measured_feedback(
+        &mut self,
+        leaves: &[ElemId],
+        plan: &RankPlan,
+        rank_busy: &[f64],
+        solve_wall: f64,
+    ) {
+        self.last_solve_parallel = solve_wall;
+        if !self.weight_model.learns() {
+            return;
+        }
+        let shares = dof_shares(&self.mesh, leaves);
+        let mut costs = vec![0.0f64; leaves.len()];
+        for (r, elems) in plan.elems.iter().enumerate() {
+            let busy = rank_busy.get(r).copied().unwrap_or(0.0);
+            let total: f64 = elems.iter().map(|&e| shares[e as usize]).sum();
+            if total > 0.0 {
+                for &e in elems {
+                    costs[e as usize] = busy * shares[e as usize] / total;
+                }
+            }
+        }
+        self.weight_model.observe(&self.mesh, leaves, &costs);
     }
 
     /// One adaptive step of the configured scenario: solve ->
@@ -291,12 +337,22 @@ impl AdaptiveDriver {
         let sw_setup = Stopwatch::start();
         let topo = LeafTopology::build(&self.mesh);
         let dof = DofMap::build(&self.mesh, &topo);
+        // freeze this step's ownership into the executor's rank plan
+        let owners_parts: Vec<u16> = topo
+            .leaves
+            .iter()
+            .map(|&id| self.mesh.elem(id).owner)
+            .collect();
+        let plan = RankPlan::build(&self.mesh, &topo, &dof, &owners_parts, self.cfg.nparts);
         let setup_time = sw_setup.elapsed();
         rec.n_elements = topo.n_leaves();
         rec.n_dofs = dof.n_dofs;
+        rec.exec = self.executor.name();
 
         // imbalance the solve actually ran under (feeds the lambda
-        // factor in the timeline's SPMD solve-time accounting, §3)
+        // factor in the timeline's SPMD solve-time accounting, §3);
+        // overwritten below by the *measured* busy-time imbalance when
+        // the executor really ran the ranks in parallel (§9)
         let solve_weights = self.weight_model.weights(&self.mesh, &topo.leaves);
         rec.solve_imbalance = self
             .pipeline
@@ -310,6 +366,8 @@ impl AdaptiveDriver {
                 mesh: &self.mesh,
                 topo: &topo,
                 dof: &dof,
+                exec: self.executor.as_ref(),
+                plan: &plan,
                 runtime: self.runtime.as_ref(),
                 solver: &self.cfg.solver,
                 t: t_next,
@@ -353,14 +411,22 @@ impl AdaptiveDriver {
         rec.l2_error = sol.l2_error;
         rec.max_error = sol.max_error;
         rec.estimate_time = estimate_time;
-        self.record_solve_feedback(&topo.leaves, solve_wall);
+
+        // measured-vs-modeled split (§9): a measuring executor hands
+        // back real per-rank busy times -- they replace the modeled
+        // solve imbalance, mark the wall as genuinely parallel, and
+        // feed the weight model per-rank costs
+        let xrep = self.executor.take_report();
+        if self.executor.measures() && !xrep.rank_busy.is_empty() {
+            rec.solve_imbalance = xrep.measured_imbalance();
+            rec.measured_parallel = true;
+            rec.halo_exchange_time = xrep.halo_wall;
+            self.record_measured_feedback(&topo.leaves, &plan, &xrep.rank_busy, solve_wall);
+        } else {
+            self.record_solve_feedback(&topo.leaves, solve_wall);
+        }
 
         // partition quality affects the halo model
-        let owners_parts: Vec<u16> = topo
-            .leaves
-            .iter()
-            .map(|&id| self.mesh.elem(id).owner)
-            .collect();
         let halo = crate::dist::Halo::build(&self.mesh, &topo, &owners_parts, self.cfg.nparts);
         rec.interface_faces = halo.interface_faces;
         rec.solve_comm_modeled = self.solve_comm_model(&halo, sol.stats.iterations);
@@ -407,6 +473,12 @@ impl AdaptiveDriver {
             }
         }
     }
+
+    /// The latest solution dof vector (empty before the first step);
+    /// the cross-executor equivalence suite compares these.
+    pub fn solution(&self) -> &[f64] {
+        &self.u
+    }
 }
 
 #[cfg(test)]
@@ -422,6 +494,8 @@ mod tests {
             trigger: "lambda".to_string(),
             weights: "unit".to_string(),
             strategy: "scratch".to_string(),
+            exec: "virtual".to_string(),
+            exec_threads: 0,
             lambda_trigger: 1.1,
             theta_refine: 0.5,
             theta_coarsen: 0.0,
@@ -469,6 +543,31 @@ mod tests {
         cfg.strategy = "bogus".into();
         let err = AdaptiveDriver::new(mesh, cfg).err().unwrap().to_string();
         assert!(err.contains("diffusive"), "error should list strategies: {err}");
+
+        let mesh = generator::cube_mesh(2);
+        let mut cfg = quick_cfg("RTK");
+        cfg.exec = "bogus".into();
+        let err = AdaptiveDriver::new(mesh, cfg).err().unwrap().to_string();
+        assert!(err.contains("threads"), "error should list executors: {err}");
+    }
+
+    #[test]
+    fn threaded_executor_drives_the_loop_and_measures() {
+        let mesh = generator::cube_mesh(2);
+        let mut cfg = quick_cfg("PHG/HSFC");
+        cfg.exec = "threads".to_string();
+        let mut d = AdaptiveDriver::new(mesh, cfg).unwrap();
+        d.run();
+        assert_eq!(d.timeline.records.len(), 3);
+        for r in &d.timeline.records {
+            assert_eq!(r.exec, "threads");
+            assert!(r.measured_parallel, "step {} not measured", r.step);
+            assert!(r.solve_imbalance >= 1.0);
+            // 4 ranks on a refining mesh must exchange something
+            assert!(r.solve_iterations > 0);
+        }
+        let last = d.timeline.records.last().unwrap();
+        assert!(last.imbalance_after < 1.6, "lambda {}", last.imbalance_after);
     }
 
     #[test]

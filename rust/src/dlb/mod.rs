@@ -35,6 +35,9 @@ pub use registry::{MethodSpec, Registry, METHODS};
 pub use strategy::RepartitionStrategy;
 pub use trigger::{
     trigger_by_name, AfterAdaptation, CostBenefit, CostEstimate, LambdaThreshold, TriggerContext,
-    TriggerPolicy,
+    TriggerPolicy, TriggerSpec, TRIGGERS,
 };
-pub use weights::{dof_shares, weight_model_by_name, DofWeighted, Measured, Unit, WeightModel};
+pub use weights::{
+    dof_shares, weight_model_by_name, DofWeighted, Measured, Unit, WeightModel, WeightSpec,
+    WEIGHT_MODELS,
+};

@@ -39,6 +39,21 @@ impl RepartitionStrategy {
         }
     }
 
+    /// One-line description (the `phg-dlb methods` listing).
+    pub fn description(self) -> &'static str {
+        match self {
+            RepartitionStrategy::Scratch => {
+                "full partition from scratch, Oliker-Biswas remap, migrate (the paper's pipeline)"
+            }
+            RepartitionStrategy::Diffusive => {
+                "incremental load flow along the rank chain; minimal migration, no remap"
+            }
+            RepartitionStrategy::Auto => {
+                "per-event URP-style pick of whichever path the network model prices cheaper"
+            }
+        }
+    }
+
     /// Parse a config/CLI spec. Unknown specs error with the valid
     /// names.
     pub fn parse(spec: &str) -> Result<Self> {

@@ -136,6 +136,34 @@ impl TriggerPolicy for CostBenefit {
     }
 }
 
+/// One registered trigger-policy kind: its spec syntax and a one-line
+/// description (the `phg-dlb methods` listing).
+pub struct TriggerSpec {
+    /// Spec syntax accepted by [`trigger_by_name`].
+    pub name: &'static str,
+    pub description: &'static str,
+}
+
+/// Every trigger-policy kind, in documentation order.
+pub const TRIGGERS: [TriggerSpec; 4] = [
+    TriggerSpec {
+        name: "lambda[:t]",
+        description: "fire when the load-imbalance factor exceeds t (the paper's policy)",
+    },
+    TriggerSpec {
+        name: "every[:n]",
+        description: "fire every n-th adaptation regardless of imbalance (AMR cadence)",
+    },
+    TriggerSpec {
+        name: "always",
+        description: "fire on every adaptation (= every:1)",
+    },
+    TriggerSpec {
+        name: "costbenefit[:h]",
+        description: "fire when the modeled rebalance cost is repaid within h balanced steps",
+    },
+];
+
 /// Instantiate a trigger policy from its config/CLI spec:
 /// `lambda[:threshold]` (threshold defaults to `default_lambda`),
 /// `every[:interval]`, `always` (= `every:1`), `costbenefit[:horizon]`.
@@ -262,5 +290,14 @@ mod tests {
         assert!(trigger_by_name("lambda:abc", 1.2).is_err());
         let err = trigger_by_name("frob", 1.2).unwrap_err().to_string();
         assert!(err.contains("costbenefit"), "{err}");
+    }
+
+    #[test]
+    fn every_registered_trigger_spec_parses() {
+        for spec in &TRIGGERS {
+            let bare = spec.name.split('[').next().unwrap();
+            assert!(trigger_by_name(bare, 1.2).is_ok(), "spec {bare} rejected");
+            assert!(!spec.description.is_empty(), "{bare} undescribed");
+        }
     }
 }

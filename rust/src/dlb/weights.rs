@@ -203,6 +203,29 @@ impl WeightModel for Measured {
     }
 }
 
+/// One registered weight model: its `--weights` name and a one-line
+/// description (the `phg-dlb methods` listing).
+pub struct WeightSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+}
+
+/// Every weight model, in documentation order.
+pub const WEIGHT_MODELS: [WeightSpec; 3] = [
+    WeightSpec {
+        name: "unit",
+        description: "every leaf weighs 1 (the paper's setting)",
+    },
+    WeightSpec {
+        name: "dof",
+        description: "each leaf weighs its share of the global P1 dof count",
+    },
+    WeightSpec {
+        name: "measured",
+        description: "EWMA of measured per-element cost fed back from timed solves",
+    },
+];
+
 /// Instantiate a weight model from its config/CLI spec.
 pub fn weight_model_by_name(spec: &str) -> Result<Box<dyn WeightModel>> {
     match spec {
@@ -355,5 +378,14 @@ mod tests {
         }
         let err = weight_model_by_name("banana").unwrap_err().to_string();
         assert!(err.contains("unit") && err.contains("measured"), "{err}");
+    }
+
+    #[test]
+    fn every_registered_weight_model_resolves() {
+        assert_eq!(WEIGHT_MODELS.len(), 3);
+        for spec in &WEIGHT_MODELS {
+            assert_eq!(weight_model_by_name(spec.name).unwrap().name(), spec.name);
+            assert!(!spec.description.is_empty(), "{} undescribed", spec.name);
+        }
     }
 }

@@ -1,0 +1,153 @@
+//! Rank-local P1 assembly: each rank computes element matrices for
+//! the leaves it owns; the per-rank contributions are combined in
+//! rank order into one global system (DESIGN.md §9).
+//!
+//! The math is exactly [`crate::fem::elem_matrices`]; what this module
+//! fixes is the *order*: triplets are concatenated rank by rank (each
+//! rank's elements ascending) and the load vectors are accumulated
+//! rank by rank, so the assembled system is bit-identical whether the
+//! per-rank loops ran sequentially ([`VirtualExec`]) or on worker
+//! threads ([`ThreadedExec`]).
+//!
+//! [`VirtualExec`]: crate::exec::VirtualExec
+//! [`ThreadedExec`]: crate::exec::ThreadedExec
+
+use crate::fem::{assemble::elem_matrices, Assembled, Csr, DofMap};
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::TetMesh;
+
+/// One rank's assembly contribution: its elements' stiffness/mass
+/// triplets and a full-length load vector holding only its elements'
+/// scatter.
+pub struct RankAssembly {
+    pub kt: Vec<(u32, u32, f64)>,
+    pub mt: Vec<(u32, u32, f64)>,
+    pub b: Vec<f64>,
+}
+
+/// Assemble one rank's owned elements (`elems` indexes `topo.leaves`),
+/// native f64 engine.
+pub fn assemble_rank(
+    mesh: &TetMesh,
+    topo: &LeafTopology,
+    dof: &DofMap,
+    source: &[f64],
+    elems: &[u32],
+) -> RankAssembly {
+    let mut kt = Vec::with_capacity(elems.len() * 16);
+    let mut mt = Vec::with_capacity(elems.len() * 16);
+    let mut b = vec![0.0f64; dof.n_dofs];
+    for &e in elems {
+        let id = topo.leaves[e as usize];
+        let verts = mesh.elem(id).verts;
+        let dofs = [
+            dof.dof_of_vertex[verts[0] as usize],
+            dof.dof_of_vertex[verts[1] as usize],
+            dof.dof_of_vertex[verts[2] as usize],
+            dof.dof_of_vertex[verts[3] as usize],
+        ];
+        let c = mesh.elem_coords(id);
+        let f = [
+            source[dofs[0] as usize],
+            source[dofs[1] as usize],
+            source[dofs[2] as usize],
+            source[dofs[3] as usize],
+        ];
+        let (ke, me, be) = elem_matrices(&c, &f);
+        for i in 0..4 {
+            b[dofs[i] as usize] += be[i];
+            for j in 0..4 {
+                kt.push((dofs[i], dofs[j], ke[i * 4 + j]));
+                mt.push((dofs[i], dofs[j], me[i * 4 + j]));
+            }
+        }
+    }
+    RankAssembly { kt, mt, b }
+}
+
+/// Combine per-rank contributions in rank order into the global
+/// system. The caller must pass `parts` indexed by rank.
+pub fn combine(n_dofs: usize, parts: Vec<RankAssembly>) -> Assembled {
+    let nnz: usize = parts.iter().map(|p| p.kt.len()).sum();
+    let mut kt = Vec::with_capacity(nnz);
+    let mut mt = Vec::with_capacity(nnz);
+    let mut b = vec![0.0f64; n_dofs];
+    for part in parts {
+        kt.extend(part.kt);
+        mt.extend(part.mt);
+        for (acc, v) in b.iter_mut().zip(&part.b) {
+            *acc += v;
+        }
+    }
+    Assembled {
+        k: Csr::from_triplets(n_dofs, kt),
+        m: Csr::from_triplets(n_dofs, mt),
+        b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::exec::plan::RankPlan;
+    use crate::fem::assemble;
+    use crate::mesh::generator;
+
+    fn setup(nparts: usize) -> (TetMesh, LeafTopology, DofMap, RankPlan) {
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let topo = LeafTopology::build(&mesh);
+        let dof = DofMap::build(&mesh, &topo);
+        let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, nparts);
+        (mesh, topo, dof, plan)
+    }
+
+    #[test]
+    fn ranked_assembly_matches_global_assembly() {
+        let (mesh, topo, dof, plan) = setup(4);
+        let src = dof.eval_at_dofs(&mesh, |p| (3.0 * p.x).sin() + p.y * p.z);
+        let global = assemble::assemble(&mesh, &topo, &dof, &src, None);
+        let parts: Vec<RankAssembly> = (0..plan.nranks)
+            .map(|r| assemble_rank(&mesh, &topo, &dof, &src, &plan.elems[r]))
+            .collect();
+        let ranked = combine(dof.n_dofs, parts);
+        assert_eq!(global.k.nnz(), ranked.k.nnz());
+        assert_eq!(global.m.nnz(), ranked.m.nnz());
+        // same entries to rounding (summation order differs from the
+        // global element loop, so exact equality is not guaranteed)
+        for (a, b) in global.k.vals.iter().zip(&ranked.k.vals) {
+            assert!((a - b).abs() < 1e-12 * a.abs().max(1.0), "{a} vs {b}");
+        }
+        for (a, b) in global.b.iter().zip(&ranked.b) {
+            assert!((a - b).abs() < 1e-13, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rank_count_does_not_change_the_combined_system_structure() {
+        // the same mesh assembled under different rank plans must give
+        // the same sparsity and (near-)identical values
+        let ranked = |nparts: usize| {
+            let (mesh, topo, dof, plan) = setup(nparts);
+            let src = dof.eval_at_dofs(&mesh, |p| p.x);
+            let parts: Vec<RankAssembly> = (0..plan.nranks)
+                .map(|r| assemble_rank(&mesh, &topo, &dof, &src, &plan.elems[r]))
+                .collect();
+            combine(dof.n_dofs, parts)
+        };
+        let one = ranked(1);
+        let six = ranked(6);
+        assert_eq!(one.k.nnz(), six.k.nnz());
+        assert_eq!(one.b.len(), six.b.len());
+        for (a, b) in one.b.iter().zip(&six.b) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        for (a, b) in one.m.vals.iter().zip(&six.m.vals) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! The dof-level ghost layer of a rank plan: exactly which off-rank
+//! values each rank's SpMV reads, and therefore exactly what the
+//! threaded executor's halo exchange moves (DESIGN.md §9).
+//!
+//! Built from the assembled matrix pattern: rank `r`'s ghost set is
+//! the set of columns of its owned rows that another rank owns. This
+//! is the dof-granularity refinement of [`crate::dist::Halo`]: every
+//! face-adjacent rank pair of the face halo also couples through
+//! shared P1 vertices here (plus the vertex/edge-adjacent pairs the
+//! face count cannot see), so the same partition quality that the
+//! alpha-beta model prices is what the threaded executor physically
+//! pays per CG iteration.
+
+use crate::fem::Csr;
+use crate::util::hash::FxHashSet;
+use std::collections::BTreeMap;
+
+use super::plan::RankPlan;
+
+/// One direction of the halo: for each rank, its neighbour ranks
+/// (ascending) and the ascending dof list exchanged with each.
+pub type HaloLists = Vec<Vec<(u16, Vec<u32>)>>;
+
+/// The exchange pattern of one (plan, matrix) pair.
+#[derive(Debug, Clone)]
+pub struct GhostPlan {
+    /// Per rank: (owner rank, dofs to receive from it) -- the rank's
+    /// ghost values, grouped by who sends them.
+    pub recv: HaloLists,
+    /// Per rank: (destination rank, owned dofs to send to it) -- the
+    /// exact transpose of `recv`.
+    pub send: HaloLists,
+}
+
+impl GhostPlan {
+    /// Scan the owned rows' columns of `a` and group every off-rank
+    /// column by its owner.
+    pub fn build(plan: &RankPlan, a: &Csr) -> Self {
+        let p = plan.nranks;
+        let mut recv_maps: Vec<BTreeMap<u16, Vec<u32>>> = vec![BTreeMap::new(); p];
+        for (r, rows) in plan.rows.iter().enumerate() {
+            let mut seen: FxHashSet<u32> = FxHashSet::default();
+            for &i in rows {
+                let (cols, _) = a.row(i as usize);
+                for &c in cols {
+                    let owner = plan.rank_of_dof[c as usize];
+                    if owner as usize != r && seen.insert(c) {
+                        recv_maps[r].entry(owner).or_default().push(c);
+                    }
+                }
+            }
+        }
+        let mut send_maps: Vec<BTreeMap<u16, Vec<u32>>> = vec![BTreeMap::new(); p];
+        let mut recv: HaloLists = Vec::with_capacity(p);
+        for (r, map) in recv_maps.into_iter().enumerate() {
+            let mut lists = Vec::with_capacity(map.len());
+            for (owner, mut dofs) in map {
+                dofs.sort_unstable();
+                send_maps[owner as usize].insert(r as u16, dofs.clone());
+                lists.push((owner, dofs));
+            }
+            recv.push(lists);
+        }
+        let send: HaloLists = send_maps
+            .into_iter()
+            .map(|m| m.into_iter().collect())
+            .collect();
+        Self { recv, send }
+    }
+
+    /// Unordered neighbour rank pairs that exchange anything.
+    pub fn neighbor_pairs(&self) -> FxHashSet<(u16, u16)> {
+        let mut pairs = FxHashSet::default();
+        for (r, lists) in self.recv.iter().enumerate() {
+            for (s, _) in lists {
+                let r = r as u16;
+                pairs.insert((r.min(*s), r.max(*s)));
+            }
+        }
+        pairs
+    }
+
+    /// Directed messages per halo update (one per (sender, receiver)
+    /// pair with a non-empty list).
+    pub fn messages_per_update(&self) -> usize {
+        self.send.iter().map(|l| l.len()).sum()
+    }
+
+    /// f64 payload bytes moved per halo update, all ranks.
+    pub fn bytes_per_update(&self) -> usize {
+        8 * self
+            .send
+            .iter()
+            .map(|l| l.iter().map(|(_, d)| d.len()).sum::<usize>())
+            .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Distribution, Halo};
+    use crate::fem::{assemble, DofMap};
+    use crate::mesh::generator;
+    use crate::mesh::topology::LeafTopology;
+
+    fn setup(nparts: usize) -> (RankPlan, Csr, Halo) {
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let topo = LeafTopology::build(&mesh);
+        let dof = DofMap::build(&mesh, &topo);
+        let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, nparts);
+        let src = vec![0.0; dof.n_dofs];
+        let sys = assemble(&mesh, &topo, &dof, &src, None);
+        let halo = Halo::build(&mesh, &topo, &owners, nparts);
+        (plan, sys.k, halo)
+    }
+
+    #[test]
+    fn send_is_the_transpose_of_recv() {
+        let (plan, a, _) = setup(4);
+        let g = GhostPlan::build(&plan, &a);
+        for (r, lists) in g.recv.iter().enumerate() {
+            for (s, dofs) in lists {
+                let back = g.send[*s as usize]
+                    .iter()
+                    .find(|(d, _)| *d as usize == r)
+                    .expect("send list missing");
+                assert_eq!(&back.1, dofs, "send/recv lists disagree {s}->{r}");
+                // received dofs really are owned by the sender
+                for &d in dofs {
+                    assert_eq!(plan.rank_of_dof[d as usize], *s);
+                }
+            }
+        }
+        assert_eq!(
+            g.messages_per_update(),
+            g.recv.iter().map(|l| l.len()).sum::<usize>()
+        );
+        assert!(g.bytes_per_update() > 0);
+    }
+
+    #[test]
+    fn ghosts_cover_every_off_rank_column() {
+        let (plan, a, _) = setup(3);
+        let g = GhostPlan::build(&plan, &a);
+        for (r, rows) in plan.rows.iter().enumerate() {
+            let ghosts: FxHashSet<u32> = g.recv[r]
+                .iter()
+                .flat_map(|(_, d)| d.iter().copied())
+                .collect();
+            for &i in rows {
+                let (cols, _) = a.row(i as usize);
+                for &c in cols {
+                    if plan.rank_of_dof[c as usize] as usize != r {
+                        assert!(ghosts.contains(&c), "rank {r} misses ghost dof {c}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn face_halo_pairs_are_dof_halo_pairs() {
+        // every face-adjacent rank pair of dist::Halo must also couple
+        // at the dof level (faces share 3 vertices); the dof halo may
+        // add vertex/edge-adjacent pairs on top
+        let (plan, a, halo) = setup(5);
+        let g = GhostPlan::build(&plan, &a);
+        let pairs = g.neighbor_pairs();
+        for (&(lo, hi), &faces) in &halo.faces_between {
+            assert!(faces > 0);
+            assert!(
+                pairs.contains(&(lo, hi)),
+                "face-halo pair ({lo},{hi}) missing from the dof halo"
+            );
+        }
+    }
+
+    #[test]
+    fn single_rank_has_no_ghosts() {
+        let (plan, a, _) = setup(1);
+        let g = GhostPlan::build(&plan, &a);
+        assert_eq!(g.messages_per_update(), 0);
+        assert_eq!(g.bytes_per_update(), 0);
+        assert!(g.recv[0].is_empty() && g.send[0].is_empty());
+    }
+}

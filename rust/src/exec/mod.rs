@@ -1,0 +1,189 @@
+//! The execution subsystem: *how* the virtual ranks actually run
+//! (DESIGN.md §9).
+//!
+//! Everything above this layer -- partitioners, the DLB policy loop,
+//! the scenarios -- talks about virtual ranks; this module decides
+//! what a rank physically is. An [`Executor`] owns the two
+//! rank-parallel kernels of an adaptive step, rank-local assembly and
+//! the distributed Jacobi-PCG, both driven by a per-step ownership
+//! [`RankPlan`]:
+//!
+//! * [`VirtualExec`] (`--exec virtual`) -- the crate's original mode:
+//!   one thread executes every rank's phase in rank order and the
+//!   timeline prices communication with the alpha-beta model. Nothing
+//!   is measured in parallel; imbalance is modeled from weights.
+//! * [`ThreadedExec`] (`--exec threads`) -- real shared-memory SPMD:
+//!   one `std::thread` worker per virtual rank (capped at the core
+//!   count), barrier-stepped phases, ghost-dof values physically
+//!   exchanged along the [`GhostPlan`] halo, rank-ordered
+//!   deterministic reductions. Wall clock is hardware time; per-rank
+//!   busy times are *measured* load that replaces the modeled
+//!   `solve_imbalance` and feeds the `measured` weight model.
+//!
+//! Both executors run bit-identical arithmetic (the plan fixes every
+//! loop and reduction order), so `--exec` changes how fast the answer
+//! arrives and how honestly it is timed -- never the answer itself.
+
+pub mod assemble;
+pub mod ghost;
+pub mod pcg;
+pub mod plan;
+mod threaded;
+mod virtual_exec;
+
+pub use ghost::GhostPlan;
+pub use pcg::{pcg_sequential, pcg_threaded, HaloStats};
+pub use plan::RankPlan;
+pub use threaded::{available_threads, ThreadedExec};
+pub use virtual_exec::VirtualExec;
+
+use crate::bail;
+use crate::fem::{Assembled, Csr, DofMap, SolveStats, SolverOpts};
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::TetMesh;
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+
+/// What an executor measured while running one adaptive step's
+/// assembly + solve. Drained by [`Executor::take_report`]; empty for
+/// executors that measure nothing ([`VirtualExec`]).
+#[derive(Debug, Clone, Default)]
+pub struct ExecReport {
+    /// Per-rank wall seconds of compute sections (assembly, SpMV,
+    /// dots, axpy), excluding synchronization waits -- the measured
+    /// load profile.
+    pub rank_busy: Vec<f64>,
+    /// Bottleneck rank's wall seconds spent on halo exchange.
+    pub halo_wall: f64,
+    /// Directed halo messages over the step.
+    pub halo_messages: usize,
+    /// Halo payload bytes over the step.
+    pub halo_bytes: usize,
+}
+
+impl ExecReport {
+    /// Measured load-imbalance factor `max busy / mean busy` (1.0 when
+    /// nothing was measured).
+    pub fn measured_imbalance(&self) -> f64 {
+        if self.rank_busy.is_empty() || self.rank_busy.iter().sum::<f64>() <= 0.0 {
+            return 1.0;
+        }
+        crate::util::stats::imbalance(&self.rank_busy).max(1.0)
+    }
+}
+
+/// A pluggable execution schedule for the rank-parallel kernels of an
+/// adaptive step. Implementations must be deterministic: repeated
+/// calls with the same inputs produce bit-identical outputs, and all
+/// executors agree bit for bit (the cross-executor contract the
+/// equivalence suite enforces).
+pub trait Executor {
+    /// Registry name (`--exec <name>`).
+    fn name(&self) -> &'static str;
+
+    /// Virtual rank count this executor was built for.
+    fn nranks(&self) -> usize;
+
+    /// Whether [`Executor::take_report`] carries genuine parallel
+    /// measurements (true only for schedules that really ran ranks
+    /// concurrently).
+    fn measures(&self) -> bool {
+        false
+    }
+
+    /// Assemble K, M, b over the plan's elements. `rt` is the PJRT
+    /// runtime for executors that support the artifact engines.
+    fn assemble(
+        &self,
+        plan: &RankPlan,
+        mesh: &TetMesh,
+        topo: &LeafTopology,
+        dof: &DofMap,
+        source: &[f64],
+        rt: Option<&Runtime>,
+    ) -> Assembled;
+
+    /// Jacobi-PCG on `A x = b` with the plan's row ownership and
+    /// rank-ordered deterministic reductions.
+    fn pcg(
+        &self,
+        plan: &RankPlan,
+        a: &Csr,
+        b: &[f64],
+        x: &mut [f64],
+        opts: &SolverOpts,
+        rt: Option<&Runtime>,
+    ) -> SolveStats;
+
+    /// Drain the measurements accumulated since the last call.
+    fn take_report(&self) -> ExecReport;
+}
+
+/// One registered executor: its `--exec` name and a one-line
+/// description (the `phg-dlb methods` listing).
+pub struct ExecutorSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+}
+
+/// Every executor, default first.
+pub const EXECUTORS: [ExecutorSpec; 2] = [
+    ExecutorSpec {
+        name: "virtual",
+        description: "sequential virtual-SPMD: ranks run in one thread, comm priced alpha-beta",
+    },
+    ExecutorSpec {
+        name: "threads",
+        description: "shared-memory SPMD: one worker per rank (capped at cores), measured walls",
+    },
+];
+
+/// Instantiate an executor from its config/CLI spec. `threads` is the
+/// `--exec-threads` budget (0 = auto: one worker per core). Unknown
+/// names error with the valid list.
+pub fn executor_by_name(spec: &str, nranks: usize, threads: usize) -> Result<Box<dyn Executor>> {
+    match spec {
+        "virtual" => Ok(Box::new(VirtualExec::new(nranks))),
+        "threads" => Ok(Box::new(ThreadedExec::new(nranks, threads))),
+        other => bail!("unknown executor {other:?}; valid executors: virtual, threads"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_all_executors() {
+        for spec in &EXECUTORS {
+            let e = executor_by_name(spec.name, 4, 2).unwrap();
+            assert_eq!(e.name(), spec.name);
+            assert_eq!(e.nranks(), 4);
+            assert!(!spec.description.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_executor_lists_valid_names() {
+        let err = executor_by_name("mpi", 4, 0).unwrap_err().to_string();
+        assert!(err.contains("mpi"), "{err}");
+        for spec in &EXECUTORS {
+            assert!(err.contains(spec.name), "error does not list {}: {err}", spec.name);
+        }
+    }
+
+    #[test]
+    fn measured_imbalance_handles_empty_and_skewed() {
+        assert_eq!(ExecReport::default().measured_imbalance(), 1.0);
+        let rep = ExecReport {
+            rank_busy: vec![3.0, 1.0, 1.0, 1.0],
+            ..Default::default()
+        };
+        assert!((rep.measured_imbalance() - 2.0).abs() < 1e-12);
+        let zero = ExecReport {
+            rank_busy: vec![0.0, 0.0],
+            ..Default::default()
+        };
+        assert_eq!(zero.measured_imbalance(), 1.0);
+    }
+}

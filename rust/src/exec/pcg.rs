@@ -1,0 +1,791 @@
+//! Distributed Jacobi-PCG over a [`RankPlan`]: one algorithm, two
+//! execution schedules (DESIGN.md §9).
+//!
+//! The algorithm is [`crate::fem::native_pcg`] reorganized the way an
+//! SPMD code runs it: every rank updates its owned rows, every global
+//! dot product is a *rank-ordered* reduction (each rank's partial sum
+//! over its ascending row list, partials combined in rank order), and
+//! the SpMV reads off-rank entries of `p` through the
+//! [`GhostPlan`] halo. Because the arithmetic -- per-rank loop
+//! order, partial-sum order, reduction order -- is fixed by the plan
+//! and never by the execution schedule, the two drivers here are
+//! bit-identical:
+//!
+//! * [`pcg_sequential`] -- the virtual-SPMD schedule: one thread runs
+//!   every rank's phase in rank order (ghost exchange is the identity
+//!   in one address space).
+//! * [`pcg_threaded`] -- the real schedule: one worker per virtual
+//!   rank (capped at a thread budget), `std::sync::Barrier` between
+//!   phases, ghost values physically moved through per-rank-pair
+//!   channels, reduction partials through an atomic slot array.
+//!
+//! That bitwise agreement is what makes the cross-executor
+//! equivalence tests exact and `ThreadedExec` run-to-run
+//! deterministic regardless of scheduling.
+
+use crate::fem::{Csr, SolveStats, SolverOpts};
+use crate::util::timer::Stopwatch;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Barrier;
+
+use super::ghost::GhostPlan;
+use super::plan::RankPlan;
+
+/// Measured halo traffic of one threaded solve.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HaloStats {
+    /// Bottleneck rank's wall seconds spent packing, sending,
+    /// receiving and unpacking ghost values (includes waiting on the
+    /// producing rank -- that wait is the physical cost of imbalance).
+    pub wall: f64,
+    /// Directed messages over the whole solve.
+    pub messages: usize,
+    /// Payload bytes over the whole solve.
+    pub bytes: usize,
+}
+
+/// Combine per-rank partials in rank order -- THE reduction rule.
+/// Every global scalar in both schedules goes through this fold, so
+/// its rounding never depends on the execution schedule.
+#[inline]
+pub fn ordered_sum(parts: &[f64]) -> f64 {
+    parts.iter().fold(0.0, |s, &v| s + v)
+}
+
+#[inline]
+fn ordered_sum_bits(slots: &[AtomicU64]) -> f64 {
+    slots
+        .iter()
+        .fold(0.0, |s, a| s + f64::from_bits(a.load(Ordering::Relaxed)))
+}
+
+/// Partial dot product over one rank's ascending row list.
+#[inline]
+fn dot_rows(rows: &[u32], u: &[f64], v: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &i in rows {
+        s += u[i as usize] * v[i as usize];
+    }
+    s
+}
+
+/// Rank-local SpMV: y[i] = A[i,:] . x for the rank's rows. `x` must
+/// hold valid values at every owned row index and every ghost column.
+#[inline]
+fn spmv_rows(a: &Csr, rows: &[u32], x: &[f64], y: &mut [f64]) {
+    for &i in rows {
+        let (cols, vals) = a.row(i as usize);
+        let mut acc = 0.0;
+        for (c, v) in cols.iter().zip(vals) {
+            acc += v * x[*c as usize];
+        }
+        y[i as usize] = acc;
+    }
+}
+
+/// Rank-local init: x = x0, r = b - A x0, z = Dinv r, p = z over the
+/// rank's rows. Returns the partial (b.b, r.z).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn init_rows(
+    a: &Csr,
+    rows: &[u32],
+    b: &[f64],
+    x0: &[f64],
+    dinv: &[f64],
+    x: &mut [f64],
+    r: &mut [f64],
+    z: &mut [f64],
+    p: &mut [f64],
+) -> (f64, f64) {
+    for &i in rows {
+        let i = i as usize;
+        let (cols, vals) = a.row(i);
+        let mut acc = 0.0;
+        for (c, v) in cols.iter().zip(vals) {
+            acc += v * x0[*c as usize];
+        }
+        x[i] = x0[i];
+        r[i] = b[i] - acc;
+        z[i] = r[i] * dinv[i];
+        p[i] = z[i];
+    }
+    (dot_rows(rows, b, b), dot_rows(rows, r, z))
+}
+
+/// Rank-local alpha update: x += alpha p, r -= alpha q, z = Dinv r
+/// over the rank's rows. Returns the partial r.z.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn update_rows(
+    rows: &[u32],
+    alpha: f64,
+    p: &[f64],
+    q: &[f64],
+    dinv: &[f64],
+    x: &mut [f64],
+    r: &mut [f64],
+    z: &mut [f64],
+) -> f64 {
+    for &i in rows {
+        let i = i as usize;
+        x[i] += alpha * p[i];
+        r[i] -= alpha * q[i];
+    }
+    for &i in rows {
+        let i = i as usize;
+        z[i] = r[i] * dinv[i];
+    }
+    dot_rows(rows, r, z)
+}
+
+/// Rank-local direction update: p = z + beta p over the rank's rows.
+#[inline]
+fn direction_rows(rows: &[u32], beta: f64, z: &[f64], p: &mut [f64]) {
+    for &i in rows {
+        let i = i as usize;
+        p[i] = z[i] + beta * p[i];
+    }
+}
+
+fn jacobi_dinv(a: &Csr) -> Vec<f64> {
+    a.diag()
+        .iter()
+        .map(|&d| if d != 0.0 { 1.0 / d } else { 0.0 })
+        .collect()
+}
+
+/// The virtual-SPMD schedule: every rank's phase executed in rank
+/// order by one thread. Ghost exchange is the identity (all vectors
+/// live in one address space), but every value and every reduction is
+/// computed exactly as [`pcg_threaded`] computes it.
+pub fn pcg_sequential(
+    plan: &RankPlan,
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    opts: &SolverOpts,
+) -> SolveStats {
+    let n = a.n;
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+    let p_ranks = plan.nranks;
+    let dinv = jacobi_dinv(a);
+    let x0: Vec<f64> = x.to_vec();
+    let mut r = vec![0.0; n];
+    let mut z = vec![0.0; n];
+    let mut pv = vec![0.0; n];
+    let mut q = vec![0.0; n];
+    let mut part_a = vec![0.0; p_ranks];
+    let mut part_b = vec![0.0; p_ranks];
+
+    for rk in 0..p_ranks {
+        let rows = &plan.rows[rk];
+        let (pb2, prz) = init_rows(a, rows, b, &x0, &dinv, x, &mut r, &mut z, &mut pv);
+        part_a[rk] = pb2;
+        part_b[rk] = prz;
+    }
+    let bnorm2 = ordered_sum(&part_a);
+    let mut rz = ordered_sum(&part_b);
+    if bnorm2 == 0.0 {
+        x.fill(0.0);
+        return SolveStats {
+            iterations: 0,
+            rel_residual: 0.0,
+            used_pjrt: false,
+        };
+    }
+    let tol2 = opts.tol * opts.tol * bnorm2;
+    let mut iterations = opts.max_iter;
+    let mut rnorm2 = f64::INFINITY;
+    for it in 0..=opts.max_iter {
+        for rk in 0..p_ranks {
+            part_a[rk] = dot_rows(&plan.rows[rk], &r, &r);
+        }
+        rnorm2 = ordered_sum(&part_a);
+        if rnorm2 <= tol2 {
+            iterations = it;
+            break;
+        }
+        if it == opts.max_iter {
+            break;
+        }
+        // ghost exchange of p: the identity in one address space
+        for rows in &plan.rows {
+            spmv_rows(a, rows, &pv, &mut q);
+        }
+        for rk in 0..p_ranks {
+            part_b[rk] = dot_rows(&plan.rows[rk], &pv, &q);
+        }
+        let pq = ordered_sum(&part_b);
+        if pq <= 0.0 {
+            iterations = it;
+            break; // not SPD / breakdown
+        }
+        let alpha = rz / pq;
+        for rk in 0..p_ranks {
+            part_a[rk] = update_rows(&plan.rows[rk], alpha, &pv, &q, &dinv, x, &mut r, &mut z);
+        }
+        let rz_new = ordered_sum(&part_a);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for rows in &plan.rows {
+            direction_rows(rows, beta, &z, &mut pv);
+        }
+    }
+    SolveStats {
+        iterations,
+        rel_residual: (rnorm2 / bnorm2).sqrt(),
+        used_pjrt: false,
+    }
+}
+
+/// Per-rank working vectors of the threaded schedule. Full-length so
+/// the shared kernels index globally; only owned entries (and, for
+/// `p`, received ghosts) are ever read.
+struct RankState {
+    x: Vec<f64>,
+    r: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+    q: Vec<f64>,
+}
+
+impl RankState {
+    fn new(n: usize) -> Self {
+        Self {
+            x: vec![0.0; n],
+            r: vec![0.0; n],
+            z: vec![0.0; n],
+            p: vec![0.0; n],
+            q: vec![0.0; n],
+        }
+    }
+}
+
+/// One rank's endpoints: senders/receivers per halo neighbour, in the
+/// same order as the ghost plan's send/recv lists.
+struct RankComm {
+    rank: usize,
+    sends: Vec<Sender<Vec<f64>>>,
+    recvs: Vec<Receiver<Vec<f64>>>,
+}
+
+/// What one rank hands back to the caller after the solve.
+struct RankOut {
+    rank: usize,
+    /// Owned x entries, in `plan.rows[rank]` order.
+    x_vals: Vec<f64>,
+    /// Wall seconds of this rank's compute sections (assembly-free:
+    /// SpMV, dots, axpy), excluding barrier and halo waits.
+    busy: f64,
+    /// Wall seconds of this rank's halo pack/send/recv/unpack.
+    halo: f64,
+}
+
+/// The real schedule: `nthreads` workers execute the virtual ranks
+/// (contiguous blocks when ranks outnumber workers), barrier-stepped
+/// through the same phases as [`pcg_sequential`], with ghost values
+/// moved through per-rank-pair channels. Returns the stats, the
+/// per-rank busy seconds (the *measured* load imbalance) and the halo
+/// traffic.
+pub fn pcg_threaded(
+    plan: &RankPlan,
+    ghost: &GhostPlan,
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    opts: &SolverOpts,
+    nthreads: usize,
+) -> (SolveStats, Vec<f64>, HaloStats) {
+    let n = a.n;
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+    let p_ranks = plan.nranks;
+    let nthreads = nthreads.clamp(1, p_ranks.max(1));
+    let dinv = jacobi_dinv(a);
+    let x0: Vec<f64> = x.to_vec();
+
+    // per-rank-pair channels, endpoints ordered exactly like the
+    // ghost plan's lists so messages pair with index lists by position
+    let mut sends: Vec<Vec<Sender<Vec<f64>>>> = (0..p_ranks).map(|_| Vec::new()).collect();
+    let mut recv_slots: Vec<Vec<Option<Receiver<Vec<f64>>>>> = (0..p_ranks)
+        .map(|r| (0..ghost.recv[r].len()).map(|_| None).collect())
+        .collect();
+    for r in 0..p_ranks {
+        for (dest, _) in &ghost.send[r] {
+            let (tx, rx) = channel();
+            sends[r].push(tx);
+            let k = ghost.recv[*dest as usize]
+                .iter()
+                .position(|(src, _)| *src as usize == r)
+                .expect("send/recv transpose broken");
+            recv_slots[*dest as usize][k] = Some(rx);
+        }
+    }
+    let mut comms: Vec<RankComm> = sends
+        .into_iter()
+        .zip(recv_slots)
+        .enumerate()
+        .map(|(rank, (s, rs))| RankComm {
+            rank,
+            sends: s,
+            recvs: rs.into_iter().map(|o| o.expect("recv endpoint")).collect(),
+        })
+        .collect();
+
+    // reduction slots: two concurrent scalars suffice (see the barrier
+    // schedule below); Relaxed is enough because every read is
+    // separated from the matching stores by a Barrier::wait
+    let slot_a: Vec<AtomicU64> = (0..p_ranks).map(|_| AtomicU64::new(0)).collect();
+    let slot_b: Vec<AtomicU64> = (0..p_ranks).map(|_| AtomicU64::new(0)).collect();
+    let barrier = Barrier::new(nthreads);
+
+    // contiguous rank blocks per worker
+    let mut bundles: Vec<Vec<RankComm>> = (0..nthreads).map(|_| Vec::new()).collect();
+    for (t, bundle) in bundles.iter_mut().enumerate() {
+        let lo = t * p_ranks / nthreads;
+        let hi = (t + 1) * p_ranks / nthreads;
+        for _ in lo..hi {
+            bundle.push(comms.remove(0));
+        }
+    }
+    debug_assert!(comms.is_empty());
+
+    let mut outs: Vec<Option<RankOut>> = (0..p_ranks).map(|_| None).collect();
+    let mut stats = SolveStats {
+        iterations: 0,
+        rel_residual: 0.0,
+        used_pjrt: false,
+    };
+    let mut halo_rounds = 0usize;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = bundles
+            .into_iter()
+            .map(|bundle| {
+                let (a, b, x0, dinv, plan, ghost) = (a, b, &x0, &dinv, plan, ghost);
+                let (slot_a, slot_b, barrier) = (&slot_a, &slot_b, &barrier);
+                scope.spawn(move || {
+                    worker(
+                        bundle,
+                        plan,
+                        ghost,
+                        a,
+                        b,
+                        x0,
+                        dinv,
+                        opts,
+                        slot_a,
+                        slot_b,
+                        barrier,
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank_outs, st, rounds) = h.join().expect("pcg worker panicked");
+            stats = st;
+            halo_rounds = rounds;
+            for o in rank_outs {
+                outs[o.rank] = Some(o);
+            }
+        }
+    });
+
+    let mut busy = vec![0.0; p_ranks];
+    let mut halo = HaloStats {
+        wall: 0.0,
+        messages: halo_rounds * ghost.messages_per_update(),
+        bytes: halo_rounds * ghost.bytes_per_update(),
+    };
+    for o in outs {
+        let o = o.expect("rank produced no output");
+        busy[o.rank] = o.busy;
+        halo.wall = halo.wall.max(o.halo);
+        for (j, &d) in plan.rows[o.rank].iter().enumerate() {
+            x[d as usize] = o.x_vals[j];
+        }
+    }
+    (stats, busy, halo)
+}
+
+/// One worker's whole solve: runs every phase for each of its ranks,
+/// in rank order, between shared barriers. All workers compute every
+/// global scalar redundantly from the slot arrays, so control flow
+/// (convergence, breakdown) is identical across workers by
+/// construction and the barrier counts always line up.
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    bundle: Vec<RankComm>,
+    plan: &RankPlan,
+    ghost: &GhostPlan,
+    a: &Csr,
+    b: &[f64],
+    x0: &[f64],
+    dinv: &[f64],
+    opts: &SolverOpts,
+    slot_a: &[AtomicU64],
+    slot_b: &[AtomicU64],
+    barrier: &Barrier,
+) -> (Vec<RankOut>, SolveStats, usize) {
+    let n = a.n;
+    let mut states: Vec<RankState> = bundle.iter().map(|_| RankState::new(n)).collect();
+    let mut busy = vec![0.0; bundle.len()];
+    let mut halo_w = vec![0.0; bundle.len()];
+
+    // ---- init: local residual + first partials
+    for (k, c) in bundle.iter().enumerate() {
+        let sw = Stopwatch::start();
+        let st = &mut states[k];
+        let (pb2, prz) = init_rows(
+            a,
+            &plan.rows[c.rank],
+            b,
+            x0,
+            dinv,
+            &mut st.x,
+            &mut st.r,
+            &mut st.z,
+            &mut st.p,
+        );
+        slot_a[c.rank].store(pb2.to_bits(), Ordering::Relaxed);
+        slot_b[c.rank].store(prz.to_bits(), Ordering::Relaxed);
+        busy[k] += sw.elapsed();
+    }
+    barrier.wait();
+    let bnorm2 = ordered_sum_bits(slot_a);
+    let mut rz = ordered_sum_bits(slot_b);
+    // protect the slots from the next iteration's stores until every
+    // worker has read them
+    barrier.wait();
+
+    let finish = |states: &[RankState], busy: &[f64], halo_w: &[f64], st: SolveStats, rounds| {
+        let outs = bundle
+            .iter()
+            .enumerate()
+            .map(|(k, c)| RankOut {
+                rank: c.rank,
+                x_vals: plan.rows[c.rank]
+                    .iter()
+                    .map(|&d| states[k].x[d as usize])
+                    .collect(),
+                busy: busy[k],
+                halo: halo_w[k],
+            })
+            .collect();
+        (outs, st, rounds)
+    };
+
+    if bnorm2 == 0.0 {
+        // b = 0: the solution is 0 (mirrors native_pcg's early out)
+        for (k, c) in bundle.iter().enumerate() {
+            for &d in &plan.rows[c.rank] {
+                states[k].x[d as usize] = 0.0;
+            }
+        }
+        let st = SolveStats {
+            iterations: 0,
+            rel_residual: 0.0,
+            used_pjrt: false,
+        };
+        return finish(&states, &busy, &halo_w, st, 0);
+    }
+
+    let tol2 = opts.tol * opts.tol * bnorm2;
+    let mut iterations = opts.max_iter;
+    let mut rnorm2 = f64::INFINITY;
+    let mut rounds = 0usize;
+    for it in 0..=opts.max_iter {
+        // ---- convergence check: partial |r|^2, rank-ordered reduce
+        for (k, c) in bundle.iter().enumerate() {
+            let sw = Stopwatch::start();
+            let v = dot_rows(&plan.rows[c.rank], &states[k].r, &states[k].r);
+            slot_a[c.rank].store(v.to_bits(), Ordering::Relaxed);
+            busy[k] += sw.elapsed();
+        }
+        barrier.wait(); // B1
+        rnorm2 = ordered_sum_bits(slot_a);
+        if rnorm2 <= tol2 {
+            iterations = it;
+            break;
+        }
+        if it == opts.max_iter {
+            break;
+        }
+        // ---- halo: ship owned boundary p values, then fill ghosts.
+        // All sends happen before any recv on this worker; a recv
+        // blocks only until the producing worker's send lands, so the
+        // channels themselves are the synchronization.
+        rounds += 1;
+        for (k, c) in bundle.iter().enumerate() {
+            let sw = Stopwatch::start();
+            for (tx, (_, list)) in c.sends.iter().zip(&ghost.send[c.rank]) {
+                // one owned buffer per message: the alloc is part of
+                // the pack cost (persistent-buffer recycling is a
+                // future optimization; the volumes here are tiny
+                // relative to the SpMV)
+                let msg: Vec<f64> = list.iter().map(|&d| states[k].p[d as usize]).collect();
+                tx.send(msg).expect("halo receiver dropped");
+            }
+            halo_w[k] += sw.elapsed();
+        }
+        for (k, c) in bundle.iter().enumerate() {
+            let sw = Stopwatch::start();
+            let st = &mut states[k];
+            for (rx, (_, list)) in c.recvs.iter().zip(&ghost.recv[c.rank]) {
+                let msg = rx.recv().expect("halo sender dropped");
+                debug_assert_eq!(msg.len(), list.len());
+                for (&d, &v) in list.iter().zip(&msg) {
+                    st.p[d as usize] = v;
+                }
+            }
+            halo_w[k] += sw.elapsed();
+        }
+        // ---- SpMV + partial p.q
+        for (k, c) in bundle.iter().enumerate() {
+            let sw = Stopwatch::start();
+            let st = &mut states[k];
+            spmv_rows(a, &plan.rows[c.rank], &st.p, &mut st.q);
+            let v = dot_rows(&plan.rows[c.rank], &st.p, &st.q);
+            slot_b[c.rank].store(v.to_bits(), Ordering::Relaxed);
+            busy[k] += sw.elapsed();
+        }
+        barrier.wait(); // B2
+        let pq = ordered_sum_bits(slot_b);
+        if pq <= 0.0 {
+            iterations = it;
+            break; // not SPD / breakdown, all workers agree
+        }
+        let alpha = rz / pq;
+        // ---- alpha update + partial r.z
+        for (k, c) in bundle.iter().enumerate() {
+            let sw = Stopwatch::start();
+            let st = &mut states[k];
+            let v = update_rows(
+                &plan.rows[c.rank],
+                alpha,
+                &st.p,
+                &st.q,
+                dinv,
+                &mut st.x,
+                &mut st.r,
+                &mut st.z,
+            );
+            slot_a[c.rank].store(v.to_bits(), Ordering::Relaxed);
+            busy[k] += sw.elapsed();
+        }
+        barrier.wait(); // B3
+        let rz_new = ordered_sum_bits(slot_a);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        // ---- direction update
+        for (k, c) in bundle.iter().enumerate() {
+            let sw = Stopwatch::start();
+            let st = &mut states[k];
+            direction_rows(&plan.rows[c.rank], beta, &st.z, &mut st.p);
+            busy[k] += sw.elapsed();
+        }
+        barrier.wait(); // B4: p is consistent before the next halo
+    }
+    let st = SolveStats {
+        iterations,
+        rel_residual: (rnorm2 / bnorm2).sqrt(),
+        used_pjrt: false,
+    };
+    finish(&states, &busy, &halo_w, st, rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::fem::{native_pcg, DofMap};
+    use crate::mesh::generator;
+    use crate::mesh::topology::LeafTopology;
+
+    /// 2D grid Laplacian partitioned into contiguous row blocks.
+    fn laplacian(n: usize) -> (Csr, Vec<f64>) {
+        let id = |i: usize, j: usize| (i * n + j) as u32;
+        let mut t = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                let r = id(i, j);
+                t.push((r, r, 4.0));
+                if i > 0 {
+                    t.push((r, id(i - 1, j), -1.0));
+                }
+                if i + 1 < n {
+                    t.push((r, id(i + 1, j), -1.0));
+                }
+                if j > 0 {
+                    t.push((r, id(i, j - 1), -1.0));
+                }
+                if j + 1 < n {
+                    t.push((r, id(i, j + 1), -1.0));
+                }
+            }
+        }
+        let a = Csr::from_triplets(n * n, t);
+        let ones = vec![1.0; n * n];
+        let mut b = vec![0.0; n * n];
+        a.spmv(&ones, &mut b);
+        (a, b)
+    }
+
+    /// Hand-built plan: contiguous row blocks, no element lists.
+    fn block_plan(n: usize, nranks: usize) -> RankPlan {
+        let mut rank_of_dof = vec![0u16; n];
+        let mut rows: Vec<Vec<u32>> = vec![Vec::new(); nranks];
+        for d in 0..n {
+            let r = d * nranks / n;
+            rank_of_dof[d] = r as u16;
+            rows[r].push(d as u32);
+        }
+        RankPlan {
+            nranks,
+            elems: vec![Vec::new(); nranks],
+            rank_of_dof,
+            rows,
+        }
+    }
+
+    #[test]
+    fn sequential_matches_native_solution() {
+        let (a, b) = laplacian(16);
+        let plan = block_plan(a.n, 4);
+        // tight tolerance so the convergence bound, not the stopping
+        // criterion, dominates the cross-algorithm comparison
+        let opts = SolverOpts {
+            tol: 1e-10,
+            max_iter: 2000,
+        };
+        let mut xs = vec![0.0; a.n];
+        let stats = pcg_sequential(&plan, &a, &b, &mut xs, &opts);
+        assert!(stats.rel_residual < 1e-10);
+        let mut xn = vec![0.0; a.n];
+        let sn = native_pcg(&a, &b, &mut xn, &opts);
+        // different reduction order: same solution to solver accuracy
+        for (s, v) in xs.iter().zip(&xn) {
+            assert!((s - v).abs() < 1e-6, "{s} vs {v}");
+        }
+        assert!(stats.iterations.abs_diff(sn.iterations) <= 5);
+    }
+
+    #[test]
+    fn threaded_is_bitwise_equal_to_sequential() {
+        let (a, b) = laplacian(20);
+        for nranks in [1usize, 3, 5] {
+            let plan = block_plan(a.n, nranks);
+            let ghost = GhostPlan::build(&plan, &a);
+            let opts = SolverOpts {
+                tol: 1e-8,
+                max_iter: 500,
+            };
+            let mut xs = vec![0.0; a.n];
+            let st_seq = pcg_sequential(&plan, &a, &b, &mut xs, &opts);
+            for nthreads in [1usize, 2, 8] {
+                let mut xt = vec![0.0; a.n];
+                let (st_thr, busy, halo) =
+                    pcg_threaded(&plan, &ghost, &a, &b, &mut xt, &opts, nthreads);
+                assert_eq!(st_seq.iterations, st_thr.iterations, "p={nranks} t={nthreads}");
+                assert_eq!(
+                    st_seq.rel_residual.to_bits(),
+                    st_thr.rel_residual.to_bits(),
+                    "p={nranks} t={nthreads}"
+                );
+                for (i, (s, t)) in xs.iter().zip(&xt).enumerate() {
+                    assert_eq!(
+                        s.to_bits(),
+                        t.to_bits(),
+                        "x[{i}] differs: p={nranks} t={nthreads}"
+                    );
+                }
+                assert_eq!(busy.len(), nranks);
+                assert!(busy.iter().all(|&t| t >= 0.0));
+                if nranks > 1 {
+                    assert!(halo.messages > 0, "no halo traffic at p={nranks}");
+                    assert!(halo.bytes > halo.messages);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_is_run_to_run_deterministic() {
+        let (a, b) = laplacian(12);
+        let plan = block_plan(a.n, 4);
+        let ghost = GhostPlan::build(&plan, &a);
+        let opts = SolverOpts::default();
+        let mut first = vec![0.0; a.n];
+        let (s1, _, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut first, &opts, 4);
+        for _ in 0..3 {
+            let mut again = vec![0.0; a.n];
+            let (s2, _, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut again, &opts, 4);
+            assert_eq!(s1.iterations, s2.iterations);
+            for (u, v) in first.iter().zip(&again) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let (a, _) = laplacian(6);
+        let plan = block_plan(a.n, 3);
+        let ghost = GhostPlan::build(&plan, &a);
+        let b = vec![0.0; a.n];
+        let mut x = vec![5.0; a.n];
+        let (st, _, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut x, &SolverOpts::default(), 2);
+        assert_eq!(st.iterations, 0);
+        assert!(x.iter().all(|&v| v == 0.0));
+        let mut xs = vec![5.0; a.n];
+        let ss = pcg_sequential(&plan, &a, &b, &mut xs, &SolverOpts::default());
+        assert_eq!(ss.iterations, 0);
+        assert!(xs.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let (a, b) = laplacian(16);
+        let plan = block_plan(a.n, 4);
+        let opts = SolverOpts::default();
+        let mut cold = vec![0.0; a.n];
+        let s_cold = pcg_sequential(&plan, &a, &b, &mut cold, &opts);
+        let mut warm: Vec<f64> = cold.iter().map(|v| v * 0.999).collect();
+        let s_warm = pcg_sequential(&plan, &a, &b, &mut warm, &opts);
+        assert!(s_warm.iterations < s_cold.iterations);
+    }
+
+    #[test]
+    fn fem_plan_roundtrip_through_both_schedules() {
+        // a real mesh-derived plan (scattered row ownership, ghost
+        // lists from the actual FEM pattern), not just row blocks
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(4).assign_blocks(&mut mesh, &leaves);
+        let topo = LeafTopology::build(&mesh);
+        let dof = DofMap::build(&mesh, &topo);
+        let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, 4);
+        let src = vec![1.0; dof.n_dofs];
+        let sys = crate::fem::assemble(&mesh, &topo, &dof, &src, None);
+        let a = Csr::linear_combination(1.0, &sys.k, 1.0, &sys.m);
+        let ghost = GhostPlan::build(&plan, &a);
+        let opts = SolverOpts {
+            tol: 1e-9,
+            max_iter: 2000,
+        };
+        let mut xs = vec![0.0; a.n];
+        let st = pcg_sequential(&plan, &a, &sys.b, &mut xs, &opts);
+        assert!(st.rel_residual < 1e-8, "relres {}", st.rel_residual);
+        let mut xt = vec![0.0; a.n];
+        let (tt, busy, _) = pcg_threaded(&plan, &ghost, &a, &sys.b, &mut xt, &opts, 3);
+        assert_eq!(st.iterations, tt.iterations);
+        for (s, t) in xs.iter().zip(&xt) {
+            assert_eq!(s.to_bits(), t.to_bits());
+        }
+        assert!(busy.iter().sum::<f64>() > 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Rank-local ownership: which rank assembles which elements and
+//! owns which matrix rows (DESIGN.md §9).
+//!
+//! A [`RankPlan`] is the per-step contract between the driver and an
+//! [`crate::exec::Executor`]: it freezes the element -> rank map (the
+//! mesh's `owner` fields at solve time) into per-rank element lists,
+//! and derives from it a *row* ownership over the P1 dofs -- every dof
+//! is owned by exactly one rank (the owner of the first leaf, in
+//! topology order, that touches its vertex). Rank-local assembly
+//! iterates `elems[r]`; the distributed Jacobi-PCG updates `rows[r]`.
+//!
+//! Both executors consume the same plan, and every per-rank list is
+//! sorted ascending, so the arithmetic (element scatter order, partial
+//! dot products) is identical across executors by construction -- the
+//! bit-reproducibility rule of DESIGN.md §9.
+
+use crate::fem::DofMap;
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::TetMesh;
+
+/// Element and row ownership of one partition over `nranks` ranks.
+#[derive(Debug, Clone)]
+pub struct RankPlan {
+    pub nranks: usize,
+    /// Per rank: the local leaf indices (into `topo.leaves`) it owns,
+    /// ascending -- the elements the rank assembles.
+    pub elems: Vec<Vec<u32>>,
+    /// Per dof: the owning rank (owner of the first leaf in topology
+    /// order touching the dof's vertex).
+    pub rank_of_dof: Vec<u16>,
+    /// Per rank: the dof indices it owns, ascending -- the matrix rows
+    /// the rank updates in the distributed solve.
+    pub rows: Vec<Vec<u32>>,
+}
+
+impl RankPlan {
+    /// Freeze the current ownership into a plan. `owners` has one rank
+    /// per `topo.leaves` entry (the usual `mesh.elem(id).owner` scan).
+    pub fn build(
+        mesh: &TetMesh,
+        topo: &LeafTopology,
+        dof: &DofMap,
+        owners: &[u16],
+        nranks: usize,
+    ) -> Self {
+        assert_eq!(owners.len(), topo.n_leaves(), "owners/topology mismatch");
+        assert!(nranks >= 1, "need at least one rank");
+        let mut elems: Vec<Vec<u32>> = vec![Vec::new(); nranks];
+        for (i, &r) in owners.iter().enumerate() {
+            assert!((r as usize) < nranks, "owner {r} >= nranks {nranks}");
+            elems[r as usize].push(i as u32);
+        }
+        // first-seen leaf owner wins the row: deterministic in the
+        // leaf order, independent of execution
+        let mut rank_of_dof = vec![u16::MAX; dof.n_dofs];
+        for (i, &id) in topo.leaves.iter().enumerate() {
+            for &v in &mesh.elem(id).verts {
+                let d = dof.dof_of_vertex[v as usize] as usize;
+                if rank_of_dof[d] == u16::MAX {
+                    rank_of_dof[d] = owners[i];
+                }
+            }
+        }
+        let mut rows: Vec<Vec<u32>> = vec![Vec::new(); nranks];
+        for (d, &r) in rank_of_dof.iter().enumerate() {
+            debug_assert!(r != u16::MAX, "dof {d} touched by no leaf");
+            rows[r as usize].push(d as u32);
+        }
+        Self {
+            nranks,
+            elems,
+            rank_of_dof,
+            rows,
+        }
+    }
+
+    /// One-rank plan owning everything: the serial setup unit tests
+    /// and single-process tools use.
+    pub fn serial(mesh: &TetMesh, topo: &LeafTopology, dof: &DofMap) -> Self {
+        let owners = vec![0u16; topo.n_leaves()];
+        Self::build(mesh, topo, dof, &owners, 1)
+    }
+
+    /// Total dofs covered by the row ownership (sanity: equals the
+    /// dof count).
+    pub fn n_rows(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::mesh::generator;
+
+    fn setup(nparts: usize) -> (TetMesh, LeafTopology, DofMap, Vec<u16>) {
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let topo = LeafTopology::build(&mesh);
+        let dof = DofMap::build(&mesh, &topo);
+        let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        (mesh, topo, dof, owners)
+    }
+
+    #[test]
+    fn plan_partitions_elements_and_rows() {
+        let (mesh, topo, dof, owners) = setup(4);
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, 4);
+        let total_elems: usize = plan.elems.iter().map(|e| e.len()).sum();
+        assert_eq!(total_elems, topo.n_leaves());
+        assert_eq!(plan.n_rows(), dof.n_dofs);
+        // each dof owned exactly once, by the rank its list says
+        for (r, rows) in plan.rows.iter().enumerate() {
+            for &d in rows {
+                assert_eq!(plan.rank_of_dof[d as usize] as usize, r);
+            }
+        }
+        // lists are ascending (the deterministic-arithmetic invariant)
+        for lists in [&plan.elems, &plan.rows] {
+            for l in lists.iter() {
+                for w in l.windows(2) {
+                    assert!(w[0] < w[1], "per-rank list not ascending");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_owner_touches_the_row() {
+        // the owning rank of a dof must own at least one element
+        // containing that dof's vertex
+        let (mesh, topo, dof, owners) = setup(5);
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, 5);
+        for (d, &r) in plan.rank_of_dof.iter().enumerate() {
+            let v = dof.vertex_of_dof[d];
+            let touches = plan.elems[r as usize].iter().any(|&e| {
+                mesh.elem(topo.leaves[e as usize]).verts.contains(&v)
+            });
+            assert!(touches, "rank {r} owns dof {d} but no element touching it");
+        }
+    }
+
+    #[test]
+    fn serial_plan_owns_everything() {
+        let (mesh, topo, dof, _) = setup(3);
+        let plan = RankPlan::serial(&mesh, &topo, &dof);
+        assert_eq!(plan.nranks, 1);
+        assert_eq!(plan.elems[0].len(), topo.n_leaves());
+        assert_eq!(plan.rows[0].len(), dof.n_dofs);
+    }
+}

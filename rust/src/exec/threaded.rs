@@ -1,0 +1,247 @@
+//! The shared-memory SPMD executor: one worker thread per virtual
+//! rank (capped at a thread budget), real halo exchange, measured
+//! per-rank wall times (DESIGN.md §9).
+//!
+//! `ThreadedExec` runs the same rank-local assembly and distributed
+//! Jacobi-PCG as [`VirtualExec`](crate::exec::VirtualExec) -- the
+//! arithmetic is fixed by the [`RankPlan`], so the two agree bit for
+//! bit -- but here the ranks genuinely execute concurrently
+//! (`std::thread::scope` + `Barrier` + per-rank-pair channels), so
+//! the wall clock is hardware time and the per-rank busy times are
+//! *measured* load, not modeled. Those measurements feed the driver's
+//! `solve_imbalance` and the `Measured` weight model. The PJRT
+//! engines stay virtual-executor-only: this executor always runs the
+//! native f64 kernels.
+
+use crate::fem::{Assembled, Csr, DofMap, SolveStats, SolverOpts};
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::TetMesh;
+use crate::runtime::Runtime;
+use crate::util::timer::Stopwatch;
+use std::cell::RefCell;
+
+use super::assemble::{assemble_rank, combine, RankAssembly};
+use super::ghost::GhostPlan;
+use super::pcg::pcg_threaded;
+use super::plan::RankPlan;
+use super::{ExecReport, Executor};
+
+/// The real shared-memory schedule (`--exec threads`).
+#[derive(Debug)]
+pub struct ThreadedExec {
+    nranks: usize,
+    /// Worker budget: threads actually spawned per phase is
+    /// `min(threads, nranks)`.
+    threads: usize,
+    report: RefCell<ExecReport>,
+}
+
+impl ThreadedExec {
+    /// `threads = 0` means auto: one worker per core, capped at the
+    /// rank count.
+    pub fn new(nranks: usize, threads: usize) -> Self {
+        assert!(nranks >= 1);
+        let budget = if threads == 0 {
+            available_threads()
+        } else {
+            threads
+        };
+        Self {
+            nranks,
+            threads: budget.clamp(1, nranks),
+            report: RefCell::new(ExecReport::default()),
+        }
+    }
+
+    /// The worker budget this executor resolved to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn add_busy(&self, busy: &[f64]) {
+        let mut rep = self.report.borrow_mut();
+        if rep.rank_busy.len() < busy.len() {
+            rep.rank_busy.resize(busy.len(), 0.0);
+        }
+        for (acc, &t) in rep.rank_busy.iter_mut().zip(busy) {
+            *acc += t;
+        }
+    }
+}
+
+/// Detected hardware parallelism (1 when detection fails).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+impl Executor for ThreadedExec {
+    fn name(&self) -> &'static str {
+        "threads"
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn measures(&self) -> bool {
+        true
+    }
+
+    fn assemble(
+        &self,
+        plan: &RankPlan,
+        mesh: &TetMesh,
+        topo: &LeafTopology,
+        dof: &DofMap,
+        source: &[f64],
+        _rt: Option<&Runtime>,
+    ) -> Assembled {
+        let p = plan.nranks;
+        let nthreads = self.threads.clamp(1, p);
+        let mut outs: Vec<Option<(RankAssembly, f64)>> = (0..p).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..nthreads)
+                .map(|t| {
+                    let lo = t * p / nthreads;
+                    let hi = (t + 1) * p / nthreads;
+                    scope.spawn(move || {
+                        let mut done = Vec::with_capacity(hi - lo);
+                        for rk in lo..hi {
+                            let sw = Stopwatch::start();
+                            let asm = assemble_rank(mesh, topo, dof, source, &plan.elems[rk]);
+                            done.push((rk, asm, sw.elapsed()));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (rk, asm, wall) in h.join().expect("assembly worker panicked") {
+                    outs[rk] = Some((asm, wall));
+                }
+            }
+        });
+        let mut busy = vec![0.0; p];
+        let parts: Vec<RankAssembly> = outs
+            .into_iter()
+            .enumerate()
+            .map(|(rk, o)| {
+                let (asm, wall) = o.expect("rank assembled nothing");
+                busy[rk] = wall;
+                asm
+            })
+            .collect();
+        self.add_busy(&busy);
+        combine(dof.n_dofs, parts)
+    }
+
+    fn pcg(
+        &self,
+        plan: &RankPlan,
+        a: &Csr,
+        b: &[f64],
+        x: &mut [f64],
+        opts: &SolverOpts,
+        _rt: Option<&Runtime>,
+    ) -> SolveStats {
+        let ghost = GhostPlan::build(plan, a);
+        let (stats, busy, halo) = pcg_threaded(plan, &ghost, a, b, x, opts, self.threads);
+        self.add_busy(&busy);
+        {
+            let mut rep = self.report.borrow_mut();
+            rep.halo_wall += halo.wall;
+            rep.halo_messages += halo.messages;
+            rep.halo_bytes += halo.bytes;
+        }
+        stats
+    }
+
+    fn take_report(&self) -> ExecReport {
+        self.report.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::exec::VirtualExec;
+    use crate::mesh::generator;
+
+    fn setup(nparts: usize) -> (TetMesh, LeafTopology, DofMap, RankPlan) {
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+        let topo = LeafTopology::build(&mesh);
+        let dof = DofMap::build(&mesh, &topo);
+        let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, nparts);
+        (mesh, topo, dof, plan)
+    }
+
+    #[test]
+    fn threaded_matches_virtual_bit_for_bit() {
+        let (mesh, topo, dof, plan) = setup(4);
+        let virt = VirtualExec::new(4);
+        let thr = ThreadedExec::new(4, 0);
+        let src = dof.eval_at_dofs(&mesh, |p| (2.0 * p.x).cos() + p.y);
+
+        let sv = virt.assemble(&plan, &mesh, &topo, &dof, &src, None);
+        let st = thr.assemble(&plan, &mesh, &topo, &dof, &src, None);
+        assert_eq!(sv.k.nnz(), st.k.nnz());
+        for (a, b) in sv.k.vals.iter().zip(&st.k.vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "assembly differs");
+        }
+        for (a, b) in sv.b.iter().zip(&st.b) {
+            assert_eq!(a.to_bits(), b.to_bits(), "load vector differs");
+        }
+
+        let a = Csr::linear_combination(1.0, &sv.k, 1.0, &sv.m);
+        let opts = SolverOpts::default();
+        let mut uv = vec![0.0; dof.n_dofs];
+        let mut ut = vec![0.0; dof.n_dofs];
+        let stats_v = virt.pcg(&plan, &a, &sv.b, &mut uv, &opts, None);
+        let stats_t = thr.pcg(&plan, &a, &st.b, &mut ut, &opts, None);
+        assert_eq!(stats_v.iterations, stats_t.iterations);
+        for (x, y) in uv.iter().zip(&ut) {
+            assert_eq!(x.to_bits(), y.to_bits(), "solutions differ");
+        }
+    }
+
+    #[test]
+    fn report_accumulates_and_drains() {
+        let (mesh, topo, dof, plan) = setup(3);
+        let thr = ThreadedExec::new(3, 2);
+        assert!(thr.measures());
+        assert_eq!(thr.threads(), 2);
+        let src = vec![1.0; dof.n_dofs];
+        let sys = thr.assemble(&plan, &mesh, &topo, &dof, &src, None);
+        let a = Csr::linear_combination(1.0, &sys.k, 1.0, &sys.m);
+        let mut u = vec![0.0; dof.n_dofs];
+        thr.pcg(&plan, &a, &sys.b, &mut u, &SolverOpts::default(), None);
+
+        let rep = thr.take_report();
+        assert_eq!(rep.rank_busy.len(), 3);
+        assert!(rep.rank_busy.iter().sum::<f64>() > 0.0);
+        assert!(rep.halo_messages > 0, "3 ranks must exchange ghosts");
+        assert!(rep.halo_bytes > 0);
+        assert!(rep.measured_imbalance() >= 1.0);
+        // drained: a second take is empty
+        let empty = thr.take_report();
+        assert!(empty.rank_busy.is_empty());
+        assert_eq!(empty.halo_messages, 0);
+    }
+
+    #[test]
+    fn thread_budget_resolution() {
+        let t = ThreadedExec::new(8, 3);
+        assert_eq!(t.threads(), 3);
+        let t = ThreadedExec::new(2, 16);
+        assert_eq!(t.threads(), 2, "budget capped at rank count");
+        let t = ThreadedExec::new(4, 0);
+        assert!(t.threads() >= 1 && t.threads() <= 4);
+    }
+}

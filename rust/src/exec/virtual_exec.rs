@@ -1,0 +1,121 @@
+//! The virtual-SPMD executor: every rank's work executed by one
+//! thread, communication priced by the alpha-beta model instead of
+//! performed (DESIGN.md §2, §9).
+//!
+//! This is the crate's original execution model extracted behind the
+//! [`Executor`] trait: assembly and the Jacobi-PCG run rank phase by
+//! rank phase in one address space, the ghost exchange is the
+//! identity, and the timeline's SPMD substitution (measured wall /
+//! nparts x lambda + modeled halo) turns the sequential wall clock
+//! into a modeled parallel time. When PJRT artifacts are available the
+//! batched L1 kernels take over assembly and the CG loop wholesale
+//! (they are engine substitutions, not schedule changes).
+
+use crate::fem::{assemble, pjrt_pcg, Assembled, Csr, DofMap, SolveStats, SolverOpts};
+use crate::mesh::topology::LeafTopology;
+use crate::mesh::TetMesh;
+use crate::runtime::Runtime;
+
+use super::assemble::{assemble_rank, combine, RankAssembly};
+use super::pcg::pcg_sequential;
+use super::plan::RankPlan;
+use super::{ExecReport, Executor};
+
+/// The sequential + modeled path (`--exec virtual`).
+#[derive(Debug, Clone)]
+pub struct VirtualExec {
+    nranks: usize,
+}
+
+impl VirtualExec {
+    pub fn new(nranks: usize) -> Self {
+        assert!(nranks >= 1);
+        Self { nranks }
+    }
+}
+
+impl Executor for VirtualExec {
+    fn name(&self) -> &'static str {
+        "virtual"
+    }
+
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn assemble(
+        &self,
+        plan: &RankPlan,
+        mesh: &TetMesh,
+        topo: &LeafTopology,
+        dof: &DofMap,
+        source: &[f64],
+        rt: Option<&Runtime>,
+    ) -> Assembled {
+        if rt.is_some() {
+            // the batched artifact path chunks globally by ladder
+            // rungs; keep it untouched (engine substitution, §3)
+            return assemble(mesh, topo, dof, source, rt);
+        }
+        let parts: Vec<RankAssembly> = (0..plan.nranks)
+            .map(|r| assemble_rank(mesh, topo, dof, source, &plan.elems[r]))
+            .collect();
+        combine(dof.n_dofs, parts)
+    }
+
+    fn pcg(
+        &self,
+        plan: &RankPlan,
+        a: &Csr,
+        b: &[f64],
+        x: &mut [f64],
+        opts: &SolverOpts,
+        rt: Option<&Runtime>,
+    ) -> SolveStats {
+        if let Some(rt) = rt {
+            if let Some(stats) = pjrt_pcg(rt, a, b, x, opts) {
+                return stats;
+            }
+        }
+        pcg_sequential(plan, a, b, x, opts)
+    }
+
+    fn take_report(&self) -> ExecReport {
+        ExecReport::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::mesh::generator;
+
+    #[test]
+    fn virtual_exec_solves_a_reaction_diffusion_system() {
+        let mut mesh = generator::cube_mesh(2);
+        mesh.refine(&mesh.leaves_unordered());
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(4).assign_blocks(&mut mesh, &leaves);
+        let topo = LeafTopology::build(&mesh);
+        let dof = DofMap::build(&mesh, &topo);
+        let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, 4);
+        let exec = VirtualExec::new(4);
+        assert_eq!(exec.name(), "virtual");
+        assert!(!exec.measures());
+
+        let src = vec![1.0; dof.n_dofs];
+        let sys = exec.assemble(&plan, &mesh, &topo, &dof, &src, None);
+        let a = Csr::linear_combination(1.0, &sys.k, 1.0, &sys.m);
+        let mut u = vec![0.0; dof.n_dofs];
+        let stats = exec.pcg(&plan, &a, &sys.b, &mut u, &SolverOpts::default(), None);
+        assert!(stats.iterations > 0);
+        assert!(stats.rel_residual < 1e-6);
+        assert!(!stats.used_pjrt);
+        // the virtual executor measures nothing: empty report
+        let rep = exec.take_report();
+        assert!(rep.rank_busy.is_empty());
+        assert_eq!(rep.halo_messages, 0);
+    }
+}

@@ -16,10 +16,11 @@
 //!   near z = 1); [`oscillating_center`] sweeps back and forth
 //!   through the cube center, revisiting old regions.
 
-use super::assemble::{assemble, Assembled};
+use super::assemble::Assembled;
 use super::csr::Csr;
 use super::dof::DofMap;
-use super::solver::{solve, SolveStats, SolverOpts};
+use super::solver::{SolveStats, SolverOpts};
+use crate::exec::{Executor, RankPlan};
 use crate::geometry::Vec3;
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::TetMesh;
@@ -53,9 +54,12 @@ pub struct StationarySolution {
 /// Assemble A = K + M (the reaction-diffusion form -lap u + u = f),
 /// apply Dirichlet data from the manufactured `exact` solution, solve,
 /// and report errors against it. `u0` optionally warm starts the
-/// solver.
+/// solver. Assembly and the PCG run through `exec` over the rank
+/// ownership in `plan` (DESIGN.md §9).
 #[allow(clippy::too_many_arguments)]
 pub fn solve_stationary(
+    exec: &dyn Executor,
+    plan: &RankPlan,
     mesh: &TetMesh,
     topo: &LeafTopology,
     dof: &DofMap,
@@ -66,7 +70,7 @@ pub fn solve_stationary(
     exact: impl Fn(Vec3) -> f64,
 ) -> StationarySolution {
     let source = dof.eval_at_dofs(mesh, &source_fn);
-    let Assembled { k, m, b } = assemble(mesh, topo, dof, &source, rt);
+    let Assembled { k, m, b } = exec.assemble(plan, mesh, topo, dof, &source, rt);
     let mut a = Csr::linear_combination(1.0, &k, 1.0, &m);
     let g = dof.eval_at_dofs(mesh, &exact);
     let bc: Vec<f64> = g
@@ -87,7 +91,7 @@ pub fn solve_stationary(
             u[i] = bc[i];
         }
     }
-    let stats = solve(rt, &a, &rhs, &mut u, opts);
+    let stats = exec.pcg(plan, &a, &rhs, &mut u, opts, rt);
 
     let (max_error, l2_error) = errors_against(mesh, dof, &u, &m, &exact);
     StationarySolution {
@@ -101,7 +105,10 @@ pub fn solve_stationary(
 
 /// Example 3.1: [`solve_stationary`] with the paper's smooth
 /// manufactured solution.
+#[allow(clippy::too_many_arguments)]
 pub fn solve_helmholtz(
+    exec: &dyn Executor,
+    plan: &RankPlan,
     mesh: &TetMesh,
     topo: &LeafTopology,
     dof: &DofMap,
@@ -110,6 +117,8 @@ pub fn solve_helmholtz(
     u0: Option<&[f64]>,
 ) -> StationarySolution {
     solve_stationary(
+        exec,
+        plan,
         mesh,
         topo,
         dof,
@@ -217,9 +226,12 @@ pub struct ParabolicStep {
 
 /// Advance the moving-peak problem one time step. `center` selects
 /// the trajectory (and with it the whole manufactured problem:
-/// source, Dirichlet data and errors).
+/// source, Dirichlet data and errors). Assembly and the PCG run
+/// through `exec` over the rank ownership in `plan` (DESIGN.md §9).
 #[allow(clippy::too_many_arguments)]
 pub fn parabolic_step(
+    exec: &dyn Executor,
+    plan: &RankPlan,
     mesh: &TetMesh,
     topo: &LeafTopology,
     dof: &DofMap,
@@ -233,7 +245,7 @@ pub fn parabolic_step(
     assert_eq!(u_prev.len(), dof.n_dofs);
     let c_next = center(t_next);
     let source = dof.eval_at_dofs(mesh, |p| moving_peak_source(p, t_next, center));
-    let Assembled { k, m, b } = assemble(mesh, topo, dof, &source, rt);
+    let Assembled { k, m, b } = exec.assemble(plan, mesh, topo, dof, &source, rt);
     // A = M/dt + K ; rhs = M u_prev / dt + b  (b = M f already)
     let mut a = Csr::linear_combination(1.0, &k, 1.0 / dt, &m);
     let mut rhs = vec![0.0; dof.n_dofs];
@@ -261,7 +273,7 @@ pub fn parabolic_step(
             u[i] = bc[i];
         }
     }
-    let stats = solve(rt, &a, &rhs, &mut u, opts);
+    let stats = exec.pcg(plan, &a, &rhs, &mut u, opts, rt);
     let (max_error, l2_error) = errors_against(mesh, dof, &u, &m, |p| moving_peak_exact(p, c_next));
     ParabolicStep {
         u,
@@ -274,24 +286,36 @@ pub fn parabolic_step(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::VirtualExec;
     use crate::mesh::generator::cube_mesh;
 
-    fn setup(refines: usize) -> (TetMesh, LeafTopology, DofMap) {
+    fn setup(refines: usize) -> (TetMesh, LeafTopology, DofMap, RankPlan) {
         let mut m = cube_mesh(2);
         for _ in 0..refines {
             m.refine(&m.leaves_unordered());
         }
         let topo = LeafTopology::build(&m);
         let dof = DofMap::build(&m, &topo);
-        (m, topo, dof)
+        let plan = RankPlan::serial(&m, &topo, &dof);
+        (m, topo, dof, plan)
     }
 
     #[test]
     fn helmholtz_error_decreases_under_refinement() {
+        let exec = VirtualExec::new(1);
         let mut errs = Vec::new();
         for refines in [0usize, 3] {
-            let (m, topo, dof) = setup(refines);
-            let sol = solve_helmholtz(&m, &topo, &dof, None, &SolverOpts::default(), None);
+            let (m, topo, dof, plan) = setup(refines);
+            let sol = solve_helmholtz(
+                &exec,
+                &plan,
+                &m,
+                &topo,
+                &dof,
+                None,
+                &SolverOpts::default(),
+                None,
+            );
             assert!(sol.stats.rel_residual < 1e-5);
             errs.push(sol.l2_error);
         }
@@ -351,7 +375,8 @@ mod tests {
 
     #[test]
     fn parabolic_step_tracks_exact_solution() {
-        let (m, topo, dof) = setup(2);
+        let (m, topo, dof, plan) = setup(2);
+        let exec = VirtualExec::new(1);
         let dt = 1e-3;
         let mut u = dof.eval_at_dofs(&m, |p| parabolic_exact(p, 0.0));
         let mut last = ParabolicStep {
@@ -366,6 +391,8 @@ mod tests {
         };
         for n in 1..=3 {
             last = parabolic_step(
+                &exec,
+                &plan,
                 &m,
                 &topo,
                 &dof,
@@ -391,10 +418,13 @@ mod tests {
     fn manufactured_source_consistent() {
         // integrate one long step on a fine-ish mesh: error bounded by
         // O(dt) + O(h^2); with dt = 0.002 expect small errors
-        let (m, topo, dof) = setup(2);
+        let (m, topo, dof, plan) = setup(2);
+        let exec = VirtualExec::new(1);
         let dt = 2e-3;
         let u0 = dof.eval_at_dofs(&m, |p| parabolic_exact(p, 0.0));
         let s = parabolic_step(
+            &exec,
+            &plan,
             &m,
             &topo,
             &dof,
@@ -422,10 +452,13 @@ mod tests {
 
     #[test]
     fn oscillator_step_tracks_exact_solution() {
-        let (m, topo, dof) = setup(2);
+        let (m, topo, dof, plan) = setup(2);
+        let exec = VirtualExec::new(1);
         let dt = 1e-3;
         let u0 = dof.eval_at_dofs(&m, |p| moving_peak_exact(p, oscillating_center(0.0)));
         let s = parabolic_step(
+            &exec,
+            &plan,
             &m,
             &topo,
             &dof,

@@ -11,7 +11,9 @@
 //!   and the virtual MPI runtime ([`dist`]), the DLB policy layer
 //!   (triggers, weight models, the rebalance pipeline and the method
 //!   registry: [`dlb`]), the problem scenarios behind `--problem`
-//!   ([`scenario`]), and the generic adaptive driver ([`coordinator`])
+//!   ([`scenario`]), the execution schedules behind `--exec`
+//!   ([`exec`]: virtual-SPMD vs real shared-memory threads),
+//!   and the generic adaptive driver ([`coordinator`])
 //!   -- plus every substrate they
 //!   need: tet meshes with refinement forests ([`mesh`]), bisection
 //!   refinement ([`mesh::TetMesh::refine`]), error estimation
@@ -25,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dist;
 pub mod dlb;
+pub mod exec;
 pub mod fem;
 pub mod geometry;
 pub mod mesh;

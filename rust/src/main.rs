@@ -12,7 +12,8 @@
 use phg_dlb::config::Config;
 use phg_dlb::coordinator::AdaptiveDriver;
 use phg_dlb::dist::Distribution;
-use phg_dlb::dlb::{Registry, RepartitionStrategy};
+use phg_dlb::dlb::{Registry, RepartitionStrategy, TRIGGERS, WEIGHT_MODELS};
+use phg_dlb::exec::EXECUTORS;
 use phg_dlb::format_err;
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
@@ -200,11 +201,12 @@ fn run() -> Result<()> {
         "partition" => cmd_partition(&cfg),
         "compare" => cmd_compare(&cfg),
         "methods" => {
-            // sorted + described, so CI log diffs and docs stay stable
-            println!("methods:");
+            // every pluggable registry, sorted or documentation order
+            // + described, so CI log diffs and docs stay stable
+            println!("methods (--method):");
             for m in Registry::sorted_specs() {
                 println!(
-                    "  {:<12} {}{}",
+                    "  {:<16} {}{}",
                     m.name,
                     m.description,
                     if m.in_lineup { "" } else { "  [ablation only]" }
@@ -212,11 +214,23 @@ fn run() -> Result<()> {
             }
             println!("\nstrategies (--strategy, DESIGN.md \u{a7}7):");
             for s in RepartitionStrategy::all() {
-                println!("  {}", s.name());
+                println!("  {:<16} {}", s.name(), s.description());
             }
             println!("\nscenarios (--problem, DESIGN.md \u{a7}8):");
             for s in ScenarioRegistry::sorted_specs() {
-                println!("  {:<12} {}", s.name, s.description);
+                println!("  {:<16} {}", s.name, s.description);
+            }
+            println!("\ntriggers (--trigger, DESIGN.md \u{a7}6):");
+            for t in &TRIGGERS {
+                println!("  {:<16} {}", t.name, t.description);
+            }
+            println!("\nweights (--weights, DESIGN.md \u{a7}6):");
+            for w in &WEIGHT_MODELS {
+                println!("  {:<16} {}", w.name, w.description);
+            }
+            println!("\nexecutors (--exec, DESIGN.md \u{a7}9):");
+            for e in &EXECUTORS {
+                println!("  {:<16} {}", e.name, e.description);
             }
             Ok(())
         }
@@ -229,6 +243,7 @@ fn run() -> Result<()> {
                  \x20     trigger (lambda[:t]|every[:n]|always|costbenefit[:h])\n\
                  \x20     weights (unit|dof|measured)\n\
                  \x20     strategy (scratch|diffusive|auto)\n\
+                 \x20     exec (virtual|threads) exec_threads (0 = one per core)\n\
                  \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
                  \x20     solver_tol solver_max_iter use_pjrt csv config"
             );

@@ -22,7 +22,17 @@ impl Scenario for Helmholtz {
     }
 
     fn solve(&self, ctx: &StepContext, u_prev: Option<&[f64]>) -> SolveOutput {
-        solve_helmholtz(ctx.mesh, ctx.topo, ctx.dof, ctx.runtime, ctx.solver, u_prev).into()
+        solve_helmholtz(
+            ctx.exec,
+            ctx.plan,
+            ctx.mesh,
+            ctx.topo,
+            ctx.dof,
+            ctx.runtime,
+            ctx.solver,
+            u_prev,
+        )
+        .into()
     }
 
     fn refine_indicator(&self, ctx: &StepContext, u_vertex: &[f64]) -> Vec<f64> {

@@ -54,6 +54,8 @@ impl Scenario for LShape {
 
     fn solve(&self, ctx: &StepContext, u_prev: Option<&[f64]>) -> SolveOutput {
         solve_stationary(
+            ctx.exec,
+            ctx.plan,
             ctx.mesh,
             ctx.topo,
             ctx.dof,

@@ -24,6 +24,7 @@ pub use lshape::{corner_exact, corner_source, LShape};
 pub use parabolic::MovingPeak;
 
 use crate::bail;
+use crate::exec::{Executor, RankPlan};
 use crate::fem::problems::{ParabolicStep, StationarySolution};
 use crate::fem::{DofMap, SolveStats, SolverOpts};
 use crate::mesh::topology::LeafTopology;
@@ -32,12 +33,19 @@ use crate::runtime::Runtime;
 use crate::util::error::Result;
 
 /// Everything a scenario may read during one adaptive step: the
-/// current mesh/topology/dof triple, the execution runtime, the
-/// solver options, and the simulation clock.
+/// current mesh/topology/dof triple, the executor and its rank plan,
+/// the PJRT runtime, the solver options, and the simulation clock.
 pub struct StepContext<'a> {
     pub mesh: &'a TetMesh,
     pub topo: &'a LeafTopology,
     pub dof: &'a DofMap,
+    /// The execution schedule this step's assembly + solve run on
+    /// (DESIGN.md §9); scenarios pass it straight into the
+    /// [`crate::fem::problems`] entry points.
+    pub exec: &'a dyn Executor,
+    /// Rank ownership frozen for this step (matches the mesh's
+    /// `owner` fields at solve time).
+    pub plan: &'a RankPlan,
     pub runtime: Option<&'a Runtime>,
     pub solver: &'a SolverOpts,
     /// time at the *end* of this step for time-dependent scenarios

@@ -69,6 +69,8 @@ impl Scenario for MovingPeak {
     fn solve(&self, ctx: &StepContext, u_prev: Option<&[f64]>) -> SolveOutput {
         let u_prev = u_prev.expect("the driver seeds time-dependent scenarios");
         parabolic_step(
+            ctx.exec,
+            ctx.plan,
             ctx.mesh,
             ctx.topo,
             ctx.dof,

@@ -234,6 +234,8 @@ fn diffusive_driver_controls_imbalance_end_to_end() {
         trigger: "lambda".to_string(),
         weights: "unit".to_string(),
         strategy: "diffusive".to_string(),
+        exec: "virtual".to_string(),
+        exec_threads: 0,
         lambda_trigger: 1.1,
         theta_refine: 0.5,
         theta_coarsen: 0.0,

@@ -20,6 +20,8 @@ fn cfg(method: &str, trigger: &str, weights: &str) -> DriverConfig {
         trigger: trigger.to_string(),
         weights: weights.to_string(),
         strategy: "scratch".to_string(),
+        exec: "virtual".to_string(),
+        exec_threads: 0,
         lambda_trigger: 1.1,
         theta_refine: 0.5,
         theta_coarsen: 0.0,

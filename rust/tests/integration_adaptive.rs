@@ -7,6 +7,12 @@ use phg_dlb::dlb::Registry;
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::mesh::generator;
 
+/// Executor under test: `PHG_EXEC=threads cargo test` re-runs the
+/// whole suite on the shared-memory executor (the CI tier-1 matrix).
+fn exec_from_env() -> String {
+    std::env::var("PHG_EXEC").unwrap_or_else(|_| "virtual".to_string())
+}
+
 fn cfg(method: &str, nparts: usize, nsteps: usize) -> DriverConfig {
     DriverConfig {
         problem: "helmholtz".to_string(),
@@ -15,6 +21,8 @@ fn cfg(method: &str, nparts: usize, nsteps: usize) -> DriverConfig {
         trigger: "lambda".to_string(),
         weights: "unit".to_string(),
         strategy: "scratch".to_string(),
+        exec: exec_from_env(),
+        exec_threads: 0,
         lambda_trigger: 1.1,
         theta_refine: 0.45,
         theta_coarsen: 0.0,

@@ -7,6 +7,12 @@ use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
 use phg_dlb::fem::SolverOpts;
 use phg_dlb::scenario::{ScenarioRegistry, SCENARIOS};
 
+/// Executor under test: `PHG_EXEC=threads cargo test` re-runs the
+/// whole suite on the shared-memory executor (the CI tier-1 matrix).
+fn exec_from_env() -> String {
+    std::env::var("PHG_EXEC").unwrap_or_else(|_| "virtual".to_string())
+}
+
 fn quick_cfg(problem: &str) -> DriverConfig {
     DriverConfig {
         problem: problem.to_string(),
@@ -15,6 +21,8 @@ fn quick_cfg(problem: &str) -> DriverConfig {
         trigger: "lambda".to_string(),
         weights: "unit".to_string(),
         strategy: "scratch".to_string(),
+        exec: exec_from_env(),
+        exec_threads: 0,
         lambda_trigger: 1.1,
         theta_refine: 0.4,
         theta_coarsen: 0.03,
