@@ -126,7 +126,9 @@ fn main() {
                 return None;
             }
             let mut row = BenchRow::new(format!("{}/{}/{}", f[0], f[1], f[2]));
-            row.extra = f[3].parse().ok().map(|v| ("interface_faces", v));
+            if let Ok(v) = f[3].parse() {
+                row.extras.push(("interface_faces", v));
+            }
             Some(row)
         })
         .collect();

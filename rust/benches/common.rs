@@ -120,16 +120,17 @@ pub fn quick_or(full: usize, quick: usize) -> usize {
 }
 
 /// One row of a `BENCH_*.json` summary. Fields a bench cannot supply
-/// stay `None` and serialize as `null`; a metric that fits none of
-/// the shared fields goes into `extra` under its own label (never
-/// mislabel a count or a throughput as `total_v`/`wall_ms`).
+/// stay `None` and serialize as `null`; metrics that fit none of the
+/// shared fields go into `extras` under their own labels (never
+/// mislabel a count or a throughput as `total_v`/`wall_ms`), emitted
+/// in push order.
 pub struct BenchRow {
     pub method: String,
     pub lambda_before: Option<f64>,
     pub lambda_after: Option<f64>,
     pub total_v: Option<f64>,
     pub wall_ms: Option<f64>,
-    pub extra: Option<(&'static str, f64)>,
+    pub extras: Vec<(&'static str, f64)>,
 }
 
 impl BenchRow {
@@ -140,7 +141,7 @@ impl BenchRow {
             lambda_after: None,
             total_v: None,
             wall_ms: None,
-            extra: None,
+            extras: Vec::new(),
         }
     }
 }
@@ -184,10 +185,11 @@ pub fn write_bench_json(bench: &str, rows: &[BenchRow]) {
     body.push_str(&format!("  \"quick\": {},\n", is_quick()));
     body.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
-        let extra = match r.extra {
-            Some((label, v)) => format!(", {}: {}", json_str(label), json_f64(Some(v))),
-            None => String::new(),
-        };
+        let extra: String = r
+            .extras
+            .iter()
+            .map(|&(label, v)| format!(", {}: {}", json_str(label), json_f64(Some(v))))
+            .collect();
         body.push_str(&format!(
             "    {{\"method\": {}, \"lambda_before\": {}, \"lambda_after\": {}, \
              \"total_v\": {}, \"wall_ms\": {}{}}}{}\n",

@@ -69,7 +69,7 @@ fn main() {
         let mut x_seq = vec![0.0; a.n];
         let st_seq = pcg_sequential(&plan, &a, &b, &mut x_seq, &opts);
         let mut x_thr = vec![0.0; a.n];
-        let (st_thr, _, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut x_thr, &opts, threads);
+        let (st_thr, clocks, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut x_thr, &opts, threads);
         assert_eq!(
             st_seq.iterations, st_thr.iterations,
             "p={p}: schedules diverged"
@@ -95,14 +95,24 @@ fn main() {
         if p == 4 {
             speedup_at_4 = speedup;
         }
+        // wait decomposition of the spot-check run (same schedule as
+        // the timed reps): how much of the rank-seconds were waits
+        let wait_fraction = clocks.wait_fraction();
         println!(
-            "ranks {p:>2} (workers {threads}): wall {:>8.2} ms  speedup {speedup:>5.2}x  iters {}",
+            "ranks {p:>2} (workers {threads}): wall {:>8.2} ms  speedup {speedup:>5.2}x  \
+             iters {}  wait {:.1}%",
             wall * 1e3,
-            st_thr.iterations
+            st_thr.iterations,
+            100.0 * wait_fraction
         );
         let mut row = BenchRow::new(format!("threads:{p}"));
         row.wall_ms = Some(wall * 1e3);
-        row.extra = Some(("speedup", speedup));
+        let barrier_ms = 1e3 * clocks.max_barrier_wait();
+        let halo_ms = 1e3 * clocks.max_halo_wait();
+        row.extras.push(("speedup", speedup));
+        row.extras.push(("wait_fraction", wait_fraction));
+        row.extras.push(("barrier_wait_ms", barrier_ms));
+        row.extras.push(("halo_wait_ms", halo_ms));
         rows.push(row);
     }
     write_bench_json("speedup", &rows);

@@ -211,7 +211,7 @@ fn main() {
             .iter()
             .map(|(name, value, unit)| {
                 let mut row = BenchRow::new(format!("{name} [{unit}]"));
-                row.extra = Some(("value", *value));
+                row.extras.push(("value", *value));
                 row
             })
             .collect::<Vec<_>>(),

@@ -75,7 +75,8 @@ fn main() {
         row.lambda_before = Some(first.imbalance_before);
         row.lambda_after = Some(last.imbalance_after);
         row.wall_ms = Some(wall * 1e3);
-        row.extra = Some(("repartitions", d.timeline.repartition_count() as f64));
+        let repartitions = d.timeline.repartition_count() as f64;
+        row.extras.push(("repartitions", repartitions));
         rows.push(row);
     }
     write_bench_json("scenario_smoke", &rows);

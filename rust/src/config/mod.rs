@@ -240,4 +240,23 @@ mod tests {
         assert_eq!(d.exec, "threads");
         assert_eq!(d.exec_threads, 4);
     }
+
+    #[test]
+    fn obs_keys_flow_through() {
+        // --trace / --metrics are plain string keys: empty = off
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_str("trace", ""), "");
+        assert_eq!(c.get_str("metrics", ""), "");
+
+        let mut c = Config::parse("").unwrap();
+        let args = [
+            "--trace".to_string(),
+            "out/run.json".to_string(),
+            "--metrics".to_string(),
+            "-".to_string(),
+        ];
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.get_str("trace", ""), "out/run.json");
+        assert_eq!(c.get_str("metrics", ""), "-");
+    }
 }

@@ -25,6 +25,7 @@ use crate::exec::{executor_by_name, Executor, RankPlan};
 use crate::fem::{DofMap, SolverOpts};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::{ElemId, TetMesh};
+use crate::obs::{self, Phase};
 use crate::partition::sfc::{sfc_keys, Curve, Normalization};
 use crate::runtime::Runtime;
 use crate::scenario::{Scenario, ScenarioRegistry, StepContext};
@@ -387,13 +388,17 @@ impl AdaptiveDriver {
             // solve; charge it all to solve_time, assemble_time is
             // for the explicit assembly benches)
             let sw = Stopwatch::start();
-            let sol = self.scenario.solve(&ctx, u_prev.as_deref());
+            let sol = {
+                let _sp = obs::driver_span(Phase::Solve);
+                self.scenario.solve(&ctx, u_prev.as_deref())
+            };
             let solve_wall = sw.elapsed();
 
             // ---- estimate: scatter the solution to vertex ids (the
             // layout the estimators consume) only when the scenario's
             // indicator reads it, then ask the scenario
             let sw = Stopwatch::start();
+            let _sp_est = obs::driver_span(Phase::Estimate);
             let u_vertex = if self.scenario.refine_indicator_reads_solution() {
                 let mut by_vertex = vec![0.0; self.mesh.vertices.len()];
                 for (d, &v) in dof.vertex_of_dof.iter().enumerate() {
@@ -417,11 +422,14 @@ impl AdaptiveDriver {
         // solve imbalance, mark the wall as genuinely parallel, and
         // feed the weight model per-rank costs
         let xrep = self.executor.take_report();
-        if self.executor.measures() && !xrep.rank_busy.is_empty() {
+        if self.executor.measures() && !xrep.clocks.is_empty() {
             rec.solve_imbalance = xrep.measured_imbalance();
             rec.measured_parallel = true;
             rec.halo_exchange_time = xrep.halo_wall;
-            self.record_measured_feedback(&topo.leaves, &plan, &xrep.rank_busy, solve_wall);
+            rec.barrier_wait_time = xrep.max_barrier_wait();
+            rec.halo_wait_time = xrep.max_halo_wait();
+            self.record_measured_feedback(&topo.leaves, &plan, &xrep.clocks.busy, solve_wall);
+            rec.exec_report = Some(xrep);
         } else {
             self.record_solve_feedback(&topo.leaves, solve_wall);
         }
@@ -436,10 +444,15 @@ impl AdaptiveDriver {
         let sw = Stopwatch::start();
         let can_grow = self.mesh.n_leaves() < self.cfg.max_elements;
         if can_grow {
-            let marked = mark_max(&topo.leaves, &eta, self.cfg.theta_refine);
+            let marked = {
+                let _sp = obs::driver_span(Phase::Mark);
+                mark_max(&topo.leaves, &eta, self.cfg.theta_refine)
+            };
+            let _sp = obs::driver_span(Phase::Refine);
             self.mesh.refine(&marked);
         }
         if self.cfg.theta_coarsen > 0.0 {
+            let _sp = obs::driver_span(Phase::Refine);
             let leaves2 = self.mesh.leaves_unordered();
             let eta2 = self.scenario.coarsen_indicator(&self.mesh, &leaves2, t_next);
             if let Some(eta2) = eta2 {
@@ -458,6 +471,21 @@ impl AdaptiveDriver {
         let leaves = self.mesh.leaves_unordered();
         let weights = self.weight_model.weights(&self.mesh, &leaves);
         self.maybe_rebalance(&leaves, &weights, &mut rec);
+
+        let m = obs::metrics();
+        m.counter_add("driver.steps", 1);
+        if rec.repartitioned {
+            m.counter_add("driver.rebalances", 1);
+        }
+        m.observe("driver.solve_s", rec.solve_time);
+        m.observe("driver.estimate_s", rec.estimate_time);
+        m.observe("driver.adapt_s", rec.adapt_time);
+        m.observe("driver.lambda_solve", rec.solve_imbalance);
+        if rec.measured_parallel {
+            m.observe("driver.barrier_wait_s", rec.barrier_wait_time);
+            m.observe("driver.halo_wait_s", rec.halo_wait_time);
+            m.observe("driver.wait_fraction", rec.wait_fraction());
+        }
 
         self.timeline.push(rec);
         time_dependent || can_grow
@@ -565,6 +593,12 @@ mod tests {
             assert!(r.solve_imbalance >= 1.0);
             // 4 ranks on a refining mesh must exchange something
             assert!(r.solve_iterations > 0);
+            // the wait decomposition rides along with the measurement
+            assert!(r.barrier_wait_time >= 0.0 && r.barrier_wait_time.is_finite());
+            assert!(r.halo_wait_time >= 0.0 && r.halo_wait_time.is_finite());
+            let rep = r.exec_report.as_ref().expect("per-rank profile kept");
+            assert_eq!(rep.clocks.busy.len(), 4);
+            assert!((0.0..=1.0).contains(&r.wait_fraction()));
         }
         let last = d.timeline.records.last().unwrap();
         assert!(last.imbalance_after < 1.6, "lambda {}", last.imbalance_after);

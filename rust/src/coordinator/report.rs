@@ -120,6 +120,41 @@ pub fn format_figure_csv(
     out
 }
 
+/// Per-rank wall-decomposition table of one measured step: busy,
+/// barrier-wait and halo-wait milliseconds per rank, the busy share
+/// of the bottleneck, and the overall wait fraction. Printed when
+/// `--exec threads` runs report (DESIGN.md §10); empty reports yield
+/// a single explanatory line.
+pub fn format_rank_profile(rep: &crate::exec::ExecReport) -> String {
+    let busy = &rep.clocks.busy;
+    if busy.is_empty() {
+        return "rank profile: nothing measured (virtual executor)\n".to_string();
+    }
+    let max_busy = rep.max_busy().max(f64::MIN_POSITIVE);
+    let get = |v: &[f64], r: usize| v.get(r).copied().unwrap_or(0.0);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<6} {:>12} {:>12} {:>12} {:>10}\n",
+        "rank", "busy(ms)", "barrier(ms)", "halo(ms)", "busy/max"
+    ));
+    for r in 0..busy.len() {
+        out.push_str(&format!(
+            "{:<6} {:>12.3} {:>12.3} {:>12.3} {:>10.3}\n",
+            r,
+            1e3 * busy[r],
+            1e3 * get(&rep.clocks.barrier_wait, r),
+            1e3 * get(&rep.clocks.halo_wait, r),
+            busy[r] / max_busy
+        ));
+    }
+    out.push_str(&format!(
+        "wait fraction: {:.4} (lambda_measured {:.3})\n",
+        rep.wait_fraction(),
+        rep.measured_imbalance()
+    ));
+    out
+}
+
 /// Write a report file under out/ (created if needed).
 pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::Path::new("out");
@@ -177,6 +212,8 @@ mod tests {
             strategy: RepartitionStrategy::Scratch,
             lambda_before: 1.42,
             lambda_after: 1.01,
+            rank_loads_before: vec![142.0, 100.0, 100.0, 58.0],
+            rank_loads_after: vec![101.0, 100.0, 100.0, 99.0],
             volume: MigrationVolume {
                 total_v: 120.0,
                 max_v: 40.0,
@@ -196,6 +233,30 @@ mod tests {
         assert!(s.contains("1.420"));
         assert!(s.contains("120.0"));
         assert_eq!(s.lines().count(), 2);
+    }
+
+    #[test]
+    fn rank_profile_formats_waits_per_rank() {
+        use crate::exec::{ExecReport, RankClocks};
+        let rep = ExecReport {
+            clocks: RankClocks {
+                busy: vec![0.004, 0.002],
+                barrier_wait: vec![0.0, 0.002],
+                halo_wait: vec![0.001, 0.0],
+                halo_work: vec![0.0, 0.0],
+            },
+            ..Default::default()
+        };
+        let s = format_rank_profile(&rep);
+        // header + 2 ranks + wait-fraction summary
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.contains("busy/max"));
+        assert!(s.contains("4.000"), "rank 0 busy ms: {s}");
+        assert!(s.contains("0.500"), "rank 1 busy share: {s}");
+        assert!(s.contains("wait fraction: 0.3333"), "{s}");
+        // the empty report explains itself instead of panicking
+        let empty = format_rank_profile(&ExecReport::default());
+        assert!(empty.contains("nothing measured"));
     }
 
     #[test]

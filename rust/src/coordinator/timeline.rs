@@ -3,6 +3,7 @@
 //! solve time, step time, repartition counts, quality metrics).
 
 use crate::dlb::{RebalanceReport, RepartitionStrategy};
+use crate::exec::ExecReport;
 use crate::partition::metrics::MigrationVolume;
 
 /// One adaptive (or time) step's accounting. Times in seconds;
@@ -33,6 +34,17 @@ pub struct StepRecord {
     /// measured bottleneck-rank halo-exchange wall seconds (0 under
     /// the virtual executor, whose halo cost is `solve_comm_modeled`)
     pub halo_exchange_time: f64,
+    /// measured bottleneck-rank seconds blocked in phase barriers
+    /// during the solve -- load imbalance made physical (0 under the
+    /// virtual executor)
+    pub barrier_wait_time: f64,
+    /// measured bottleneck-rank seconds blocked waiting for halo
+    /// messages (the wait part of `halo_exchange_time`)
+    pub halo_wait_time: f64,
+    /// the full per-rank measured profile (busy/waits/halo counters)
+    /// behind the summary fields above; `None` under executors that
+    /// measure nothing
+    pub exec_report: Option<ExecReport>,
     pub repartitioned: bool,
     /// repartitioning strategy that ran this step's rebalance, if any
     /// (never `Auto`: the pipeline resolves it per event)
@@ -76,6 +88,9 @@ impl StepRecord {
             exec: "virtual",
             measured_parallel: false,
             halo_exchange_time: 0.0,
+            barrier_wait_time: 0.0,
+            halo_wait_time: 0.0,
+            exec_report: None,
             repartitioned: false,
             strategy: None,
             rebalance: None,
@@ -123,6 +138,15 @@ impl StepRecord {
         }
         self.solve_time * self.solve_imbalance.max(1.0) / self.nparts.max(1) as f64
             + self.solve_comm_modeled
+    }
+
+    /// Fraction of this step's accounted rank-seconds the ranks spent
+    /// waiting (barriers + halo), 0 when nothing was measured.
+    pub fn wait_fraction(&self) -> f64 {
+        self.exec_report
+            .as_ref()
+            .map(|r| r.wait_fraction())
+            .unwrap_or(0.0)
     }
 
     /// Parallel assembly/estimate/adapt compute, same SPMD scaling.
@@ -183,11 +207,12 @@ impl Timeline {
              moved_fraction,remap_kept_fraction,interface_faces,assemble_time,\
              solve_time,solve_comm_modeled,solve_iterations,estimate_time,adapt_time,\
              dlb_time,step_time,l2_error,max_error,exec,measured_parallel,\
-             halo_exchange_time\n",
+             halo_exchange_time,barrier_wait_time,halo_wait_time,wait_fraction,\
+             rank_busy_max,rank_busy_mean\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{:.4},{:.4},{:.4},{},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{:.6},{:.3e},{:.3e},{},{},{:.6}\n",
+                "{},{},{},{:.4},{:.4},{:.4},{},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{:.6},{:.3e},{:.3e},{},{},{:.6},{:.6},{:.6},{:.4},{:.6},{:.6}\n",
                 r.step,
                 r.n_elements,
                 r.n_dofs,
@@ -216,6 +241,11 @@ impl Timeline {
                 r.exec,
                 r.measured_parallel as u8,
                 r.halo_exchange_time,
+                r.barrier_wait_time,
+                r.halo_wait_time,
+                r.wait_fraction(),
+                r.exec_report.as_ref().map(|x| x.max_busy()).unwrap_or(0.0),
+                r.exec_report.as_ref().map(|x| x.mean_busy()).unwrap_or(0.0),
             ));
         }
         out
@@ -277,10 +307,45 @@ mod tests {
         tl.push(r);
         let csv = tl.to_csv();
         let header = csv.lines().next().unwrap();
-        assert!(header.ends_with("halo_exchange_time"));
+        assert!(header.ends_with("rank_busy_mean"));
+        assert!(header.contains("barrier_wait_time,halo_wait_time,wait_fraction"));
         let row = csv.lines().nth(1).unwrap();
         assert_eq!(header.split(',').count(), row.split(',').count());
         assert!(row.contains(",threads,1,"), "measured columns missing: {row}");
+    }
+
+    #[test]
+    fn wait_columns_follow_the_exec_report() {
+        use crate::exec::{ExecReport, RankClocks};
+        let mut r = StepRecord::new(0);
+        assert_eq!(r.wait_fraction(), 0.0);
+        r.exec = "threads";
+        r.measured_parallel = true;
+        r.barrier_wait_time = 0.5;
+        r.halo_wait_time = 0.25;
+        r.exec_report = Some(ExecReport {
+            clocks: RankClocks {
+                busy: vec![2.0, 1.0],
+                barrier_wait: vec![0.0, 0.5],
+                halo_wait: vec![0.25, 0.0],
+                halo_work: vec![0.0, 0.25],
+            },
+            ..Default::default()
+        });
+        // waits 0.75 of 4.0 accounted rank-seconds
+        assert!((r.wait_fraction() - 0.75 / 4.0).abs() < 1e-12);
+        let mut tl = Timeline::new();
+        tl.push(r);
+        let csv = tl.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        let cols: Vec<&str> = row.split(',').collect();
+        // last five columns: barrier/halo waits, wait fraction,
+        // max/mean busy
+        assert_eq!(cols[cols.len() - 5], "0.500000");
+        assert_eq!(cols[cols.len() - 4], "0.250000");
+        assert_eq!(cols[cols.len() - 3], "0.1875");
+        assert_eq!(cols[cols.len() - 2], "2.000000");
+        assert_eq!(cols[cols.len() - 1], "1.500000");
     }
 
     #[test]

@@ -17,6 +17,7 @@ use super::strategy::RepartitionStrategy;
 use super::trigger::CostEstimate;
 use crate::dist::{migrate, Distribution, NetworkModel, ELEM_BYTES};
 use crate::mesh::{ElemId, TetMesh};
+use crate::obs::{self, Phase};
 use crate::partition::diffusion::{chain_loads, solve_flow, DiffusionRepartitioner};
 use crate::partition::metrics::MigrationVolume;
 use crate::partition::{CommOp, PartitionInput, Partitioner};
@@ -35,6 +36,10 @@ pub struct RebalanceReport {
     /// Load-imbalance factor before / after migration.
     pub lambda_before: f64,
     pub lambda_after: f64,
+    /// Per-rank weight totals before / after migration -- the full
+    /// load profile the lambdas summarise, for per-rank inspection.
+    pub rank_loads_before: Vec<f64>,
+    pub rank_loads_after: Vec<f64>,
     /// Oliker-Biswas migration volumes (TotalV / MaxV / moved fraction).
     pub volume: MigrationVolume,
     /// Fraction of total weight the rebalance kept in place (for the
@@ -156,21 +161,29 @@ impl RebalancePipeline {
         weights: &[f64],
     ) -> RebalanceReport {
         let nparts = self.dist.nparts;
-        let lambda_before = self.dist.imbalance(mesh, leaves, weights);
+        let rank_loads_before = self.dist.rank_loads(mesh, leaves, weights);
+        let lambda_before = crate::util::stats::imbalance(&rank_loads_before);
         let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
         let input = PartitionInput::from_mesh(mesh, leaves, weights, &owners, nparts);
 
         let sw = Stopwatch::start();
-        let result = self.partitioner.partition(&input);
+        let result = {
+            let _sp = obs::driver_span(Phase::Partition);
+            self.partitioner.partition(&input)
+        };
         let partition_wall = sw.elapsed();
         let mut parts = result.parts;
         let mut comm_log = result.comm;
         let partition_comm_modeled = self.net.sequence_time(&comm_log);
 
         let sw = Stopwatch::start();
-        let sim = SimilarityMatrix::build(&owners, &parts, weights, nparts, nparts);
-        let remap = oliker_biswas(&sim);
-        apply_map(&mut parts, &remap.map);
+        let remap = {
+            let _sp = obs::driver_span(Phase::Remap);
+            let sim = SimilarityMatrix::build(&owners, &parts, weights, nparts, nparts);
+            let remap = oliker_biswas(&sim);
+            apply_map(&mut parts, &remap.map);
+            remap
+        };
         let remap_comm_modeled = self.net.sequence_time(&remap.comm);
         let total_w: f64 = weights.iter().sum();
         let remap_kept_fraction = if total_w > 0.0 {
@@ -180,15 +193,28 @@ impl RebalancePipeline {
         };
         comm_log.extend(remap.comm);
 
-        let out = migrate(mesh, leaves, &parts, weights, &self.net);
+        let out = {
+            let _sp = obs::driver_span(Phase::Migrate);
+            migrate(mesh, leaves, &parts, weights, &self.net)
+        };
         let migrate_wall = sw.elapsed();
         comm_log.extend(out.comm);
+
+        let rank_loads_after = self.dist.rank_loads(mesh, leaves, weights);
+        let lambda_after = crate::util::stats::imbalance(&rank_loads_after);
+        let m = obs::metrics();
+        m.counter_add("dlb.rebalances.scratch", 1);
+        m.observe("dlb.partition_s", partition_wall);
+        m.observe("dlb.migrate_s", migrate_wall);
+        m.observe("dlb.total_v", out.volume.total_v);
 
         RebalanceReport {
             method: self.partitioner.name().to_string(),
             strategy: RepartitionStrategy::Scratch,
             lambda_before,
-            lambda_after: self.dist.imbalance(mesh, leaves, weights),
+            lambda_after,
+            rank_loads_before,
+            rank_loads_after,
             volume: out.volume,
             remap_kept_fraction,
             partition_wall,
@@ -210,27 +236,44 @@ impl RebalancePipeline {
         weights: &[f64],
     ) -> RebalanceReport {
         let nparts = self.dist.nparts;
-        let lambda_before = self.dist.imbalance(mesh, leaves, weights);
+        let rank_loads_before = self.dist.rank_loads(mesh, leaves, weights);
+        let lambda_before = crate::util::stats::imbalance(&rank_loads_before);
         let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
         let input = PartitionInput::from_mesh(mesh, leaves, weights, &owners, nparts);
 
         let sw = Stopwatch::start();
-        let result = self.diffusion.partition(&input);
+        let result = {
+            let _sp = obs::driver_span(Phase::Partition);
+            self.diffusion.partition(&input)
+        };
         let partition_wall = sw.elapsed();
         let parts = result.parts;
         let mut comm_log = result.comm;
         let partition_comm_modeled = self.net.sequence_time(&comm_log);
 
         let sw = Stopwatch::start();
-        let out = migrate(mesh, leaves, &parts, weights, &self.net);
+        let out = {
+            let _sp = obs::driver_span(Phase::Migrate);
+            migrate(mesh, leaves, &parts, weights, &self.net)
+        };
         let migrate_wall = sw.elapsed();
         comm_log.extend(out.comm);
+
+        let rank_loads_after = self.dist.rank_loads(mesh, leaves, weights);
+        let lambda_after = crate::util::stats::imbalance(&rank_loads_after);
+        let m = obs::metrics();
+        m.counter_add("dlb.rebalances.diffusive", 1);
+        m.observe("dlb.partition_s", partition_wall);
+        m.observe("dlb.migrate_s", migrate_wall);
+        m.observe("dlb.total_v", out.volume.total_v);
 
         RebalanceReport {
             method: self.diffusion.name().to_string(),
             strategy: RepartitionStrategy::Diffusive,
             lambda_before,
-            lambda_after: self.dist.imbalance(mesh, leaves, weights),
+            lambda_after,
+            rank_loads_before,
+            rank_loads_after,
             remap_kept_fraction: 1.0 - out.volume.moved_fraction,
             volume: out.volume,
             partition_wall,
@@ -469,6 +512,18 @@ mod tests {
         assert!(rep.dlb_time() >= rep.modeled_comm_total());
         assert!(!rep.comm_log.is_empty());
         assert!(rep.remap_kept_fraction > 0.0 && rep.remap_kept_fraction <= 1.0);
+        // per-rank load profiles carry the full picture the lambdas
+        // summarise, bitwise consistently
+        assert_eq!(rep.rank_loads_before.len(), 4);
+        assert_eq!(rep.rank_loads_after.len(), 4);
+        assert_eq!(
+            crate::util::stats::imbalance(&rep.rank_loads_before),
+            rep.lambda_before
+        );
+        assert_eq!(
+            crate::util::stats::imbalance(&rep.rank_loads_after),
+            rep.lambda_after
+        );
         // owners really were rewritten
         let lam = pipe.dist.imbalance(&mesh, &leaves, &weights);
         assert!((lam - rep.lambda_after).abs() < 1e-12);

@@ -32,7 +32,7 @@ mod threaded;
 mod virtual_exec;
 
 pub use ghost::GhostPlan;
-pub use pcg::{pcg_sequential, pcg_threaded, HaloStats};
+pub use pcg::{pcg_sequential, pcg_threaded, HaloStats, RankClocks};
 pub use plan::RankPlan;
 pub use threaded::{available_threads, ThreadedExec};
 pub use virtual_exec::VirtualExec;
@@ -49,10 +49,11 @@ use crate::util::error::Result;
 /// executors that measure nothing ([`VirtualExec`]).
 #[derive(Debug, Clone, Default)]
 pub struct ExecReport {
-    /// Per-rank wall seconds of compute sections (assembly, SpMV,
-    /// dots, axpy), excluding synchronization waits -- the measured
-    /// load profile.
-    pub rank_busy: Vec<f64>,
+    /// Per-rank wall decomposition: busy seconds of compute sections
+    /// (assembly, SpMV, dots, axpy) plus barrier-wait, halo-wait and
+    /// halo-work seconds -- the measured load profile and the
+    /// measured cost of imbalance (DESIGN.md §10).
+    pub clocks: RankClocks,
     /// Bottleneck rank's wall seconds spent on halo exchange.
     pub halo_wall: f64,
     /// Directed halo messages over the step.
@@ -65,10 +66,40 @@ impl ExecReport {
     /// Measured load-imbalance factor `max busy / mean busy` (1.0 when
     /// nothing was measured).
     pub fn measured_imbalance(&self) -> f64 {
-        if self.rank_busy.is_empty() || self.rank_busy.iter().sum::<f64>() <= 0.0 {
+        let busy = &self.clocks.busy;
+        if busy.is_empty() || busy.iter().sum::<f64>() <= 0.0 {
             return 1.0;
         }
-        crate::util::stats::imbalance(&self.rank_busy).max(1.0)
+        crate::util::stats::imbalance(busy).max(1.0)
+    }
+
+    /// Bottleneck rank's busy seconds (0 when nothing was measured).
+    pub fn max_busy(&self) -> f64 {
+        self.clocks.busy.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Mean per-rank busy seconds (0 when nothing was measured).
+    pub fn mean_busy(&self) -> f64 {
+        if self.clocks.busy.is_empty() {
+            0.0
+        } else {
+            self.clocks.busy.iter().sum::<f64>() / self.clocks.busy.len() as f64
+        }
+    }
+
+    /// Bottleneck rank's barrier-wait seconds.
+    pub fn max_barrier_wait(&self) -> f64 {
+        self.clocks.max_barrier_wait()
+    }
+
+    /// Bottleneck rank's halo-wait seconds.
+    pub fn max_halo_wait(&self) -> f64 {
+        self.clocks.max_halo_wait()
+    }
+
+    /// Fraction of accounted rank-seconds spent waiting.
+    pub fn wait_fraction(&self) -> f64 {
+        self.clocks.wait_fraction()
     }
 }
 
@@ -176,14 +207,39 @@ mod tests {
     fn measured_imbalance_handles_empty_and_skewed() {
         assert_eq!(ExecReport::default().measured_imbalance(), 1.0);
         let rep = ExecReport {
-            rank_busy: vec![3.0, 1.0, 1.0, 1.0],
+            clocks: RankClocks {
+                busy: vec![3.0, 1.0, 1.0, 1.0],
+                ..Default::default()
+            },
             ..Default::default()
         };
         assert!((rep.measured_imbalance() - 2.0).abs() < 1e-12);
+        assert_eq!(rep.max_busy(), 3.0);
+        assert!((rep.mean_busy() - 1.5).abs() < 1e-12);
         let zero = ExecReport {
-            rank_busy: vec![0.0, 0.0],
+            clocks: RankClocks {
+                busy: vec![0.0, 0.0],
+                ..Default::default()
+            },
             ..Default::default()
         };
         assert_eq!(zero.measured_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn report_wait_summaries_follow_clocks() {
+        let rep = ExecReport {
+            clocks: RankClocks {
+                busy: vec![1.0, 1.0],
+                barrier_wait: vec![0.5, 0.1],
+                halo_wait: vec![0.0, 0.4],
+                halo_work: vec![0.0, 0.0],
+            },
+            ..Default::default()
+        };
+        assert_eq!(rep.max_barrier_wait(), 0.5);
+        assert_eq!(rep.max_halo_wait(), 0.4);
+        // 1.0 of 3.0 accounted rank-seconds are waits
+        assert!((rep.wait_fraction() - 1.0 / 3.0).abs() < 1e-12);
     }
 }

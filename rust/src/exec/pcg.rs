@@ -24,6 +24,7 @@
 //! deterministic regardless of scheduling.
 
 use crate::fem::{Csr, SolveStats, SolverOpts};
+use crate::obs::{self, Phase};
 use crate::util::timer::Stopwatch;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -43,6 +44,80 @@ pub struct HaloStats {
     pub messages: usize,
     /// Payload bytes over the whole solve.
     pub bytes: usize,
+}
+
+/// Per-rank wall-clock decomposition of one threaded solve, in
+/// seconds, indexed by rank. This is the measured answer to "where
+/// did each rank's time go": compute, stalled at a phase barrier
+/// (load imbalance made physical), stalled waiting for a halo
+/// message, or doing halo pack/unpack work. When ranks are
+/// multiplexed onto fewer workers, every rank of a bundle is charged
+/// its worker's full waits -- each logical rank really was stalled
+/// for that long.
+#[derive(Debug, Clone, Default)]
+pub struct RankClocks {
+    /// Compute sections (SpMV, dots, axpy), excluding every wait.
+    pub busy: Vec<f64>,
+    /// Blocked in phase barriers (B1-B4 plus the two init barriers).
+    pub barrier_wait: Vec<f64>,
+    /// Blocked in `recv` waiting for a neighbour's halo message.
+    pub halo_wait: Vec<f64>,
+    /// Halo pack/send/unpack work (the non-blocking part).
+    pub halo_work: Vec<f64>,
+}
+
+impl RankClocks {
+    pub fn with_ranks(n: usize) -> Self {
+        Self {
+            busy: vec![0.0; n],
+            barrier_wait: vec![0.0; n],
+            halo_wait: vec![0.0; n],
+            halo_work: vec![0.0; n],
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.busy.is_empty()
+    }
+
+    /// Element-wise accumulate (growing to `other`'s rank count).
+    pub fn merge(&mut self, other: &RankClocks) {
+        fn acc(dst: &mut Vec<f64>, src: &[f64]) {
+            if dst.len() < src.len() {
+                dst.resize(src.len(), 0.0);
+            }
+            for (a, &b) in dst.iter_mut().zip(src) {
+                *a += b;
+            }
+        }
+        acc(&mut self.busy, &other.busy);
+        acc(&mut self.barrier_wait, &other.barrier_wait);
+        acc(&mut self.halo_wait, &other.halo_wait);
+        acc(&mut self.halo_work, &other.halo_work);
+    }
+
+    /// Bottleneck rank's barrier-wait seconds.
+    pub fn max_barrier_wait(&self) -> f64 {
+        self.barrier_wait.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Bottleneck rank's halo-wait seconds.
+    pub fn max_halo_wait(&self) -> f64 {
+        self.halo_wait.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Fraction of all accounted rank-seconds spent waiting (barrier
+    /// + halo wait over busy + halo work + waits); 0 when empty.
+    pub fn wait_fraction(&self) -> f64 {
+        let work: f64 = self.busy.iter().sum::<f64>() + self.halo_work.iter().sum::<f64>();
+        let wait: f64 =
+            self.barrier_wait.iter().sum::<f64>() + self.halo_wait.iter().sum::<f64>();
+        if work + wait <= 0.0 {
+            0.0
+        } else {
+            wait / (work + wait)
+        }
+    }
 }
 
 /// Combine per-rank partials in rank order -- THE reduction rule.
@@ -201,6 +276,7 @@ pub fn pcg_sequential(
     let mut rnorm2 = f64::INFINITY;
     for it in 0..=opts.max_iter {
         for rk in 0..p_ranks {
+            let _sp = obs::span(rk, Phase::Dot);
             part_a[rk] = dot_rows(&plan.rows[rk], &r, &r);
         }
         rnorm2 = ordered_sum(&part_a);
@@ -212,10 +288,12 @@ pub fn pcg_sequential(
             break;
         }
         // ghost exchange of p: the identity in one address space
-        for rows in &plan.rows {
+        for (rk, rows) in plan.rows.iter().enumerate() {
+            let _sp = obs::span(rk, Phase::Spmv);
             spmv_rows(a, rows, &pv, &mut q);
         }
         for rk in 0..p_ranks {
+            let _sp = obs::span(rk, Phase::Dot);
             part_b[rk] = dot_rows(&plan.rows[rk], &pv, &q);
         }
         let pq = ordered_sum(&part_b);
@@ -225,12 +303,14 @@ pub fn pcg_sequential(
         }
         let alpha = rz / pq;
         for rk in 0..p_ranks {
+            let _sp = obs::span(rk, Phase::Axpy);
             part_a[rk] = update_rows(&plan.rows[rk], alpha, &pv, &q, &dinv, x, &mut r, &mut z);
         }
         let rz_new = ordered_sum(&part_a);
         let beta = rz_new / rz;
         rz = rz_new;
-        for rows in &plan.rows {
+        for (rk, rows) in plan.rows.iter().enumerate() {
+            let _sp = obs::span(rk, Phase::Axpy);
             direction_rows(rows, beta, &z, &mut pv);
         }
     }
@@ -280,15 +360,20 @@ struct RankOut {
     /// Wall seconds of this rank's compute sections (assembly-free:
     /// SpMV, dots, axpy), excluding barrier and halo waits.
     busy: f64,
-    /// Wall seconds of this rank's halo pack/send/recv/unpack.
-    halo: f64,
+    /// Wall seconds blocked in phase barriers.
+    barrier_wait: f64,
+    /// Wall seconds blocked in `recv` for a halo message.
+    halo_wait: f64,
+    /// Wall seconds of halo pack/send/unpack work (non-blocking).
+    halo_work: f64,
 }
 
 /// The real schedule: `nthreads` workers execute the virtual ranks
 /// (contiguous blocks when ranks outnumber workers), barrier-stepped
 /// through the same phases as [`pcg_sequential`], with ghost values
 /// moved through per-rank-pair channels. Returns the stats, the
-/// per-rank busy seconds (the *measured* load imbalance) and the halo
+/// per-rank wall decomposition (busy seconds are the *measured* load
+/// imbalance; barrier/halo waits are its physical cost) and the halo
 /// traffic.
 pub fn pcg_threaded(
     plan: &RankPlan,
@@ -298,7 +383,7 @@ pub fn pcg_threaded(
     x: &mut [f64],
     opts: &SolverOpts,
     nthreads: usize,
-) -> (SolveStats, Vec<f64>, HaloStats) {
+) -> (SolveStats, RankClocks, HaloStats) {
     let n = a.n;
     assert_eq!(b.len(), n);
     assert_eq!(x.len(), n);
@@ -393,7 +478,7 @@ pub fn pcg_threaded(
         }
     });
 
-    let mut busy = vec![0.0; p_ranks];
+    let mut clocks = RankClocks::with_ranks(p_ranks);
     let mut halo = HaloStats {
         wall: 0.0,
         messages: halo_rounds * ghost.messages_per_update(),
@@ -401,13 +486,36 @@ pub fn pcg_threaded(
     };
     for o in outs {
         let o = o.expect("rank produced no output");
-        busy[o.rank] = o.busy;
-        halo.wall = halo.wall.max(o.halo);
+        clocks.busy[o.rank] = o.busy;
+        clocks.barrier_wait[o.rank] = o.barrier_wait;
+        clocks.halo_wait[o.rank] = o.halo_wait;
+        clocks.halo_work[o.rank] = o.halo_work;
+        halo.wall = halo.wall.max(o.halo_work + o.halo_wait);
         for (j, &d) in plan.rows[o.rank].iter().enumerate() {
             x[d as usize] = o.x_vals[j];
         }
     }
-    (stats, busy, halo)
+    (stats, clocks, halo)
+}
+
+/// One barrier wait, measured once and charged to every rank of the
+/// worker's bundle (a multiplexed rank was genuinely stalled for the
+/// whole wait). Emits a `barrier_wait` span per rank when tracing.
+fn barrier_wait_timed(barrier: &Barrier, bundle: &[RankComm], waits: &mut [f64]) {
+    let tr = obs::tracer();
+    let t0 = if tr.enabled() { Some(tr.now_ns()) } else { None };
+    let sw = Stopwatch::start();
+    barrier.wait();
+    let dt = sw.elapsed();
+    if let Some(t0) = t0 {
+        let t1 = tr.now_ns();
+        for c in bundle {
+            tr.record_span(c.rank as u32, Phase::BarrierWait, t0, t1);
+        }
+    }
+    for w in waits.iter_mut() {
+        *w += dt;
+    }
 }
 
 /// One worker's whole solve: runs every phase for each of its ranks,
@@ -433,6 +541,8 @@ fn worker(
     let mut states: Vec<RankState> = bundle.iter().map(|_| RankState::new(n)).collect();
     let mut busy = vec![0.0; bundle.len()];
     let mut halo_w = vec![0.0; bundle.len()];
+    let mut halo_wt = vec![0.0; bundle.len()];
+    let mut barrier_w = vec![0.0; bundle.len()];
 
     // ---- init: local residual + first partials
     for (k, c) in bundle.iter().enumerate() {
@@ -453,14 +563,20 @@ fn worker(
         slot_b[c.rank].store(prz.to_bits(), Ordering::Relaxed);
         busy[k] += sw.elapsed();
     }
-    barrier.wait();
+    barrier_wait_timed(barrier, &bundle, &mut barrier_w);
     let bnorm2 = ordered_sum_bits(slot_a);
     let mut rz = ordered_sum_bits(slot_b);
     // protect the slots from the next iteration's stores until every
     // worker has read them
-    barrier.wait();
+    barrier_wait_timed(barrier, &bundle, &mut barrier_w);
 
-    let finish = |states: &[RankState], busy: &[f64], halo_w: &[f64], st: SolveStats, rounds| {
+    let finish = |states: &[RankState],
+                  busy: &[f64],
+                  barrier_w: &[f64],
+                  halo_wt: &[f64],
+                  halo_w: &[f64],
+                  st: SolveStats,
+                  rounds| {
         let outs = bundle
             .iter()
             .enumerate()
@@ -471,7 +587,9 @@ fn worker(
                     .map(|&d| states[k].x[d as usize])
                     .collect(),
                 busy: busy[k],
-                halo: halo_w[k],
+                barrier_wait: barrier_w[k],
+                halo_wait: halo_wt[k],
+                halo_work: halo_w[k],
             })
             .collect();
         (outs, st, rounds)
@@ -489,7 +607,7 @@ fn worker(
             rel_residual: 0.0,
             used_pjrt: false,
         };
-        return finish(&states, &busy, &halo_w, st, 0);
+        return finish(&states, &busy, &barrier_w, &halo_wt, &halo_w, st, 0);
     }
 
     let tol2 = opts.tol * opts.tol * bnorm2;
@@ -500,11 +618,14 @@ fn worker(
         // ---- convergence check: partial |r|^2, rank-ordered reduce
         for (k, c) in bundle.iter().enumerate() {
             let sw = Stopwatch::start();
-            let v = dot_rows(&plan.rows[c.rank], &states[k].r, &states[k].r);
+            let v = {
+                let _sp = obs::span(c.rank, Phase::Dot);
+                dot_rows(&plan.rows[c.rank], &states[k].r, &states[k].r)
+            };
             slot_a[c.rank].store(v.to_bits(), Ordering::Relaxed);
             busy[k] += sw.elapsed();
         }
-        barrier.wait(); // B1
+        barrier_wait_timed(barrier, &bundle, &mut barrier_w); // B1
         rnorm2 = ordered_sum_bits(slot_a);
         if rnorm2 <= tol2 {
             iterations = it;
@@ -519,6 +640,7 @@ fn worker(
         // channels themselves are the synchronization.
         rounds += 1;
         for (k, c) in bundle.iter().enumerate() {
+            let _sp = obs::span(c.rank, Phase::HaloSend);
             let sw = Stopwatch::start();
             for (tx, (_, list)) in c.sends.iter().zip(&ghost.send[c.rank]) {
                 // one owned buffer per message: the alloc is part of
@@ -531,27 +653,38 @@ fn worker(
             halo_w[k] += sw.elapsed();
         }
         for (k, c) in bundle.iter().enumerate() {
-            let sw = Stopwatch::start();
+            let _sp = obs::span(c.rank, Phase::HaloRecv);
             let st = &mut states[k];
             for (rx, (_, list)) in c.recvs.iter().zip(&ghost.recv[c.rank]) {
+                // blocked until the producing rank's send lands: the
+                // wait half of the halo cost
+                let sw = Stopwatch::start();
                 let msg = rx.recv().expect("halo sender dropped");
+                halo_wt[k] += sw.elapsed();
+                let sw = Stopwatch::start();
                 debug_assert_eq!(msg.len(), list.len());
                 for (&d, &v) in list.iter().zip(&msg) {
                     st.p[d as usize] = v;
                 }
+                halo_w[k] += sw.elapsed();
             }
-            halo_w[k] += sw.elapsed();
         }
         // ---- SpMV + partial p.q
         for (k, c) in bundle.iter().enumerate() {
             let sw = Stopwatch::start();
             let st = &mut states[k];
-            spmv_rows(a, &plan.rows[c.rank], &st.p, &mut st.q);
-            let v = dot_rows(&plan.rows[c.rank], &st.p, &st.q);
+            {
+                let _sp = obs::span(c.rank, Phase::Spmv);
+                spmv_rows(a, &plan.rows[c.rank], &st.p, &mut st.q);
+            }
+            let v = {
+                let _sp = obs::span(c.rank, Phase::Dot);
+                dot_rows(&plan.rows[c.rank], &st.p, &st.q)
+            };
             slot_b[c.rank].store(v.to_bits(), Ordering::Relaxed);
             busy[k] += sw.elapsed();
         }
-        barrier.wait(); // B2
+        barrier_wait_timed(barrier, &bundle, &mut barrier_w); // B2
         let pq = ordered_sum_bits(slot_b);
         if pq <= 0.0 {
             iterations = it;
@@ -562,20 +695,23 @@ fn worker(
         for (k, c) in bundle.iter().enumerate() {
             let sw = Stopwatch::start();
             let st = &mut states[k];
-            let v = update_rows(
-                &plan.rows[c.rank],
-                alpha,
-                &st.p,
-                &st.q,
-                dinv,
-                &mut st.x,
-                &mut st.r,
-                &mut st.z,
-            );
+            let v = {
+                let _sp = obs::span(c.rank, Phase::Axpy);
+                update_rows(
+                    &plan.rows[c.rank],
+                    alpha,
+                    &st.p,
+                    &st.q,
+                    dinv,
+                    &mut st.x,
+                    &mut st.r,
+                    &mut st.z,
+                )
+            };
             slot_a[c.rank].store(v.to_bits(), Ordering::Relaxed);
             busy[k] += sw.elapsed();
         }
-        barrier.wait(); // B3
+        barrier_wait_timed(barrier, &bundle, &mut barrier_w); // B3
         let rz_new = ordered_sum_bits(slot_a);
         let beta = rz_new / rz;
         rz = rz_new;
@@ -583,17 +719,18 @@ fn worker(
         for (k, c) in bundle.iter().enumerate() {
             let sw = Stopwatch::start();
             let st = &mut states[k];
+            let _sp = obs::span(c.rank, Phase::Axpy);
             direction_rows(&plan.rows[c.rank], beta, &st.z, &mut st.p);
             busy[k] += sw.elapsed();
         }
-        barrier.wait(); // B4: p is consistent before the next halo
+        barrier_wait_timed(barrier, &bundle, &mut barrier_w); // B4: p consistent before next halo
     }
     let st = SolveStats {
         iterations,
         rel_residual: (rnorm2 / bnorm2).sqrt(),
         used_pjrt: false,
     };
-    finish(&states, &busy, &halo_w, st, rounds)
+    finish(&states, &busy, &barrier_w, &halo_wt, &halo_w, st, rounds)
 }
 
 #[cfg(test)]
@@ -686,7 +823,7 @@ mod tests {
             let st_seq = pcg_sequential(&plan, &a, &b, &mut xs, &opts);
             for nthreads in [1usize, 2, 8] {
                 let mut xt = vec![0.0; a.n];
-                let (st_thr, busy, halo) =
+                let (st_thr, clocks, halo) =
                     pcg_threaded(&plan, &ghost, &a, &b, &mut xt, &opts, nthreads);
                 assert_eq!(st_seq.iterations, st_thr.iterations, "p={nranks} t={nthreads}");
                 assert_eq!(
@@ -701,11 +838,22 @@ mod tests {
                         "x[{i}] differs: p={nranks} t={nthreads}"
                     );
                 }
-                assert_eq!(busy.len(), nranks);
-                assert!(busy.iter().all(|&t| t >= 0.0));
+                assert_eq!(clocks.busy.len(), nranks);
+                assert_eq!(clocks.barrier_wait.len(), nranks);
+                assert_eq!(clocks.halo_wait.len(), nranks);
+                assert!(clocks.busy.iter().all(|&t| t >= 0.0));
+                assert!(clocks.barrier_wait.iter().all(|&t| t.is_finite() && t >= 0.0));
+                assert!(clocks.halo_wait.iter().all(|&t| t.is_finite() && t >= 0.0));
+                let wf = clocks.wait_fraction();
+                assert!((0.0..=1.0).contains(&wf), "wait fraction {wf}");
                 if nranks > 1 {
                     assert!(halo.messages > 0, "no halo traffic at p={nranks}");
                     assert!(halo.bytes > halo.messages);
+                    // the halo wall covers both the work and wait parts
+                    let hmax = (0..nranks)
+                        .map(|r| clocks.halo_work[r] + clocks.halo_wait[r])
+                        .fold(0.0, f64::max);
+                    assert!((halo.wall - hmax).abs() < 1e-12);
                 }
             }
         }
@@ -781,11 +929,28 @@ mod tests {
         let st = pcg_sequential(&plan, &a, &sys.b, &mut xs, &opts);
         assert!(st.rel_residual < 1e-8, "relres {}", st.rel_residual);
         let mut xt = vec![0.0; a.n];
-        let (tt, busy, _) = pcg_threaded(&plan, &ghost, &a, &sys.b, &mut xt, &opts, 3);
+        let (tt, clocks, _) = pcg_threaded(&plan, &ghost, &a, &sys.b, &mut xt, &opts, 3);
         assert_eq!(st.iterations, tt.iterations);
         for (s, t) in xs.iter().zip(&xt) {
             assert_eq!(s.to_bits(), t.to_bits());
         }
-        assert!(busy.iter().sum::<f64>() > 0.0);
+        assert!(clocks.busy.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn rank_clocks_merge_and_fractions() {
+        let mut a = RankClocks::with_ranks(2);
+        a.busy = vec![3.0, 1.0];
+        a.barrier_wait = vec![0.0, 2.0];
+        let mut b = RankClocks::default();
+        b.merge(&a);
+        b.merge(&a);
+        assert_eq!(b.busy, vec![6.0, 2.0]);
+        assert_eq!(b.barrier_wait, vec![0.0, 4.0]);
+        assert_eq!(b.max_barrier_wait(), 4.0);
+        assert_eq!(b.max_halo_wait(), 0.0);
+        // waits 4 of 12 accounted rank-seconds
+        assert!((b.wait_fraction() - 4.0 / 12.0).abs() < 1e-12);
+        assert_eq!(RankClocks::default().wait_fraction(), 0.0);
     }
 }

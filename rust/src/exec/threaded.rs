@@ -16,13 +16,14 @@
 use crate::fem::{Assembled, Csr, DofMap, SolveStats, SolverOpts};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::TetMesh;
+use crate::obs::{self, Phase};
 use crate::runtime::Runtime;
 use crate::util::timer::Stopwatch;
 use std::cell::RefCell;
 
 use super::assemble::{assemble_rank, combine, RankAssembly};
 use super::ghost::GhostPlan;
-use super::pcg::pcg_threaded;
+use super::pcg::{pcg_threaded, RankClocks};
 use super::plan::RankPlan;
 use super::{ExecReport, Executor};
 
@@ -58,14 +59,8 @@ impl ThreadedExec {
         self.threads
     }
 
-    fn add_busy(&self, busy: &[f64]) {
-        let mut rep = self.report.borrow_mut();
-        if rep.rank_busy.len() < busy.len() {
-            rep.rank_busy.resize(busy.len(), 0.0);
-        }
-        for (acc, &t) in rep.rank_busy.iter_mut().zip(busy) {
-            *acc += t;
-        }
+    fn add_clocks(&self, clocks: &RankClocks) {
+        self.report.borrow_mut().clocks.merge(clocks);
     }
 }
 
@@ -109,6 +104,7 @@ impl Executor for ThreadedExec {
                     scope.spawn(move || {
                         let mut done = Vec::with_capacity(hi - lo);
                         for rk in lo..hi {
+                            let _sp = obs::span(rk, Phase::Assemble);
                             let sw = Stopwatch::start();
                             let asm = assemble_rank(mesh, topo, dof, source, &plan.elems[rk]);
                             done.push((rk, asm, sw.elapsed()));
@@ -123,17 +119,17 @@ impl Executor for ThreadedExec {
                 }
             }
         });
-        let mut busy = vec![0.0; p];
+        let mut clocks = RankClocks::with_ranks(p);
         let parts: Vec<RankAssembly> = outs
             .into_iter()
             .enumerate()
             .map(|(rk, o)| {
                 let (asm, wall) = o.expect("rank assembled nothing");
-                busy[rk] = wall;
+                clocks.busy[rk] = wall;
                 asm
             })
             .collect();
-        self.add_busy(&busy);
+        self.add_clocks(&clocks);
         combine(dof.n_dofs, parts)
     }
 
@@ -147,8 +143,20 @@ impl Executor for ThreadedExec {
         _rt: Option<&Runtime>,
     ) -> SolveStats {
         let ghost = GhostPlan::build(plan, a);
-        let (stats, busy, halo) = pcg_threaded(plan, &ghost, a, b, x, opts, self.threads);
-        self.add_busy(&busy);
+        let (stats, clocks, halo) = pcg_threaded(plan, &ghost, a, b, x, opts, self.threads);
+        let m = obs::metrics();
+        for &t in &clocks.busy {
+            m.observe("exec.threads.rank_busy_s", t);
+        }
+        for &t in &clocks.barrier_wait {
+            m.observe("exec.threads.barrier_wait_s", t);
+        }
+        for &t in &clocks.halo_wait {
+            m.observe("exec.threads.halo_wait_s", t);
+        }
+        m.counter_add("exec.threads.halo_messages", halo.messages as u64);
+        m.counter_add("exec.threads.halo_bytes", halo.bytes as u64);
+        self.add_clocks(&clocks);
         {
             let mut rep = self.report.borrow_mut();
             rep.halo_wall += halo.wall;
@@ -224,14 +232,18 @@ mod tests {
         thr.pcg(&plan, &a, &sys.b, &mut u, &SolverOpts::default(), None);
 
         let rep = thr.take_report();
-        assert_eq!(rep.rank_busy.len(), 3);
-        assert!(rep.rank_busy.iter().sum::<f64>() > 0.0);
+        assert_eq!(rep.clocks.busy.len(), 3);
+        assert!(rep.clocks.busy.iter().sum::<f64>() > 0.0);
+        assert_eq!(rep.clocks.barrier_wait.len(), 3);
+        assert_eq!(rep.clocks.halo_wait.len(), 3);
+        let wf = rep.wait_fraction();
+        assert!((0.0..=1.0).contains(&wf), "wait fraction {wf}");
         assert!(rep.halo_messages > 0, "3 ranks must exchange ghosts");
         assert!(rep.halo_bytes > 0);
         assert!(rep.measured_imbalance() >= 1.0);
         // drained: a second take is empty
         let empty = thr.take_report();
-        assert!(empty.rank_busy.is_empty());
+        assert!(empty.clocks.busy.is_empty());
         assert_eq!(empty.halo_messages, 0);
     }
 

@@ -14,6 +14,7 @@
 use crate::fem::{assemble, pjrt_pcg, Assembled, Csr, DofMap, SolveStats, SolverOpts};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::TetMesh;
+use crate::obs::{self, Phase};
 use crate::runtime::Runtime;
 
 use super::assemble::{assemble_rank, combine, RankAssembly};
@@ -58,7 +59,10 @@ impl Executor for VirtualExec {
             return assemble(mesh, topo, dof, source, rt);
         }
         let parts: Vec<RankAssembly> = (0..plan.nranks)
-            .map(|r| assemble_rank(mesh, topo, dof, source, &plan.elems[r]))
+            .map(|r| {
+                let _sp = obs::span(r, Phase::Assemble);
+                assemble_rank(mesh, topo, dof, source, &plan.elems[r])
+            })
             .collect();
         combine(dof.n_dofs, parts)
     }
@@ -77,6 +81,7 @@ impl Executor for VirtualExec {
                 return stats;
             }
         }
+        obs::metrics().counter_add("exec.virtual.pcg_solves", 1);
         pcg_sequential(plan, a, b, x, opts)
     }
 
@@ -115,7 +120,7 @@ mod tests {
         assert!(!stats.used_pjrt);
         // the virtual executor measures nothing: empty report
         let rep = exec.take_report();
-        assert!(rep.rank_busy.is_empty());
+        assert!(rep.clocks.is_empty());
         assert_eq!(rep.halo_messages, 0);
     }
 }

@@ -13,7 +13,8 @@
 //!   registry: [`dlb`]), the problem scenarios behind `--problem`
 //!   ([`scenario`]), the execution schedules behind `--exec`
 //!   ([`exec`]: virtual-SPMD vs real shared-memory threads),
-//!   and the generic adaptive driver ([`coordinator`])
+//!   the generic adaptive driver ([`coordinator`]), and structured
+//!   observability: phase tracing + metrics ([`obs`])
 //!   -- plus every substrate they
 //!   need: tet meshes with refinement forests ([`mesh`]), bisection
 //!   refinement ([`mesh::TetMesh::refine`]), error estimation
@@ -31,6 +32,7 @@ pub mod exec;
 pub mod fem;
 pub mod geometry;
 pub mod mesh;
+pub mod obs;
 pub mod partition;
 pub mod remap;
 pub mod runtime;

@@ -18,6 +18,7 @@ use phg_dlb::format_err;
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::mesh::TetMesh;
+use phg_dlb::obs;
 use phg_dlb::partition::{metrics, PartitionInput};
 use phg_dlb::runtime::Runtime;
 use phg_dlb::scenario::ScenarioRegistry;
@@ -67,6 +68,11 @@ fn cmd_run(cfg: &Config) -> Result<()> {
         mesh.n_leaves(),
         dc.nsteps
     );
+    let trace_path = cfg.get_str("trace", "");
+    let metrics_path = cfg.get_str("metrics", "");
+    if !trace_path.is_empty() {
+        obs::tracer().set_enabled(true);
+    }
     let mut driver = AdaptiveDriver::new(mesh, dc)?;
     let sw = Stopwatch::start();
     driver.run();
@@ -81,6 +87,45 @@ fn cmd_run(cfg: &Config) -> Result<()> {
             "final: elements={} dofs={} L2err={:.3e} maxerr={:.3e}",
             last.n_elements, last.n_dofs, last.l2_error, last.max_error
         );
+    }
+    // merged wall decomposition over every measured step: per-rank
+    // busy / barrier-wait / halo-wait, and the run's wait fraction
+    let mut agg = phg_dlb::exec::ExecReport::default();
+    for r in &driver.timeline.records {
+        if let Some(xr) = &r.exec_report {
+            agg.clocks.merge(&xr.clocks);
+            agg.halo_wall += xr.halo_wall;
+            agg.halo_messages += xr.halo_messages;
+            agg.halo_bytes += xr.halo_bytes;
+        }
+    }
+    if !agg.clocks.is_empty() {
+        println!(
+            "waits: barrier {:.6}s halo {:.6}s (fraction {:.4} of rank-seconds)",
+            agg.clocks.barrier_wait.iter().sum::<f64>(),
+            agg.clocks.halo_wait.iter().sum::<f64>(),
+            agg.wait_fraction()
+        );
+        let profile = phg_dlb::coordinator::report::format_rank_profile(&agg);
+        print!("{profile}");
+    }
+    if !trace_path.is_empty() {
+        let tr = obs::tracer();
+        let (spans, dropped) = (tr.len(), tr.dropped());
+        std::fs::write(&trace_path, tr.chrome_trace_json())?;
+        println!("trace: {trace_path} ({spans} spans, {dropped} dropped)");
+        for (name, (count, secs)) in tr.phase_totals() {
+            println!("  {name:<14} {count:>8} spans {secs:>10.4}s");
+        }
+    }
+    if !metrics_path.is_empty() {
+        let dump = obs::metrics().dump();
+        if metrics_path == "-" {
+            print!("{dump}");
+        } else {
+            std::fs::write(&metrics_path, &dump)?;
+            println!("metrics: {metrics_path}");
+        }
     }
     if cfg.get_bool("csv", false)? {
         let path = phg_dlb::coordinator::report::write_report(
@@ -245,6 +290,7 @@ fn run() -> Result<()> {
                  \x20     strategy (scratch|diffusive|auto)\n\
                  \x20     exec (virtual|threads) exec_threads (0 = one per core)\n\
                  \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
+                 \x20     trace (Chrome-trace JSON path) metrics (text path, - = stdout)\n\
                  \x20     solver_tol solver_max_iter use_pjrt csv config"
             );
             Ok(())

@@ -1,0 +1,322 @@
+//! Metrics registry: named counters and streaming histograms with a
+//! deterministic dump order (DESIGN.md §10).
+//!
+//! Unlike tracing (off by default, per-iteration granularity), the
+//! registry is always on: it is fed at *step* granularity by the
+//! driver, the rebalance pipeline and the executors, so its cost is
+//! a handful of mutex-guarded map updates per adaptive step --
+//! invisible next to a solve.
+//!
+//! Histograms are fixed-size power-of-two bucket arrays. The bucket
+//! of a value is derived from its IEEE-754 exponent bits (not
+//! `f64::log2`, whose rounding is not guaranteed identical across
+//! platforms), so the same samples always land in the same buckets
+//! everywhere. Quantiles (p50/p95) are read back as the midpoint of
+//! the covering bucket, clamped to the exact observed [min, max];
+//! min, max, count and sum are exact.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Buckets span 2^-40 .. 2^23 (about 1e-12 s .. 8.4e6): everything
+/// from a single axpy to a multi-week wall fits. Values outside are
+/// clamped into the edge buckets; min/max stay exact regardless.
+const BUCKETS: usize = 64;
+const EXP_OFFSET: i32 = 40;
+
+/// Streaming histogram: exact count/sum/min/max plus power-of-two
+/// buckets for quantile estimates.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    buckets: [u64; BUCKETS],
+}
+
+/// Bucket index from the IEEE exponent: floor(log2 v) for normal
+/// positive v, deterministic bit arithmetic everywhere.
+fn bucket_of(v: f64) -> usize {
+    if !(v > 0.0) || !v.is_finite() {
+        return 0;
+    }
+    let e = ((v.to_bits() >> 52) & 0x7ff) as i32 - 1023;
+    (e + EXP_OFFSET).clamp(0, BUCKETS as i32 - 1) as usize
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; BUCKETS],
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[bucket_of(v)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate: the midpoint (1.5 * 2^e) of the first
+    /// bucket whose cumulative count covers `q`, clamped to the
+    /// exact observed range.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                if i == 0 {
+                    // zero/negative/subnormal catch-all: no midpoint
+                    return self.min;
+                }
+                let mid = 1.5 * 2.0f64.powi(i as i32 - EXP_OFFSET);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Read-only snapshot of one histogram, for tests and reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+#[derive(Debug)]
+enum Entry {
+    Counter(u64),
+    Hist(Histogram),
+}
+
+/// The registry: a name-keyed map of counters and histograms. Names
+/// are `&'static str` dotted paths (`"driver.solve_s"`), so feeding
+/// a metric never allocates once its entry exists; `BTreeMap` keeps
+/// the dump sorted by name with no extra work.
+pub struct Metrics {
+    inner: Mutex<BTreeMap<&'static str, Entry>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Add to a monotonic counter, creating it at zero on first use.
+    pub fn counter_add(&self, name: &'static str, by: u64) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        match m.entry(name).or_insert(Entry::Counter(0)) {
+            Entry::Counter(c) => *c += by,
+            Entry::Hist(_) => debug_assert!(false, "metric {name} is a histogram"),
+        }
+    }
+
+    /// Record one sample into a histogram, creating it on first use.
+    pub fn observe(&self, name: &'static str, v: f64) {
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        match m.entry(name).or_insert_with(|| Entry::Hist(Histogram::new())) {
+            Entry::Hist(h) => h.observe(v),
+            Entry::Counter(_) => debug_assert!(false, "metric {name} is a counter"),
+        }
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.inner.lock().expect("metrics poisoned").get(name) {
+            Some(Entry::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Snapshot of a histogram, `None` if absent.
+    pub fn histogram(&self, name: &str) -> Option<HistSummary> {
+        match self.inner.lock().expect("metrics poisoned").get(name) {
+            Some(Entry::Hist(h)) => Some(HistSummary {
+                count: h.count(),
+                mean: h.mean(),
+                min: h.min(),
+                max: h.max(),
+                p50: h.quantile(0.50),
+                p95: h.quantile(0.95),
+            }),
+            _ => None,
+        }
+    }
+
+    /// Drop every metric (tests).
+    pub fn clear(&self) {
+        self.inner.lock().expect("metrics poisoned").clear();
+    }
+
+    /// Dump every metric, one line each, sorted by name -- counters
+    /// as `name = value`, histograms as count/mean/p50/p95/max. The
+    /// `--metrics` flag writes exactly this.
+    pub fn dump(&self) -> String {
+        let m = self.inner.lock().expect("metrics poisoned");
+        let mut out = String::new();
+        for (name, entry) in m.iter() {
+            match entry {
+                Entry::Counter(c) => {
+                    out.push_str(&format!("{name} = {c}\n"));
+                }
+                Entry::Hist(h) => {
+                    out.push_str(&format!(
+                        "{name} count={} mean={:.6e} p50={:.6e} p95={:.6e} max={:.6e}\n",
+                        h.count(),
+                        h.mean(),
+                        h.quantile(0.50),
+                        h.quantile(0.95),
+                        h.max()
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static METRICS: OnceLock<Metrics> = OnceLock::new();
+
+/// The process-wide registry the driver, pipeline and executors feed.
+pub fn metrics() -> &'static Metrics {
+    METRICS.get_or_init(Metrics::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        assert_eq!(m.counter("steps"), 0);
+        m.counter_add("steps", 1);
+        m.counter_add("steps", 2);
+        assert_eq!(m.counter("steps"), 3);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("w", i as f64);
+        }
+        let h = m.histogram("w").unwrap();
+        assert_eq!(h.count, 100);
+        assert_eq!(h.max, 100.0);
+        assert_eq!(h.min, 1.0);
+        assert!((h.mean - 50.5).abs() < 1e-9);
+        // p50 covers sample 50 -> the [32,64) bucket, midpoint 48
+        assert!(h.p50 >= 32.0 && h.p50 < 64.0, "p50 = {}", h.p50);
+        // p95 covers sample 95 -> the [64,128) bucket, clamped <= max
+        assert!(h.p95 >= 64.0 && h.p95 <= 100.0, "p95 = {}", h.p95);
+        assert!(h.p50 <= h.p95 && h.p95 <= h.max);
+    }
+
+    #[test]
+    fn zero_and_tiny_samples_are_safe() {
+        let m = Metrics::new();
+        m.observe("t", 0.0);
+        m.observe("t", 1e-300);
+        m.observe("t", f64::NAN);
+        let h = m.histogram("t").unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.min.min(0.0), 0.0);
+        // quantile of the catch-all bucket returns the exact min
+        assert_eq!(m.histogram("t").unwrap().p50.min(0.0), 0.0);
+    }
+
+    #[test]
+    fn dump_is_sorted_and_deterministic() {
+        let m = Metrics::new();
+        m.counter_add("z.count", 7);
+        m.observe("a.wall_s", 0.25);
+        m.observe("a.wall_s", 0.5);
+        m.counter_add("m.items", 1);
+        let d1 = m.dump();
+        let d2 = m.dump();
+        assert_eq!(d1, d2, "dump must be reproducible");
+        let lines: Vec<&str> = d1.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("a.wall_s count=2"));
+        assert!(lines[1].starts_with("m.items = 1"));
+        assert!(lines[2].starts_with("z.count = 7"));
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn bucket_of_is_exponent_exact() {
+        assert_eq!(bucket_of(1.0), EXP_OFFSET as usize);
+        assert_eq!(bucket_of(2.0), EXP_OFFSET as usize + 1);
+        assert_eq!(bucket_of(3.9), EXP_OFFSET as usize + 1);
+        assert_eq!(bucket_of(0.5), EXP_OFFSET as usize - 1);
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-4.0), 0);
+        assert_eq!(bucket_of(1e300), BUCKETS - 1);
+    }
+}

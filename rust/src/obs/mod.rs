@@ -1,0 +1,27 @@
+//! Observability: span-based phase tracing and a metrics registry
+//! (DESIGN.md §10).
+//!
+//! Two independent mechanisms with different cost contracts:
+//!
+//! * **Tracing** ([`trace`]) -- per-rank buffers of timed phase
+//!   spans, off by default, enabled by `--trace out.json`. Sites sit
+//!   inside the PCG hot loop, so the disabled path is two relaxed
+//!   atomic loads, no clock read, no allocation (enforced by
+//!   `tests/obs_overhead.rs`).
+//! * **Metrics** ([`metrics`]) -- always-on counters and histograms
+//!   fed at step granularity by the driver, `RebalancePipeline` and
+//!   both executors; dumped deterministically by `--metrics`.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{metrics, HistSummary, Metrics};
+pub use trace::{span, tracer, Phase, Span, SpanEvent, Tracer, DRIVER_LANE};
+
+/// Open a span on the driver lane (the sequential phases of the
+/// adaptive loop: solve, estimate, mark, refine, partition, remap,
+/// migrate).
+#[inline]
+pub fn driver_span(phase: Phase) -> Span<'static> {
+    trace::tracer().span_lane(DRIVER_LANE, phase)
+}

@@ -1,0 +1,446 @@
+//! Span-based phase tracing: per-rank buffers of timed phase spans,
+//! exported as Chrome trace-event JSON (DESIGN.md §10).
+//!
+//! A [`Span`] is an RAII guard: opening records the monotonic start
+//! time, dropping records the end and pushes one [`SpanEvent`] into
+//! the rank's buffer. Tracing is **disabled by default** and the
+//! disabled path is two relaxed atomic loads with no allocation and
+//! no clock read (`tests/obs_overhead.rs` enforces this with a
+//! counting allocator), so instrumented hot loops -- the PCG phases
+//! run per rank per iteration -- cost nothing unless a trace was
+//! asked for (`--trace out.json`).
+//!
+//! The exported JSON uses complete (`"ph": "X"`) events plus
+//! `thread_name` metadata, one trace lane per rank and one for the
+//! driver's sequential phases; Perfetto / `chrome://tracing` load it
+//! directly.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// What a span measures. The names are the stable vocabulary of the
+/// trace output and the per-phase aggregate; `assemble`/`spmv`/`dot`/
+/// `axpy` are *logical* compute phases emitted identically by both
+/// execution schedules, `halo_*`/`barrier_wait` exist only where the
+/// schedule physically waits, and the rest are the driver's
+/// sequential phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    Assemble,
+    Spmv,
+    Dot,
+    Axpy,
+    HaloSend,
+    HaloRecv,
+    BarrierWait,
+    Partition,
+    Remap,
+    Migrate,
+    Estimate,
+    Mark,
+    Refine,
+    Solve,
+}
+
+impl Phase {
+    /// Every phase, documentation order.
+    pub const ALL: [Phase; 14] = [
+        Phase::Assemble,
+        Phase::Spmv,
+        Phase::Dot,
+        Phase::Axpy,
+        Phase::HaloSend,
+        Phase::HaloRecv,
+        Phase::BarrierWait,
+        Phase::Partition,
+        Phase::Remap,
+        Phase::Migrate,
+        Phase::Estimate,
+        Phase::Mark,
+        Phase::Refine,
+        Phase::Solve,
+    ];
+
+    /// Stable span name (the `name` field of the trace events).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Assemble => "assemble",
+            Phase::Spmv => "spmv",
+            Phase::Dot => "dot",
+            Phase::Axpy => "axpy",
+            Phase::HaloSend => "halo_send",
+            Phase::HaloRecv => "halo_recv",
+            Phase::BarrierWait => "barrier_wait",
+            Phase::Partition => "partition",
+            Phase::Remap => "remap",
+            Phase::Migrate => "migrate",
+            Phase::Estimate => "estimate",
+            Phase::Mark => "mark",
+            Phase::Refine => "refine",
+            Phase::Solve => "solve",
+        }
+    }
+
+    /// Trace category (`cat`): which subsystem emits the phase.
+    pub fn category(self) -> &'static str {
+        match self {
+            Phase::Assemble
+            | Phase::Spmv
+            | Phase::Dot
+            | Phase::Axpy
+            | Phase::HaloSend
+            | Phase::HaloRecv
+            | Phase::BarrierWait => "exec",
+            Phase::Partition | Phase::Remap | Phase::Migrate => "dlb",
+            Phase::Estimate | Phase::Mark | Phase::Refine | Phase::Solve => "driver",
+        }
+    }
+}
+
+/// Lane id of the driver's sequential phases (solve wrapper,
+/// estimate, mark, refine, partition, remap, migrate): everything
+/// that is not per-rank work.
+pub const DRIVER_LANE: u32 = u32::MAX;
+
+/// One closed span: which lane (rank or driver), which phase, and
+/// monotonic nanoseconds since the tracer's epoch. `t1_ns >= t0_ns`
+/// by construction (both read the same monotonic clock).
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    pub rank: u32,
+    pub phase: Phase,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+}
+
+impl SpanEvent {
+    /// Span duration in seconds.
+    pub fn secs(&self) -> f64 {
+        (self.t1_ns - self.t0_ns) as f64 * 1e-9
+    }
+}
+
+/// One buffer per rank; ranks >= `SHARDS` share buffers modulo (the
+/// tested configurations run nparts <= 64, where this *is* per-rank).
+const SHARDS: usize = 64;
+
+/// Hard cap per buffer so a pathological run cannot exhaust memory;
+/// spans beyond it are counted in `dropped`, never silently lost.
+const SHARD_CAP: usize = 1 << 20;
+
+/// The span recorder. Thread-safe: ranks record concurrently into
+/// their own buffers; the disabled fast path never takes a lock.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    shards: Vec<Mutex<Vec<SpanEvent>>>,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    /// A fresh, disabled tracer with its own epoch.
+    pub fn new() -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether spans are being recorded (one relaxed load).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Monotonic nanoseconds since this tracer's epoch.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Open a span on a rank lane. When tracing is disabled this
+    /// performs no clock read and no allocation -- the guard is inert.
+    #[inline]
+    pub fn span(&self, rank: usize, phase: Phase) -> Span<'_> {
+        self.span_lane(rank as u32, phase)
+    }
+
+    /// Open a span on an explicit lane ([`DRIVER_LANE`] included).
+    #[inline]
+    pub fn span_lane(&self, lane: u32, phase: Phase) -> Span<'_> {
+        let live = if self.enabled() {
+            Some((lane, phase, self.now_ns()))
+        } else {
+            None
+        };
+        Span { tracer: self, live }
+    }
+
+    /// Record an already-measured interval (the barrier helper in
+    /// `exec::pcg` measures one wait and charges every rank of the
+    /// worker's bundle). Callers gate on [`Tracer::enabled`].
+    pub fn record_span(&self, rank: u32, phase: Phase, t0_ns: u64, t1_ns: u64) {
+        self.push(SpanEvent {
+            rank,
+            phase,
+            t0_ns,
+            t1_ns,
+        });
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        let mut buf = self.shards[(ev.rank as usize) % SHARDS]
+            .lock()
+            .expect("trace shard poisoned");
+        if buf.len() < SHARD_CAP {
+            buf.push(ev);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spans recorded so far.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("trace shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped at the buffer cap (0 in any sane run).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drop every recorded span and reset the dropped counter.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().expect("trace shard poisoned").clear();
+        }
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// All recorded spans, deterministically ordered by (start, lane,
+    /// phase name, end). Buffers are left intact.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::with_capacity(self.len());
+        for s in &self.shards {
+            out.extend(s.lock().expect("trace shard poisoned").iter().copied());
+        }
+        out.sort_by(|a, b| {
+            (a.t0_ns, a.rank, a.phase.name(), a.t1_ns)
+                .cmp(&(b.t0_ns, b.rank, b.phase.name(), b.t1_ns))
+        });
+        out
+    }
+
+    /// [`Tracer::snapshot`], then clear.
+    pub fn take(&self) -> Vec<SpanEvent> {
+        let out = self.snapshot();
+        self.clear();
+        out
+    }
+
+    /// Compact aggregate: phase name -> (span count, total seconds),
+    /// in deterministic (sorted) order.
+    pub fn phase_totals(&self) -> BTreeMap<&'static str, (u64, f64)> {
+        let mut totals: BTreeMap<&'static str, (u64, f64)> = BTreeMap::new();
+        for ev in self.snapshot() {
+            let e = totals.entry(ev.phase.name()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += ev.secs();
+        }
+        totals
+    }
+
+    /// The whole buffer as Chrome trace-event JSON (the `--trace`
+    /// output): complete `"X"` events in microseconds plus
+    /// `thread_name` metadata -- tid 0 is the driver lane, tid `r+1`
+    /// is rank `r`. Loads directly in Perfetto / `chrome://tracing`.
+    pub fn chrome_trace_json(&self) -> String {
+        let events = self.snapshot();
+        let lane_tid = |rank: u32| -> u64 {
+            if rank == DRIVER_LANE {
+                0
+            } else {
+                rank as u64 + 1
+            }
+        };
+        let mut lanes: Vec<u32> = events.iter().map(|e| e.rank).collect();
+        lanes.sort_by_key(|&r| lane_tid(r));
+        lanes.dedup();
+
+        let mut lines: Vec<String> = Vec::with_capacity(events.len() + lanes.len() + 1);
+        lines.push(
+            "{\"ph\":\"M\",\"pid\":0,\"tid\":0,\"name\":\"process_name\",\
+             \"args\":{\"name\":\"phg-dlb\"}}"
+                .to_string(),
+        );
+        for &rank in &lanes {
+            let name = if rank == DRIVER_LANE {
+                "driver".to_string()
+            } else {
+                format!("rank {rank}")
+            };
+            lines.push(format!(
+                "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{name}\"}}}}",
+                lane_tid(rank)
+            ));
+        }
+        for ev in &events {
+            lines.push(format!(
+                "{{\"ph\":\"X\",\"pid\":0,\"tid\":{},\"name\":\"{}\",\"cat\":\"{}\",\
+                 \"ts\":{:.3},\"dur\":{:.3}}}",
+                lane_tid(ev.rank),
+                ev.phase.name(),
+                ev.phase.category(),
+                ev.t0_ns as f64 / 1e3,
+                (ev.t1_ns - ev.t0_ns) as f64 / 1e3,
+            ));
+        }
+        let mut out = String::from("{\n\"displayTimeUnit\": \"ms\",\n\"traceEvents\": [\n");
+        out.push_str(&lines.join(",\n"));
+        out.push_str("\n]\n}\n");
+        out
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII span guard: records one [`SpanEvent`] on drop. Inert (no
+/// clock read, no allocation) when the tracer was disabled at open.
+#[must_use]
+pub struct Span<'a> {
+    tracer: &'a Tracer,
+    live: Option<(u32, Phase, u64)>,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some((rank, phase, t0_ns)) = self.live.take() {
+            let t1_ns = self.tracer.now_ns();
+            self.tracer.push(SpanEvent {
+                rank,
+                phase,
+                t0_ns,
+                t1_ns,
+            });
+        }
+    }
+}
+
+static TRACER: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-wide tracer every instrumentation site records into
+/// (disabled until `--trace` or a test enables it).
+pub fn tracer() -> &'static Tracer {
+    TRACER.get_or_init(Tracer::new)
+}
+
+/// Open a span on the global tracer's rank lane.
+#[inline]
+pub fn span(rank: usize, phase: Phase) -> Span<'static> {
+    tracer().span(rank, phase)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new();
+        assert!(!t.enabled());
+        {
+            let _sp = t.span(0, Phase::Spmv);
+        }
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn spans_record_monotonic_intervals() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        {
+            let _outer = t.span(2, Phase::Solve);
+            let _inner = t.span(2, Phase::Spmv);
+        }
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 2);
+        for e in &evs {
+            assert!(e.t1_ns >= e.t0_ns);
+            assert_eq!(e.rank, 2);
+        }
+        // the inner span (spmv) opened after and closed before the
+        // outer one (drop order: inner first)
+        let inner = evs.iter().find(|e| e.phase == Phase::Spmv).unwrap();
+        let outer = evs.iter().find(|e| e.phase == Phase::Solve).unwrap();
+        assert!(inner.t0_ns >= outer.t0_ns);
+        assert!(inner.t1_ns <= outer.t1_ns);
+    }
+
+    #[test]
+    fn take_drains_and_totals_aggregate() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        for rk in 0..3 {
+            let _sp = t.span(rk, Phase::Dot);
+        }
+        {
+            let _sp = t.span_lane(DRIVER_LANE, Phase::Estimate);
+        }
+        let totals = t.phase_totals();
+        assert_eq!(totals["dot"].0, 3);
+        assert_eq!(totals["estimate"].0, 1);
+        assert_eq!(t.take().len(), 4);
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_json_has_events_and_lane_names() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        {
+            let _a = t.span(0, Phase::Assemble);
+            let _b = t.span_lane(DRIVER_LANE, Phase::Partition);
+        }
+        let json = t.chrome_trace_json();
+        assert!(json.starts_with('{'));
+        assert!(json.trim_end().ends_with('}'));
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"name\":\"assemble\""));
+        assert!(json.contains("\"name\":\"driver\""));
+        assert!(json.contains("\"name\":\"rank 0\""));
+    }
+
+    #[test]
+    fn phase_vocabulary_is_stable() {
+        let mut names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Phase::ALL.len(), "duplicate phase names");
+        for p in Phase::ALL {
+            assert!(!p.name().is_empty());
+            assert!(matches!(p.category(), "exec" | "dlb" | "driver"));
+        }
+    }
+}

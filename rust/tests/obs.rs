@@ -1,0 +1,327 @@
+//! Observability integration: the Chrome-trace export must be
+//! well-formed JSON with labelled lanes, the two execution schedules
+//! must emit identical *logical* compute spans (tracing is an
+//! observer, never a numerics or schedule influence), and the driver
+//! must feed the metrics registry every step.
+//!
+//! The tracer and the metrics registry are process-wide; every test
+//! that enables tracing or reads global counters serializes on
+//! `OBS_LOCK` so the harness's concurrent test threads cannot
+//! interleave spans.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Mutex, MutexGuard};
+
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dist::Distribution;
+use phg_dlb::exec::{executor_by_name, Executor, RankPlan};
+use phg_dlb::fem::{Csr, DofMap, SolverOpts};
+use phg_dlb::mesh::generator;
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::mesh::TetMesh;
+use phg_dlb::obs::{self, Phase, DRIVER_LANE};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // a panicked test must not wedge the rest of the suite
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------- JSON
+// A minimal recursive-descent JSON syntax checker: enough to prove the
+// trace export parses, with zero dependencies.
+
+struct Json<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Json<'a> {
+    fn new(s: &'a str) -> Self {
+        Self { b: s.as_bytes(), i: 0 }
+    }
+
+    fn peek(&self) -> u8 {
+        *self.b.get(self.i).unwrap_or(&0)
+    }
+
+    fn bump(&mut self) -> u8 {
+        let c = self.peek();
+        self.i += 1;
+        c
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, want: u8) {
+        let got = self.bump();
+        assert_eq!(got, want, "json byte {}: got {:?}", self.i, got as char);
+    }
+
+    fn value(&mut self) {
+        self.ws();
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string(),
+            b't' => self.lit(b"true"),
+            b'f' => self.lit(b"false"),
+            b'n' => self.lit(b"null"),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &[u8]) {
+        for &c in s {
+            self.expect(c);
+        }
+    }
+
+    fn object(&mut self) {
+        self.expect(b'{');
+        self.ws();
+        if self.peek() == b'}' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.ws();
+            self.string();
+            self.ws();
+            self.expect(b':');
+            self.value();
+            self.ws();
+            match self.bump() {
+                b',' => continue,
+                b'}' => return,
+                c => panic!("json byte {}: expected , or }} got {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) {
+        self.expect(b'[');
+        self.ws();
+        if self.peek() == b']' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.value();
+            self.ws();
+            match self.bump() {
+                b',' => continue,
+                b']' => return,
+                c => panic!("json byte {}: expected , or ] got {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) {
+        self.expect(b'"');
+        loop {
+            match self.bump() {
+                b'"' => return,
+                b'\\' => {
+                    self.i += 1;
+                }
+                0 => panic!("json: unterminated string"),
+                _ => {}
+            }
+        }
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        if self.peek() == b'-' {
+            self.i += 1;
+        }
+        while matches!(self.peek(), b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+            self.i += 1;
+        }
+        assert!(self.i > start, "json byte {start}: expected a value");
+        std::str::from_utf8(&self.b[start..self.i])
+            .unwrap()
+            .parse::<f64>()
+            .expect("json: malformed number");
+    }
+}
+
+fn assert_valid_json(s: &str) {
+    let mut p = Json::new(s);
+    p.value();
+    p.ws();
+    assert_eq!(p.i, p.b.len(), "trailing bytes after the json value");
+}
+
+// ------------------------------------------------------------ fixtures
+
+fn fem_setup(nparts: usize) -> (TetMesh, LeafTopology, DofMap, RankPlan) {
+    let mut mesh = generator::cube_mesh(2);
+    mesh.refine(&mesh.leaves_unordered());
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    let topo = LeafTopology::build(&mesh);
+    let dof = DofMap::build(&mesh, &topo);
+    let owners: Vec<u16> = topo.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+    let plan = RankPlan::build(&mesh, &topo, &dof, &owners, nparts);
+    (mesh, topo, dof, plan)
+}
+
+fn driver_cfg(exec: &str, nsteps: usize) -> DriverConfig {
+    DriverConfig {
+        problem: "helmholtz".to_string(),
+        nparts: 4,
+        method: "PHG/HSFC".to_string(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
+        strategy: "scratch".to_string(),
+        exec: exec.to_string(),
+        exec_threads: 0,
+        lambda_trigger: 1.1,
+        theta_refine: 0.4,
+        theta_coarsen: 0.03,
+        max_elements: 30_000,
+        solver: SolverOpts {
+            tol: 1e-5,
+            max_iter: 600,
+        },
+        use_pjrt: false,
+        nsteps,
+        dt: 1.5e-3,
+    }
+}
+
+/// Run one assemble + solve under the named executor with the global
+/// tracer on; return (per-(lane, phase) compute-span counts,
+/// wait-span count, solver iterations).
+fn traced_step(exec: &str) -> (BTreeMap<(u32, &'static str), usize>, usize, usize) {
+    let (mesh, topo, dof, plan) = fem_setup(4);
+    let e = executor_by_name(exec, 4, 2).unwrap();
+    let tr = obs::tracer();
+    tr.clear();
+    tr.set_enabled(true);
+    let src = vec![1.0; dof.n_dofs];
+    let sys = e.assemble(&plan, &mesh, &topo, &dof, &src, None);
+    let a = Csr::linear_combination(1.0, &sys.k, 1.0, &sys.m);
+    let mut u = vec![0.0; dof.n_dofs];
+    let stats = e.pcg(&plan, &a, &sys.b, &mut u, &SolverOpts::default(), None);
+    tr.set_enabled(false);
+    let events = tr.take();
+    let mut compute: BTreeMap<(u32, &'static str), usize> = BTreeMap::new();
+    let mut waits = 0usize;
+    for ev in &events {
+        assert!(ev.t1_ns >= ev.t0_ns, "span ends before it starts");
+        match ev.phase {
+            Phase::Assemble | Phase::Spmv | Phase::Dot | Phase::Axpy => {
+                *compute.entry((ev.rank, ev.phase.name())).or_insert(0) += 1;
+            }
+            Phase::HaloSend | Phase::HaloRecv | Phase::BarrierWait => waits += 1,
+            other => panic!("executor emitted a driver phase: {}", other.name()),
+        }
+    }
+    (compute, waits, stats.iterations)
+}
+
+// --------------------------------------------------------------- tests
+
+#[test]
+fn chrome_trace_export_is_wellformed_and_labelled() {
+    // a local tracer: no global state, no lock needed
+    let t = phg_dlb::obs::Tracer::new();
+    t.set_enabled(true);
+    for rk in 0..3usize {
+        let _sp = t.span(rk, Phase::Spmv);
+        let _nested = t.span(rk, Phase::Dot);
+    }
+    {
+        let _drv = t.span_lane(DRIVER_LANE, Phase::Partition);
+    }
+    let json = t.chrome_trace_json();
+    assert_valid_json(&json);
+    assert_eq!(json.matches("\"ph\":\"X\"").count(), 7);
+    // one thread_name per lane (3 ranks + driver) + one process_name
+    assert_eq!(json.matches("\"ph\":\"M\"").count(), 5);
+    assert!(json.contains("\"name\":\"driver\""));
+    assert!(json.contains("\"name\":\"rank 2\""));
+    assert!(json.contains("\"cat\":\"dlb\""));
+}
+
+#[test]
+fn executors_emit_equal_logical_span_counts() {
+    let _g = lock();
+    let (virt, virt_waits, virt_iters) = traced_step("virtual");
+    let (thr, thr_waits, thr_iters) = traced_step("threads");
+    assert_eq!(virt_iters, thr_iters, "schedules diverged");
+    assert!(!virt.is_empty(), "virtual emitted no compute spans");
+    assert_eq!(
+        virt, thr,
+        "logical compute spans (assemble/spmv/dot/axpy per rank) must \
+         not depend on the execution schedule"
+    );
+    // waits are physical: only the threaded schedule has them
+    assert_eq!(virt_waits, 0, "virtual executor never waits");
+    assert!(thr_waits > 0, "threaded executor emitted no wait spans");
+    // every rank assembled exactly once
+    for rk in 0..4u32 {
+        assert_eq!(virt.get(&(rk, "assemble")), Some(&1));
+    }
+}
+
+#[test]
+fn traced_driver_run_exports_driver_and_rank_lanes() {
+    let _g = lock();
+    let tr = obs::tracer();
+    tr.clear();
+    tr.set_enabled(true);
+    let mut d = AdaptiveDriver::for_scenario(driver_cfg("threads", 2)).unwrap();
+    d.run();
+    tr.set_enabled(false);
+    let events = tr.snapshot();
+    let json = tr.chrome_trace_json();
+    tr.clear();
+    assert_eq!(d.timeline.records.len(), 2);
+    assert_valid_json(&json);
+
+    let driver_phases: BTreeSet<&str> = events
+        .iter()
+        .filter(|e| e.rank == DRIVER_LANE)
+        .map(|e| e.phase.name())
+        .collect();
+    for must in ["solve", "estimate", "mark"] {
+        assert!(driver_phases.contains(must), "driver lane missing {must}");
+    }
+    // rank lanes carry the physical schedule, waits included
+    assert!(events
+        .iter()
+        .any(|e| e.rank != DRIVER_LANE && e.phase == Phase::BarrierWait));
+    assert!(events
+        .iter()
+        .any(|e| e.rank != DRIVER_LANE && e.phase == Phase::Spmv));
+}
+
+#[test]
+fn driver_feeds_metrics_every_step() {
+    let _g = lock();
+    let m = obs::metrics();
+    let steps0 = m.counter("driver.steps");
+    let solves0 = m.histogram("driver.solve_s").map_or(0, |h| h.count);
+    let mut d = AdaptiveDriver::for_scenario(driver_cfg("virtual", 2)).unwrap();
+    d.run();
+    assert_eq!(
+        m.counter("driver.steps"),
+        steps0 + 2,
+        "driver.steps must count every adaptive step"
+    );
+    let solves = m.histogram("driver.solve_s").expect("solve histogram");
+    assert_eq!(solves.count, solves0 + 2);
+    assert!(solves.max > 0.0);
+    let dump = m.dump();
+    assert!(dump.contains("driver.steps = "), "{dump}");
+    assert_eq!(dump, m.dump(), "dump must be deterministic");
+}
