@@ -18,7 +18,8 @@ mod common;
 use common::{median_time, quick_or, save_csv, write_bench_json, BenchRow};
 use phg_dlb::dist::Distribution;
 use phg_dlb::dlb::Registry;
-use phg_dlb::fem::{assemble, DofMap};
+use phg_dlb::exec::spmv_rows;
+use phg_dlb::fem::{assemble, assemble_with_pattern, AssemblyPattern, Csr, DofMap, SellF64};
 use phg_dlb::mesh::generator;
 use phg_dlb::mesh::topology::LeafTopology;
 use phg_dlb::partition::oned::partition_1d;
@@ -138,14 +139,111 @@ fn main() {
     });
     rep.add("mesh hilbert keys (centroid+key)", nel as f64 / t / 1e6, "Melem/s");
 
+    // ---------- L1: assembly, triplet sort vs pattern reuse ----------
+    let topo = LeafTopology::build(&mesh);
+    let dof = DofMap::build(&mesh, &topo);
+    let src = vec![1.0f64; dof.n_dofs];
+
+    let t_triplet = median_time(3, || {
+        let a = assemble(&mesh, &topo, &dof, &src, None);
+        std::hint::black_box(a.b.len());
+    });
+    rep.add(
+        &format!("assembly triplets ({nel} elements)"),
+        nel as f64 / t_triplet / 1e6,
+        "Melem/s",
+    );
+
+    let t = median_time(3, || {
+        let p = AssemblyPattern::build(&mesh, &topo, &dof);
+        std::hint::black_box(p.slots.len());
+    });
+    rep.add("assembly pattern build (per mesh)", nel as f64 / t / 1e6, "Melem/s");
+
+    let pat = AssemblyPattern::build(&mesh, &topo, &dof);
+    let t_fill = median_time(3, || {
+        let a = assemble_with_pattern(&mesh, &topo, &dof, &src, &pat);
+        std::hint::black_box(a.b.len());
+    });
+    rep.add(
+        &format!("assembly pattern fill ({nel} elements)"),
+        nel as f64 / t_fill / 1e6,
+        "Melem/s",
+    );
+    rep.add("  -> pattern-reuse speedup", t_triplet / t_fill, "x");
+
+    // ---------- L1: native f64 spmv, CSR row gather vs SELL ----------
+    let nrows = quick_or(1_000_000, 50_000);
+    let band: i64 = 7; // 15-wide band: FEM-like row width, ELL-friendly
+    let mut trips: Vec<(u32, u32, f64)> = Vec::with_capacity(nrows * 15);
+    for r in 0..nrows as i64 {
+        for c in (r - band).max(0)..=(r + band).min(nrows as i64 - 1) {
+            trips.push((r as u32, c as u32, if r == c { 16.0 } else { -1.0 }));
+        }
+    }
+    let a = Csr::from_triplets(nrows, trips);
+    let all_rows: Vec<u32> = (0..nrows as u32).collect();
+    let sell = SellF64::build(&a, &all_rows).expect("15-wide band fits SELL");
+    let xv: Vec<f64> = (0..nrows).map(|i| 1.0 + (i % 13) as f64 * 0.25).collect();
+    let mut y_csr = vec![0.0f64; nrows];
+    let mut y_sell = vec![0.0f64; nrows];
+
+    // one multiply streams vals + cols once and x/y once each; the
+    // GB/s figures use that traffic model for both kernels
+    let bytes = (a.nnz() * (8 + 4) + 2 * nrows * 8) as f64;
+    let t_csr = median_time(5, || {
+        spmv_rows(&a, &all_rows, &xv, &mut y_csr);
+        std::hint::black_box(y_csr[0]);
+    });
+    rep.add(&format!("spmv csr gather ({nrows} rows, w=15)"), bytes / t_csr / 1e9, "GB/s");
+    let t_sell = median_time(5, || {
+        sell.spmv(&xv, &mut y_sell);
+        std::hint::black_box(y_sell[0]);
+    });
+    rep.add(&format!("spmv sell c=8 ({nrows} rows, w=15)"), bytes / t_sell / 1e9, "GB/s");
+    rep.add("  -> sell/csr speedup", t_csr / t_sell, "x");
+    // the substitution contract, spot-checked where we benchmark it
+    for (c, s) in y_csr.iter().zip(&y_sell) {
+        assert_eq!(c.to_bits(), s.to_bits(), "SELL diverged from CSR");
+    }
+    if std::env::args().any(|arg| arg == "--assert-spmv") && t_sell > t_csr / 0.9 {
+        panic!(
+            "--assert-spmv: SELL spmv slower than 0.9x CSR baseline \
+             (csr {:.3} ms, sell {:.3} ms)",
+            t_csr * 1e3,
+            t_sell * 1e3
+        );
+    }
+
+    // ---------- L1: refine to ~1M elements + topology/dof build ----------
+    let target = quick_or(1_000_000, 30_000);
+    let mut big = generator::cube_mesh(quick_or(6, 3));
+    let sw = std::time::Instant::now();
+    let mut big_n = big.leaves_unordered().len();
+    while big_n < target {
+        big.refine(&big.leaves_unordered());
+        big_n = big.leaves_unordered().len();
+    }
+    let t_ref = sw.elapsed().as_secs_f64();
+    rep.add(&format!("uniform refine to {big_n} elements"), big_n as f64 / t_ref / 1e6, "Melem/s");
+    let t = median_time(3, || {
+        let topo = LeafTopology::build(&big);
+        std::hint::black_box(topo.n_interior_faces);
+    });
+    rep.add(&format!("topology build ({big_n} elements)"), big_n as f64 / t / 1e6, "Melem/s");
+    let big_topo = LeafTopology::build(&big);
+    let t = median_time(3, || {
+        let d = DofMap::build(&big, &big_topo);
+        std::hint::black_box(d.n_dofs);
+    });
+    rep.add(&format!("dof build ({big_n} elements)"), big_n as f64 / t / 1e6, "Melem/s");
+    drop(big_topo);
+    drop(big);
+
     // ---------- L2/L1 via PJRT ----------
     match Runtime::open_default() {
         Err(e) => println!("(PJRT section skipped: {e})"),
         Ok(rt) => {
-            let topo = LeafTopology::build(&mesh);
-            let dof = DofMap::build(&mesh, &topo);
-            let src = vec![1.0f64; dof.n_dofs];
-
             let t = median_time(3, || {
                 let a = assemble(&mesh, &topo, &dof, &src, None);
                 std::hint::black_box(a.b.len());

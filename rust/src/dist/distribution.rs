@@ -56,7 +56,7 @@ impl Distribution {
         let ordered = self.sfc_order(mesh, leaves);
         let n = ordered.len();
         for (i, &id) in ordered.iter().enumerate() {
-            mesh.elems[id as usize].owner = (i * self.nparts / n) as u16;
+            mesh.set_owner(id, (i * self.nparts / n) as u16);
         }
     }
 
@@ -147,7 +147,7 @@ mod tests {
         assert_eq!(leaves.len(), 6);
         let owners = [0u16, 0, 0, 0, 1, 2];
         for (&id, &o) in leaves.iter().zip(owners.iter()) {
-            mesh.elems[id as usize].owner = o;
+            mesh.set_owner(id, o);
         }
         let dist = Distribution::new(3);
         let weights = vec![1.0f64; 6];
@@ -164,7 +164,7 @@ mod tests {
         let mut mesh = generator::cube_mesh(1);
         let leaves = mesh.leaves_unordered();
         for &id in &leaves {
-            mesh.elems[id as usize].owner = 0;
+            mesh.set_owner(id, 0);
         }
         let dist = Distribution::new(4);
         let weights = vec![1.0f64; leaves.len()];

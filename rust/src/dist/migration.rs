@@ -68,7 +68,7 @@ pub fn migrate(
     let max_pair_w = pair_w.values().fold(0.0f64, |acc, &w| acc.max(w));
 
     for (&id, &p) in leaves.iter().zip(parts) {
-        mesh.elems[id as usize].owner = p;
+        mesh.set_owner(id, p);
     }
 
     let total_bytes = (volume.total_v * ELEM_BYTES as f64).ceil() as usize;

@@ -12,7 +12,7 @@
 //! [`VirtualExec`]: crate::exec::VirtualExec
 //! [`ThreadedExec`]: crate::exec::ThreadedExec
 
-use crate::fem::{assemble::elem_matrices, Assembled, Csr, DofMap};
+use crate::fem::{assemble::elem_matrices, Assembled, AssemblyPattern, Csr, DofMap};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::TetMesh;
 
@@ -39,7 +39,7 @@ pub fn assemble_rank(
     let mut b = vec![0.0f64; dof.n_dofs];
     for &e in elems {
         let id = topo.leaves[e as usize];
-        let verts = mesh.elem(id).verts;
+        let verts = mesh.verts_of(id);
         let dofs = [
             dof.dof_of_vertex[verts[0] as usize],
             dof.dof_of_vertex[verts[1] as usize],
@@ -63,6 +63,80 @@ pub fn assemble_rank(
         }
     }
     RankAssembly { kt, mt, b }
+}
+
+/// One rank's *dense* element contributions for the pattern-reuse
+/// path: element matrices kept as 4x4 blocks (no triplets, nothing to
+/// sort) plus the rank's partial load vector, scattered inside the
+/// worker exactly like [`assemble_rank`] does.
+pub struct RankDense {
+    pub ke: Vec<[f64; 16]>,
+    pub me: Vec<[f64; 16]>,
+    pub b: Vec<f64>,
+}
+
+/// Compute one rank's dense element matrices (the FLOP-heavy part,
+/// safe to run on a worker thread). `elems` indexes `topo.leaves`;
+/// dofs come from the pattern's cached `elem_dofs`.
+pub fn dense_rank(
+    mesh: &TetMesh,
+    topo: &LeafTopology,
+    source: &[f64],
+    pat: &AssemblyPattern,
+    elems: &[u32],
+) -> RankDense {
+    let mut ke = Vec::with_capacity(elems.len());
+    let mut me = Vec::with_capacity(elems.len());
+    let mut b = vec![0.0f64; pat.n_dofs];
+    for &e in elems {
+        let c = mesh.elem_coords(topo.leaves[e as usize]);
+        let dofs = pat.elem_dofs[e as usize];
+        let f = [
+            source[dofs[0] as usize],
+            source[dofs[1] as usize],
+            source[dofs[2] as usize],
+            source[dofs[3] as usize],
+        ];
+        let (k_e, m_e, b_e) = elem_matrices(&c, &f);
+        for i in 0..4 {
+            b[dofs[i] as usize] += b_e[i];
+        }
+        ke.push(k_e);
+        me.push(m_e);
+    }
+    RankDense { ke, me, b }
+}
+
+/// Scatter per-rank dense contributions through a prebuilt pattern,
+/// rank by rank -- bitwise identical to [`combine`] over
+/// [`assemble_rank`] parts (same per-slot fold order: ranks in order,
+/// each rank's elements ascending, `(i, j)` row-major; the load
+/// vectors fold rank-wise exactly as `combine` does), with zero
+/// sorting per solve.
+pub fn combine_dense(
+    pat: &AssemblyPattern,
+    elems_of_rank: &[Vec<u32>],
+    parts: Vec<RankDense>,
+) -> Assembled {
+    let mut k = pat.zero_csr();
+    let mut m = pat.zero_csr();
+    let mut b = vec![0.0f64; pat.n_dofs];
+    for (part, elems) in parts.iter().zip(elems_of_rank) {
+        for (loc, &e) in elems.iter().enumerate() {
+            let ke = &part.ke[loc];
+            let me = &part.me[loc];
+            let s0 = e as usize * 16;
+            for ij in 0..16 {
+                let s = pat.slots[s0 + ij] as usize;
+                k.vals[s] += ke[ij];
+                m.vals[s] += me[ij];
+            }
+        }
+        for (acc, v) in b.iter_mut().zip(&part.b) {
+            *acc += v;
+        }
+    }
+    Assembled { k, m, b }
 }
 
 /// Combine per-rank contributions in rank order into the global
@@ -124,6 +198,32 @@ mod tests {
         }
         for (a, b) in global.b.iter().zip(&ranked.b) {
             assert!((a - b).abs() < 1e-13, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_pattern_combine_is_bitwise_identical_to_triplet_combine() {
+        let (mesh, topo, dof, plan) = setup(5);
+        let src = dof.eval_at_dofs(&mesh, |p| p.x * p.y - 0.25 * p.z);
+        let trip_parts: Vec<RankAssembly> = (0..plan.nranks)
+            .map(|r| assemble_rank(&mesh, &topo, &dof, &src, &plan.elems[r]))
+            .collect();
+        let trip = combine(dof.n_dofs, trip_parts);
+        let pat = AssemblyPattern::build(&mesh, &topo, &dof);
+        let dense_parts: Vec<RankDense> = (0..plan.nranks)
+            .map(|r| dense_rank(&mesh, &topo, &src, &pat, &plan.elems[r]))
+            .collect();
+        let dense = combine_dense(&pat, &plan.elems, dense_parts);
+        assert_eq!(trip.k.row_ptr, dense.k.row_ptr);
+        assert_eq!(trip.k.col_idx, dense.k.col_idx);
+        for (a, b) in trip.k.vals.iter().zip(&dense.k.vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "K differs: {a} vs {b}");
+        }
+        for (a, b) in trip.m.vals.iter().zip(&dense.m.vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "M differs: {a} vs {b}");
+        }
+        for (a, b) in trip.b.iter().zip(&dense.b) {
+            assert_eq!(a.to_bits(), b.to_bits(), "b differs: {a} vs {b}");
         }
     }
 

@@ -32,7 +32,7 @@ mod threaded;
 mod virtual_exec;
 
 pub use ghost::GhostPlan;
-pub use pcg::{pcg_sequential, pcg_threaded, HaloStats, RankClocks};
+pub use pcg::{pcg_sequential, pcg_threaded, spmv_rows, HaloStats, RankClocks, RankSpmv};
 pub use plan::RankPlan;
 pub use threaded::{available_threads, ThreadedExec};
 pub use virtual_exec::VirtualExec;

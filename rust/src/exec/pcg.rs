@@ -17,21 +17,141 @@
 //! * [`pcg_threaded`] -- the real schedule: one worker per virtual
 //!   rank (capped at a thread budget), `std::sync::Barrier` between
 //!   phases, ghost values physically moved through per-rank-pair
-//!   channels, reduction partials through an atomic slot array.
+//!   reusable halo slots, reduction partials through an atomic slot
+//!   array.
 //!
 //! That bitwise agreement is what makes the cross-executor
 //! equivalence tests exact and `ThreadedExec` run-to-run
 //! deterministic regardless of scheduling.
+//!
+//! Both schedules run the per-rank SpMV through [`RankSpmv`]: SELL
+//! slabs ([`crate::fem::SellF64`]) over the plan's interior/boundary
+//! row split when every row fits the width cap, the CSR row gather
+//! otherwise. The SELL kernel is bitwise identical to the gather per
+//! row (see `fem::sell`), so the substitution is invisible to the
+//! equivalence proofs. The split also buys overlap in the threaded
+//! schedule: interior rows (no off-rank columns) multiply while halo
+//! messages are still in flight.
 
-use crate::fem::{Csr, SolveStats, SolverOpts};
+use crate::fem::{Csr, SellF64, SolveStats, SolverOpts};
 use crate::obs::{self, Phase};
 use crate::util::timer::Stopwatch;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Barrier;
+use std::sync::{Barrier, Condvar, Mutex};
 
 use super::ghost::GhostPlan;
 use super::plan::RankPlan;
+
+/// One rank's SpMV kernel for the solve loop, chosen once per solve.
+pub enum RankSpmv {
+    /// SELL-C-1 slabs over the interior/boundary split (the fast
+    /// path for FEM matrices, whose row widths are small and even).
+    Sell { interior: SellF64, boundary: SellF64 },
+    /// CSR row gather (a row exceeded [`crate::fem::SELL_MAX_WIDTH`]).
+    Csr,
+}
+
+impl RankSpmv {
+    pub fn build(a: &Csr, interior: &[u32], boundary: &[u32]) -> Self {
+        match (SellF64::build(a, interior), SellF64::build(a, boundary)) {
+            (Some(i), Some(b)) => RankSpmv::Sell {
+                interior: i,
+                boundary: b,
+            },
+            _ => RankSpmv::Csr,
+        }
+    }
+
+    pub fn is_sell(&self) -> bool {
+        matches!(self, RankSpmv::Sell { .. })
+    }
+
+    /// Multiply the interior rows (no off-rank columns: safe before
+    /// the halo lands).
+    #[inline]
+    fn spmv_interior(&self, a: &Csr, rows: &[u32], x: &[f64], y: &mut [f64]) {
+        match self {
+            RankSpmv::Sell { interior, .. } => interior.spmv(x, y),
+            RankSpmv::Csr => spmv_rows(a, rows, x, y),
+        }
+    }
+
+    /// Multiply the boundary rows (requires ghost columns of `x`).
+    #[inline]
+    fn spmv_boundary(&self, a: &Csr, rows: &[u32], x: &[f64], y: &mut [f64]) {
+        match self {
+            RankSpmv::Sell { boundary, .. } => boundary.spmv(x, y),
+            RankSpmv::Csr => spmv_rows(a, rows, x, y),
+        }
+    }
+}
+
+/// Build one kernel per rank and count the format choices.
+fn build_kernels(a: &Csr, plan: &RankPlan) -> Vec<RankSpmv> {
+    let kernels: Vec<RankSpmv> = (0..plan.nranks)
+        .map(|rk| RankSpmv::build(a, &plan.interior[rk], &plan.boundary[rk]))
+        .collect();
+    let sell = kernels.iter().filter(|k| k.is_sell()).count();
+    let m = obs::metrics();
+    m.counter_add("exec.spmv.sell_ranks", sell as u64);
+    m.counter_add("exec.spmv.csr_fallback_ranks", (kernels.len() - sell) as u64);
+    kernels
+}
+
+/// A one-deep, reusable mailbox for one directed halo pair. The
+/// buffer is allocated once at its exact payload size and rewritten
+/// in place every round, so the steady-state solve loop allocates
+/// nothing (mpsc channels allocate a node per send). One-deep is
+/// enough: rank r publishes round `t+1` only after passing B1(t+1),
+/// which orders after B2(t), which orders after the receiver consumed
+/// round `t` -- the barrier schedule makes overwrite-before-consume
+/// impossible.
+struct HaloSlot {
+    state: Mutex<SlotBuf>,
+    cv: Condvar,
+}
+
+struct SlotBuf {
+    /// Round number of the payload currently in `buf` (0 = none yet).
+    seq: u64,
+    buf: Vec<f64>,
+}
+
+impl HaloSlot {
+    fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(SlotBuf {
+                seq: 0,
+                buf: Vec::with_capacity(capacity),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Overwrite the slot with round `seq`'s payload and wake the
+    /// receiver. `clear` + `extend` reuse the allocation: capacity
+    /// was exact at construction, so this never grows.
+    fn publish(&self, seq: u64, values: impl Iterator<Item = f64>) {
+        let mut st = self.state.lock().expect("halo slot poisoned");
+        debug_assert_eq!(st.seq + 1, seq, "halo round published out of order");
+        st.buf.clear();
+        st.buf.extend(values);
+        st.seq = seq;
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Block until round `seq` is present, returning a guard over the
+    /// payload.
+    fn wait_for(&self, seq: u64) -> std::sync::MutexGuard<'_, SlotBuf> {
+        let mut st = self.state.lock().expect("halo slot poisoned");
+        while st.seq < seq {
+            st = self.cv.wait(st).expect("halo slot poisoned");
+        }
+        debug_assert_eq!(st.seq, seq, "halo round skipped");
+        st
+    }
+}
 
 /// Measured halo traffic of one threaded solve.
 #[derive(Debug, Clone, Copy, Default)]
@@ -147,8 +267,9 @@ fn dot_rows(rows: &[u32], u: &[f64], v: &[f64]) -> f64 {
 
 /// Rank-local SpMV: y[i] = A[i,:] . x for the rank's rows. `x` must
 /// hold valid values at every owned row index and every ghost column.
+/// The CSR reference the SELL kernel must match bit for bit.
 #[inline]
-fn spmv_rows(a: &Csr, rows: &[u32], x: &[f64], y: &mut [f64]) {
+pub fn spmv_rows(a: &Csr, rows: &[u32], x: &[f64], y: &mut [f64]) {
     for &i in rows {
         let (cols, vals) = a.row(i as usize);
         let mut acc = 0.0;
@@ -247,6 +368,7 @@ pub fn pcg_sequential(
     assert_eq!(x.len(), n);
     let p_ranks = plan.nranks;
     let dinv = jacobi_dinv(a);
+    let kernels = build_kernels(a, plan);
     let x0: Vec<f64> = x.to_vec();
     let mut r = vec![0.0; n];
     let mut z = vec![0.0; n];
@@ -288,9 +410,10 @@ pub fn pcg_sequential(
             break;
         }
         // ghost exchange of p: the identity in one address space
-        for (rk, rows) in plan.rows.iter().enumerate() {
+        for (rk, kernel) in kernels.iter().enumerate() {
             let _sp = obs::span(rk, Phase::Spmv);
-            spmv_rows(a, rows, &pv, &mut q);
+            kernel.spmv_interior(a, &plan.interior[rk], &pv, &mut q);
+            kernel.spmv_boundary(a, &plan.boundary[rk], &pv, &mut q);
         }
         for rk in 0..p_ranks {
             let _sp = obs::span(rk, Phase::Dot);
@@ -344,12 +467,12 @@ impl RankState {
     }
 }
 
-/// One rank's endpoints: senders/receivers per halo neighbour, in the
-/// same order as the ghost plan's send/recv lists.
-struct RankComm {
+/// One rank's endpoints: halo slots per neighbour, in the same order
+/// as the ghost plan's send/recv lists.
+struct RankComm<'a> {
     rank: usize,
-    sends: Vec<Sender<Vec<f64>>>,
-    recvs: Vec<Receiver<Vec<f64>>>,
+    sends: Vec<&'a HaloSlot>,
+    recvs: Vec<&'a HaloSlot>,
 }
 
 /// What one rank hands back to the caller after the solve.
@@ -371,7 +494,7 @@ struct RankOut {
 /// The real schedule: `nthreads` workers execute the virtual ranks
 /// (contiguous blocks when ranks outnumber workers), barrier-stepped
 /// through the same phases as [`pcg_sequential`], with ghost values
-/// moved through per-rank-pair channels. Returns the stats, the
+/// moved through reusable per-rank-pair slots. Returns the stats, the
 /// per-rank wall decomposition (busy seconds are the *measured* load
 /// imbalance; barrier/halo waits are its physical cost) and the halo
 /// traffic.
@@ -390,33 +513,37 @@ pub fn pcg_threaded(
     let p_ranks = plan.nranks;
     let nthreads = nthreads.clamp(1, p_ranks.max(1));
     let dinv = jacobi_dinv(a);
+    let kernels = build_kernels(a, plan);
     let x0: Vec<f64> = x.to_vec();
 
-    // per-rank-pair channels, endpoints ordered exactly like the
-    // ghost plan's lists so messages pair with index lists by position
-    let mut sends: Vec<Vec<Sender<Vec<f64>>>> = (0..p_ranks).map(|_| Vec::new()).collect();
-    let mut recv_slots: Vec<Vec<Option<Receiver<Vec<f64>>>>> = (0..p_ranks)
-        .map(|r| (0..ghost.recv[r].len()).map(|_| None).collect())
-        .collect();
+    // one reusable slot per directed rank pair, buffers sized to the
+    // exact payload once -- the iteration loop then allocates nothing.
+    // Stored flat in ghost.send order; send_base[r] indexes rank r's
+    // outgoing slots.
+    let mut send_base = vec![0usize; p_ranks + 1];
     for r in 0..p_ranks {
-        for (dest, _) in &ghost.send[r] {
-            let (tx, rx) = channel();
-            sends[r].push(tx);
-            let k = ghost.recv[*dest as usize]
-                .iter()
-                .position(|(src, _)| *src as usize == r)
-                .expect("send/recv transpose broken");
-            recv_slots[*dest as usize][k] = Some(rx);
-        }
+        send_base[r + 1] = send_base[r] + ghost.send[r].len();
     }
-    let mut comms: Vec<RankComm> = sends
-        .into_iter()
-        .zip(recv_slots)
-        .enumerate()
-        .map(|(rank, (s, rs))| RankComm {
-            rank,
-            sends: s,
-            recvs: rs.into_iter().map(|o| o.expect("recv endpoint")).collect(),
+    let slot_store: Vec<HaloSlot> = (0..p_ranks)
+        .flat_map(|r| ghost.send[r].iter().map(|(_, list)| HaloSlot::new(list.len())))
+        .collect();
+    let mut comms: Vec<RankComm> = (0..p_ranks)
+        .map(|r| RankComm {
+            rank: r,
+            sends: (0..ghost.send[r].len())
+                .map(|k| &slot_store[send_base[r] + k])
+                .collect(),
+            recvs: ghost.recv[r]
+                .iter()
+                .map(|(src, _)| {
+                    let s = *src as usize;
+                    let k = ghost.send[s]
+                        .iter()
+                        .position(|(dest, _)| *dest as usize == r)
+                        .expect("send/recv transpose broken");
+                    &slot_store[send_base[s] + k]
+                })
+                .collect(),
         })
         .collect();
 
@@ -451,11 +578,13 @@ pub fn pcg_threaded(
             .map(|bundle| {
                 let (a, b, x0, dinv, plan, ghost) = (a, b, &x0, &dinv, plan, ghost);
                 let (slot_a, slot_b, barrier) = (&slot_a, &slot_b, &barrier);
+                let kernels = &kernels;
                 scope.spawn(move || {
                     worker(
                         bundle,
                         plan,
                         ghost,
+                        kernels,
                         a,
                         b,
                         x0,
@@ -501,7 +630,7 @@ pub fn pcg_threaded(
 /// One barrier wait, measured once and charged to every rank of the
 /// worker's bundle (a multiplexed rank was genuinely stalled for the
 /// whole wait). Emits a `barrier_wait` span per rank when tracing.
-fn barrier_wait_timed(barrier: &Barrier, bundle: &[RankComm], waits: &mut [f64]) {
+fn barrier_wait_timed(barrier: &Barrier, bundle: &[RankComm<'_>], waits: &mut [f64]) {
     let tr = obs::tracer();
     let t0 = if tr.enabled() { Some(tr.now_ns()) } else { None };
     let sw = Stopwatch::start();
@@ -525,9 +654,10 @@ fn barrier_wait_timed(barrier: &Barrier, bundle: &[RankComm], waits: &mut [f64])
 /// construction and the barrier counts always line up.
 #[allow(clippy::too_many_arguments)]
 fn worker(
-    bundle: Vec<RankComm>,
+    bundle: Vec<RankComm<'_>>,
     plan: &RankPlan,
     ghost: &GhostPlan,
+    kernels: &[RankSpmv],
     a: &Csr,
     b: &[f64],
     x0: &[f64],
@@ -636,46 +766,53 @@ fn worker(
         }
         // ---- halo: ship owned boundary p values, then fill ghosts.
         // All sends happen before any recv on this worker; a recv
-        // blocks only until the producing worker's send lands, so the
-        // channels themselves are the synchronization.
+        // blocks only until the producing worker's publish lands, so
+        // the slots themselves are the synchronization. The payload
+        // is written straight into the pair's reusable buffer: the
+        // steady-state loop allocates nothing.
         rounds += 1;
         for (k, c) in bundle.iter().enumerate() {
             let _sp = obs::span(c.rank, Phase::HaloSend);
             let sw = Stopwatch::start();
             for (tx, (_, list)) in c.sends.iter().zip(&ghost.send[c.rank]) {
-                // one owned buffer per message: the alloc is part of
-                // the pack cost (persistent-buffer recycling is a
-                // future optimization; the volumes here are tiny
-                // relative to the SpMV)
-                let msg: Vec<f64> = list.iter().map(|&d| states[k].p[d as usize]).collect();
-                tx.send(msg).expect("halo receiver dropped");
+                tx.publish(rounds as u64, list.iter().map(|&d| states[k].p[d as usize]));
             }
             halo_w[k] += sw.elapsed();
+        }
+        // overlap: interior rows have no off-rank columns, so their
+        // q entries compute while neighbour messages are in flight
+        for (k, c) in bundle.iter().enumerate() {
+            let sw = Stopwatch::start();
+            let st = &mut states[k];
+            let _sp = obs::span(c.rank, Phase::Spmv);
+            kernels[c.rank].spmv_interior(a, &plan.interior[c.rank], &st.p, &mut st.q);
+            busy[k] += sw.elapsed();
         }
         for (k, c) in bundle.iter().enumerate() {
             let _sp = obs::span(c.rank, Phase::HaloRecv);
             let st = &mut states[k];
             for (rx, (_, list)) in c.recvs.iter().zip(&ghost.recv[c.rank]) {
-                // blocked until the producing rank's send lands: the
-                // wait half of the halo cost
+                // blocked until the producing rank's publish lands:
+                // the wait half of the halo cost
                 let sw = Stopwatch::start();
-                let msg = rx.recv().expect("halo sender dropped");
+                let msg = rx.wait_for(rounds as u64);
                 halo_wt[k] += sw.elapsed();
                 let sw = Stopwatch::start();
-                debug_assert_eq!(msg.len(), list.len());
-                for (&d, &v) in list.iter().zip(&msg) {
+                debug_assert_eq!(msg.buf.len(), list.len());
+                for (&d, &v) in list.iter().zip(&msg.buf) {
                     st.p[d as usize] = v;
                 }
+                drop(msg);
                 halo_w[k] += sw.elapsed();
             }
         }
-        // ---- SpMV + partial p.q
+        // ---- boundary SpMV + partial p.q
         for (k, c) in bundle.iter().enumerate() {
             let sw = Stopwatch::start();
             let st = &mut states[k];
             {
                 let _sp = obs::span(c.rank, Phase::Spmv);
-                spmv_rows(a, &plan.rows[c.rank], &st.p, &mut st.q);
+                kernels[c.rank].spmv_boundary(a, &plan.boundary[c.rank], &st.p, &mut st.q);
             }
             let v = {
                 let _sp = obs::span(c.rank, Phase::Dot);
@@ -770,7 +907,10 @@ mod tests {
         (a, b)
     }
 
-    /// Hand-built plan: contiguous row blocks, no element lists.
+    /// Hand-built plan: contiguous row blocks, no element lists. With
+    /// no mesh to derive the interior/boundary split from, every row
+    /// is conservatively boundary (always correct: boundary rows
+    /// multiply after the halo lands).
     fn block_plan(n: usize, nranks: usize) -> RankPlan {
         let mut rank_of_dof = vec![0u16; n];
         let mut rows: Vec<Vec<u32>> = vec![Vec::new(); nranks];
@@ -783,6 +923,8 @@ mod tests {
             nranks,
             elems: vec![Vec::new(); nranks],
             rank_of_dof,
+            interior: vec![Vec::new(); nranks],
+            boundary: rows.clone(),
             rows,
         }
     }

@@ -31,6 +31,17 @@ pub struct RankPlan {
     /// Per rank: the dof indices it owns, ascending -- the matrix rows
     /// the rank updates in the distributed solve.
     pub rows: Vec<Vec<u32>>,
+    /// Per rank: the subset of `rows[r]` every one of whose matrix
+    /// columns is also rank-`r`-owned (ascending). A P1 row's columns
+    /// are exactly the dofs sharing a leaf with it, so a row is
+    /// interior iff every leaf touching its vertex has all four dofs
+    /// on the same rank. Interior rows can spmv without halo data --
+    /// the SELL fast path.
+    pub interior: Vec<Vec<u32>>,
+    /// Per rank: `rows[r]` minus `interior[r]` (ascending) -- rows
+    /// with at least one off-rank column, which must wait for the
+    /// halo exchange.
+    pub boundary: Vec<Vec<u32>>,
 }
 
 impl RankPlan {
@@ -54,7 +65,7 @@ impl RankPlan {
         // leaf order, independent of execution
         let mut rank_of_dof = vec![u16::MAX; dof.n_dofs];
         for (i, &id) in topo.leaves.iter().enumerate() {
-            for &v in &mesh.elem(id).verts {
+            for &v in &mesh.verts_of(id) {
                 let d = dof.dof_of_vertex[v as usize] as usize;
                 if rank_of_dof[d] == u16::MAX {
                     rank_of_dof[d] = owners[i];
@@ -66,11 +77,39 @@ impl RankPlan {
             debug_assert!(r != u16::MAX, "dof {d} touched by no leaf");
             rows[r as usize].push(d as u32);
         }
+        // interior/boundary split: a leaf whose four dofs straddle
+        // ranks makes all four of them boundary (each then has an
+        // off-rank column in its matrix row); a leaf on one rank
+        // contributes only same-rank columns
+        let mut is_boundary = vec![false; dof.n_dofs];
+        for &id in &topo.leaves {
+            let v = mesh.verts_of(id);
+            let d = v.map(|v| dof.dof_of_vertex[v as usize] as usize);
+            let r0 = rank_of_dof[d[0]];
+            if d.iter().any(|&di| rank_of_dof[di] != r0) {
+                for &di in &d {
+                    is_boundary[di] = true;
+                }
+            }
+        }
+        let mut interior: Vec<Vec<u32>> = vec![Vec::new(); nranks];
+        let mut boundary: Vec<Vec<u32>> = vec![Vec::new(); nranks];
+        for (r, rs) in rows.iter().enumerate() {
+            for &d in rs {
+                if is_boundary[d as usize] {
+                    boundary[r].push(d);
+                } else {
+                    interior[r].push(d);
+                }
+            }
+        }
         Self {
             nranks,
             elems,
             rank_of_dof,
             rows,
+            interior,
+            boundary,
         }
     }
 
@@ -150,5 +189,64 @@ mod tests {
         assert_eq!(plan.nranks, 1);
         assert_eq!(plan.elems[0].len(), topo.n_leaves());
         assert_eq!(plan.rows[0].len(), dof.n_dofs);
+        // one rank: nothing straddles, every row is interior
+        assert_eq!(plan.interior[0].len(), dof.n_dofs);
+        assert!(plan.boundary[0].is_empty());
+    }
+
+    #[test]
+    fn interior_boundary_split_partitions_rows() {
+        let (mesh, topo, dof, owners) = setup(4);
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, 4);
+        for r in 0..4 {
+            // disjoint union, order preserved: merging the two
+            // ascending lists reproduces rows[r]
+            let mut merged: Vec<u32> = plan.interior[r]
+                .iter()
+                .chain(&plan.boundary[r])
+                .copied()
+                .collect();
+            merged.sort_unstable();
+            assert_eq!(merged, plan.rows[r]);
+            for l in [&plan.interior[r], &plan.boundary[r]] {
+                for w in l.windows(2) {
+                    assert!(w[0] < w[1], "split list not ascending");
+                }
+            }
+        }
+        // a 4-way block partition of a refined cube has both kinds
+        let ni: usize = plan.interior.iter().map(|l| l.len()).sum();
+        let nb: usize = plan.boundary.iter().map(|l| l.len()).sum();
+        assert_eq!(ni + nb, dof.n_dofs);
+        assert!(nb > 0, "expected straddling rows");
+        assert!(ni > 0, "expected interior rows");
+    }
+
+    #[test]
+    fn interior_rows_have_only_same_rank_columns() {
+        // cross-check against the assembled matrix: interior rows
+        // must not reference an off-rank dof, boundary rows must
+        let (mesh, topo, dof, owners) = setup(3);
+        let plan = RankPlan::build(&mesh, &topo, &dof, &owners, 3);
+        let src = vec![1.0; dof.n_dofs];
+        let asm = crate::fem::assemble(&mesh, &topo, &dof, &src, None);
+        for r in 0..3 {
+            for &d in &plan.interior[r] {
+                let (cols, _) = asm.k.row(d as usize);
+                for &c in cols {
+                    assert_eq!(
+                        plan.rank_of_dof[c as usize] as usize, r,
+                        "interior row {d} of rank {r} has off-rank column {c}"
+                    );
+                }
+            }
+            for &d in &plan.boundary[r] {
+                let (cols, _) = asm.k.row(d as usize);
+                assert!(
+                    cols.iter().any(|&c| plan.rank_of_dof[c as usize] as usize != r),
+                    "boundary row {d} of rank {r} has no off-rank column"
+                );
+            }
+        }
     }
 }

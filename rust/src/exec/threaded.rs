@@ -13,7 +13,7 @@
 //! engines stay virtual-executor-only: this executor always runs the
 //! native f64 kernels.
 
-use crate::fem::{Assembled, Csr, DofMap, SolveStats, SolverOpts};
+use crate::fem::{Assembled, AssemblyPattern, Csr, DofMap, SolveStats, SolverOpts};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::TetMesh;
 use crate::obs::{self, Phase};
@@ -21,7 +21,7 @@ use crate::runtime::Runtime;
 use crate::util::timer::Stopwatch;
 use std::cell::RefCell;
 
-use super::assemble::{assemble_rank, combine, RankAssembly};
+use super::assemble::{combine_dense, dense_rank, RankDense};
 use super::ghost::GhostPlan;
 use super::pcg::{pcg_threaded, RankClocks};
 use super::plan::RankPlan;
@@ -35,6 +35,9 @@ pub struct ThreadedExec {
     /// `min(threads, nranks)`.
     threads: usize,
     report: RefCell<ExecReport>,
+    /// Sparsity pattern cache, reused across solves while the mesh
+    /// revision is unchanged (DESIGN.md §11).
+    pattern: RefCell<Option<AssemblyPattern>>,
 }
 
 impl ThreadedExec {
@@ -51,6 +54,7 @@ impl ThreadedExec {
             nranks,
             threads: budget.clamp(1, nranks),
             report: RefCell::new(ExecReport::default()),
+            pattern: RefCell::new(None),
         }
     }
 
@@ -95,7 +99,15 @@ impl Executor for ThreadedExec {
     ) -> Assembled {
         let p = plan.nranks;
         let nthreads = self.threads.clamp(1, p);
-        let mut outs: Vec<Option<(RankAssembly, f64)>> = (0..p).map(|_| None).collect();
+        let mut cache = self.pattern.borrow_mut();
+        if !cache.as_ref().is_some_and(|pat| pat.matches(mesh, dof)) {
+            obs::metrics().counter_add("exec.pattern_rebuilds", 1);
+            *cache = Some(AssemblyPattern::build(mesh, topo, dof));
+        } else {
+            obs::metrics().counter_add("exec.pattern_reuses", 1);
+        }
+        let pat = cache.as_ref().unwrap();
+        let mut outs: Vec<Option<(RankDense, f64)>> = (0..p).map(|_| None).collect();
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..nthreads)
                 .map(|t| {
@@ -106,7 +118,7 @@ impl Executor for ThreadedExec {
                         for rk in lo..hi {
                             let _sp = obs::span(rk, Phase::Assemble);
                             let sw = Stopwatch::start();
-                            let asm = assemble_rank(mesh, topo, dof, source, &plan.elems[rk]);
+                            let asm = dense_rank(mesh, topo, source, pat, &plan.elems[rk]);
                             done.push((rk, asm, sw.elapsed()));
                         }
                         done
@@ -120,7 +132,7 @@ impl Executor for ThreadedExec {
             }
         });
         let mut clocks = RankClocks::with_ranks(p);
-        let parts: Vec<RankAssembly> = outs
+        let parts: Vec<RankDense> = outs
             .into_iter()
             .enumerate()
             .map(|(rk, o)| {
@@ -130,7 +142,9 @@ impl Executor for ThreadedExec {
             })
             .collect();
         self.add_clocks(&clocks);
-        combine(dof.n_dofs, parts)
+        // serial rank-ordered scatter: bitwise equal to the triplet
+        // combine, with no per-solve sort (DESIGN.md §11)
+        combine_dense(pat, &plan.elems, parts)
     }
 
     fn pcg(
@@ -217,6 +231,30 @@ mod tests {
         for (x, y) in uv.iter().zip(&ut) {
             assert_eq!(x.to_bits(), y.to_bits(), "solutions differ");
         }
+    }
+
+    #[test]
+    fn pattern_cache_survives_resolves_and_refinement() {
+        let (mut mesh, topo, dof, plan) = setup(3);
+        let thr = ThreadedExec::new(3, 2);
+        let src = dof.eval_at_dofs(&mesh, |p| p.x + p.y);
+        let first = thr.assemble(&plan, &mesh, &topo, &dof, &src, None);
+        // second solve on the unchanged mesh: cache hit, same bits
+        let second = thr.assemble(&plan, &mesh, &topo, &dof, &src, None);
+        for (a, b) in first.k.vals.iter().zip(&second.k.vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // refinement invalidates the cache; the rebuilt pattern must
+        // describe the new mesh, not the old one
+        mesh.refine(&mesh.leaves_unordered());
+        let topo2 = LeafTopology::build(&mesh);
+        let dof2 = DofMap::build(&mesh, &topo2);
+        let owners: Vec<u16> = topo2.leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let plan2 = RankPlan::build(&mesh, &topo2, &dof2, &owners, 3);
+        let src2 = dof2.eval_at_dofs(&mesh, |p| p.x + p.y);
+        let third = thr.assemble(&plan2, &mesh, &topo2, &dof2, &src2, None);
+        assert_eq!(third.k.n, dof2.n_dofs);
+        assert!(third.k.nnz() > first.k.nnz());
     }
 
     #[test]

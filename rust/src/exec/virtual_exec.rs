@@ -11,13 +11,16 @@
 //! batched L1 kernels take over assembly and the CG loop wholesale
 //! (they are engine substitutions, not schedule changes).
 
-use crate::fem::{assemble, pjrt_pcg, Assembled, Csr, DofMap, SolveStats, SolverOpts};
+use crate::fem::{
+    assemble, pjrt_pcg, Assembled, AssemblyPattern, Csr, DofMap, SolveStats, SolverOpts,
+};
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::TetMesh;
 use crate::obs::{self, Phase};
 use crate::runtime::Runtime;
+use std::cell::RefCell;
 
-use super::assemble::{assemble_rank, combine, RankAssembly};
+use super::assemble::{combine_dense, dense_rank, RankDense};
 use super::pcg::pcg_sequential;
 use super::plan::RankPlan;
 use super::{ExecReport, Executor};
@@ -26,12 +29,18 @@ use super::{ExecReport, Executor};
 #[derive(Debug, Clone)]
 pub struct VirtualExec {
     nranks: usize,
+    /// Sparsity pattern cache, reused across solves while the mesh
+    /// revision is unchanged (DESIGN.md §11).
+    pattern: RefCell<Option<AssemblyPattern>>,
 }
 
 impl VirtualExec {
     pub fn new(nranks: usize) -> Self {
         assert!(nranks >= 1);
-        Self { nranks }
+        Self {
+            nranks,
+            pattern: RefCell::new(None),
+        }
     }
 }
 
@@ -58,13 +67,21 @@ impl Executor for VirtualExec {
             // rungs; keep it untouched (engine substitution, §3)
             return assemble(mesh, topo, dof, source, rt);
         }
-        let parts: Vec<RankAssembly> = (0..plan.nranks)
+        let mut cache = self.pattern.borrow_mut();
+        if !cache.as_ref().is_some_and(|p| p.matches(mesh, dof)) {
+            obs::metrics().counter_add("exec.pattern_rebuilds", 1);
+            *cache = Some(AssemblyPattern::build(mesh, topo, dof));
+        } else {
+            obs::metrics().counter_add("exec.pattern_reuses", 1);
+        }
+        let pat = cache.as_ref().unwrap();
+        let parts: Vec<RankDense> = (0..plan.nranks)
             .map(|r| {
                 let _sp = obs::span(r, Phase::Assemble);
-                assemble_rank(mesh, topo, dof, source, &plan.elems[r])
+                dense_rank(mesh, topo, source, pat, &plan.elems[r])
             })
             .collect();
-        combine(dof.n_dofs, parts)
+        combine_dense(pat, &plan.elems, parts)
     }
 
     fn pcg(

@@ -13,6 +13,7 @@ use crate::geometry::Vec3;
 use crate::mesh::topology::LeafTopology;
 use crate::mesh::TetMesh;
 use crate::runtime::Runtime;
+use crate::util::sort::radix_sort_by_key;
 
 /// Element stiffness/mass/load in f64 (native engine; mirrors
 /// python/compile/kernels/elem_tet.py exactly).
@@ -58,6 +59,150 @@ pub struct Assembled {
     pub b: Vec<f64>,
 }
 
+/// The cached, reusable sparsity pattern of the P1 system on one
+/// (mesh, topo, dof) triple. K and M share one skeleton; assembly
+/// through the pattern scatters element contributions into `vals` by
+/// precomputed slot indices instead of re-sorting `nel*16` triplets
+/// per solve (DESIGN.md §11). Valid exactly while
+/// [`TetMesh::revision`] is unchanged; ownership changes do not
+/// invalidate it.
+#[derive(Debug, Clone)]
+pub struct AssemblyPattern {
+    pub n_dofs: usize,
+    /// Revision of the mesh this pattern was built from.
+    pub mesh_revision: u64,
+    /// Per leaf, in `topo.leaves` order: its 4 global dofs.
+    pub elem_dofs: Vec<[u32; 4]>,
+    /// Shared K/M CSR skeleton.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    /// `nel*16` scatter slots: entry `e*16 + i*4 + j` is the `vals`
+    /// index receiving element `e`'s local `(i, j)` contribution.
+    pub slots: Vec<u32>,
+}
+
+impl AssemblyPattern {
+    /// One stable radix sort over the `nel*16` (row, col) keys yields
+    /// both the skeleton and the slot of every element contribution --
+    /// versus *two* full sorts (K and M) per assembly on the triplet
+    /// path.
+    pub fn build(mesh: &TetMesh, topo: &LeafTopology, dof: &DofMap) -> Self {
+        let nel = topo.leaves.len();
+        let n = dof.n_dofs;
+        let elem_dofs: Vec<[u32; 4]> = topo
+            .leaves
+            .iter()
+            .map(|&id| {
+                let v = mesh.verts_of(id);
+                [
+                    dof.dof_of_vertex[v[0] as usize],
+                    dof.dof_of_vertex[v[1] as usize],
+                    dof.dof_of_vertex[v[2] as usize],
+                    dof.dof_of_vertex[v[3] as usize],
+                ]
+            })
+            .collect();
+        let mut keyed: Vec<(u64, u32)> = Vec::with_capacity(nel * 16);
+        for (e, dofs) in elem_dofs.iter().enumerate() {
+            for i in 0..4 {
+                for j in 0..4 {
+                    keyed.push((
+                        ((dofs[i] as u64) << 32) | dofs[j] as u64,
+                        (e * 16 + i * 4 + j) as u32,
+                    ));
+                }
+            }
+        }
+        radix_sort_by_key(&mut keyed);
+        let mut row_ptr = vec![0u32; n + 1];
+        let mut col_idx: Vec<u32> = Vec::new();
+        let mut slots = vec![0u32; nel * 16];
+        let mut prev: Option<u64> = None;
+        for &(key, payload) in &keyed {
+            if prev != Some(key) {
+                col_idx.push(key as u32);
+                row_ptr[(key >> 32) as usize + 1] += 1;
+                prev = Some(key);
+            }
+            slots[payload as usize] = (col_idx.len() - 1) as u32;
+        }
+        for r in 0..n {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        Self {
+            n_dofs: n,
+            mesh_revision: mesh.revision(),
+            elem_dofs,
+            row_ptr,
+            col_idx,
+            slots,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.elem_dofs.len()
+    }
+
+    /// An all-zero matrix over this pattern's skeleton, ready to be
+    /// filled by slot scatter.
+    pub fn zero_csr(&self) -> Csr {
+        Csr {
+            n: self.n_dofs,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            vals: vec![0.0; self.nnz()],
+        }
+    }
+
+    /// Is this pattern still valid for `(mesh, dof)`?
+    pub fn matches(&self, mesh: &TetMesh, dof: &DofMap) -> bool {
+        self.mesh_revision == mesh.revision() && self.n_dofs == dof.n_dofs
+    }
+}
+
+/// Assemble K, M, b through a prebuilt pattern: bitwise identical to
+/// [`assemble`] with the native engine (the pattern scatter folds each
+/// slot's contributions in the same (element, i, j) order as
+/// `Csr::from_triplets`' stable duplicate fold), without any sorting.
+pub fn assemble_with_pattern(
+    mesh: &TetMesh,
+    topo: &LeafTopology,
+    dof: &DofMap,
+    source: &[f64],
+    pat: &AssemblyPattern,
+) -> Assembled {
+    assert_eq!(source.len(), dof.n_dofs);
+    assert_eq!(pat.n_elems(), topo.leaves.len(), "stale pattern");
+    assert_eq!(pat.n_dofs, dof.n_dofs, "stale pattern");
+    let mut k = pat.zero_csr();
+    let mut m = pat.zero_csr();
+    let mut b = vec![0.0f64; dof.n_dofs];
+    for e in 0..pat.n_elems() {
+        let c = mesh.elem_coords(topo.leaves[e]);
+        let dofs = &pat.elem_dofs[e];
+        let f = [
+            source[dofs[0] as usize],
+            source[dofs[1] as usize],
+            source[dofs[2] as usize],
+            source[dofs[3] as usize],
+        ];
+        let (ke, me, be) = elem_matrices(&c, &f);
+        for i in 0..4 {
+            b[dofs[i] as usize] += be[i];
+            for j in 0..4 {
+                let s = pat.slots[e * 16 + i * 4 + j] as usize;
+                k.vals[s] += ke[i * 4 + j];
+                m.vals[s] += me[i * 4 + j];
+            }
+        }
+    }
+    Assembled { k, m, b }
+}
+
 /// Assemble K, M, b over the current leaves. `source` is evaluated at
 /// vertices (P1 interpolation of f, matching the L2 graph).
 /// When `rt` is Some, element matrices come from the PJRT artifact.
@@ -80,7 +225,7 @@ pub fn assemble(
         .leaves
         .iter()
         .map(|&id| {
-            let v = mesh.elem(id).verts;
+            let v = mesh.verts_of(id);
             [
                 dof.dof_of_vertex[v[0] as usize],
                 dof.dof_of_vertex[v[1] as usize],
@@ -243,6 +388,45 @@ mod tests {
         a.k.spmv(&u, &mut y);
         let energy: f64 = u.iter().zip(&y).map(|(a, b)| a * b).sum();
         assert!((energy - 1.0).abs() < 1e-10, "energy {energy}");
+    }
+
+    #[test]
+    fn pattern_assembly_is_bitwise_identical_to_triplets() {
+        let (m, topo, dof) = setup();
+        let src = dof.eval_at_dofs(&m, |p| (3.0 * p.x).sin() - p.z);
+        let trip = assemble(&m, &topo, &dof, &src, None);
+        let pat = AssemblyPattern::build(&m, &topo, &dof);
+        assert!(pat.matches(&m, &dof));
+        let fill = assemble_with_pattern(&m, &topo, &dof, &src, &pat);
+        assert_eq!(trip.k.row_ptr, fill.k.row_ptr);
+        assert_eq!(trip.k.col_idx, fill.k.col_idx);
+        for (a, b) in trip.k.vals.iter().zip(&fill.k.vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "K differs");
+        }
+        for (a, b) in trip.m.vals.iter().zip(&fill.m.vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "M differs");
+        }
+        for (a, b) in trip.b.iter().zip(&fill.b) {
+            assert_eq!(a.to_bits(), b.to_bits(), "b differs");
+        }
+    }
+
+    #[test]
+    fn pattern_survives_source_changes_but_not_refinement() {
+        let (mut m, topo, dof) = setup();
+        let pat = AssemblyPattern::build(&m, &topo, &dof);
+        // same structure, different source: reuse is valid
+        let s1 = dof.eval_at_dofs(&m, |p| p.x);
+        let s2 = dof.eval_at_dofs(&m, |p| p.y * p.y);
+        let a1 = assemble_with_pattern(&m, &topo, &dof, &s1, &pat);
+        let a2 = assemble_with_pattern(&m, &topo, &dof, &s2, &pat);
+        assert_eq!(a1.k.nnz(), a2.k.nnz());
+        for (x, y) in a1.k.vals.iter().zip(&a2.k.vals) {
+            assert_eq!(x.to_bits(), y.to_bits(), "K must not depend on source");
+        }
+        // structural change invalidates
+        m.refine(&m.leaves_unordered());
+        assert!(!pat.matches(&m, &dof));
     }
 
     #[test]

@@ -11,23 +11,38 @@ pub struct Csr {
 }
 
 impl Csr {
-    /// Build from unsorted triplets, summing duplicates.
-    pub fn from_triplets(n: usize, mut trips: Vec<(u32, u32, f64)>) -> Self {
+    /// Build from unsorted triplets, summing duplicates *in input
+    /// order*: the sort is stable (LSD radix over a packed key with
+    /// the input index as payload), so the value at each slot is the
+    /// left-to-right fold of that slot's contributions as they appear
+    /// in `trips`. Pattern-reuse assembly scatters contributions in
+    /// exactly that order, which is what makes the two construction
+    /// paths bitwise identical (DESIGN.md §11).
+    pub fn from_triplets(n: usize, trips: Vec<(u32, u32, f64)>) -> Self {
         // single packed u64 key beats the tuple comparator ~2x (#Perf)
-        trips.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut keyed: Vec<(u64, u32)> = trips
+            .iter()
+            .enumerate()
+            .map(|(i, &(r, c, _))| (((r as u64) << 32) | c as u64, i as u32))
+            .collect();
+        crate::util::sort::radix_sort_by_key(&mut keyed);
         let mut row_ptr = vec![0u32; n + 1];
         let mut col_idx: Vec<u32> = Vec::with_capacity(trips.len());
         let mut vals: Vec<f64> = Vec::with_capacity(trips.len());
-        let mut prev: Option<(u32, u32)> = None;
-        for &(r, c, v) in &trips {
+        let mut prev: Option<u64> = None;
+        for &(key, i) in &keyed {
+            let (r, c, v) = trips[i as usize];
             debug_assert!((r as usize) < n && (c as usize) < n);
-            if prev == Some((r, c)) {
+            if prev == Some(key) {
                 *vals.last_mut().unwrap() += v; // duplicate: fold
             } else {
                 col_idx.push(c);
-                vals.push(v);
+                // `0.0 + v` (not `v`): a scatter accumulator starting
+                // at +0.0 can never hold -0.0, so the first
+                // contribution is normalized identically here
+                vals.push(0.0 + v);
                 row_ptr[r as usize + 1] += 1; // per-row count for now
-                prev = Some((r, c));
+                prev = Some(key);
             }
         }
         for r in 0..n {

@@ -23,7 +23,7 @@ impl DofMap {
         let mut dof_of_vertex = vec![u32::MAX; mesh.vertices.len()];
         let mut vertex_of_dof = Vec::new();
         for &id in &topo.leaves {
-            for &v in &mesh.elem(id).verts {
+            for &v in &mesh.verts_of(id) {
                 if dof_of_vertex[v as usize] == u32::MAX {
                     dof_of_vertex[v as usize] = vertex_of_dof.len() as u32;
                     vertex_of_dof.push(v);
@@ -33,7 +33,7 @@ impl DofMap {
         let n_dofs = vertex_of_dof.len();
         let mut on_boundary = vec![false; n_dofs];
         for (i, &id) in topo.leaves.iter().enumerate() {
-            let verts = mesh.elem(id).verts;
+            let verts = mesh.verts_of(id);
             for (fi, f) in FACES.iter().enumerate() {
                 if topo.neighbors[i][fi] == NONE {
                     for &lv in f {
@@ -94,14 +94,10 @@ impl DofMap {
         for (d, &v) in self.vertex_of_dof.iter().enumerate() {
             vert_dofs.insert(v, d as u32);
         }
-        for e in mesh.elems.iter() {
-            if e.dead || e.children[0] == NONE || e.mid_vertex == NONE {
-                continue;
-            }
-            if let Some(&md) = vert_dofs.get(&e.mid_vertex) {
+        for (a, b, mid) in mesh.split_edges() {
+            if let Some(&md) = vert_dofs.get(&mid) {
                 let md = md as usize;
                 if !known[md] {
-                    let (a, b) = e.refine_edge();
                     let da = old
                         .dof_of_vertex
                         .get(a as usize)

@@ -8,10 +8,12 @@ pub mod csr;
 pub mod dof;
 pub mod ell;
 pub mod problems;
+pub mod sell;
 pub mod solver;
 
-pub use assemble::{assemble, elem_matrices, Assembled};
+pub use assemble::{assemble, assemble_with_pattern, elem_matrices, Assembled, AssemblyPattern};
 pub use csr::Csr;
 pub use dof::DofMap;
 pub use ell::{csr_to_ell, EllF32};
+pub use sell::{SellF64, SELL_C, SELL_MAX_WIDTH};
 pub use solver::{native_pcg, pjrt_pcg, solve, SolveStats, SolverOpts};

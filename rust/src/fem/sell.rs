@@ -1,0 +1,259 @@
+//! Native f64 SELL-C-sigma (sigma = 1) sparse matrix-vector kernel
+//! over an explicit row list -- the solve-side hot loop's format
+//! (DESIGN.md §11; the seed's `python/compile/kernels/spmv_ell.py` is
+//! the batched-f32 exemplar this mirrors in f64).
+//!
+//! Rows are grouped into chunks of [`SELL_C`] lanes; each chunk stores
+//! its entries column-major at the chunk's own width (the max row
+//! length within the chunk), so short rows pay padding only up to
+//! their chunk-mates, not the global maximum (plain ELL). sigma = 1
+//! means rows are *not* reordered by length: the row order is the
+//! caller's (the rank plan's ascending dof order), which is what keeps
+//! every reduction downstream of the spmv deterministic.
+//!
+//! ## Determinism
+//!
+//! For finite `x`, `spmv` is bitwise identical to the CSR row gather
+//! (`exec::pcg::spmv_rows`):
+//! * each lane accumulates its row's entries at ascending `k`, i.e.
+//!   in exactly the CSR column order;
+//! * padding comes *after* the real entries and contributes
+//!   `0.0 * x[pad_col]` = `±0.0`; the accumulator starts at `+0.0`
+//!   and `(+0.0) + (-0.0) = +0.0` under round-to-nearest, so it can
+//!   never hold `-0.0` when the padding terms arrive -- adding `±0.0`
+//!   to it is then the identity, bit for bit;
+//! * the pad column is the row's own first column (the row id itself
+//!   for empty rows), so padding never reads out of bounds.
+
+use super::csr::Csr;
+
+/// Chunk height (lanes per chunk). 8 f64 lanes = one cache line per
+/// column step per lane group; also the natural AVX-512/NEON-pair
+/// width for the autovectorizer.
+pub const SELL_C: usize = 8;
+
+/// Rows longer than this make SELL padding pathological (one long row
+/// inflates its whole chunk); [`SellF64::build`] refuses and the
+/// caller falls back to the CSR gather.
+pub const SELL_MAX_WIDTH: usize = 64;
+
+/// A SELL-C-1 slab holding the rows one rank owns (any explicit row
+/// subset of a [`Csr`]), writing results at the rows' *global* ids.
+#[derive(Debug, Clone)]
+pub struct SellF64 {
+    /// Global row ids in caller order (chunk `i` serves lanes
+    /// `rows[i*C .. i*C+C]`).
+    rows: Vec<u32>,
+    /// Per-chunk start offsets into `cols`/`vals`; chunk `i` spans
+    /// `C * width_i` entries.
+    chunk_ptr: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl SellF64 {
+    /// Pack the given rows of `a`. Returns `None` when any row exceeds
+    /// [`SELL_MAX_WIDTH`] -- the caller's signal to use the CSR path.
+    pub fn build(a: &Csr, rows: &[u32]) -> Option<Self> {
+        let nr = rows.len();
+        let nchunks = nr.div_ceil(SELL_C);
+        let mut chunk_ptr = Vec::with_capacity(nchunks + 1);
+        chunk_ptr.push(0u32);
+        let mut total = 0usize;
+        for ci in 0..nchunks {
+            let mut w = 0usize;
+            for rr in 0..SELL_C {
+                let idx = ci * SELL_C + rr;
+                if idx < nr {
+                    let r = rows[idx] as usize;
+                    let len = (a.row_ptr[r + 1] - a.row_ptr[r]) as usize;
+                    if len > SELL_MAX_WIDTH {
+                        return None;
+                    }
+                    w = w.max(len);
+                }
+            }
+            total += w * SELL_C;
+            chunk_ptr.push(total as u32);
+        }
+        let mut cols = vec![0u32; total];
+        let mut vals = vec![0.0f64; total];
+        for ci in 0..nchunks {
+            let base = chunk_ptr[ci] as usize;
+            let w = (chunk_ptr[ci + 1] as usize - base) / SELL_C;
+            for rr in 0..SELL_C {
+                let idx = ci * SELL_C + rr;
+                if idx >= nr {
+                    continue; // ghost lane: zeros against column 0
+                }
+                let r = rows[idx];
+                let (rcols, rvals) = a.row(r as usize);
+                let pad_col = rcols.first().copied().unwrap_or(r);
+                for k in 0..w {
+                    let p = base + k * SELL_C + rr;
+                    if k < rcols.len() {
+                        cols[p] = rcols[k];
+                        vals[p] = rvals[k];
+                    } else {
+                        cols[p] = pad_col; // vals[p] stays 0.0
+                    }
+                }
+            }
+        }
+        Some(Self {
+            rows: rows.to_vec(),
+            chunk_ptr,
+            cols,
+            vals,
+        })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Global row ids, in the caller's original order.
+    pub fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Stored entries including padding (the format's footprint).
+    pub fn stored(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// `y[rows] = A[rows, :] * x`; rows not in this slab are left
+    /// untouched. Bitwise identical to the CSR row gather for finite
+    /// `x` (see module docs).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        let nr = self.rows.len();
+        for ci in 0..self.chunk_ptr.len() - 1 {
+            let base = self.chunk_ptr[ci] as usize;
+            let w = (self.chunk_ptr[ci + 1] as usize - base) / SELL_C;
+            let mut acc = [0.0f64; SELL_C];
+            let mut off = base;
+            for _k in 0..w {
+                let c = &self.cols[off..off + SELL_C];
+                let v = &self.vals[off..off + SELL_C];
+                for rr in 0..SELL_C {
+                    acc[rr] += v[rr] * x[c[rr] as usize];
+                }
+                off += SELL_C;
+            }
+            let r0 = ci * SELL_C;
+            for rr in 0..(nr - r0).min(SELL_C) {
+                y[self.rows[r0 + rr] as usize] = acc[rr];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The CSR row gather SELL must reproduce bit for bit.
+    fn spmv_ref(a: &Csr, rows: &[u32], x: &[f64], y: &mut [f64]) {
+        for &r in rows {
+            let (cols, vals) = a.row(r as usize);
+            let mut acc = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                acc += v * x[*c as usize];
+            }
+            y[r as usize] = acc;
+        }
+    }
+
+    fn small() -> Csr {
+        Csr::from_triplets(
+            6,
+            vec![
+                (0, 0, 2.0),
+                (0, 3, -1.0),
+                (1, 1, 1.0),
+                (2, 0, -0.0),
+                (2, 2, 4.0),
+                (2, 5, 0.5),
+                (3, 3, 1.5),
+                (4, 1, -2.0),
+                (4, 4, 3.0),
+                // row 5 empty
+            ],
+        )
+    }
+
+    #[test]
+    fn matches_csr_gather_bitwise() {
+        let a = small();
+        let rows: Vec<u32> = (0..6).collect();
+        let s = SellF64::build(&a, &rows).unwrap();
+        assert_eq!(s.n_rows(), 6);
+        let x = [1.5, -3.0, 0.25, 2.0, -0.5, 4.0];
+        let mut y = vec![f64::NAN; 6];
+        let mut yr = vec![f64::NAN; 6];
+        s.spmv(&x, &mut y);
+        spmv_ref(&a, &rows, &x, &mut yr);
+        for (a, b) in y.iter().zip(&yr) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn row_subsets_and_order_are_respected() {
+        let a = small();
+        let rows = vec![4u32, 1, 5];
+        let s = SellF64::build(&a, &rows).unwrap();
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut y = vec![77.0; 6];
+        s.spmv(&x, &mut y);
+        // untouched rows keep their values
+        assert_eq!(y[0], 77.0);
+        assert_eq!(y[2], 77.0);
+        assert_eq!(y[3], 77.0);
+        let mut yr = vec![77.0; 6];
+        spmv_ref(&a, &rows, &x, &mut yr);
+        assert_eq!(y, yr);
+    }
+
+    #[test]
+    fn signed_zero_padding_is_harmless() {
+        // lane with 1 real entry padded next to a 3-wide lane; x < 0
+        // makes every pad product -0.0 -- the result must still match
+        // the gather bit for bit (incl. y[5] = +0.0 for the empty row)
+        let a = small();
+        let rows: Vec<u32> = (0..6).collect();
+        let s = SellF64::build(&a, &rows).unwrap();
+        let x = [-1.0; 6];
+        let mut y = vec![f64::NAN; 6];
+        let mut yr = vec![f64::NAN; 6];
+        s.spmv(&x, &mut y);
+        spmv_ref(&a, &rows, &x, &mut yr);
+        for (i, (a, b)) in y.iter().zip(&yr).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b}");
+        }
+        assert_eq!(y[5].to_bits(), 0.0f64.to_bits(), "empty row is +0.0");
+    }
+
+    #[test]
+    fn wide_rows_refuse_to_build() {
+        let n = SELL_MAX_WIDTH + 2;
+        let mut trips = Vec::new();
+        for c in 0..n as u32 {
+            trips.push((0u32, c, 1.0)); // one row wider than the cap
+        }
+        trips.push((1, 1, 1.0));
+        let a = Csr::from_triplets(n, trips);
+        assert!(SellF64::build(&a, &[0, 1]).is_none());
+        // excluding the wide row builds fine
+        assert!(SellF64::build(&a, &[1]).is_some());
+    }
+
+    #[test]
+    fn padding_is_bounded_per_chunk() {
+        let a = small();
+        let rows: Vec<u32> = (0..6).collect();
+        let s = SellF64::build(&a, &rows).unwrap();
+        // 6 rows -> 1 chunk of width 3 (row 2): 8 * 3 = 24 stored
+        assert_eq!(s.stored(), 24);
+    }
+}

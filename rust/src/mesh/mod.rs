@@ -14,6 +14,14 @@
 //! stays bounded over arbitrary refinement depth, and every bisection
 //! yields the left/right child order whose DFS traversal gives the
 //! face-connected leaf sequence RTK relies on.
+//!
+//! Storage is struct-of-arrays (DESIGN.md §11): one flat array per
+//! field of the forest node, so the hot consumers -- leaf scans,
+//! `LeafTopology::build_for`, `DofMap::build`, assembly's element-dof
+//! gather -- stream exactly the fields they touch instead of striding
+//! over full `Elem` structs. [`TetMesh::elem`] still hands out an
+//! [`Elem`] *view* (by value, `Copy`) for the cold paths; hot loops
+//! use the per-field accessors (`verts_of`, `owner_of`, `is_leaf`).
 
 pub mod generator;
 pub mod io;
@@ -27,8 +35,11 @@ pub type ElemId = u32;
 
 pub const NONE: u32 = u32::MAX;
 
-/// One node of the refinement forest.
-#[derive(Debug, Clone)]
+/// A by-value view of one forest node, gathered from the mesh's SoA
+/// arrays. Cheap to copy; reading a single field through
+/// [`TetMesh::elem`] still gathers the whole view, so hot loops should
+/// prefer the per-field accessors on [`TetMesh`].
+#[derive(Debug, Clone, Copy)]
 pub struct Elem {
     /// Vertices in Maubach order; refinement edge is (verts[0], verts[tag]).
     pub verts: [VertId; 4],
@@ -71,7 +82,15 @@ pub struct RefineStats {
 #[derive(Debug, Clone)]
 pub struct TetMesh {
     pub vertices: Vec<Vec3>,
-    pub elems: Vec<Elem>,
+    // ---- forest arenas, struct-of-arrays: index = ElemId ----
+    everts: Vec<[VertId; 4]>,
+    tags: Vec<u8>,
+    generations: Vec<u16>,
+    owners: Vec<u16>,
+    parents: Vec<ElemId>,
+    children: Vec<[ElemId; 2]>,
+    mid_vertices: Vec<VertId>,
+    dead: Vec<bool>,
     /// Refinement forest roots in maintained (SFC-sorted) order; this
     /// order is what makes RTK's leaf sequence stable across the whole
     /// adaptive computation (§2.1 of the paper).
@@ -82,6 +101,12 @@ pub struct TetMesh {
     free_elems: Vec<ElemId>,
     free_verts: Vec<VertId>,
     n_leaves: usize,
+    /// Bumped on every structural change (bisect / coarsen); cached
+    /// derived objects (assembly sparsity patterns) key on this.
+    revision: u64,
+    /// Reusable leaf worklist for the refine closure passes, so a
+    /// fixpoint sweep over a million leaves allocates once, ever.
+    scratch_leaves: Vec<ElemId>,
 }
 
 impl TetMesh {
@@ -90,27 +115,23 @@ impl TetMesh {
     /// guarantee this; `tag` defaults to 3, correct for Kuhn meshes).
     pub fn from_raw(vertices: Vec<Vec3>, tets: Vec<[VertId; 4]>) -> Self {
         let n = tets.len();
-        let elems: Vec<Elem> = tets
-            .into_iter()
-            .map(|verts| Elem {
-                verts,
-                tag: 3,
-                generation: 0,
-                owner: 0,
-                parent: NONE,
-                children: [NONE, NONE],
-                mid_vertex: NONE,
-                dead: false,
-            })
-            .collect();
         Self {
             vertices,
+            everts: tets,
+            tags: vec![3; n],
+            generations: vec![0; n],
+            owners: vec![0; n],
+            parents: vec![NONE; n],
+            children: vec![[NONE, NONE]; n],
+            mid_vertices: vec![NONE; n],
+            dead: vec![false; n],
             roots: (0..n as u32).collect(),
-            elems,
             edge_mid: FxHashMap::default(),
             free_elems: Vec::new(),
             free_verts: Vec::new(),
             n_leaves: n,
+            revision: 0,
+            scratch_leaves: Vec::new(),
         }
     }
 
@@ -122,12 +143,78 @@ impl TetMesh {
         self.vertices.len() - self.free_verts.len()
     }
 
-    pub fn elem(&self, id: ElemId) -> &Elem {
-        &self.elems[id as usize]
+    /// Number of arena slots (live + dead); valid `ElemId`s are
+    /// `0..n_elem_slots`.
+    pub fn n_elem_slots(&self) -> usize {
+        self.everts.len()
+    }
+
+    /// Monotone counter of structural mutations (bisect/coarsen).
+    /// Derived caches -- assembly patterns, topologies -- are valid
+    /// exactly while this is unchanged. Ownership changes
+    /// ([`set_owner`](Self::set_owner)) do *not* bump it: they move
+    /// data between ranks but leave the mesh structure (and therefore
+    /// any sparsity pattern) intact.
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Gather the full node view. Cold-path convenience; hot loops use
+    /// the per-field accessors below.
+    #[inline]
+    pub fn elem(&self, id: ElemId) -> Elem {
+        let i = id as usize;
+        Elem {
+            verts: self.everts[i],
+            tag: self.tags[i],
+            generation: self.generations[i],
+            owner: self.owners[i],
+            parent: self.parents[i],
+            children: self.children[i],
+            mid_vertex: self.mid_vertices[i],
+            dead: self.dead[i],
+        }
+    }
+
+    #[inline]
+    pub fn verts_of(&self, id: ElemId) -> [VertId; 4] {
+        self.everts[id as usize]
+    }
+
+    #[inline]
+    pub fn owner_of(&self, id: ElemId) -> u16 {
+        self.owners[id as usize]
+    }
+
+    /// Assign element `id` to rank `owner` (partitioning / migration).
+    #[inline]
+    pub fn set_owner(&mut self, id: ElemId, owner: u16) {
+        self.owners[id as usize] = owner;
+    }
+
+    #[inline]
+    pub fn generation_of(&self, id: ElemId) -> u16 {
+        self.generations[id as usize]
+    }
+
+    #[inline]
+    pub fn parent_of(&self, id: ElemId) -> ElemId {
+        self.parents[id as usize]
+    }
+
+    #[inline]
+    pub fn children_of(&self, id: ElemId) -> [ElemId; 2] {
+        self.children[id as usize]
+    }
+
+    #[inline]
+    pub fn is_leaf(&self, id: ElemId) -> bool {
+        let i = id as usize;
+        !self.dead[i] && self.children[i][0] == NONE
     }
 
     pub fn elem_coords(&self, id: ElemId) -> [Vec3; 4] {
-        let v = &self.elems[id as usize].verts;
+        let v = self.everts[id as usize];
         [
             self.vertices[v[0] as usize],
             self.vertices[v[1] as usize],
@@ -148,9 +235,11 @@ impl TetMesh {
     /// Bounding box over all *active* vertices (leaf-referenced).
     pub fn bounding_box(&self) -> BBox {
         let mut bb = BBox::empty();
-        for id in self.leaves_unordered() {
-            for &v in &self.elems[id as usize].verts {
-                bb.expand(self.vertices[v as usize]);
+        for id in 0..self.everts.len() as ElemId {
+            if self.is_leaf(id) {
+                for &v in &self.everts[id as usize] {
+                    bb.expand(self.vertices[v as usize]);
+                }
             }
         }
         bb
@@ -159,12 +248,21 @@ impl TetMesh {
     /// All leaves, arena order (fast scan; no traversal guarantees).
     pub fn leaves_unordered(&self) -> Vec<ElemId> {
         let mut out = Vec::with_capacity(self.n_leaves);
-        for (i, e) in self.elems.iter().enumerate() {
-            if e.is_leaf() {
+        self.leaves_unordered_into(&mut out);
+        out
+    }
+
+    /// Arena-order leaf scan into a caller-owned buffer (cleared
+    /// first): the allocation-free form the refine closure reuses.
+    pub fn leaves_unordered_into(&self, out: &mut Vec<ElemId>) {
+        out.clear();
+        out.reserve(self.n_leaves);
+        // stream the two SoA columns the predicate reads
+        for (i, (&d, ch)) in self.dead.iter().zip(&self.children).enumerate() {
+            if !d && ch[0] == NONE {
                 out.push(i as ElemId);
             }
         }
-        out
     }
 
     /// Leaves in refinement-forest DFS order (left child before right):
@@ -177,18 +275,32 @@ impl TetMesh {
             stack.push(root);
         }
         while let Some(id) = stack.pop() {
-            let e = &self.elems[id as usize];
-            if e.dead {
+            let i = id as usize;
+            if self.dead[i] {
                 continue;
             }
-            if e.children[0] == NONE {
+            let ch = self.children[i];
+            if ch[0] == NONE {
                 out.push(id);
             } else {
-                stack.push(e.children[1]);
-                stack.push(e.children[0]);
+                stack.push(ch[1]);
+                stack.push(ch[0]);
             }
         }
         out
+    }
+
+    /// Every live split element's refinement edge and its midpoint
+    /// vertex, as `(a, b, mid)`: the information the dof transfer
+    /// needs to interpolate onto newly created midpoint vertices.
+    pub fn split_edges(&self) -> impl Iterator<Item = (VertId, VertId, VertId)> + '_ {
+        (0..self.everts.len()).filter_map(move |i| {
+            if self.dead[i] || self.children[i][0] == NONE || self.mid_vertices[i] == NONE {
+                return None;
+            }
+            let v = &self.everts[i];
+            Some((v[0], v[self.tags[i] as usize], self.mid_vertices[i]))
+        })
     }
 
     /// Sum of all leaf volumes.
@@ -217,11 +329,26 @@ impl TetMesh {
 
     fn alloc_elem(&mut self, e: Elem) -> ElemId {
         if let Some(id) = self.free_elems.pop() {
-            self.elems[id as usize] = e;
+            let i = id as usize;
+            self.everts[i] = e.verts;
+            self.tags[i] = e.tag;
+            self.generations[i] = e.generation;
+            self.owners[i] = e.owner;
+            self.parents[i] = e.parent;
+            self.children[i] = e.children;
+            self.mid_vertices[i] = e.mid_vertex;
+            self.dead[i] = e.dead;
             id
         } else {
-            self.elems.push(e);
-            (self.elems.len() - 1) as ElemId
+            self.everts.push(e.verts);
+            self.tags.push(e.tag);
+            self.generations.push(e.generation);
+            self.owners.push(e.owner);
+            self.parents.push(e.parent);
+            self.children.push(e.children);
+            self.mid_vertices.push(e.mid_vertex);
+            self.dead.push(e.dead);
+            (self.everts.len() - 1) as ElemId
         }
     }
 
@@ -243,11 +370,12 @@ impl TetMesh {
     /// elements are born on their parent's process, which is exactly
     /// the data-locality behaviour whose erosion the DLB fixes.
     pub fn bisect(&mut self, id: ElemId) -> [ElemId; 2] {
-        let (verts, tag, generation, owner) = {
-            let e = &self.elems[id as usize];
-            debug_assert!(e.is_leaf(), "bisect of non-leaf {id}");
-            (e.verts, e.tag, e.generation, e.owner)
-        };
+        let i = id as usize;
+        debug_assert!(self.is_leaf(id), "bisect of non-leaf {id}");
+        let verts = self.everts[i];
+        let tag = self.tags[i];
+        let generation = self.generations[i];
+        let owner = self.owners[i];
         let k = tag as usize;
         let z = self.edge_midpoint(verts[0], verts[k]);
 
@@ -276,17 +404,17 @@ impl TetMesh {
         };
         let a = self.alloc_elem(mk(c1));
         let b = self.alloc_elem(mk(c2));
-        let e = &mut self.elems[id as usize];
-        e.children = [a, b];
-        e.mid_vertex = z;
+        self.children[id as usize] = [a, b];
+        self.mid_vertices[id as usize] = z;
         self.n_leaves += 1; // one leaf became two
+        self.revision += 1;
         [a, b]
     }
 
     /// True if any edge of leaf `id` carries a registered midpoint,
     /// i.e. a neighbour has split an edge this leaf still spans.
     fn has_hanging_edge(&self, id: ElemId) -> bool {
-        let v = self.elems[id as usize].verts;
+        let v = self.everts[id as usize];
         for i in 0..4 {
             for j in (i + 1)..4 {
                 if self.edge_mid.contains_key(&edge_key(v[i], v[j])) {
@@ -302,14 +430,17 @@ impl TetMesh {
     pub fn refine(&mut self, marked: &[ElemId]) -> RefineStats {
         let mut stats = RefineStats::default();
         for &id in marked {
-            if self.elems[id as usize].is_leaf() {
+            if self.is_leaf(id) {
                 self.bisect(id);
                 stats.marked_bisections += 1;
             }
         }
         // Closure to fixpoint. Each pass scans current leaves; new
-        // leaves produced in a pass are checked in the next pass.
+        // leaves produced in a pass are checked in the next pass. The
+        // worklist buffer is owned by the mesh and reused across
+        // passes *and* across refine calls.
         const MAX_PASSES: usize = 1000;
+        let mut worklist = std::mem::take(&mut self.scratch_leaves);
         loop {
             stats.closure_passes += 1;
             assert!(
@@ -317,9 +448,10 @@ impl TetMesh {
                 "conformity closure did not terminate (incompatible mesh tags?)"
             );
             let mut any = false;
-            let leaves = self.leaves_unordered();
-            for id in leaves {
-                if self.elems[id as usize].is_leaf() && self.has_hanging_edge(id) {
+            self.leaves_unordered_into(&mut worklist);
+            for k in 0..worklist.len() {
+                let id = worklist[k];
+                if self.is_leaf(id) && self.has_hanging_edge(id) {
                     self.bisect(id);
                     stats.closure_bisections += 1;
                     any = true;
@@ -329,6 +461,7 @@ impl TetMesh {
                 break;
             }
         }
+        self.scratch_leaves = worklist;
         stats
     }
 
@@ -344,18 +477,14 @@ impl TetMesh {
 
         // Candidate parents: both children are leaves and marked.
         let mut patch_parents: FxHashMap<VertId, Vec<ElemId>> = FxHashMap::default();
-        for (i, e) in self.elems.iter().enumerate() {
-            if e.dead || e.children[0] == NONE {
+        for i in 0..self.everts.len() {
+            if self.dead[i] || self.children[i][0] == NONE {
                 continue;
             }
-            let [a, b] = e.children;
-            if self.elems[a as usize].is_leaf()
-                && self.elems[b as usize].is_leaf()
-                && marked.contains(&a)
-                && marked.contains(&b)
-            {
+            let [a, b] = self.children[i];
+            if self.is_leaf(a) && self.is_leaf(b) && marked.contains(&a) && marked.contains(&b) {
                 patch_parents
-                    .entry(e.mid_vertex)
+                    .entry(self.mid_vertices[i])
                     .or_default()
                     .push(i as ElemId);
             }
@@ -364,15 +493,20 @@ impl TetMesh {
             return 0;
         }
 
-        // Leaf incidence restricted to candidate midpoints.
+        // Leaf incidence restricted to candidate midpoints. Reuses the
+        // mesh-owned leaf worklist (same scratch the refine closure
+        // uses; the two never run concurrently).
+        let mut leaves = std::mem::take(&mut self.scratch_leaves);
+        self.leaves_unordered_into(&mut leaves);
         let mut incidence: FxHashMap<VertId, Vec<ElemId>> = FxHashMap::default();
-        for id in self.leaves_unordered() {
-            for &v in &self.elems[id as usize].verts {
+        for &id in &leaves {
+            for &v in &self.everts[id as usize] {
                 if patch_parents.contains_key(&v) {
                     incidence.entry(v).or_default().push(id);
                 }
             }
         }
+        self.scratch_leaves = leaves;
 
         let mut coarsened = 0;
         for (&mid, parents) in patch_parents.iter() {
@@ -383,32 +517,34 @@ impl TetMesh {
             // Every incident leaf must be a child of one of `parents`.
             let children: std::collections::HashSet<ElemId> = parents
                 .iter()
-                .flat_map(|&p| self.elems[p as usize].children)
+                .flat_map(|&p| self.children[p as usize])
                 .collect();
             if !incident.iter().all(|l| children.contains(l)) {
                 continue;
             }
             // Un-refine the whole patch.
             for &p in parents {
-                let [a, b] = self.elems[p as usize].children;
-                self.elems[a as usize].dead = true;
-                self.elems[b as usize].dead = true;
+                let [a, b] = self.children[p as usize];
+                self.dead[a as usize] = true;
+                self.dead[b as usize] = true;
                 self.free_elems.push(a);
                 self.free_elems.push(b);
-                let pe = &mut self.elems[p as usize];
-                pe.children = [NONE, NONE];
-                pe.mid_vertex = NONE;
+                self.children[p as usize] = [NONE, NONE];
+                self.mid_vertices[p as usize] = NONE;
                 self.n_leaves -= 1;
                 coarsened += 1;
             }
             // Drop the midpoint vertex and its edge-map entry.
             // The parent refinement edge is the same for all patch
             // parents (they share the split edge).
-            let p0 = parents[0];
-            let (a, b) = self.elems[p0 as usize].refine_edge();
+            let p0 = parents[0] as usize;
+            let (a, b) = (self.everts[p0][0], self.everts[p0][self.tags[p0] as usize]);
             self.edge_mid.remove(&edge_key(a, b));
             self.free_verts.push(mid);
             coarsened = coarsened.max(1);
+        }
+        if coarsened > 0 {
+            self.revision += 1;
         }
         coarsened
     }
@@ -433,7 +569,7 @@ impl TetMesh {
         // face conformity
         let mut face_count: FxHashMap<u128, u32> = FxHashMap::default();
         for &id in &leaves {
-            let v = self.elems[id as usize].verts;
+            let v = self.everts[id as usize];
             for f in crate::mesh::topology::FACES {
                 let key = crate::util::hash::face_key(
                     v[f[0] as usize],
@@ -449,17 +585,16 @@ impl TetMesh {
             }
         }
         // tree integrity
-        for (i, e) in self.elems.iter().enumerate() {
-            if e.dead {
+        for i in 0..self.everts.len() {
+            if self.dead[i] {
                 continue;
             }
-            if e.children[0] != NONE {
-                for &c in &e.children {
-                    let ce = &self.elems[c as usize];
-                    if ce.dead {
+            if self.children[i][0] != NONE {
+                for &c in &self.children[i] {
+                    if self.dead[c as usize] {
                         return Err(format!("elem {i} has dead child {c}"));
                     }
-                    if ce.parent != i as u32 {
+                    if self.parents[c as usize] != i as u32 {
                         return Err(format!("child {c} parent link broken"));
                     }
                 }
@@ -610,7 +745,7 @@ mod tests {
     fn owners_inherited_on_refine() {
         let mut m = unit_cube();
         for (i, &id) in m.leaves_unordered().iter().enumerate() {
-            m.elems[id as usize].owner = (i % 3) as u16;
+            m.set_owner(id, (i % 3) as u16);
         }
         let before: FxHashMap<ElemId, u16> = m
             .leaves_unordered()
@@ -653,6 +788,33 @@ mod tests {
         m.refine(&m.leaves_unordered());
         for id in m.leaves_unordered() {
             assert_eq!(m.elem(id).generation, 1);
+        }
+    }
+
+    #[test]
+    fn revision_tracks_structure_not_ownership() {
+        let mut m = unit_cube();
+        let r0 = m.revision();
+        m.set_owner(0, 2);
+        assert_eq!(m.revision(), r0, "ownership must not invalidate caches");
+        m.refine(&m.leaves_unordered());
+        let r1 = m.revision();
+        assert!(r1 > r0, "refine must bump the revision");
+        while m.coarsen(&m.leaves_unordered()) > 0 {}
+        assert!(m.revision() > r1, "coarsen must bump the revision");
+    }
+
+    #[test]
+    fn split_edges_cover_all_midpoints() {
+        let mut m = unit_cube();
+        m.refine(&m.leaves_unordered());
+        let mids: Vec<_> = m.split_edges().collect();
+        assert!(!mids.is_empty());
+        for (a, b, mid) in mids {
+            let pm = m.vertices[mid as usize];
+            let pa = m.vertices[a as usize];
+            let pb = m.vertices[b as usize];
+            assert!((pm - pa.midpoint(pb)).norm() < 1e-12);
         }
     }
 }

@@ -46,7 +46,8 @@ impl LeafTopology {
         open.reserve(leaves.len() * 2);
         let mut interior = 0usize;
         for (i, &id) in leaves.iter().enumerate() {
-            let v = mesh.elem(id).verts;
+            // streams the SoA vertex column directly (no Elem gather)
+            let v = mesh.verts_of(id);
             for (fi, f) in FACES.iter().enumerate() {
                 let key = face_key(v[f[0] as usize], v[f[1] as usize], v[f[2] as usize]);
                 match open.remove(&key) {

@@ -1,13 +1,17 @@
 //! Overhead guard: tracing is disabled by default, and the disabled
 //! span path on the PCG hot loop performs **zero** allocations (it is
-//! two relaxed atomic loads and no clock read). Enforced with a
-//! counting global allocator, which is why this is its own test
-//! binary with exactly one `#[test]`: any concurrent test thread
-//! would pollute the allocation counter.
+//! two relaxed atomic loads and no clock read); the threaded PCG's
+//! steady-state iteration loop (halo exchange included) also
+//! allocates nothing per iteration. Enforced with a counting global
+//! allocator, which is why this is its own test binary with exactly
+//! one `#[test]`: any concurrent test thread would pollute the
+//! allocation counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use phg_dlb::exec::{pcg_threaded, GhostPlan, RankPlan};
+use phg_dlb::fem::{Csr, SolverOpts};
 use phg_dlb::obs::{self, Phase};
 
 struct CountingAlloc;
@@ -80,6 +84,74 @@ fn disabled_tracing_adds_no_allocations_to_the_hot_loop() {
         "warm metrics path allocated {} times over 10k observations",
         after - before
     );
+
+    // ---- threaded PCG steady state allocates nothing per iteration.
+    // Two solves identical except for the iteration budget must show
+    // the *same* allocation total: every per-solve allocation (worker
+    // threads, rank states, SELL kernels, halo slot buffers) is
+    // iteration-independent, and the iteration loop itself -- halo
+    // publish/consume through the reusable slots included -- is
+    // allocation-free.
+    {
+        let grid = 8usize;
+        let n = grid * grid;
+        let id = |i: usize, j: usize| (i * grid + j) as u32;
+        let mut t = Vec::new();
+        for i in 0..grid {
+            for j in 0..grid {
+                let r = id(i, j);
+                t.push((r, r, 4.0));
+                if i > 0 {
+                    t.push((r, id(i - 1, j), -1.0));
+                }
+                if i + 1 < grid {
+                    t.push((r, id(i + 1, j), -1.0));
+                }
+                if j > 0 {
+                    t.push((r, id(i, j - 1), -1.0));
+                }
+                if j + 1 < grid {
+                    t.push((r, id(i, j + 1), -1.0));
+                }
+            }
+        }
+        let a = Csr::from_triplets(n, t);
+        let nranks = 3usize;
+        let mut rank_of_dof = vec![0u16; n];
+        let mut rows: Vec<Vec<u32>> = vec![Vec::new(); nranks];
+        for d in 0..n {
+            let r = d * nranks / n;
+            rank_of_dof[d] = r as u16;
+            rows[r].push(d as u32);
+        }
+        let plan = RankPlan {
+            nranks,
+            elems: vec![Vec::new(); nranks],
+            rank_of_dof,
+            interior: vec![Vec::new(); nranks],
+            boundary: rows.clone(),
+            rows,
+        };
+        let ghost = GhostPlan::build(&plan, &a);
+        let b = vec![1.0; n];
+        // tol = 0 never converges early: iteration count == max_iter
+        let solve = |max_iter: usize| {
+            let opts = SolverOpts { tol: 0.0, max_iter };
+            let mut x = vec![0.0; n];
+            let before = ALLOCS.load(Ordering::Relaxed);
+            let (stats, _, _) = pcg_threaded(&plan, &ghost, &a, &b, &mut x, &opts, 2);
+            assert_eq!(stats.iterations, max_iter);
+            ALLOCS.load(Ordering::Relaxed) - before
+        };
+        solve(3); // warm-up: creates the lazy metrics entries
+        let short = solve(3);
+        let long = solve(9);
+        assert_eq!(
+            long, short,
+            "threaded PCG allocated {} times over 6 extra iterations",
+            long - short
+        );
+    }
 
     // positive control: the counting allocator really counts -- an
     // *enabled* span must allocate (first push into an empty shard)

@@ -1,0 +1,137 @@
+//! Property tests for the million-element hot path (DESIGN.md §11):
+//!
+//! * the SELL kernel is a *bitwise* drop-in for the CSR row gather
+//!   [`spmv_rows`] on random sparsity patterns, for any row subset in
+//!   any order, with rows wider than [`SELL_MAX_WIDTH`] refusing to
+//!   build (which is what forces the CSR fallback in [`RankSpmv`]);
+//! * pattern-reuse assembly reproduces the triplet + stable-sort
+//!   construction exactly -- same structure, same bits -- on every
+//!   registered scenario's first-step mesh.
+
+use phg_dlb::exec::{spmv_rows, RankSpmv};
+use phg_dlb::fem::{
+    assemble, assemble_with_pattern, AssemblyPattern, Csr, DofMap, SellF64, SELL_MAX_WIDTH,
+};
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::scenario::{Scenario, SCENARIOS};
+use phg_dlb::util::rng::Pcg32;
+
+/// A random sparse matrix: `n` rows, per-row width drawn from
+/// `[0, max_width]`, duplicate columns allowed (the triplet fold
+/// handles them), values from a normal so signs and magnitudes vary.
+fn random_csr(rng: &mut Pcg32, n: usize, max_width: usize) -> Csr {
+    let mut trips = Vec::new();
+    for r in 0..n as u32 {
+        let w = rng.gen_range(max_width + 1);
+        for _ in 0..w {
+            let c = rng.gen_range(n) as u32;
+            trips.push((r, c, rng.gen_normal()));
+        }
+    }
+    Csr::from_triplets(n, trips)
+}
+
+fn random_x(rng: &mut Pcg32, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|_| match rng.gen_range(8) {
+            // stress the padding contract: signed zeros and exact
+            // negatives must not leak through ghost lanes
+            0 => -0.0,
+            1 => 0.0,
+            _ => rng.gen_normal(),
+        })
+        .collect()
+}
+
+#[test]
+fn sell_spmv_is_bitwise_identical_to_csr_on_random_patterns() {
+    let mut rng = Pcg32::new(0x5e11);
+    for trial in 0..40 {
+        let n = 5 + rng.gen_range(120);
+        let max_w = 1 + rng.gen_range(SELL_MAX_WIDTH.min(n));
+        let a = random_csr(&mut rng, n, max_w);
+        let x = random_x(&mut rng, n);
+
+        // any subset of rows, in any order: full ascending, a strided
+        // subset, and a shuffled subset
+        let full: Vec<u32> = (0..n as u32).collect();
+        let strided: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let mut shuffled = full.clone();
+        rng.shuffle(&mut shuffled);
+        shuffled.truncate(n / 2 + 1);
+
+        for rows in [&full, &strided, &shuffled] {
+            let sell = SellF64::build(&a, rows)
+                .unwrap_or_else(|| panic!("trial {trial}: width {max_w} must build"));
+            let mut y_ref = vec![f64::NAN; n];
+            let mut y_sell = vec![f64::NAN; n];
+            spmv_rows(&a, rows, &x, &mut y_ref);
+            sell.spmv(&x, &mut y_sell);
+            for &r in rows.iter() {
+                let (c, s) = (y_ref[r as usize], y_sell[r as usize]);
+                assert_eq!(
+                    c.to_bits(),
+                    s.to_bits(),
+                    "trial {trial}: row {r} diverged: csr {c:e} sell {s:e}"
+                );
+            }
+            // rows outside the subset are untouched by both kernels
+            let touched: std::collections::HashSet<u32> = rows.iter().copied().collect();
+            for r in 0..n {
+                if !touched.contains(&(r as u32)) {
+                    assert!(y_sell[r].is_nan(), "trial {trial}: row {r} written");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rows_wider_than_ell_width_refuse_sell_and_fall_back_to_csr() {
+    let mut rng = Pcg32::new(0x1de);
+    let n = SELL_MAX_WIDTH + 16;
+    // one dense row pushes past the width cap
+    let mut trips: Vec<(u32, u32, f64)> = (0..n as u32).map(|c| (3, c, 1.0)).collect();
+    for r in 0..n as u32 {
+        trips.push((r, r, 2.0 + rng.gen_f64()));
+    }
+    let a = Csr::from_triplets(n, trips);
+    let rows: Vec<u32> = (0..n as u32).collect();
+    assert!(SellF64::build(&a, &rows).is_none(), "a {n}-wide row must refuse the SELL layout");
+    // ...but only if the wide row is actually in the subset
+    let without: Vec<u32> = rows.iter().copied().filter(|&r| r != 3).collect();
+    assert!(SellF64::build(&a, &without).is_some());
+
+    // the per-rank kernel selector takes the CSR fallback whenever
+    // either split contains the wide row
+    let (interior, boundary) = without.split_at(without.len() / 2);
+    assert!(RankSpmv::build(&a, interior, boundary).is_sell());
+    assert!(!RankSpmv::build(&a, &rows[..8], &rows[..8]).is_sell());
+}
+
+#[test]
+fn pattern_assembly_reproduces_triplet_assembly_on_every_scenario() {
+    for spec in &SCENARIOS {
+        let scen = (spec.make)();
+        let mesh = scen.default_mesh();
+        let topo = LeafTopology::build(&mesh);
+        let dof = DofMap::build(&mesh, &topo);
+        let src = dof.eval_at_dofs(&mesh, |p| (1.3 * p.x).sin() + 0.7 * p.y - p.z);
+
+        let reference = assemble(&mesh, &topo, &dof, &src, None);
+        let pat = AssemblyPattern::build(&mesh, &topo, &dof);
+        let fast = assemble_with_pattern(&mesh, &topo, &dof, &src, &pat);
+
+        assert_eq!(reference.k.row_ptr, fast.k.row_ptr, "{}: K structure", spec.name);
+        assert_eq!(reference.k.col_idx, fast.k.col_idx, "{}: K columns", spec.name);
+        for (i, (a, b)) in reference.k.vals.iter().zip(&fast.k.vals).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: K slot {i}", spec.name);
+        }
+        for (i, (a, b)) in reference.m.vals.iter().zip(&fast.m.vals).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: M slot {i}", spec.name);
+        }
+        for (i, (a, b)) in reference.b.iter().zip(&fast.b).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: b[{i}]", spec.name);
+        }
+    }
+}
