@@ -1,0 +1,236 @@
+//! Ablation: multilevel k-way adaptive repartitioning (AdaptiveRepart)
+//! against scratch and diffusive across imbalance severity
+//! (DESIGN.md §12).
+//!
+//! The same two scenario families as `ablation_diffusion` -- scattered
+//! mild skew vs an advancing refinement front -- but the question here
+//! is where the *third* strategy earns its keep: AdaptiveRepart should
+//! migrate far less than scratch+remap (owner-seeded start) while
+//! holding a scratch-class cut (itr-weighted refinement), and `Auto`'s
+//! three-way argmin should pick each strategy somewhere in the sweep:
+//! diffusion where the flow is short-haul, adaptive where balance must
+//! be restored but the scratch wall is dear, scratch where severity
+//! makes residual imbalance the only thing that matters.
+//!
+//! ```sh
+//! cargo bench --bench ablation_kway [-- --nparts 16 --quick]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{arg_usize, quick_or, save_csv, write_bench_json, BenchRow, MeshSequence};
+use phg_dlb::dlb::{RebalancePipeline, RepartitionStrategy};
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::mesh::TetMesh;
+
+/// Scattered mild skew: ranks 0, 2, 4, ... refine a slice of their
+/// elements `rounds` times.
+fn scattered(nparts: usize, rounds: usize) -> TetMesh {
+    let seq = MeshSequence::cube(quick_or(4, 3), nparts, 1_000_000);
+    let mut mesh = seq.mesh;
+    for _ in 0..rounds {
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .enumerate()
+            .filter(|(i, id)| {
+                let owner = mesh.elem(*id).owner;
+                owner % 2 == 0 && i % 3 == 0
+            })
+            .map(|(_, id)| id)
+            .collect();
+        mesh.refine(&marked);
+    }
+    mesh
+}
+
+/// Severe refinement front: the MeshSequence band advances `rounds`
+/// times near one end of the cylinder.
+fn front(nparts: usize, rounds: usize) -> TetMesh {
+    let mut seq = MeshSequence::cylinder(quick_or(3, 2), nparts, 1_000_000);
+    for _ in 0..rounds {
+        seq.advance();
+    }
+    seq.mesh
+}
+
+struct Outcome {
+    resolved: &'static str,
+    lambda_before: f64,
+    lambda_after: f64,
+    total_v: f64,
+    cut: usize,
+    dlb_ms: f64,
+}
+
+/// Run one concrete strategy on a clone of `mesh` through `pipe` and
+/// measure the post-migration interface cut alongside the report.
+fn run_as(pipe: &RebalancePipeline, mesh: &TetMesh, strategy: RepartitionStrategy) -> Outcome {
+    let mut mesh = mesh.clone();
+    let leaves = mesh.leaves_unordered();
+    let weights = vec![1.0f64; leaves.len()];
+    let rep = pipe.rebalance_as(strategy, &mut mesh, &leaves, &weights);
+    let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+    let cut = LeafTopology::build_for(&mesh, leaves).interface_faces(&owners);
+    Outcome {
+        resolved: rep.strategy.name(),
+        lambda_before: rep.lambda_before,
+        lambda_after: rep.lambda_after,
+        total_v: rep.volume.total_v,
+        cut,
+        dlb_ms: rep.dlb_time() * 1e3,
+    }
+}
+
+fn main() {
+    let nparts = arg_usize("--nparts", quick_or(16, 8));
+    // the scratch baseline is the multilevel method: cut comparisons
+    // against AdaptiveRepart are then like-for-like
+    let method = "ParMETIS";
+    println!("== Ablation: k-way adaptive repartitioning vs scratch vs diffusive ==");
+    println!("   scratch method {method}, p = {nparts}\n");
+
+    let severities: Vec<usize> = if common::is_quick() {
+        vec![1, 3]
+    } else {
+        vec![1, 2, 4, 6]
+    };
+
+    let mut csv = String::from(
+        "scenario,severity,strategy,resolved,lambda_before,lambda_after,total_v,cut,dlb_ms\n",
+    );
+    let mut json_rows: Vec<BenchRow> = Vec::new();
+    let mut mild_scratch = None;
+    let mut mild_adaptive = None;
+    let mut auto_chose: Vec<&'static str> = Vec::new();
+
+    println!(
+        "{:<10} {:>8} {:<10} {:<10} {:>8} {:>8} {:>10} {:>8} {:>10}",
+        "scenario", "severity", "strategy", "resolved", "lam_in", "lam_out", "TotalV", "cut",
+        "dlb(ms)"
+    );
+    for (scenario, meshes) in [
+        (
+            "scattered",
+            severities
+                .iter()
+                .map(|&s| (s, scattered(nparts, s)))
+                .collect::<Vec<_>>(),
+        ),
+        (
+            "front",
+            severities
+                .iter()
+                .map(|&s| (s, front(nparts, s)))
+                .collect::<Vec<_>>(),
+        ),
+    ] {
+        for (severity, mesh) in &meshes {
+            let mut pipe = RebalancePipeline::from_method(method, nparts)
+                .unwrap()
+                .with_strategy(RepartitionStrategy::Auto);
+            // give diffusion a realistic O(p) budget so severity is
+            // what separates the regimes, not sweep starvation
+            pipe.diffusion.max_sweeps = nparts;
+
+            // concrete strategy rows; Adaptive runs first so its
+            // measured wall primes the EWMA that Auto's estimate uses
+            let mut scratch_wall = 0.0f64;
+            for strategy in [
+                RepartitionStrategy::Adaptive,
+                RepartitionStrategy::Scratch,
+                RepartitionStrategy::Diffusive,
+            ] {
+                let o = run_as(&pipe, mesh, strategy);
+                if strategy == RepartitionStrategy::Scratch {
+                    scratch_wall = o.dlb_ms * 1e-3;
+                }
+                let mildest_scattered = scenario == "scattered" && *severity == severities[0];
+                if mildest_scattered && strategy == RepartitionStrategy::Scratch {
+                    mild_scratch = Some((o.total_v, o.cut));
+                }
+                if mildest_scattered && strategy == RepartitionStrategy::Adaptive {
+                    mild_adaptive = Some((o.total_v, o.cut));
+                }
+                emit(&mut csv, &mut json_rows, scenario, *severity, strategy.name(), &o);
+            }
+
+            // the Auto row: solve-time context scales with severity,
+            // the scratch wall estimate is the one just measured
+            let leaves = mesh.leaves_unordered();
+            let weights = vec![1.0f64; leaves.len()];
+            let solve = 10.0 * *severity as f64 * scratch_wall;
+            let chosen = pipe.resolve_strategy(mesh, &leaves, &weights, solve, scratch_wall);
+            auto_chose.push(chosen.name());
+            let o = run_as(&pipe, mesh, chosen);
+            emit(&mut csv, &mut json_rows, scenario, *severity, "auto", &o);
+        }
+    }
+
+    let (s_v, s_cut) = mild_scratch.expect("scattered mildest scratch row missing");
+    let (a_v, a_cut) = mild_adaptive.expect("scattered mildest adaptive row missing");
+    println!(
+        "\nmild scattered skew: adaptive TotalV {a_v:.1} vs scratch {s_v:.1} ({})",
+        if a_v <= 0.5 * s_v {
+            "REPRODUCED: owner-seeded start halves the migration"
+        } else {
+            "DIVERGED"
+        }
+    );
+    println!(
+        "mild scattered skew: adaptive cut {a_cut} vs scratch cut {s_cut} ({})",
+        if a_cut as f64 <= 1.2 * s_cut as f64 {
+            "REPRODUCED: itr-weighted refinement holds the cut"
+        } else {
+            "DIVERGED"
+        }
+    );
+    let mut distinct = auto_chose.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    println!(
+        "auto chose {{{}}} across {} cells ({})",
+        distinct.join(", "),
+        auto_chose.len(),
+        if distinct.len() >= 3 {
+            "REPRODUCED: every strategy wins somewhere"
+        } else {
+            "DIVERGED: some strategy never won a cell"
+        }
+    );
+    assert!(
+        a_v <= 0.5 * s_v + 1e-9,
+        "adaptive must migrate at most half of scratch+remap on mild \
+         scattered skew ({a_v} vs {s_v})"
+    );
+
+    save_csv("ablation_kway.csv", &csv);
+    write_bench_json("ablation_kway", &json_rows);
+}
+
+fn emit(
+    csv: &mut String,
+    json_rows: &mut Vec<BenchRow>,
+    scenario: &str,
+    severity: usize,
+    strategy: &str,
+    o: &Outcome,
+) {
+    println!(
+        "{:<10} {:>8} {:<10} {:<10} {:>8.3} {:>8.3} {:>10.1} {:>8} {:>10.3}",
+        scenario, severity, strategy, o.resolved, o.lambda_before, o.lambda_after, o.total_v,
+        o.cut, o.dlb_ms
+    );
+    csv.push_str(&format!(
+        "{scenario},{severity},{strategy},{},{:.4},{:.4},{:.1},{},{:.4}\n",
+        o.resolved, o.lambda_before, o.lambda_after, o.total_v, o.cut, o.dlb_ms
+    ));
+    let mut row = BenchRow::new(format!("{scenario}/s{severity}/{strategy}"));
+    row.lambda_before = Some(o.lambda_before);
+    row.lambda_after = Some(o.lambda_after);
+    row.total_v = Some(o.total_v);
+    row.wall_ms = Some(o.dlb_ms);
+    row.extras.push(("cut", o.cut as f64));
+    json_rows.push(row);
+}

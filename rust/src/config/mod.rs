@@ -225,6 +225,22 @@ mod tests {
         let mut c = Config::new();
         c.apply_args(&["--strategy".into(), "diffusive".into()]).unwrap();
         assert_eq!(c.driver_config().unwrap().strategy, "diffusive");
+        let mut c = Config::new();
+        c.apply_args(&["--strategy".into(), "adaptive".into()]).unwrap();
+        assert_eq!(c.driver_config().unwrap().strategy, "adaptive");
+    }
+
+    #[test]
+    fn parameterized_method_specs_flow_through_verbatim() {
+        // `name:key=val,...` specs are opaque strings to the config
+        // layer; the registry parses and validates them at creation
+        let c = Config::parse("method = AdaptiveRepart:itr=100,fm_passes=8\n").unwrap();
+        let d = c.driver_config().unwrap();
+        assert_eq!(d.method, "AdaptiveRepart:itr=100,fm_passes=8");
+        let mut c = Config::new();
+        c.apply_args(&["--method".into(), "Diffusion:max_sweeps=16".into()])
+            .unwrap();
+        assert_eq!(c.driver_config().unwrap().method, "Diffusion:max_sweeps=16");
     }
 
     #[test]

@@ -46,8 +46,9 @@ pub struct DriverConfig {
     pub trigger: String,
     /// weight model spec: `unit` | `dof` | `measured`
     pub weights: String,
-    /// repartitioning strategy spec: `scratch` | `diffusive` | `auto`
-    /// (see [`RepartitionStrategy`], DESIGN.md §7)
+    /// repartitioning strategy spec: `scratch` | `diffusive` |
+    /// `adaptive` | `auto` (see [`RepartitionStrategy`], DESIGN.md §7,
+    /// §12)
     pub strategy: String,
     /// execution schedule spec: `virtual` | `threads` (see
     /// [`crate::exec`], DESIGN.md §9)
@@ -606,7 +607,7 @@ mod tests {
 
     #[test]
     fn every_strategy_drives_the_loop() {
-        for strategy in ["scratch", "diffusive", "auto"] {
+        for strategy in ["scratch", "diffusive", "adaptive", "auto"] {
             let mesh = generator::cube_mesh(2);
             let mut cfg = quick_cfg("PHG/HSFC");
             cfg.strategy = strategy.to_string();
@@ -626,6 +627,7 @@ mod tests {
                     match strategy {
                         "scratch" => assert_eq!(s, RepartitionStrategy::Scratch),
                         "diffusive" => assert_eq!(s, RepartitionStrategy::Diffusive),
+                        "adaptive" => assert_eq!(s, RepartitionStrategy::Adaptive),
                         _ => assert_ne!(s, RepartitionStrategy::Auto),
                     }
                 }

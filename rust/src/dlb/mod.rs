@@ -10,16 +10,18 @@
 //! part:
 //!
 //! * [`registry`] -- the one name -> partitioner table (replacing the
-//!   three copies that used to disagree across the crate);
+//!   three copies that used to disagree across the crate); specs are
+//!   parameterizable as `name:key=val,...`, validated against each
+//!   method's declared [`crate::partition::MethodTraits`];
 //! * [`trigger`] -- lambda-threshold (the paper), fixed cadence, and
 //!   cost/benefit policies priced against [`crate::dist::NetworkModel`];
 //! * [`weights`] -- unit, dof-proportional, and runtime-measured
 //!   element weight models;
-//! * [`strategy`] -- scratch vs diffusive vs auto repartitioning
-//!   ([`RepartitionStrategy`], DESIGN.md §7);
+//! * [`strategy`] -- scratch vs diffusive vs adaptive vs auto
+//!   repartitioning ([`RepartitionStrategy`], DESIGN.md §7, §12);
 //! * [`pipeline`] -- partition -> Oliker-Biswas remap -> migrate (or
-//!   the remap-free diffusive path) as one call returning a structured
-//!   [`RebalanceReport`].
+//!   the remap-free diffusive/adaptive paths) as one call returning a
+//!   structured [`RebalanceReport`].
 //!
 //! The adaptive driver ([`crate::coordinator`]), the CLI, the examples
 //! and the benches all compose their DLB loops from these pieces.

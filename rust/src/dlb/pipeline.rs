@@ -1,8 +1,10 @@
-//! The unified rebalance pipeline, now strategy-aware (DESIGN.md §7):
-//! *scratch* (partition -> Oliker-Biswas remap -> migrate, the paper's
-//! path), *diffusive* (incremental flow on the rank chain -> migrate,
-//! no remap needed), or *auto* (URP-style per-event selection of
-//! whichever path the network model prices cheaper).
+//! The unified rebalance pipeline, now strategy-aware (DESIGN.md §7,
+//! §12): *scratch* (partition -> Oliker-Biswas remap -> migrate, the
+//! paper's path), *diffusive* (incremental flow on the rank chain ->
+//! migrate, no remap needed), *adaptive* (multilevel k-way
+//! `AdaptiveRepart` from the current owners -> migrate, no remap
+//! needed), or *auto* (URP-style per-event selection of whichever path
+//! the network model prices cheapest).
 //!
 //! Before this module the coordinator hand-wired the phases inline;
 //! the benches and examples each re-implemented the same sequence with
@@ -19,11 +21,13 @@ use crate::dist::{migrate, Distribution, NetworkModel, ELEM_BYTES};
 use crate::mesh::{ElemId, TetMesh};
 use crate::obs::{self, Phase};
 use crate::partition::diffusion::{chain_loads, solve_flow, DiffusionRepartitioner};
+use crate::partition::graph::AdaptiveRepart;
 use crate::partition::metrics::MigrationVolume;
 use crate::partition::{CommOp, PartitionInput, Partitioner};
 use crate::remap::{apply_map, oliker_biswas, SimilarityMatrix};
 use crate::util::error::Result;
 use crate::util::timer::Stopwatch;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// What one full rebalance did, phase by phase.
 #[derive(Debug, Clone)]
@@ -87,6 +91,12 @@ pub struct RebalancePipeline {
     /// The diffusive repartitioner the `Diffusive`/`Auto` paths run
     /// (its sweep bound is the quality-vs-cost knob).
     pub diffusion: DiffusionRepartitioner,
+    /// The multilevel adaptive repartitioner the `Adaptive`/`Auto`
+    /// paths run (its `itr` is the cut-vs-migration knob).
+    pub adaptive: AdaptiveRepart,
+    /// EWMA of the measured `AdaptiveRepart` wall (f64 bits; 0 =
+    /// unset). Atomic so rebalances keep their `&self` signatures.
+    adaptive_wall_ewma: AtomicU64,
 }
 
 impl RebalancePipeline {
@@ -98,7 +108,26 @@ impl RebalancePipeline {
             dist,
             strategy: RepartitionStrategy::Scratch,
             diffusion: DiffusionRepartitioner::new(),
+            adaptive: AdaptiveRepart::parmetis_like(),
+            adaptive_wall_ewma: AtomicU64::new(0),
         }
+    }
+
+    /// Measured-wall EWMA of the adaptive repartitioner, once at least
+    /// one adaptive rebalance has run (the `Auto` estimate falls back
+    /// to the driver's scratch wall estimate before that).
+    pub fn adaptive_wall_estimate(&self) -> Option<f64> {
+        let bits = self.adaptive_wall_ewma.load(Ordering::Relaxed);
+        (bits != 0).then(|| f64::from_bits(bits))
+    }
+
+    fn note_adaptive_wall(&self, wall: f64) {
+        let blended = match self.adaptive_wall_estimate() {
+            Some(prev) => 0.5 * prev + 0.5 * wall,
+            None => wall,
+        };
+        self.adaptive_wall_ewma
+            .store(blended.to_bits(), Ordering::Relaxed);
     }
 
     /// Convenience: method by registry name, InfiniBand-class network.
@@ -144,6 +173,7 @@ impl RebalancePipeline {
         match strategy {
             RepartitionStrategy::Scratch => self.rebalance_scratch(mesh, leaves, weights),
             RepartitionStrategy::Diffusive => self.rebalance_diffusive(mesh, leaves, weights),
+            RepartitionStrategy::Adaptive => self.rebalance_adaptive(mesh, leaves, weights),
             RepartitionStrategy::Auto => {
                 let s = self.resolve_strategy(mesh, leaves, weights, 0.0, 0.0);
                 debug_assert_ne!(s, RepartitionStrategy::Auto);
@@ -285,8 +315,69 @@ impl RebalancePipeline {
         }
     }
 
+    /// The multilevel adaptive path: owner-seeded `AdaptiveRepart` ->
+    /// migrate. Like the diffusive path there is no remap phase -- the
+    /// partition is grown *from* the current owners, so part labels
+    /// already coincide with the ranks holding the data.
+    fn rebalance_adaptive(
+        &self,
+        mesh: &mut TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+    ) -> RebalanceReport {
+        let nparts = self.dist.nparts;
+        let rank_loads_before = self.dist.rank_loads(mesh, leaves, weights);
+        let lambda_before = crate::util::stats::imbalance(&rank_loads_before);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let input = PartitionInput::from_mesh(mesh, leaves, weights, &owners, nparts);
+
+        let sw = Stopwatch::start();
+        let result = {
+            let _sp = obs::driver_span(Phase::Partition);
+            self.adaptive.partition(&input)
+        };
+        let partition_wall = sw.elapsed();
+        self.note_adaptive_wall(partition_wall);
+        let parts = result.parts;
+        let mut comm_log = result.comm;
+        let partition_comm_modeled = self.net.sequence_time(&comm_log);
+
+        let sw = Stopwatch::start();
+        let out = {
+            let _sp = obs::driver_span(Phase::Migrate);
+            migrate(mesh, leaves, &parts, weights, &self.net)
+        };
+        let migrate_wall = sw.elapsed();
+        comm_log.extend(out.comm);
+
+        let rank_loads_after = self.dist.rank_loads(mesh, leaves, weights);
+        let lambda_after = crate::util::stats::imbalance(&rank_loads_after);
+        let m = obs::metrics();
+        m.counter_add("dlb.rebalances.adaptive", 1);
+        m.observe("dlb.partition_s", partition_wall);
+        m.observe("dlb.migrate_s", migrate_wall);
+        m.observe("dlb.total_v", out.volume.total_v);
+
+        RebalanceReport {
+            method: self.adaptive.name().to_string(),
+            strategy: RepartitionStrategy::Adaptive,
+            lambda_before,
+            lambda_after,
+            rank_loads_before,
+            rank_loads_after,
+            remap_kept_fraction: 1.0 - out.volume.moved_fraction,
+            volume: out.volume,
+            partition_wall,
+            migrate_wall,
+            partition_comm_modeled,
+            remap_comm_modeled: 0.0,
+            migrate_modeled: out.modeled_time,
+            comm_log,
+        }
+    }
+
     /// A-priori economics of rebalancing *now* with the configured
-    /// strategy (`Auto` prices both paths and reports the chosen one),
+    /// strategy (`Auto` prices all paths and reports the chosen one),
     /// for the [`super::CostBenefit`] trigger -- computed without
     /// running a partitioner.
     pub fn estimate(
@@ -325,6 +416,16 @@ impl RebalancePipeline {
     ///   what the bounded sweeps leave behind, so the saving honestly
     ///   degrades when the sweep budget cannot even out a severe
     ///   front.
+    /// * **Adaptive** -- honest modeled estimate without running the
+    ///   multilevel machinery: predicted TotalV from a *generously
+    ///   budgeted* coarse-level flow solved to the refiner's own
+    ///   balance tolerance (refinement balances to `1 + epsilon`, so
+    ///   the predicted lambda is `~1 + epsilon`, never the flow's
+    ///   sweep-starved residual), priced as the per-level refinement
+    ///   collectives plus a flow-sized `AllToAllV`; the wall charge is
+    ///   the measured adaptive EWMA once one adaptive rebalance has
+    ///   run, else the caller's scratch wall estimate (adaptive's
+    ///   multilevel pass is the same order of work as scratch's).
     pub fn estimate_for(
         &self,
         strategy: RepartitionStrategy,
@@ -389,15 +490,51 @@ impl RebalancePipeline {
                     lambda_after,
                 )
             }
+            RepartitionStrategy::Adaptive => {
+                let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+                let (_, chain) = chain_loads(mesh, leaves, &owners, weights, p);
+                // generous sweep budget, tolerance = the refiner's own
+                // epsilon: the k-way refinement balances to 1+epsilon
+                // regardless of how many diffusion sweeps *would* have
+                // been needed, and its migration is flow-like (the
+                // excess drains through part boundaries)
+                let sweeps = (p * p * 8).max(1024);
+                let flow = solve_flow(&chain, sweeps, self.adaptive.epsilon);
+                let lambda_after = flow.lambda_after().max(1.0);
+                let n = leaves.len().max(1);
+                let levels = ((n as f64 / self.adaptive.coarsen_to as f64).ln()
+                    / 0.6f64.ln())
+                .abs()
+                .ceil() as usize;
+                let mut ops = vec![CommOp::Allreduce { bytes: p * 8 }];
+                for _ in 0..levels.max(1) * self.adaptive.fm_passes.max(1) {
+                    ops.push(CommOp::Allreduce { bytes: p * 8 });
+                }
+                ops.push(CommOp::AllToAllV {
+                    total_bytes: (flow.total_volume() * ELEM_BYTES as f64).ceil() as usize,
+                    max_msg: (flow.max_edge() * ELEM_BYTES as f64).ceil() as usize,
+                });
+                let wall = self
+                    .adaptive_wall_estimate()
+                    .unwrap_or(partition_wall_estimate);
+                (
+                    CostEstimate {
+                        rebalance_cost: wall + self.net.sequence_time(&ops),
+                        saving_per_step: solve_parallel_time * (lambda - lambda_after).max(0.0),
+                    },
+                    lambda_after,
+                )
+            }
             RepartitionStrategy::Auto => unreachable!("estimate_for needs a concrete strategy"),
         }
     }
 
     /// Resolve the pipeline's strategy for one rebalance event.
-    /// `Scratch`/`Diffusive` pass through; `Auto` prices both paths
+    /// Concrete strategies pass through; `Auto` prices all three paths
     /// URP-style -- rebalance cost plus the residual-imbalance solve
-    /// penalty of the next step -- and picks the cheaper (ties go to
-    /// diffusion, which migrates less).
+    /// penalty of the next step -- and picks the cheapest (ties go to
+    /// the path that migrates less: diffusive, then adaptive, then
+    /// scratch).
     pub fn resolve_strategy(
         &self,
         mesh: &TetMesh,
@@ -428,7 +565,9 @@ impl RebalancePipeline {
         partition_wall_estimate: f64,
     ) -> (RepartitionStrategy, CostEstimate) {
         match self.strategy {
-            RepartitionStrategy::Scratch | RepartitionStrategy::Diffusive => {
+            RepartitionStrategy::Scratch
+            | RepartitionStrategy::Diffusive
+            | RepartitionStrategy::Adaptive => {
                 let (est, _) = self.estimate_for(
                     self.strategy,
                     mesh,
@@ -440,32 +579,38 @@ impl RebalancePipeline {
                 (self.strategy, est)
             }
             RepartitionStrategy::Auto => {
-                let (scratch, scratch_lambda) = self.estimate_for(
-                    RepartitionStrategy::Scratch,
-                    mesh,
-                    leaves,
-                    weights,
-                    solve_parallel_time,
-                    partition_wall_estimate,
-                );
-                let (diff, diff_lambda) = self.estimate_for(
-                    RepartitionStrategy::Diffusive,
-                    mesh,
-                    leaves,
-                    weights,
-                    solve_parallel_time,
-                    partition_wall_estimate,
-                );
                 let penalty = |lambda_after: f64| {
                     solve_parallel_time * (lambda_after - 1.0).max(0.0)
                 };
-                let scratch_total = scratch.rebalance_cost + penalty(scratch_lambda);
-                let diff_total = diff.rebalance_cost + penalty(diff_lambda);
-                if diff_total <= scratch_total {
-                    (RepartitionStrategy::Diffusive, diff)
-                } else {
-                    (RepartitionStrategy::Scratch, scratch)
+                // tie order = ascending migration: diffusive moves the
+                // least, adaptive only what refinement chooses, scratch
+                // relabels everything the remap cannot keep
+                let candidates = [
+                    RepartitionStrategy::Diffusive,
+                    RepartitionStrategy::Adaptive,
+                    RepartitionStrategy::Scratch,
+                ];
+                let mut best: Option<(RepartitionStrategy, CostEstimate, f64)> = None;
+                for s in candidates {
+                    let (est, lambda_after) = self.estimate_for(
+                        s,
+                        mesh,
+                        leaves,
+                        weights,
+                        solve_parallel_time,
+                        partition_wall_estimate,
+                    );
+                    let total = est.rebalance_cost + penalty(lambda_after);
+                    let better = match &best {
+                        None => true,
+                        Some((_, _, best_total)) => total < *best_total,
+                    };
+                    if better {
+                        best = Some((s, est, total));
+                    }
                 }
+                let (s, est, _) = best.expect("candidates is non-empty");
+                (s, est)
             }
         }
     }
@@ -550,6 +695,56 @@ mod tests {
             .comm_log
             .iter()
             .all(|op| matches!(op, CommOp::Allreduce { .. } | CommOp::AllToAllV { .. })));
+    }
+
+    #[test]
+    fn adaptive_rebalance_runs_without_remap_phase() {
+        let (mut mesh, leaves) = skewed(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("PHG/HSFC", 4)
+            .unwrap()
+            .with_strategy(RepartitionStrategy::Adaptive);
+        assert!(pipe.adaptive_wall_estimate().is_none());
+        let rep = pipe.rebalance(&mut mesh, &leaves, &weights);
+        assert_eq!(rep.method, "AdaptiveRepart");
+        assert_eq!(rep.strategy, RepartitionStrategy::Adaptive);
+        assert!(rep.lambda_after < 1.1, "lambda {}", rep.lambda_after);
+        assert!(rep.lambda_after < rep.lambda_before);
+        assert_eq!(rep.remap_comm_modeled, 0.0, "adaptive has no remap");
+        assert!(rep.volume.total_v > 0.0);
+        // owner-seeded: the rebalance must move less than a relabel of
+        // everything would (rank 0 holds ~70% of the weight here, so
+        // most of that excess has to travel regardless)
+        assert!(rep.volume.moved_fraction < 0.95, "{}", rep.volume.moved_fraction);
+        assert!(
+            (rep.remap_kept_fraction - (1.0 - rep.volume.moved_fraction)).abs() < 1e-12
+        );
+        // the measured wall feeds the EWMA the Auto estimate uses
+        let ewma = pipe.adaptive_wall_estimate().expect("EWMA set after a run");
+        assert!(ewma > 0.0);
+    }
+
+    #[test]
+    fn adaptive_estimate_is_honest_about_cost_and_lambda() {
+        let (mesh, leaves) = skewed(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("PHG/HSFC", 4).unwrap();
+        let (est, lambda_after) = pipe.estimate_for(
+            RepartitionStrategy::Adaptive,
+            &mesh,
+            &leaves,
+            &weights,
+            1.0,
+            1e-3,
+        );
+        // without an EWMA the wall charge falls back to the caller's
+        // scratch estimate, plus the per-level refinement collectives
+        assert!(est.rebalance_cost > 1e-3, "{}", est.rebalance_cost);
+        // refinement balances to ~1 + epsilon: the prediction must not
+        // claim perfection, nor claim a sweep-starved residual
+        assert!(lambda_after >= 1.0 && lambda_after <= 1.0 + pipe.adaptive.epsilon + 0.02,
+            "predicted lambda {lambda_after}");
+        assert!(est.saving_per_step > 0.0);
     }
 
     #[test]

@@ -10,12 +10,13 @@
 //! ablation-only methods (including the diffusive incremental
 //! repartitioner that backs the `Diffusive`/`Auto` strategies).
 
-use crate::bail;
 use crate::partition::{
-    diffusion::DiffusionRepartitioner, graph::MultilevelGraph, mitchell::MitchellRefinementTree,
-    rcb::Rcb, rib::Rib, rtk::RefinementTree, sfc::SfcPartitioner, Partitioner,
+    diffusion::DiffusionRepartitioner, graph::AdaptiveRepart, graph::MultilevelGraph,
+    mitchell::MitchellRefinementTree, rcb::Rcb, rib::Rib, rtk::RefinementTree,
+    sfc::SfcPartitioner, MethodTraits, Partitioner,
 };
 use crate::util::error::Result;
+use crate::{bail, format_err};
 
 /// One registered method: its paper name, whether it belongs to the
 /// §3 experiment lineup, a one-line description (the `phg-dlb methods`
@@ -29,9 +30,18 @@ pub struct MethodSpec {
     pub make: fn() -> Box<dyn Partitioner>,
 }
 
+impl MethodSpec {
+    /// Capabilities and tunables of this method (constructs a default
+    /// instance; [`MethodTraits`] is statically declared, so this is
+    /// cheap and allocation-light).
+    pub fn traits(&self) -> MethodTraits {
+        (self.make)().traits()
+    }
+}
+
 /// Every method, lineup first (Table-1 presentation order), then the
 /// ablation-only extras.
-pub const METHODS: [MethodSpec; 9] = [
+pub const METHODS: [MethodSpec; 10] = [
     MethodSpec {
         name: "RCB",
         in_lineup: true,
@@ -86,22 +96,79 @@ pub const METHODS: [MethodSpec; 9] = [
         description: "Mitchell's original refinement-tree bisection (§2.1 ablation)",
         make: || Box::new(MitchellRefinementTree::new()),
     },
+    MethodSpec {
+        name: "AdaptiveRepart",
+        in_lineup: false,
+        description: "multilevel k-way adaptive repartitioning, itr trades cut vs migration",
+        make: || Box::new(AdaptiveRepart::parmetis_like()),
+    },
 ];
 
 /// Namespace for method lookup over [`METHODS`].
 pub struct Registry;
 
 impl Registry {
-    /// Instantiate a method by its paper name. Unknown names error
-    /// with the full list of valid ones.
-    pub fn create(name: &str) -> Result<Box<dyn Partitioner>> {
-        match METHODS.iter().find(|m| m.name == name) {
-            Some(spec) => Ok((spec.make)()),
+    /// Instantiate a method from a spec string: a paper name,
+    /// optionally followed by `:key=val,...` tunable assignments (e.g.
+    /// `AdaptiveRepart:itr=100,fm_passes=8`). Unknown names error with
+    /// the full list of valid ones; unknown keys, unparseable values
+    /// and out-of-range values error naming the method's valid
+    /// tunables with their ranges and defaults.
+    pub fn create(spec_str: &str) -> Result<Box<dyn Partitioner>> {
+        let (name, params) = match spec_str.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (spec_str, None),
+        };
+        let spec = match METHODS.iter().find(|m| m.name == name) {
+            Some(spec) => spec,
             None => bail!(
                 "unknown method {name:?}; valid methods: {}",
                 Self::names().join(", ")
             ),
+        };
+        let mut p = (spec.make)();
+        let Some(params) = params else { return Ok(p) };
+
+        let tunables = p.traits().tunables;
+        let valid = || -> String {
+            if tunables.is_empty() {
+                format!("method {name} has no tunables")
+            } else {
+                format!(
+                    "valid tunables for {name}: {}",
+                    tunables
+                        .iter()
+                        .map(|t| format!(
+                            "{} (range [{}, {}], default {})",
+                            t.key, t.min, t.max, t.default
+                        ))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            }
+        };
+        for kv in params.split(',').filter(|s| !s.is_empty()) {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| format_err!("malformed parameter {kv:?} (want key=val); {}", valid()))?;
+            let t = tunables
+                .iter()
+                .find(|t| t.key == key)
+                .ok_or_else(|| format_err!("unknown tunable {key:?} for method {name}; {}", valid()))?;
+            let v: f64 = val
+                .parse()
+                .map_err(|_| format_err!("tunable {key}={val:?}: expected a number; {}", valid()))?;
+            if !(t.min..=t.max).contains(&v) {
+                bail!(
+                    "tunable {key}={v} out of range [{}, {}]; {}",
+                    t.min,
+                    t.max,
+                    valid()
+                );
+            }
+            p.set_tunable(key, v)?;
         }
+        Ok(p)
     }
 
     /// All registered method names, lineup first.
@@ -173,6 +240,53 @@ mod tests {
         for (p, name) in lineup.iter().zip(Registry::paper_names()) {
             assert_eq!(p.name(), name);
         }
+    }
+
+    #[test]
+    fn parameterized_specs_round_trip() {
+        // well-formed spec strings construct
+        assert!(Registry::create("AdaptiveRepart:itr=100,fm_passes=8").is_ok());
+        assert!(Registry::create("Diffusion:max_sweeps=16").is_ok());
+        assert!(Registry::create("ParMETIS:coarsen_to=128,epsilon=0.05").is_ok());
+        // a bare name still works for every method
+        for spec in &METHODS {
+            assert!(Registry::create(spec.name).is_ok());
+        }
+    }
+
+    #[test]
+    fn parameter_errors_name_the_valid_tunables() {
+        // unknown key: error lists the valid keys with ranges
+        let err = Registry::create("AdaptiveRepart:bogus=1")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bogus"), "{err}");
+        for key in ["itr", "fm_passes", "coarsen_to", "epsilon"] {
+            assert!(err.contains(key), "error does not list {key}: {err}");
+        }
+        assert!(err.contains("range"), "{err}");
+
+        // out of range: error states the range
+        let err = Registry::create("AdaptiveRepart:epsilon=5")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        // not a number
+        let err = Registry::create("AdaptiveRepart:itr=abc")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected a number"), "{err}");
+
+        // missing '='
+        let err = Registry::create("AdaptiveRepart:itr")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("key=val"), "{err}");
+
+        // tunable-less method
+        let err = Registry::create("RCB:foo=1").unwrap_err().to_string();
+        assert!(err.contains("no tunables"), "{err}");
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //!
 //! The paper's pipeline always partitions from scratch and then glues
 //! the result to an Oliker-Biswas remap; ParMETIS's `AdaptiveRepart`
-//! lineage (unified repartitioning, URP) shows the real design space is
-//! scratch-vs-diffusive, traded per event. This module names that
-//! choice; the mechanics live in
-//! [`crate::partition::diffusion`] and
+//! lineage (unified repartitioning, URP) shows the real design space
+//! spans scratch, multilevel adaptive, and diffusive repartitioning,
+//! traded per event. This module names that choice; the mechanics live
+//! in [`crate::partition::diffusion`],
+//! [`crate::partition::graph::adaptive`] and
 //! [`crate::dlb::RebalancePipeline`].
 
 use crate::bail;
@@ -24,8 +25,12 @@ pub enum RepartitionStrategy {
     /// chain from the *current* distribution; migration volume is
     /// minimized by construction and no remap phase is needed.
     Diffusive,
-    /// URP-style per-event selection: price both paths with the
-    /// network model and run whichever is modeled cheaper.
+    /// Multilevel k-way adaptive repartitioning (`AdaptiveRepart`):
+    /// owner-seeded multilevel partition whose refinement trades edge
+    /// cut against migration via `itr`; no remap phase is needed.
+    Adaptive,
+    /// URP-style per-event selection: price all three paths with the
+    /// network model and run whichever is modeled cheapest.
     Auto,
 }
 
@@ -35,6 +40,7 @@ impl RepartitionStrategy {
         match self {
             RepartitionStrategy::Scratch => "scratch",
             RepartitionStrategy::Diffusive => "diffusive",
+            RepartitionStrategy::Adaptive => "adaptive",
             RepartitionStrategy::Auto => "auto",
         }
     }
@@ -48,8 +54,11 @@ impl RepartitionStrategy {
             RepartitionStrategy::Diffusive => {
                 "incremental load flow along the rank chain; minimal migration, no remap"
             }
+            RepartitionStrategy::Adaptive => {
+                "multilevel k-way AdaptiveRepart from current owners; itr trades cut vs migration"
+            }
             RepartitionStrategy::Auto => {
-                "per-event URP-style pick of whichever path the network model prices cheaper"
+                "per-event URP-style pick of whichever path the network model prices cheapest"
             }
         }
     }
@@ -60,16 +69,20 @@ impl RepartitionStrategy {
         match spec {
             "scratch" => Ok(RepartitionStrategy::Scratch),
             "diffusive" => Ok(RepartitionStrategy::Diffusive),
+            "adaptive" => Ok(RepartitionStrategy::Adaptive),
             "auto" => Ok(RepartitionStrategy::Auto),
-            other => bail!("unknown strategy {other:?}; valid: scratch, diffusive, auto"),
+            other => {
+                bail!("unknown strategy {other:?}; valid: scratch, diffusive, adaptive, auto")
+            }
         }
     }
 
     /// Every strategy, in documentation order.
-    pub fn all() -> [RepartitionStrategy; 3] {
+    pub fn all() -> [RepartitionStrategy; 4] {
         [
             RepartitionStrategy::Scratch,
             RepartitionStrategy::Diffusive,
+            RepartitionStrategy::Adaptive,
             RepartitionStrategy::Auto,
         ]
     }

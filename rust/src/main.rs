@@ -132,7 +132,8 @@ fn cmd_run(cfg: &Config) -> Result<()> {
             &format!(
                 "run_{}_{}.csv",
                 problem,
-                cfg.get_str("method", "PHG/HSFC").replace('/', "_")
+                cfg.get_str("method", "PHG/HSFC")
+                    .replace(['/', ':', ',', '='], "_")
             ),
             &driver.timeline.to_csv(),
         )?;
@@ -248,7 +249,7 @@ fn run() -> Result<()> {
         "methods" => {
             // every pluggable registry, sorted or documentation order
             // + described, so CI log diffs and docs stay stable
-            println!("methods (--method):");
+            println!("methods (--method, parameterized as name:key=val,...):");
             for m in Registry::sorted_specs() {
                 println!(
                     "  {:<16} {}{}",
@@ -256,6 +257,24 @@ fn run() -> Result<()> {
                     m.description,
                     if m.in_lineup { "" } else { "  [ablation only]" }
                 );
+                // capabilities + tunables, one indented line each
+                let t = m.traits();
+                println!(
+                    "  {:<16}   [{}{}]",
+                    "",
+                    if t.incremental { "incremental" } else { "from scratch" },
+                    if t.uses_current_owners {
+                        ", uses current owners"
+                    } else {
+                        ""
+                    }
+                );
+                for p in t.tunables {
+                    println!(
+                        "  {:<16}   {}={} in [{}, {}]: {}",
+                        "", p.key, p.default, p.min, p.max, p.description
+                    );
+                }
             }
             println!("\nstrategies (--strategy, DESIGN.md \u{a7}7):");
             for s in RepartitionStrategy::all() {
@@ -285,9 +304,10 @@ fn run() -> Result<()> {
                 "usage: phg-dlb <run|partition|compare|methods|info> [--key value ...]\n\
                  keys: problem (see `phg-dlb methods`) domain (auto|cube|cylinder|lshape)\n\
                  \x20     scale (explicit domains only) prerefine method nparts nsteps dt\n\
+                 \x20     (method accepts tunables: name:key=val,... e.g. AdaptiveRepart:itr=100)\n\
                  \x20     trigger (lambda[:t]|every[:n]|always|costbenefit[:h])\n\
                  \x20     weights (unit|dof|measured)\n\
-                 \x20     strategy (scratch|diffusive|auto)\n\
+                 \x20     strategy (scratch|diffusive|adaptive|auto)\n\
                  \x20     exec (virtual|threads) exec_threads (0 = one per core)\n\
                  \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
                  \x20     trace (Chrome-trace JSON path) metrics (text path, - = stdout)\n\

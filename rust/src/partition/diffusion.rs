@@ -1,6 +1,10 @@
-//! Diffusive incremental repartitioning (the ParMETIS `AdaptiveRepart`
-//! family; cf. Rettinger & Rüde's diffusive DLB and Fehling & Bangerth
-//! on repartitioning in generic hp-adaptive FEM).
+//! Diffusive incremental repartitioning: first-order load flow on the
+//! rank chain (cf. Rettinger & Rüde's diffusive DLB and Fehling &
+//! Bangerth on repartitioning in generic hp-adaptive FEM). This is the
+//! migration-minimal extreme of the repartitioning design space; the
+//! multilevel ParMETIS-style `AdaptiveRepart` lives in
+//! [`crate::partition::graph::adaptive`] and interpolates between this
+//! pole and the scratch partitioner's cut-optimal one.
 //!
 //! Instead of partitioning from scratch and remapping, diffusion takes
 //! the *current* distribution as input and moves load along the edges
@@ -26,8 +30,10 @@
 //! boundary, so no further collectives are required before the
 //! migration itself.
 
-use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+use super::{CommOp, MethodTraits, ParamSpec, PartitionInput, PartitionResult, Partitioner};
+use crate::format_err;
 use crate::mesh::{ElemId, TetMesh};
+use crate::util::error::Result;
 use crate::util::hash::{FxHashMap, FxHashSet};
 use std::collections::BTreeSet;
 
@@ -188,6 +194,38 @@ impl Default for DiffusionRepartitioner {
 impl Partitioner for DiffusionRepartitioner {
     fn name(&self) -> &'static str {
         "Diffusion"
+    }
+
+    fn traits(&self) -> MethodTraits {
+        MethodTraits {
+            incremental: true,
+            uses_current_owners: true,
+            tunables: &[
+                ParamSpec {
+                    key: "max_sweeps",
+                    description: "bound on first-order diffusion sweeps",
+                    min: 1.0,
+                    max: 1e9,
+                    default: 1024.0,
+                },
+                ParamSpec {
+                    key: "lambda_tol",
+                    description: "stop sweeping at imbalance 1 + lambda_tol",
+                    min: 1e-9,
+                    max: 1.0,
+                    default: 0.01,
+                },
+            ],
+        }
+    }
+
+    fn set_tunable(&mut self, key: &str, value: f64) -> Result<()> {
+        match key {
+            "max_sweeps" => self.max_sweeps = value.round() as usize,
+            "lambda_tol" => self.lambda_tol = value,
+            other => return Err(format_err!("method Diffusion has no tunable {other:?}")),
+        }
+        Ok(())
     }
 
     fn partition(&self, input: &PartitionInput) -> PartitionResult {

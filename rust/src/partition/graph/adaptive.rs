@@ -1,0 +1,741 @@
+//! Multilevel k-way **adaptive** repartitioning -- the
+//! Schloegel/Karypis `AdaptiveRepart` of the ParMETIS family
+//! (`ParMETIS_V3_AdaptiveRepart`), composed from the same
+//! coarsen/seed/refine phases as the scratch multilevel method but
+//! anchored to the *current* distribution:
+//!
+//! 1. **Owner-respecting coarsening** -- heavy-edge matching restricted
+//!    to same-owner pairs ([`owner_constrained_matching`]), so every
+//!    coarse vertex has a single well-defined owner and the current
+//!    partition projects exactly onto every level of the hierarchy. In
+//!    the SPMD formulation this makes the matching *communication-free*:
+//!    a rank only ever matches vertices it already owns.
+//! 2. **Owner-seeded initial partition** -- the coarsest partition *is*
+//!    the projected current ownership (no graph growing), so the method
+//!    starts from zero migration and pays only for the moves refinement
+//!    chooses to make.
+//! 3. **k-way boundary refinement at every level** with the combined
+//!    gain `itr * cut_gain + migration_gain` ([`kway_refine`]).
+//!
+//! ## The `itr` tradeoff
+//!
+//! ParMETIS exposes the cut-vs-migration tradeoff as `itr`
+//! (`ipc2redist`): the objective is `itr * edge_cut + TotalV`, i.e.
+//! one unit of edge cut is worth `itr` units of migrated weight. Move
+//! ordering under that objective is identical to the
+//! `cut_gain + migration_gain / itr` form (positive scaling preserves
+//! the sign and order of every gain), so the single parameter
+//! continuously interpolates between the two repartitioning extremes:
+//! `itr -> infinity` ignores migration and tracks the scratch
+//! multilevel cut, `itr -> 0` ignores the cut and degenerates toward
+//! diffusion-like minimal migration. The default (1000, ParMETIS's
+//! own) sits at the cut-focused end: migration stays small anyway
+//! because the owner-seeded start only migrates what refinement moves.
+//!
+//! ## SPMD cost shape
+//!
+//! Coarsening is communication-free (same-owner matching), the seed
+//! partition needs no gather/broadcast (every rank knows its own
+//! ownership), so the collective log is one `Allreduce` of the rank
+//! loads plus one small `Allreduce` per refinement pass per level (the
+//! part-load sync k-way refinement needs) and one boundary-sized
+//! `AllToAllV` per level (exchanging boundary-vertex moves). Compare
+//! the scratch multilevel log: per-level matching `AllToAllV`s over
+//! the whole halo plus the coarsest-partition gather/broadcast.
+
+use super::super::{
+    CommOp, MethodTraits, ParamSpec, PartitionInput, PartitionResult, Partitioner,
+};
+use super::CsrGraph;
+use crate::format_err;
+use crate::mesh::topology::LeafTopology;
+use crate::util::error::Result;
+use crate::util::rng::Pcg32;
+
+/// One round of heavy-edge matching restricted to same-owner pairs,
+/// followed by contraction. Returns the coarse graph, the fine->coarse
+/// vertex map, and the (well-defined) owner of every coarse vertex.
+///
+/// Matching never pairs vertices with different owners, so
+/// `owners[v] == coarse_owners[map[v]]` for every fine vertex `v`: the
+/// current partition projects exactly through every coarsening level.
+pub fn owner_constrained_matching(
+    g: &CsrGraph,
+    owners: &[u16],
+    rng: &mut Pcg32,
+) -> (CsrGraph, Vec<u32>, Vec<u16>) {
+    let n = g.n();
+    debug_assert_eq!(owners.len(), n);
+    const UNMATCHED: u32 = u32::MAX;
+    let mut mate = vec![UNMATCHED; n];
+
+    // random visit order (standard HEM: breaks grid artifacts)
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    for &v in &order {
+        let v = v as usize;
+        if mate[v] != UNMATCHED {
+            continue;
+        }
+        // heaviest incident edge to an unmatched *same-owner* neighbour
+        let mut best: Option<(u32, f64)> = None;
+        for (u, w) in g.neighbors(v) {
+            if u as usize == v
+                || mate[u as usize] != UNMATCHED
+                || owners[u as usize] != owners[v]
+            {
+                continue;
+            }
+            if best.map(|(_, bw)| w > bw).unwrap_or(true) {
+                best = Some((u, w));
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                mate[v] = u;
+                mate[u as usize] = v as u32;
+            }
+            None => {
+                mate[v] = v as u32; // matched with itself
+            }
+        }
+    }
+
+    // assign coarse ids
+    let mut map = vec![u32::MAX; n];
+    let mut nc = 0u32;
+    for v in 0..n {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        let m = mate[v] as usize;
+        map[v] = nc;
+        map[m] = nc; // m == v for self-matched
+        nc += 1;
+    }
+
+    // contract: sum vertex weights, carry owners, merge parallel edges
+    let ncz = nc as usize;
+    let mut vwgt = vec![0.0f64; ncz];
+    let mut coarse_owners = vec![0u16; ncz];
+    for v in 0..n {
+        vwgt[map[v] as usize] += g.vwgt[v];
+        coarse_owners[map[v] as usize] = owners[v]; // mates agree
+    }
+    let mut xadj = Vec::with_capacity(ncz + 1);
+    let mut adjncy: Vec<u32> = Vec::with_capacity(g.adjncy.len() / 2);
+    let mut adjwgt: Vec<f64> = Vec::with_capacity(g.adjncy.len() / 2);
+    xadj.push(0u32);
+
+    // coarse vertex -> its (up to two) fine vertices
+    let mut members: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); ncz];
+    for v in 0..n {
+        let c = map[v] as usize;
+        if members[c].0 == u32::MAX {
+            members[c].0 = v as u32;
+        } else if members[c].0 != v as u32 {
+            members[c].1 = v as u32;
+        }
+    }
+
+    let mut pos_of: Vec<u32> = vec![u32::MAX; ncz]; // coarse nbr -> slot in current row
+    let mut touched: Vec<u32> = Vec::with_capacity(32);
+    for c in 0..ncz {
+        let (a, b) = members[c];
+        for fv in [a, b] {
+            if fv == u32::MAX {
+                continue;
+            }
+            for (u, w) in g.neighbors(fv as usize) {
+                let cu = map[u as usize];
+                if cu as usize == c {
+                    continue; // internal edge vanishes
+                }
+                let slot = pos_of[cu as usize];
+                if slot == u32::MAX {
+                    pos_of[cu as usize] = adjncy.len() as u32;
+                    touched.push(cu);
+                    adjncy.push(cu);
+                    adjwgt.push(w);
+                } else {
+                    adjwgt[slot as usize] += w;
+                }
+            }
+        }
+        for &t in &touched {
+            pos_of[t as usize] = u32::MAX;
+        }
+        touched.clear();
+        xadj.push(adjncy.len() as u32);
+    }
+
+    (
+        CsrGraph {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt,
+        },
+        map,
+        coarse_owners,
+    )
+}
+
+/// k-way boundary refinement with the combined adaptive gain.
+///
+/// Moving `v` from part `a` to part `b` is scored
+/// `itr * cut_gain + migration_gain` where `cut_gain` is the k-way FM
+/// gain (edge weight to `b` minus edge weight internal to `a`) and
+/// `migration_gain` is `+vwgt` when the move brings `v` home to
+/// `owners[v]`, `-vwgt` when it evicts `v` from home, `0` between two
+/// foreign parts. Each pass walks candidates (boundary vertices plus
+/// everything in an overweight part) in descending-gain order with a
+/// vertex-id tiebreak, recomputes the gain at move time, and accepts a
+/// move when the target fits under `mean * (1 + epsilon)` and the gain
+/// is positive (or zero while balance strictly improves) -- or, forced,
+/// when the source part is overweight and the move strictly shrinks
+/// the source/target pairwise maximum. Returns the number of moves.
+pub fn kway_refine(
+    g: &CsrGraph,
+    parts: &mut [u16],
+    owners: &[u16],
+    nparts: usize,
+    itr: f64,
+    epsilon: f64,
+    passes: usize,
+) -> usize {
+    let n = g.n();
+    if n == 0 || nparts <= 1 {
+        return 0;
+    }
+    let total = g.total_vwgt();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mean = total / nparts as f64;
+    let max_load = mean * (1.0 + epsilon) + 1e-12;
+    let tol = 1e-12 * (1.0 + itr) * mean.max(1.0);
+
+    let mut loads = vec![0.0f64; nparts];
+    for v in 0..n {
+        loads[parts[v] as usize] += g.vwgt[v];
+    }
+
+    // per-part external connectivity of one vertex (scatter/reset)
+    let mut conn = vec![0.0f64; nparts];
+    let mut touched: Vec<u16> = Vec::with_capacity(16);
+
+    let least_loaded = |loads: &[f64]| -> u16 {
+        let mut best = 0usize;
+        for p in 1..loads.len() {
+            if loads[p] < loads[best] {
+                best = p;
+            }
+        }
+        best as u16
+    };
+
+    // best (target, gain) for v given current parts/loads; `spread`
+    // adds the globally least-loaded part to the candidate targets so
+    // overweight interiors can drain even without a boundary to it
+    let best_move = |v: usize,
+                     parts: &[u16],
+                     loads: &[f64],
+                     conn: &mut [f64],
+                     touched: &mut Vec<u16>,
+                     spread: bool|
+     -> Option<(u16, f64)> {
+        let a = parts[v];
+        let w = g.vwgt[v];
+        let own = owners[v];
+        let mut internal = 0.0f64;
+        for (u, ew) in g.neighbors(v) {
+            let pu = parts[u as usize];
+            if pu == a {
+                internal += ew;
+            } else {
+                if conn[pu as usize] == 0.0 && !touched.contains(&pu) {
+                    touched.push(pu);
+                }
+                conn[pu as usize] += ew;
+            }
+        }
+        if spread {
+            let ll = least_loaded(loads);
+            if ll != a && !touched.contains(&ll) {
+                touched.push(ll);
+            }
+        }
+        if own != a && !touched.contains(&own) {
+            touched.push(own);
+        }
+        let mut best: Option<(u16, f64)> = None;
+        for &b in touched.iter() {
+            let cut_gain = conn[b as usize] - internal;
+            let migration_gain = if b == own && a != own {
+                w
+            } else if a == own && b != own {
+                -w
+            } else {
+                0.0
+            };
+            let gain = itr * cut_gain + migration_gain;
+            let better = match best {
+                None => true,
+                // deterministic tiebreak: lowest part id wins ties
+                Some((bb, bg)) => gain > bg + 1e-15 || (gain >= bg - 1e-15 && b < bb),
+            };
+            if better {
+                best = Some((b, gain));
+            }
+        }
+        for &t in touched.iter() {
+            conn[t as usize] = 0.0;
+        }
+        touched.clear();
+        best
+    };
+
+    let mut moves = 0usize;
+    for _pass in 0..passes {
+        // candidates: boundary vertices, plus everything in an
+        // overweight part (so imbalance can drain through interiors)
+        let mut cand: Vec<(f64, u32)> = Vec::new();
+        for v in 0..n {
+            let a = parts[v] as usize;
+            let boundary = g.neighbors(v).any(|(u, _)| parts[u as usize] != parts[v]);
+            let over = loads[a] > max_load;
+            if !(boundary || over) {
+                continue;
+            }
+            if let Some((_, gain)) = best_move(v, parts, &loads, &mut conn, &mut touched, over)
+            {
+                cand.push((gain, v as u32));
+            }
+        }
+        // descending gain, vertex id as the deterministic tiebreak
+        cand.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+
+        let mut moved_any = false;
+        for &(_, v) in &cand {
+            let v = v as usize;
+            let a = parts[v];
+            let w = g.vwgt[v];
+            let over = loads[a as usize] > max_load;
+            // recompute at move time: earlier moves changed the gains
+            let (b, gain) =
+                match best_move(v, parts, &loads, &mut conn, &mut touched, over) {
+                    Some(m) => m,
+                    None => continue,
+                };
+            let fits = loads[b as usize] + w <= max_load;
+            let shrinks_pair_max = loads[b as usize] + w < loads[a as usize] - 1e-12;
+            let improves =
+                gain > tol || (gain >= -tol && shrinks_pair_max);
+            let forced = over && shrinks_pair_max;
+            if (fits && improves) || forced {
+                parts[v] = b;
+                loads[a as usize] -= w;
+                loads[b as usize] += w;
+                moves += 1;
+                moved_any = true;
+            }
+        }
+        if !moved_any {
+            break;
+        }
+    }
+    moves
+}
+
+/// The multilevel k-way adaptive repartitioner. Registered as method
+/// `AdaptiveRepart` and driven directly or by the `Adaptive`/`Auto`
+/// strategies of [`crate::dlb::RebalancePipeline`].
+pub struct AdaptiveRepart {
+    /// Cut-vs-migration tradeoff (ParMETIS `ipc2redist`): the move
+    /// objective is `itr * cut_gain + migration_gain`, so large values
+    /// chase the scratch cut and small values approach the diffusive
+    /// migration minimum.
+    pub itr: f64,
+    /// Stop coarsening when fewer vertices than this (clamped up to
+    /// `4 * nparts` so the coarsest level still resolves every part).
+    pub coarsen_to: usize,
+    /// Refinement passes per uncoarsening level (the coarsest level
+    /// runs extra passes, like the scratch multilevel method).
+    pub fm_passes: usize,
+    /// Per-part load tolerance: refinement balances to
+    /// `mean * (1 + epsilon)`.
+    pub epsilon: f64,
+    pub seed: u64,
+}
+
+impl AdaptiveRepart {
+    /// ParMETIS-like defaults (`itr = 1000`: cut-focused, the library's
+    /// own default for `ipc2redist`).
+    pub fn parmetis_like() -> Self {
+        Self {
+            itr: 1000.0,
+            coarsen_to: 64,
+            fm_passes: 6,
+            epsilon: 0.03,
+            seed: 20170712,
+        }
+    }
+
+    /// Builder: set the cut-vs-migration tradeoff.
+    pub fn with_itr(mut self, itr: f64) -> Self {
+        self.itr = itr;
+        self
+    }
+
+    /// Partition a raw dual graph given current owners (the mesh-free
+    /// core; `partition` wraps this). Returns the parts and the number
+    /// of coarsening levels built (for the collective log).
+    pub fn repartition_graph(
+        &self,
+        g: &CsrGraph,
+        owners: &[u16],
+        nparts: usize,
+        rng: &mut Pcg32,
+    ) -> (Vec<u16>, usize) {
+        let n = g.n();
+        let clamp = |o: u16| -> u16 { (o as usize).min(nparts - 1) as u16 };
+        if nparts <= 1 || n == 0 {
+            return (vec![0u16; n], 0);
+        }
+        let stop = self.coarsen_to.max(4 * nparts);
+
+        // build the hierarchy: (graph, owners) per level + maps down
+        let mut graphs: Vec<(CsrGraph, Vec<u16>)> =
+            vec![(g.clone(), owners.iter().map(|&o| clamp(o)).collect())];
+        let mut maps: Vec<Vec<u32>> = Vec::new();
+        while graphs.last().unwrap().0.n() > stop {
+            let (cur, own) = graphs.last().unwrap();
+            let (coarse, map, cowners) = owner_constrained_matching(cur, own, rng);
+            // coarsening stalled (no same-owner matchable edges left)
+            if coarse.n() as f64 > 0.95 * cur.n() as f64 {
+                break;
+            }
+            maps.push(map);
+            graphs.push((coarse, cowners));
+        }
+        let levels = graphs.len();
+
+        // owner-seeded coarsest partition: the projected current
+        // ownership IS the initial partition (no graph growing)
+        let (coarsest, cowners) = graphs.last().unwrap();
+        let mut parts: Vec<u16> = cowners.clone();
+        kway_refine(
+            coarsest,
+            &mut parts,
+            cowners,
+            nparts,
+            self.itr,
+            self.epsilon,
+            // generous budget at the coarsest level: this is where the
+            // owner-seeded partition gets balanced (cheap -- the graph
+            // is small), and the pass loop exits early on a fixpoint
+            (self.fm_passes * 4).max(32),
+        );
+
+        // uncoarsen: project up, refine against the *fine* owners so
+        // the migration term always prices real element moves
+        for lvl in (0..levels - 1).rev() {
+            let map = &maps[lvl];
+            let (fine, fowners) = &graphs[lvl];
+            let mut fine_parts = vec![0u16; fine.n()];
+            for v in 0..fine.n() {
+                fine_parts[v] = parts[map[v] as usize];
+            }
+            parts = fine_parts;
+            kway_refine(
+                fine,
+                &mut parts,
+                fowners,
+                nparts,
+                self.itr,
+                self.epsilon,
+                self.fm_passes,
+            );
+        }
+        (parts, levels)
+    }
+}
+
+impl Partitioner for AdaptiveRepart {
+    fn name(&self) -> &'static str {
+        "AdaptiveRepart"
+    }
+
+    fn traits(&self) -> MethodTraits {
+        MethodTraits {
+            incremental: true,
+            uses_current_owners: true,
+            tunables: &[
+                ParamSpec {
+                    key: "itr",
+                    description: "cut-vs-migration tradeoff (ParMETIS ipc2redist)",
+                    min: 0.0,
+                    max: 1e9,
+                    default: 1000.0,
+                },
+                ParamSpec {
+                    key: "fm_passes",
+                    description: "refinement passes per uncoarsening level",
+                    min: 1.0,
+                    max: 64.0,
+                    default: 6.0,
+                },
+                ParamSpec {
+                    key: "coarsen_to",
+                    description: "stop coarsening below this many vertices",
+                    min: 8.0,
+                    max: 1e6,
+                    default: 64.0,
+                },
+                ParamSpec {
+                    key: "epsilon",
+                    description: "per-part load tolerance of the refinement",
+                    min: 0.001,
+                    max: 0.5,
+                    default: 0.03,
+                },
+            ],
+        }
+    }
+
+    fn set_tunable(&mut self, key: &str, value: f64) -> Result<()> {
+        match key {
+            "itr" => self.itr = value,
+            "fm_passes" => self.fm_passes = value.round() as usize,
+            "coarsen_to" => self.coarsen_to = value.round() as usize,
+            "epsilon" => self.epsilon = value,
+            other => {
+                return Err(format_err!(
+                    "method AdaptiveRepart has no tunable {other:?}"
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    fn partition(&self, input: &PartitionInput) -> PartitionResult {
+        let p = input.nparts;
+        let topo = LeafTopology::build_for(input.mesh, input.leaves.to_vec());
+        let (xadj, adjncy) = topo.dual_graph_csr();
+        let adjwgt = vec![1.0; adjncy.len()];
+        let g = CsrGraph {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt: input.weights.to_vec(),
+        };
+        let mut rng = Pcg32::new(self.seed ^ (g.n() as u64).rotate_left(17));
+        let (parts, levels) = self.repartition_graph(&g, input.owners, p, &mut rng);
+
+        // SPMD collective log. Coarsening is communication-free (the
+        // matching never crosses an owner boundary, so every
+        // contraction is rank-local) and the seed partition needs no
+        // gather/bcast; what remains is the initial load Allreduce,
+        // one small load-sync Allreduce per refinement pass per level,
+        // and one boundary-move exchange per level.
+        let mut comm = vec![CommOp::Allreduce { bytes: p * 8 }];
+        let boundary_faces = {
+            let mut cut = 0usize;
+            for v in 0..g.n() {
+                for (u, _) in g.neighbors(v) {
+                    if (u as usize) > v && parts[v] != parts[u as usize] {
+                        cut += 1;
+                    }
+                }
+            }
+            cut
+        };
+        for _ in 0..levels.max(1) {
+            for _ in 0..self.fm_passes.max(1) {
+                comm.push(CommOp::Allreduce { bytes: p * 8 });
+            }
+            comm.push(CommOp::AllToAllV {
+                total_bytes: boundary_faces * 8,
+                max_msg: boundary_faces * 8 / p.max(1),
+            });
+        }
+        PartitionResult { parts, comm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Distribution;
+    use crate::partition::metrics::migration_volume;
+    use crate::partition::testutil::setup_mesh;
+    use crate::util::stats::imbalance;
+
+    fn grid_graph(nx: usize, ny: usize) -> CsrGraph {
+        let id = |x: usize, y: usize| (y * nx + x) as u32;
+        let mut xadj = vec![0u32];
+        let mut adjncy = Vec::new();
+        for y in 0..ny {
+            for x in 0..nx {
+                if x > 0 {
+                    adjncy.push(id(x - 1, y));
+                }
+                if x + 1 < nx {
+                    adjncy.push(id(x + 1, y));
+                }
+                if y > 0 {
+                    adjncy.push(id(x, y - 1));
+                }
+                if y + 1 < ny {
+                    adjncy.push(id(x, y + 1));
+                }
+                xadj.push(adjncy.len() as u32);
+            }
+        }
+        let adjwgt = vec![1.0; adjncy.len()];
+        CsrGraph {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt: vec![1.0; nx * ny],
+        }
+    }
+
+    #[test]
+    fn matching_never_crosses_owner_boundaries() {
+        let g = grid_graph(10, 10);
+        // vertical halves owned by ranks 0 / 1
+        let owners: Vec<u16> = (0..100).map(|v| if v % 10 < 5 { 0 } else { 1 }).collect();
+        let mut rng = Pcg32::new(5);
+        let (coarse, map, cowners) = owner_constrained_matching(&g, &owners, &mut rng);
+        assert_eq!(map.len(), 100);
+        // the fine partition projects exactly: every fine vertex's
+        // owner equals its coarse vertex's owner
+        for v in 0..100 {
+            assert_eq!(owners[v], cowners[map[v] as usize], "vertex {v}");
+        }
+        assert!((coarse.total_vwgt() - g.total_vwgt()).abs() < 1e-9);
+        assert!(coarse.n() >= 50, "matching halves at best");
+        assert!(coarse.n() < 100, "no edge matched at all");
+    }
+
+    #[test]
+    fn refine_balances_owner_seeded_partition() {
+        let g = grid_graph(12, 12);
+        // rank 0 owns 3/4 of the grid: heavy imbalance
+        let owners: Vec<u16> = (0..144).map(|v| if v % 12 < 9 { 0 } else { 1 }).collect();
+        let mut parts = owners.clone();
+        kway_refine(&g, &mut parts, &owners, 2, 1.0, 0.05, 40);
+        let mut loads = [0.0f64; 2];
+        for &p in &parts {
+            loads[p as usize] += 1.0;
+        }
+        let lam = imbalance(&loads);
+        assert!(lam <= 1.06, "lambda {lam} after refinement");
+    }
+
+    #[test]
+    fn itr_zero_moves_least_itr_large_cuts_least() {
+        let g = grid_graph(16, 16);
+        // 3 uneven vertical strips over 4 parts (part 3 empty-ish)
+        let owners: Vec<u16> =
+            (0..256).map(|v| ((v % 16) / 6).min(3) as u16).collect();
+        let unit = vec![1.0f64; 256];
+        let run = |itr: f64| {
+            let mut parts = owners.clone();
+            kway_refine(&g, &mut parts, &owners, 4, itr, 0.05, 40);
+            let mv = migration_volume(&owners, &parts, &unit, 4);
+            let mut cut = 0.0;
+            for v in 0..256 {
+                for (u, w) in g.neighbors(v) {
+                    if (u as usize) > v && parts[v] != parts[u as usize] {
+                        cut += w;
+                    }
+                }
+            }
+            (mv.total_v, cut)
+        };
+        let (v_low, cut_low) = run(0.0);
+        let (v_high, cut_high) = run(1e6);
+        assert!(
+            v_low <= v_high + 1e-9,
+            "itr=0 migrated more ({v_low}) than itr=1e6 ({v_high})"
+        );
+        assert!(
+            cut_high <= cut_low + 1e-9,
+            "itr=1e6 cut {cut_high} worse than cut-blind itr=0 cut {cut_low}"
+        );
+    }
+
+    #[test]
+    fn mesh_partition_balances_and_is_deterministic() {
+        let mut mesh = setup_mesh(2);
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(4).assign_blocks(&mut mesh, &leaves);
+        // skew: refine rank 0's block
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .filter(|&id| mesh.elem(id).owner == 0)
+            .collect();
+        mesh.refine(&marked);
+        let leaves = mesh.leaves_unordered();
+        let weights = vec![1.0f64; leaves.len()];
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, 4);
+
+        let a = AdaptiveRepart::parmetis_like();
+        let r1 = a.partition(&input);
+        let r2 = a.partition(&input);
+        assert_eq!(r1.parts, r2.parts, "fixed seed must be deterministic");
+
+        let mut loads = vec![0.0f64; 4];
+        for (i, &p) in r1.parts.iter().enumerate() {
+            loads[p as usize] += weights[i];
+        }
+        let lam = imbalance(&loads);
+        assert!(lam <= 1.0 + a.epsilon + 0.02, "lambda {lam}");
+        // owner-seeded: migration well below a full relabel
+        let mv = migration_volume(&owners, &r1.parts, &weights, 4);
+        let total: f64 = weights.iter().sum();
+        assert!(
+            mv.total_v < 0.8 * total,
+            "adaptive moved {} of {total}",
+            mv.total_v
+        );
+        // comm log: Allreduces + per-level AllToAllV, no Gather/Bcast
+        assert!(r1
+            .comm
+            .iter()
+            .all(|op| matches!(op, CommOp::Allreduce { .. } | CommOp::AllToAllV { .. })));
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let mut mesh = crate::mesh::generator::cube_mesh(1);
+        let leaves = mesh.leaves_unordered();
+        Distribution::new(2).assign_blocks(&mut mesh, &leaves);
+        let owners: Vec<u16> = leaves.iter().map(|&id| mesh.elem(id).owner).collect();
+        let a = AdaptiveRepart::parmetis_like();
+        let w = vec![1.0f64; leaves.len()];
+        // single part
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &w, &owners, 1);
+        let r = a.partition(&input);
+        assert!(r.parts.iter().all(|&x| x == 0));
+        // more parts than elements: still in range
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &w, &owners, 10);
+        let r = a.partition(&input);
+        assert!(r.parts.iter().all(|&x| (x as usize) < 10));
+        // zero weights
+        let zero = vec![0.0f64; leaves.len()];
+        let input = PartitionInput::from_mesh(&mesh, &leaves, &zero, &owners, 3);
+        let r = a.partition(&input);
+        assert_eq!(r.parts.len(), leaves.len());
+    }
+}

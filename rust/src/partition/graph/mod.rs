@@ -14,20 +14,26 @@
 //! ceil(k/2)/floor(k/2) with proportional weight targets), matching
 //! the structure of serial METIS's pmetis. The method controls the
 //! edge cut explicitly, so its partitions are the quality reference --
-//! but it is the slowest method in the lineup, and it is *not*
-//! incremental: small mesh changes can produce very different
-//! partitions (the partition-time oscillation the paper observes in
-//! Fig 3.2/3.3).
+//! but it is the slowest method in the lineup, and the *from-scratch*
+//! variant is not incremental: small mesh changes can produce very
+//! different partitions (the partition-time oscillation the paper
+//! observes in Fig 3.2/3.3). The [`adaptive`] module composes the same
+//! coarsen/refine phases into `AdaptiveRepart`, the owner-seeded
+//! multilevel repartitioner that *is* incremental.
 
+pub mod adaptive;
 mod bisect;
 mod coarsen;
 mod refine;
 
+pub use adaptive::AdaptiveRepart;
 pub(crate) use bisect::grow_bisection;
 pub(crate) use coarsen::heavy_edge_matching;
 pub(crate) use refine::fm_refine;
 
-use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+use super::{CommOp, MethodTraits, ParamSpec, PartitionInput, PartitionResult, Partitioner};
+use crate::format_err;
+use crate::util::error::Result;
 use crate::mesh::topology::LeafTopology;
 use crate::util::rng::Pcg32;
 
@@ -218,8 +224,44 @@ impl Partitioner for MultilevelGraph {
         "ParMETIS"
     }
 
-    fn incremental(&self) -> bool {
-        false
+    fn traits(&self) -> MethodTraits {
+        MethodTraits {
+            incremental: false,
+            uses_current_owners: false,
+            tunables: &[
+                ParamSpec {
+                    key: "coarsen_to",
+                    description: "stop coarsening below this many vertices",
+                    min: 8.0,
+                    max: 1e6,
+                    default: 64.0,
+                },
+                ParamSpec {
+                    key: "fm_passes",
+                    description: "FM passes per uncoarsening level",
+                    min: 1.0,
+                    max: 64.0,
+                    default: 6.0,
+                },
+                ParamSpec {
+                    key: "epsilon",
+                    description: "allowed imbalance per bisection",
+                    min: 0.001,
+                    max: 0.5,
+                    default: 0.03,
+                },
+            ],
+        }
+    }
+
+    fn set_tunable(&mut self, key: &str, value: f64) -> Result<()> {
+        match key {
+            "coarsen_to" => self.coarsen_to = value.round() as usize,
+            "fm_passes" => self.fm_passes = value.round() as usize,
+            "epsilon" => self.epsilon = value,
+            other => return Err(format_err!("method ParMETIS has no tunable {other:?}")),
+        }
+        Ok(())
     }
 
     fn partition(&self, input: &PartitionInput) -> PartitionResult {

@@ -14,7 +14,7 @@
 //! bisection descent) as the ablation baseline: identical partition
 //! *quality* family, strictly more work per repartition.
 
-use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+use super::{CommOp, MethodTraits, PartitionInput, PartitionResult, Partitioner};
 use crate::mesh::{TetMesh, NONE};
 use crate::util::hash::FxHashMap;
 
@@ -78,6 +78,11 @@ struct Task {
 impl Partitioner for MitchellRefinementTree {
     fn name(&self) -> &'static str {
         "Mitchell-RT"
+    }
+
+    // refinement-tree traversal: implicitly incremental, no tunables
+    fn traits(&self) -> MethodTraits {
+        MethodTraits::INCREMENTAL
     }
 
     #[allow(unused_assignments)] // straddle-descent keeps `acc` updated past the last read

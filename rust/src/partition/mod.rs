@@ -10,11 +10,14 @@
 //! * [`rcb`] / [`rib`] -- recursive coordinate / inertial bisection
 //!   (the Zoltan-style geometric baselines).
 //! * [`graph`] -- a multilevel k-way graph partitioner over the dual
-//!   graph (the ParMETIS stand-in).
-//! * [`diffusion`] -- diffusive incremental repartitioning from the
-//!   *current* distribution (the ParMETIS `AdaptiveRepart` family):
-//!   the migration-minimizing alternative the `Diffusive`/`Auto`
-//!   strategies of [`crate::dlb::RebalancePipeline`] run.
+//!   graph (the ParMETIS stand-in), plus the multilevel *adaptive*
+//!   repartitioner `AdaptiveRepart` (Schloegel/Karypis-style: owner-
+//!   respecting coarsening, owner-seeded initial partition, and k-way
+//!   refinement whose `itr` knob trades edge cut against migration).
+//! * [`diffusion`] -- first-order diffusive load flow on the rank
+//!   chain: the migration-minimal incremental extreme the `Diffusive`
+//!   strategy of [`crate::dlb::RebalancePipeline`] runs (and one pole
+//!   of the design space `AdaptiveRepart` interpolates).
 //! * [`metrics`] -- partition quality measures (imbalance, edge cut,
 //!   interface faces, TotalV/MaxV migration volumes).
 //!
@@ -33,7 +36,9 @@ pub mod rib;
 pub mod rtk;
 pub mod sfc;
 
+use crate::format_err;
 use crate::mesh::{ElemId, TetMesh};
+use crate::util::error::Result;
 
 /// A collective operation the SPMD algorithm performs, logged by the
 /// partitioners and priced by [`crate::dist::NetworkModel::cost`].
@@ -96,6 +101,51 @@ pub struct PartitionResult {
     pub comm: Vec<CommOp>,
 }
 
+/// One tunable knob of a partitioning method, declared statically in
+/// [`MethodTraits::tunables`] so [`crate::dlb::Registry`] can validate
+/// `name:key=val,...` method specs before construction-time surprises.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParamSpec {
+    /// Spelling in `--method name:key=val` specs.
+    pub key: &'static str,
+    /// One-line description (the `phg-dlb methods` listing).
+    pub description: &'static str,
+    /// Inclusive valid range. Integer-valued tunables declare integral
+    /// bounds and are rounded by the method's `set_tunable`.
+    pub min: f64,
+    pub max: f64,
+    /// The value the plain constructor uses.
+    pub default: f64,
+}
+
+/// Capabilities of a partitioning method, replacing the lone
+/// `incremental()` bool the trait used to carry: whether small mesh
+/// changes produce small partition changes, whether the method reads
+/// `PartitionInput::owners` (true incremental repartitioners), and the
+/// tunables `name:key=val` specs may set.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodTraits {
+    /// Small mesh changes yield small partition changes (geometric
+    /// methods and RTK implicitly; graph methods from scratch do not)
+    /// -- §1.
+    pub incremental: bool,
+    /// The method seeds from the *current* ownership in
+    /// `PartitionInput::owners` (diffusion, AdaptiveRepart) rather
+    /// than partitioning blind.
+    pub uses_current_owners: bool,
+    /// Knobs settable through `name:key=val,...` specs.
+    pub tunables: &'static [ParamSpec],
+}
+
+impl MethodTraits {
+    /// The common case: implicitly incremental, owner-blind, no knobs.
+    pub const INCREMENTAL: MethodTraits = MethodTraits {
+        incremental: true,
+        uses_current_owners: false,
+        tunables: &[],
+    };
+}
+
 /// The partitioning methods compared in the paper's §3. Instantiate
 /// them by name through [`crate::dlb::Registry`], the crate's single
 /// method table.
@@ -103,10 +153,16 @@ pub trait Partitioner: Send + Sync {
     /// Short name used in reports ("RTK", "PHG/HSFC", ...).
     fn name(&self) -> &'static str;
     fn partition(&self, input: &PartitionInput) -> PartitionResult;
-    /// Whether the method is implicitly incremental (geometric methods
-    /// and RTK are; multilevel graph partitioning is not) -- §1.
-    fn incremental(&self) -> bool {
-        true
+    /// Capabilities and tunables; see [`MethodTraits`].
+    fn traits(&self) -> MethodTraits {
+        MethodTraits::INCREMENTAL
+    }
+    /// Set a tunable declared in `traits().tunables`. The registry
+    /// validates the key and range against the [`ParamSpec`] first, so
+    /// implementations only translate key -> field.
+    fn set_tunable(&mut self, key: &str, value: f64) -> Result<()> {
+        let _ = value;
+        Err(format_err!("method {} has no tunable {key:?}", self.name()))
     }
 }
 

@@ -4,7 +4,7 @@
 //! implicitly incremental; quality is domain-dependent -- excellent on
 //! the paper's long cylinder (Table 1), mediocre elsewhere.
 
-use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+use super::{CommOp, MethodTraits, PartitionInput, PartitionResult, Partitioner};
 use crate::geometry::BBox;
 
 pub struct Rcb {
@@ -90,6 +90,11 @@ fn rcb_recurse(
 impl Partitioner for Rcb {
     fn name(&self) -> &'static str {
         "RCB"
+    }
+
+    // geometric: implicitly incremental, owner-blind, no tunables
+    fn traits(&self) -> MethodTraits {
+        MethodTraits::INCREMENTAL
     }
 
     fn partition(&self, input: &PartitionInput) -> PartitionResult {

@@ -4,7 +4,7 @@
 //! tilted geometry. The 3x3 symmetric eigenproblem is solved by Jacobi
 //! rotations (no linear-algebra crate in this environment).
 
-use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+use super::{CommOp, MethodTraits, PartitionInput, PartitionResult, Partitioner};
 
 pub struct Rib {
     _private: (),
@@ -152,6 +152,11 @@ fn rib_recurse(
 impl Partitioner for Rib {
     fn name(&self) -> &'static str {
         "RIB"
+    }
+
+    // geometric: implicitly incremental, owner-blind, no tunables
+    fn traits(&self) -> MethodTraits {
+        MethodTraits::INCREMENTAL
     }
 
     fn partition(&self, input: &PartitionInput) -> PartitionResult {

@@ -20,7 +20,7 @@
 //! each current rank are walked separately (in global DFS order), the
 //! scan is logged as a collective, then parts are assigned.
 
-use super::{CommOp, PartitionInput, PartitionResult, Partitioner};
+use super::{CommOp, MethodTraits, PartitionInput, PartitionResult, Partitioner};
 use crate::util::hash::FxHashMap;
 
 pub struct RefinementTree {
@@ -42,6 +42,11 @@ impl Default for RefinementTree {
 impl Partitioner for RefinementTree {
     fn name(&self) -> &'static str {
         "RTK"
+    }
+
+    // refinement-tree prefix sums: implicitly incremental, no tunables
+    fn traits(&self) -> MethodTraits {
+        MethodTraits::INCREMENTAL
     }
 
     fn partition(&self, input: &PartitionInput) -> PartitionResult {

@@ -17,7 +17,7 @@ pub mod hilbert;
 pub mod morton;
 
 use super::oned::{assign_parts, partition_1d};
-use super::{PartitionInput, PartitionResult, Partitioner};
+use super::{MethodTraits, PartitionInput, PartitionResult, Partitioner};
 use crate::geometry::BBox;
 use crate::mesh::{ElemId, TetMesh};
 
@@ -129,6 +129,12 @@ impl SfcPartitioner {
 impl Partitioner for SfcPartitioner {
     fn name(&self) -> &'static str {
         self.name
+    }
+
+    // SFC order is stable under local refinement: implicitly
+    // incremental, owner-blind, no tunables
+    fn traits(&self) -> MethodTraits {
+        MethodTraits::INCREMENTAL
     }
 
     fn partition(&self, input: &PartitionInput) -> PartitionResult {

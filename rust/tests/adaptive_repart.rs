@@ -1,0 +1,280 @@
+//! Subsystem tests for multilevel k-way adaptive repartitioning
+//! (`AdaptiveRepart`): the `itr` tradeoff's two limits (minimal
+//! migration vs scratch-quality cut), fixed-seed determinism through
+//! the registry and the pipeline, the owner-projection invariant of
+//! the restricted coarsening, and the `Auto` strategy's three-way
+//! modeled argmin.
+
+use phg_dlb::dist::Distribution;
+use phg_dlb::dlb::{RebalancePipeline, Registry, RepartitionStrategy};
+use phg_dlb::mesh::topology::LeafTopology;
+use phg_dlb::mesh::{generator, ElemId, TetMesh};
+use phg_dlb::partition::diffusion::DiffusionRepartitioner;
+use phg_dlb::partition::graph::adaptive::owner_constrained_matching;
+use phg_dlb::partition::graph::CsrGraph;
+use phg_dlb::partition::metrics::migration_volume;
+use phg_dlb::partition::{PartitionInput, Partitioner};
+use phg_dlb::util::rng::Pcg32;
+use phg_dlb::util::stats::imbalance;
+
+fn owners_of(mesh: &TetMesh, leaves: &[ElemId]) -> Vec<u16> {
+    leaves.iter().map(|&id| mesh.elem(id).owner).collect()
+}
+
+fn rank_loads(parts: &[u16], weights: &[f64], p: usize) -> Vec<f64> {
+    let mut l = vec![0.0; p];
+    for (&r, &w) in parts.iter().zip(weights) {
+        l[r as usize] += w;
+    }
+    l
+}
+
+fn cut_of(mesh: &TetMesh, leaves: &[ElemId], parts: &[u16]) -> usize {
+    LeafTopology::build_for(mesh, leaves.to_vec()).interface_faces(parts)
+}
+
+/// Mild *scattered* skew: every other rank refines every third of its
+/// elements once (same regime as tests/diffusion.rs).
+fn mild_scattered(nparts: usize) -> (TetMesh, Vec<ElemId>) {
+    let mut mesh = generator::cube_mesh(4);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    let marked: Vec<_> = mesh
+        .leaves_unordered()
+        .into_iter()
+        .enumerate()
+        .filter(|(i, id)| mesh.elem(*id).owner % 2 == 0 && i % 3 == 0)
+        .map(|(_, id)| id)
+        .collect();
+    mesh.refine(&marked);
+    let leaves = mesh.leaves_unordered();
+    (mesh, leaves)
+}
+
+/// Severe refinement front: one rank's block refined twice.
+fn refinement_front(nparts: usize) -> (TetMesh, Vec<ElemId>) {
+    let mut mesh = generator::cube_mesh(3);
+    let leaves = mesh.leaves_unordered();
+    Distribution::new(nparts).assign_blocks(&mut mesh, &leaves);
+    for _ in 0..2 {
+        let marked: Vec<_> = mesh
+            .leaves_unordered()
+            .into_iter()
+            .filter(|&id| mesh.elem(id).owner == 0)
+            .collect();
+        mesh.refine(&marked);
+    }
+    let leaves = mesh.leaves_unordered();
+    (mesh, leaves)
+}
+
+#[test]
+fn itr_zero_degenerates_toward_minimal_migration() {
+    // itr = 0 scores moves by migration alone: the only accepted moves
+    // drain overweight parts, so TotalV must not exceed the diffusive
+    // flow realization (which balances to the *tighter* lambda_tol =
+    // 0.01 < the refiner's epsilon = 0.03 and therefore moves more)
+    let nparts = 8;
+    let (mesh, leaves) = mild_scattered(nparts);
+    let weights = vec![1.0f64; leaves.len()];
+    let owners = owners_of(&mesh, &leaves);
+    let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+
+    let adaptive = Registry::create("AdaptiveRepart:itr=0").unwrap();
+    let a = adaptive.partition(&input);
+    let a_v = migration_volume(&owners, &a.parts, &weights, nparts).total_v;
+
+    let d = DiffusionRepartitioner::new().partition(&input);
+    let d_v = migration_volume(&owners, &d.parts, &weights, nparts).total_v;
+
+    assert!(
+        a_v <= d_v + 1e-9,
+        "itr=0 moved {a_v}, more than diffusion's {d_v}"
+    );
+    // and it still lands under the refiner's (looser) balance target
+    let lam = imbalance(&rank_loads(&a.parts, &weights, nparts));
+    assert!(lam <= 1.1, "itr=0 left lambda {lam}");
+}
+
+#[test]
+fn itr_large_tracks_scratch_cut_and_the_spec_string_changes_behavior() {
+    // the cut-focused limit: itr -> infinity ignores migration, so the
+    // refined cut must track the scratch multilevel partitioner's
+    let nparts = 8;
+    let (mesh, leaves) = mild_scattered(nparts);
+    let weights = vec![1.0f64; leaves.len()];
+    let owners = owners_of(&mesh, &leaves);
+    let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+
+    let scratch = Registry::create("ParMETIS").unwrap().partition(&input);
+    let s_cut = cut_of(&mesh, &leaves, &scratch.parts);
+
+    let hi = Registry::create("AdaptiveRepart:itr=1e9").unwrap().partition(&input);
+    let hi_cut = cut_of(&mesh, &leaves, &hi.parts);
+    // +2 faces of absolute slack so a near-zero scratch cut cannot
+    // turn the 1.2x ratio into an impossible bound
+    assert!(
+        hi_cut as f64 <= 1.2 * s_cut as f64 + 2.0,
+        "itr=1e9 cut {hi_cut} vs scratch cut {s_cut}"
+    );
+
+    // `--method AdaptiveRepart:itr=<x>` round-trips behaviorally: the
+    // two ends of the knob migrate and cut differently in the
+    // documented monotone directions
+    let lo = Registry::create("AdaptiveRepart:itr=0").unwrap().partition(&input);
+    let lo_v = migration_volume(&owners, &lo.parts, &weights, nparts).total_v;
+    let hi_v = migration_volume(&owners, &hi.parts, &weights, nparts).total_v;
+    let lo_cut = cut_of(&mesh, &leaves, &lo.parts);
+    assert!(
+        lo_v <= hi_v + 1e-9,
+        "itr=0 migrated {lo_v}, more than itr=1e9's {hi_v}"
+    );
+    assert!(
+        hi_cut <= lo_cut + 2,
+        "itr=1e9 cut {hi_cut} worse than cut-blind itr=0's {lo_cut}"
+    );
+}
+
+#[test]
+fn fixed_seed_is_deterministic_through_registry_and_pipeline() {
+    let nparts = 6;
+    let (mesh, leaves) = mild_scattered(nparts);
+    let weights = vec![1.0f64; leaves.len()];
+    let owners = owners_of(&mesh, &leaves);
+    let input = PartitionInput::from_mesh(&mesh, &leaves, &weights, &owners, nparts);
+
+    // same instance twice, and a second registry instance
+    let a = Registry::create("AdaptiveRepart").unwrap();
+    let r1 = a.partition(&input);
+    let r2 = a.partition(&input);
+    let r3 = Registry::create("AdaptiveRepart").unwrap().partition(&input);
+    assert_eq!(r1.parts, r2.parts);
+    assert_eq!(r1.parts, r3.parts);
+
+    // and end-to-end: two independent pipelines produce bit-identical
+    // adaptive rebalances (report and migrated ownership)
+    let run = || {
+        let pipe = RebalancePipeline::from_method("ParMETIS", nparts).unwrap();
+        let mut m = mesh.clone();
+        let rep = pipe.rebalance_as(RepartitionStrategy::Adaptive, &mut m, &leaves, &weights);
+        (rep, owners_of(&m, &leaves))
+    };
+    let (rep1, own1) = run();
+    let (rep2, own2) = run();
+    assert_eq!(own1, own2);
+    assert_eq!(rep1.method, "AdaptiveRepart");
+    assert!((rep1.lambda_after - rep2.lambda_after).abs() < 1e-12);
+    assert!((rep1.volume.total_v - rep2.volume.total_v).abs() < 1e-9);
+}
+
+#[test]
+fn owner_restricted_coarsening_projects_the_partition_at_every_level() {
+    let nparts = 6;
+    let (mesh, leaves) = mild_scattered(nparts);
+    let owners = owners_of(&mesh, &leaves);
+    let (xadj, adjncy) = LeafTopology::build_for(&mesh, leaves.clone()).dual_graph_csr();
+    let adjwgt = vec![1.0; adjncy.len()];
+    let vwgt = vec![1.0; leaves.len()];
+    let g = CsrGraph {
+        xadj,
+        adjncy,
+        adjwgt,
+        vwgt,
+    };
+    let total = g.total_vwgt();
+
+    let mut rng = Pcg32::new(42);
+    let mut cur = g;
+    let mut cur_owners = owners;
+    let mut levels = 0;
+    while cur.n() > 4 * nparts {
+        let (coarse, map, cowners) = owner_constrained_matching(&cur, &cur_owners, &mut rng);
+        // the invariant that makes the method adaptive: the current
+        // partition projects exactly onto every level
+        for (v, &o) in cur_owners.iter().enumerate() {
+            assert_eq!(
+                o, cowners[map[v] as usize],
+                "level {levels}: vertex {v} crossed an owner boundary"
+            );
+        }
+        assert!(
+            (coarse.total_vwgt() - total).abs() < 1e-9 * total,
+            "level {levels} lost vertex weight"
+        );
+        if coarse.n() as f64 > 0.95 * cur.n() as f64 {
+            break; // stalled: no same-owner matchable edges left
+        }
+        cur = coarse;
+        cur_owners = cowners;
+        levels += 1;
+    }
+    assert!(levels >= 2, "hierarchy too shallow: {levels} levels");
+}
+
+#[test]
+fn auto_picks_the_modeled_cheapest_of_all_three_strategies() {
+    // replicate the pipeline's argmin (candidates in ascending-
+    // migration tie order, strict <) from the public estimate API
+    let manual_argmin = |pipe: &RebalancePipeline,
+                         mesh: &TetMesh,
+                         leaves: &[ElemId],
+                         weights: &[f64],
+                         solve: f64,
+                         wall: f64|
+     -> RepartitionStrategy {
+        let mut best: Option<(RepartitionStrategy, f64)> = None;
+        for s in [
+            RepartitionStrategy::Diffusive,
+            RepartitionStrategy::Adaptive,
+            RepartitionStrategy::Scratch,
+        ] {
+            let (est, lam) = pipe.estimate_for(s, mesh, leaves, weights, solve, wall);
+            let total = est.rebalance_cost + solve * (lam - 1.0).max(0.0);
+            if best.map(|(_, b)| total < b).unwrap_or(true) {
+                best = Some((s, total));
+            }
+        }
+        best.unwrap().0
+    };
+
+    let nparts = 8;
+
+    // cell 1 -- mild scattered skew, no solve context: the short-haul
+    // flow makes diffusion the cheapest event
+    let (mesh, leaves) = mild_scattered(nparts);
+    let weights = vec![1.0f64; leaves.len()];
+    let pipe = RebalancePipeline::from_method("PHG/HSFC", nparts)
+        .unwrap()
+        .with_strategy(RepartitionStrategy::Auto);
+    let chosen = pipe.resolve_strategy(&mesh, &leaves, &weights, 0.0, 1e-3);
+    assert_eq!(chosen, manual_argmin(&pipe, &mesh, &leaves, &weights, 0.0, 1e-3));
+    assert_eq!(chosen, RepartitionStrategy::Diffusive, "mild cell");
+
+    // cell 2 -- severe front, starved sweep budget, cheap scratch
+    // wall: the diffusive residual is priced out and scratch wins
+    let (mesh, leaves) = refinement_front(nparts);
+    let weights = vec![1.0f64; leaves.len()];
+    let mut pipe = RebalancePipeline::from_method("PHG/HSFC", nparts)
+        .unwrap()
+        .with_strategy(RepartitionStrategy::Auto);
+    pipe.diffusion.max_sweeps = 1;
+    let chosen = pipe.resolve_strategy(&mesh, &leaves, &weights, 10.0, 1e-3);
+    assert_eq!(chosen, manual_argmin(&pipe, &mesh, &leaves, &weights, 10.0, 1e-3));
+    assert_eq!(chosen, RepartitionStrategy::Scratch, "front/cheap-wall cell");
+
+    // cell 3 -- same severe front, but the scratch wall is expensive
+    // and the adaptive EWMA is primed by a real adaptive rebalance:
+    // AdaptiveRepart is the only candidate that both restores balance
+    // (unlike the starved diffusion) and avoids the scratch wall
+    let mut pipe = RebalancePipeline::from_method("PHG/HSFC", nparts)
+        .unwrap()
+        .with_strategy(RepartitionStrategy::Auto);
+    pipe.diffusion.max_sweeps = 1;
+    assert!(pipe.adaptive_wall_estimate().is_none());
+    let mut primer = mesh.clone();
+    pipe.rebalance_as(RepartitionStrategy::Adaptive, &mut primer, &leaves, &weights);
+    assert!(pipe.adaptive_wall_estimate().is_some());
+    let chosen = pipe.resolve_strategy(&mesh, &leaves, &weights, 10.0, 10.0);
+    assert_eq!(chosen, manual_argmin(&pipe, &mesh, &leaves, &weights, 10.0, 10.0));
+    assert_eq!(chosen, RepartitionStrategy::Adaptive, "front/dear-wall cell");
+}
