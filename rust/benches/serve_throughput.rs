@@ -1,0 +1,126 @@
+//! Service-mode throughput: a mixed-scenario job batch through the
+//! serve daemon (jobs/s, p95 job wall) plus the checkpoint layer's
+//! write/restore cost on a refined driver.
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput [-- --quick] [--jobs N] [--workers N]
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::{arg_usize, median_time, quick_or, write_bench_json, BenchRow};
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::serve::{serve, JobSpec, JobState, ServeOptions};
+use phg_dlb::util::timer::Stopwatch;
+
+fn job(i: usize, steps: usize, max_elements: usize) -> JobSpec {
+    // rotate the registered scenarios so the pool runs a genuinely
+    // mixed tenancy, not one problem six times
+    let problem = ["helmholtz", "parabolic", "lshape"][i % 3];
+    let overrides = [
+        ("problem", problem.to_string()),
+        ("nparts", "4".to_string()),
+        ("max_elements", max_elements.to_string()),
+        ("theta_refine", "0.4".to_string()),
+        ("solver_tol", "1e-4".to_string()),
+        ("solver_max_iter", "400".to_string()),
+        ("dt", "1.5e-3".to_string()),
+    ]
+    .iter()
+    .map(|(k, v)| (k.to_string(), v.clone()))
+    .collect();
+    JobSpec {
+        id: format!("bench-{i}"),
+        overrides,
+        steps,
+        max_retries: 0,
+        resume_from: None,
+        drain_after: None,
+    }
+}
+
+fn driver_cfg() -> DriverConfig {
+    DriverConfig {
+        problem: "helmholtz".to_string(),
+        nparts: 4,
+        method: "PHG/HSFC".to_string(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
+        strategy: "scratch".to_string(),
+        exec: "virtual".to_string(),
+        exec_threads: 0,
+        lambda_trigger: 1.1,
+        theta_refine: 0.4,
+        theta_coarsen: 0.03,
+        max_elements: quick_or(40_000, 10_000),
+        solver: SolverOpts {
+            tol: 1e-4,
+            max_iter: 400,
+        },
+        use_pjrt: cfg!(feature = "pjrt"),
+        nsteps: 2,
+        dt: 1.5e-3,
+    }
+}
+
+fn main() {
+    let n_jobs = arg_usize("--jobs", quick_or(9, 6));
+    let workers = arg_usize("--workers", 2);
+    let steps = quick_or(3, 2);
+    let max_elements = quick_or(20_000, 6_000);
+
+    println!("== serve throughput: {n_jobs} jobs on {workers} workers ==\n");
+    let specs: Vec<JobSpec> = (0..n_jobs).map(|i| job(i, steps, max_elements)).collect();
+    let opts = ServeOptions {
+        workers,
+        checkpoint_dir: "out/bench_serve/ckpt".into(),
+        trace_dir: None,
+        drain_timeout_s: 0.0,
+        retry_base_ms: 1,
+    };
+    let sw = Stopwatch::start();
+    let summary = serve(specs, &opts).expect("serve batch");
+    let wall = sw.elapsed();
+
+    let done = summary.count(JobState::Done);
+    assert_eq!(done, n_jobs, "bench jobs must all complete:\n{}", summary.format_table());
+    let mut walls: Vec<f64> = summary.jobs.iter().map(|j| j.wall_s).collect();
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p95 = walls[((walls.len() as f64 * 0.95).ceil() as usize - 1).min(walls.len() - 1)];
+    let jobs_per_s = n_jobs as f64 / wall.max(1e-9);
+    println!("{}", summary.format_table());
+    println!("batch wall {wall:.3}s, {jobs_per_s:.2} jobs/s, p95 job wall {:.1}ms", p95 * 1e3);
+
+    // the checkpoint layer on a refined adaptive state: serialize,
+    // parse-and-validate, and the snapshot size itself
+    let mut d = AdaptiveDriver::for_scenario(driver_cfg()).expect("driver");
+    d.run();
+    let bytes = d.checkpoint_bytes();
+    let write_s = median_time(quick_or(9, 5), || {
+        std::hint::black_box(d.checkpoint_bytes());
+    });
+    let restore_s = median_time(quick_or(9, 5), || {
+        let r = AdaptiveDriver::restore_bytes(driver_cfg(), &bytes).expect("restore");
+        std::hint::black_box(r.steps_completed());
+    });
+    println!(
+        "checkpoint: {} bytes, write {:.2}ms, restore {:.2}ms",
+        bytes.len(),
+        write_s * 1e3,
+        restore_s * 1e3
+    );
+
+    let mut batch = BenchRow::new(format!("serve:w{workers}"));
+    batch.wall_ms = Some(wall * 1e3);
+    batch.extras.push(("jobs_per_s", jobs_per_s));
+    batch.extras.push(("p95_job_wall_ms", p95 * 1e3));
+    batch.extras.push(("jobs", n_jobs as f64));
+    let mut ckpt = BenchRow::new("checkpoint");
+    ckpt.wall_ms = Some(write_s * 1e3);
+    ckpt.extras.push(("checkpoint_write_ms", write_s * 1e3));
+    ckpt.extras.push(("checkpoint_restore_ms", restore_s * 1e3));
+    ckpt.extras.push(("checkpoint_bytes", bytes.len() as f64));
+    write_bench_json("serve", &[batch, ckpt]);
+}

@@ -62,6 +62,15 @@ impl Config {
         self.values.insert(key.to_string(), value.to_string());
     }
 
+    /// Apply pre-split `(key, value)` overrides in order (later pairs
+    /// win). The serve job model stores its `DriverConfig` overrides
+    /// this way (`serve::JobSpec::overrides`).
+    pub fn apply_pairs<K: AsRef<str>, V: ToString>(&mut self, pairs: &[(K, V)]) {
+        for (k, v) in pairs {
+            self.set(k.as_ref(), v.to_string());
+        }
+    }
+
     /// Whether the key was given (file or CLI), as opposed to an
     /// accessor falling back to its default.
     pub fn contains(&self, key: &str) -> bool {
@@ -178,6 +187,18 @@ mod tests {
         assert_eq!(rest, vec!["run"]);
         assert_eq!(c.get_usize("nparts", 0).unwrap(), 64);
         assert_eq!(c.get_str("method", ""), "RCB");
+    }
+
+    #[test]
+    fn apply_pairs_layers_job_overrides() {
+        // the serve path: JSONL overrides -> Config -> DriverConfig
+        let mut c = Config::new();
+        c.apply_pairs(&[("problem", "parabolic"), ("nparts", "8"), ("nparts", "4")]);
+        c.set("nsteps", 3usize);
+        let dc = c.driver_config().unwrap();
+        assert_eq!(dc.problem, "parabolic");
+        assert_eq!(dc.nparts, 4, "later pairs win");
+        assert_eq!(dc.nsteps, 3);
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Driver checkpoint/restore: the full adaptive state as one versioned
+//! binary snapshot (DESIGN.md §13).
+//!
+//! A checkpoint captures everything the next step reads: the
+//! refinement forest with ownership and root order (via
+//! `mesh::io::write_mesh`), the simulation clock, the current solution
+//! and its dof map (the transfer source for the next solve), the step
+//! counter, and every piece of learned DLB state -- measured-EWMA
+//! weights, the partitioner-wall EWMA feeding `CostBenefit`, and the
+//! adaptive repartitioner's wall EWMA feeding `Auto`'s argmin.
+//!
+//! Restore is `compose` + verbatim state injection: the fresh-start
+//! constructor's root sort and initial block assignment are skipped, so
+//! the restored driver sees exactly the mesh the checkpointed one did.
+//! Because every decision a step makes is a deterministic function of
+//! this state (the rank-ordered reduction rule, DESIGN.md §9.2), a
+//! resumed run reproduces the uninterrupted run bitwise -- asserted by
+//! `tests/serve_checkpoint.rs`.
+//!
+//! Framing: `MAGIC` (8 bytes), format version (u32), payload, then an
+//! FxHash checksum (u64) over everything before it. Truncation errors
+//! name the byte offset (see `mesh::io::SnapReader`); corruption that
+//! survives parsing is caught by the checksum.
+
+use super::{AdaptiveDriver, DriverConfig};
+use crate::dlb::{TriggerPolicy, WeightModel};
+use crate::fem::DofMap;
+use crate::mesh::io::{read_mesh, write_mesh, SnapReader, SnapWriter};
+use crate::scenario::ScenarioRegistry;
+use crate::util::error::{Context, Result};
+use crate::util::hash::FxHasher;
+use crate::{bail, format_err};
+use std::hash::Hasher;
+use std::path::Path;
+
+/// Leading bytes of every checkpoint file.
+pub const MAGIC: &[u8; 8] = b"PHGCKPT\0";
+/// Current format version. Bump on any layout change; readers reject
+/// other versions with an explicit error (no silent reinterpretation).
+pub const VERSION: u32 = 1;
+
+fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+impl AdaptiveDriver {
+    /// Serialize the full adaptive state to `path`. Valid at any step
+    /// boundary (including before the first step).
+    pub fn checkpoint(&self, path: &Path) -> Result<()> {
+        let bytes = self.checkpoint_bytes();
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// The checkpoint byte stream (see module docs for the framing).
+    pub fn checkpoint_bytes(&self) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        w.put_bytes(MAGIC);
+        w.put_u32(VERSION);
+        w.put_str(&self.cfg.problem);
+        w.put_len(self.cfg.nparts);
+        w.put_len(self.steps_completed());
+        w.put_f64(self.t);
+        write_mesh(&mut w, &self.mesh);
+        w.put_len(self.u.len());
+        for &x in &self.u {
+            w.put_f64(x);
+        }
+        match &self.dof {
+            None => w.put_u8(0),
+            Some(dof) => {
+                w.put_u8(1);
+                w.put_len(dof.dof_of_vertex.len());
+                for &d in &dof.dof_of_vertex {
+                    w.put_u32(d);
+                }
+                w.put_len(dof.vertex_of_dof.len());
+                for &v in &dof.vertex_of_dof {
+                    w.put_u32(v);
+                }
+                w.put_len(dof.on_boundary.len());
+                for &b in &dof.on_boundary {
+                    w.put_u8(b as u8);
+                }
+                w.put_len(dof.n_dofs);
+            }
+        }
+        w.put_f64(self.partition_wall_ewma);
+        w.put_f64(self.last_solve_parallel);
+        match self.pipeline.adaptive_wall_estimate() {
+            None => w.put_u8(0),
+            Some(est) => {
+                w.put_u8(1);
+                w.put_f64(est);
+            }
+        }
+        match self.weight_model.export_state() {
+            None => w.put_u8(0),
+            Some(state) => {
+                w.put_u8(1);
+                w.put_f64(state.alpha);
+                w.put_len(state.costs.len());
+                for (id, c) in &state.costs {
+                    w.put_u32(*id);
+                    w.put_f64(*c);
+                }
+            }
+        }
+        let sum = checksum(w.as_slice());
+        let mut bytes = w.into_bytes();
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    /// Rebuild a driver from a checkpoint written by
+    /// [`AdaptiveDriver::checkpoint`]. `cfg` supplies the policy
+    /// composition (method, trigger, executor, ...) and must name the
+    /// same problem and part count the snapshot was taken under.
+    pub fn restore(cfg: DriverConfig, path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::restore_bytes(cfg, &bytes)
+    }
+
+    /// [`AdaptiveDriver::restore`] from an in-memory byte stream.
+    pub fn restore_bytes(cfg: DriverConfig, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            bail!(
+                "checkpoint truncated at offset {}: not even a complete header",
+                bytes.len()
+            );
+        }
+        let (payload, tail) = bytes.split_at(bytes.len() - 8);
+        let mut stored = [0u8; 8];
+        stored.copy_from_slice(tail);
+        let stored = u64::from_le_bytes(stored);
+        let computed = checksum(payload);
+        if stored != computed {
+            bail!(
+                "checkpoint corrupt: checksum mismatch at offset {} \
+                 (stored {stored:#018x}, computed {computed:#018x})",
+                payload.len()
+            );
+        }
+        let mut r = SnapReader::new(payload);
+        let magic = r.take(MAGIC.len(), "magic")?;
+        if magic != MAGIC {
+            bail!("not a phg-dlb checkpoint (bad magic at offset 0)");
+        }
+        let version = r.get_u32("format version")?;
+        if version != VERSION {
+            bail!("unsupported checkpoint format version {version} (this build reads {VERSION})");
+        }
+        let problem = r.get_str("problem name")?;
+        if problem != cfg.problem {
+            bail!(
+                "checkpoint was taken for problem {problem:?} but the config names {:?}",
+                cfg.problem
+            );
+        }
+        let nparts = r.get_u64("nparts")? as usize;
+        if nparts != cfg.nparts {
+            bail!("checkpoint was taken with nparts {nparts} but the config names {}", cfg.nparts);
+        }
+        let steps = r.get_u64("steps completed")? as usize;
+        let t = r.get_f64("simulation clock")?;
+        let mesh = read_mesh(&mut r)?;
+        let nu = r.get_len(8, "solution length")?;
+        let mut u = Vec::with_capacity(nu);
+        for _ in 0..nu {
+            u.push(r.get_f64("solution value")?);
+        }
+        let dof = if r.get_u8("dof-map flag")? != 0 {
+            let ndv = r.get_len(4, "dof_of_vertex length")?;
+            let mut dof_of_vertex = Vec::with_capacity(ndv);
+            for _ in 0..ndv {
+                dof_of_vertex.push(r.get_u32("dof_of_vertex")?);
+            }
+            let nvd = r.get_len(4, "vertex_of_dof length")?;
+            let mut vertex_of_dof = Vec::with_capacity(nvd);
+            for _ in 0..nvd {
+                vertex_of_dof.push(r.get_u32("vertex_of_dof")?);
+            }
+            let nb = r.get_len(1, "on_boundary length")?;
+            let mut on_boundary = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                on_boundary.push(r.get_u8("on_boundary")? != 0);
+            }
+            let n_dofs = r.get_u64("n_dofs")? as usize;
+            if n_dofs != nvd || n_dofs != nu {
+                bail!(
+                    "checkpoint corrupt: dof map claims {n_dofs} dofs but carries {nvd} \
+                     vertex slots and a solution of length {nu}"
+                );
+            }
+            Some(DofMap {
+                dof_of_vertex,
+                vertex_of_dof,
+                on_boundary,
+                n_dofs,
+            })
+        } else {
+            None
+        };
+        let partition_wall_ewma = r.get_f64("partition wall EWMA")?;
+        let last_solve_parallel = r.get_f64("last solve parallel")?;
+        let adaptive_wall = if r.get_u8("adaptive-wall flag")? != 0 {
+            Some(r.get_f64("adaptive wall EWMA")?)
+        } else {
+            None
+        };
+        let weight_state = if r.get_u8("weight-state flag")? != 0 {
+            let alpha = r.get_f64("weight EWMA alpha")?;
+            let nc = r.get_len(12, "weight cost count")?;
+            let mut costs = Vec::with_capacity(nc);
+            for _ in 0..nc {
+                let id = r.get_u32("weight cost id")?;
+                let c = r.get_f64("weight cost value")?;
+                costs.push((id, c));
+            }
+            Some(crate::dlb::WeightState { alpha, costs })
+        } else {
+            None
+        };
+        if r.remaining() != 0 {
+            bail!(
+                "checkpoint corrupt: {} unread bytes after the payload at offset {}",
+                r.remaining(),
+                r.offset()
+            );
+        }
+
+        let scenario = ScenarioRegistry::create(&cfg.problem)?;
+        let mut d = Self::compose(mesh, cfg, scenario)?;
+        d.step_base = steps;
+        d.t = t;
+        d.u = u;
+        d.dof = dof;
+        d.partition_wall_ewma = partition_wall_ewma;
+        d.last_solve_parallel = last_solve_parallel;
+        d.trigger.advance_to(steps);
+        d.pipeline.restore_adaptive_wall_estimate(adaptive_wall);
+        if let Some(state) = &weight_state {
+            d.weight_model.import_state(state);
+        }
+        d.mesh
+            .check_invariants()
+            .map_err(|e| format_err!("restored mesh fails invariants: {e}"))?;
+        Ok(d)
+    }
+}

@@ -12,6 +12,7 @@
 //! the [`RebalancePipeline`] executes the paper's partition ->
 //! Oliker-Biswas remap -> migrate sequence (DESIGN.md §6).
 
+pub mod checkpoint;
 pub mod report;
 pub mod timeline;
 
@@ -120,6 +121,10 @@ pub struct AdaptiveDriver {
     /// current solution (dof vector) and its dof map, for transfer
     u: Vec<f64>,
     dof: Option<DofMap>,
+    /// steps completed before this process took over (nonzero only for
+    /// drivers built by `restore`): step numbering continues from here
+    /// so a resumed timeline lines up with the uninterrupted one
+    step_base: usize,
     /// EWMA of measured partitioner wall time; feeds the CostBenefit
     /// estimate (0 until the first rebalance)
     partition_wall_ewma: f64,
@@ -148,15 +153,6 @@ impl AdaptiveDriver {
         cfg: DriverConfig,
         scenario: Box<dyn Scenario>,
     ) -> Result<Self> {
-        let pipeline = RebalancePipeline::new(
-            Registry::create(&cfg.method)?,
-            NetworkModel::infiniband(cfg.nparts),
-            Distribution::new(cfg.nparts),
-        )
-        .with_strategy(RepartitionStrategy::parse(&cfg.strategy)?);
-        let trigger = trigger_by_name(&cfg.trigger, cfg.lambda_trigger)?;
-        let weight_model = weight_model_by_name(&cfg.weights)?;
-        let executor = executor_by_name(&cfg.exec, cfg.nparts, cfg.exec_threads)?;
         // the paper: order the initial mesh (tree roots) along an SFC
         // and maintain that order for the whole computation
         let leaves = mesh.leaves_unordered();
@@ -169,8 +165,29 @@ impl AdaptiveDriver {
         let key_of: std::collections::HashMap<ElemId, u64> =
             mesh.roots.iter().copied().zip(keys).collect();
         mesh.sort_roots_by_key(|r| key_of[&r]);
-        pipeline.dist.assign_blocks(&mut mesh, &leaves);
+        let mut driver = Self::compose(mesh, cfg, scenario)?;
+        driver
+            .pipeline
+            .dist
+            .assign_blocks(&mut driver.mesh, &leaves);
+        Ok(driver)
+    }
 
+    /// Shared tail of the fresh and restored constructors: build the
+    /// policy/executor composition around an already-prepared mesh.
+    /// Deliberately does NOT sort roots or assign an initial partition:
+    /// the restore path (`checkpoint` module) must keep the snapshot's
+    /// root order and owners verbatim.
+    fn compose(mesh: TetMesh, cfg: DriverConfig, scenario: Box<dyn Scenario>) -> Result<Self> {
+        let pipeline = RebalancePipeline::new(
+            Registry::create(&cfg.method)?,
+            NetworkModel::infiniband(cfg.nparts),
+            Distribution::new(cfg.nparts),
+        )
+        .with_strategy(RepartitionStrategy::parse(&cfg.strategy)?);
+        let trigger = trigger_by_name(&cfg.trigger, cfg.lambda_trigger)?;
+        let weight_model = weight_model_by_name(&cfg.weights)?;
+        let executor = executor_by_name(&cfg.exec, cfg.nparts, cfg.exec_threads)?;
         let runtime = if cfg.use_pjrt {
             Runtime::open_default().ok()
         } else {
@@ -189,6 +206,7 @@ impl AdaptiveDriver {
             t: 0.0,
             u: Vec::new(),
             dof: None,
+            step_base: 0,
             partition_wall_ewma: 0.0,
             last_solve_parallel: 0.0,
         })
@@ -326,7 +344,7 @@ impl AdaptiveDriver {
     /// loop's stop signal); time-dependent scenarios always continue
     /// and advance the clock by `dt`.
     pub fn step(&mut self) -> bool {
-        let step = self.timeline.records.len();
+        let step = self.step_base + self.timeline.records.len();
         let mut rec = StepRecord::new(step);
         rec.nparts = self.cfg.nparts;
         let time_dependent = self.scenario.time_dependent();
@@ -507,6 +525,14 @@ impl AdaptiveDriver {
     /// the cross-executor equivalence suite compares these.
     pub fn solution(&self) -> &[f64] {
         &self.u
+    }
+
+    /// Total adaptive steps this job has completed, counting steps run
+    /// before a checkpoint/restore cycle (`step_base`). The serve
+    /// runner loops on this against the job's step budget so a resumed
+    /// job finishes its original budget, not budget-plus-prefix.
+    pub fn steps_completed(&self) -> usize {
+        self.step_base + self.timeline.records.len()
     }
 }
 

@@ -41,5 +41,5 @@ pub use trigger::{
 };
 pub use weights::{
     dof_shares, weight_model_by_name, DofWeighted, Measured, Unit, WeightModel, WeightSpec,
-    WEIGHT_MODELS,
+    WeightState, WEIGHT_MODELS,
 };

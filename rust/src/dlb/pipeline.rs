@@ -121,6 +121,15 @@ impl RebalancePipeline {
         (bits != 0).then(|| f64::from_bits(bits))
     }
 
+    /// Restore a checkpointed adaptive-wall EWMA (`None` clears it to
+    /// the cold-start state). Part of the driver checkpoint surface
+    /// (DESIGN.md §13): without this, `Auto`'s three-way argmin would
+    /// restart cold on every resume.
+    pub fn restore_adaptive_wall_estimate(&self, estimate: Option<f64>) {
+        let bits = estimate.map_or(0, f64::to_bits);
+        self.adaptive_wall_ewma.store(bits, Ordering::Relaxed);
+    }
+
     fn note_adaptive_wall(&self, wall: f64) {
         let blended = match self.adaptive_wall_estimate() {
             Some(prev) => 0.5 * prev + 0.5 * wall,

@@ -66,6 +66,12 @@ pub trait TriggerPolicy: Send + Sync {
     fn needs_estimate(&self) -> bool {
         false
     }
+
+    /// Restore cadence state after a checkpoint restore: the policy
+    /// has already been polled once per step for `steps` completed
+    /// steps (the driver polls exactly once per adaptive step).
+    /// Stateless policies ignore it.
+    fn advance_to(&mut self, _steps: usize) {}
 }
 
 /// The paper's policy: fire when lambda exceeds a fixed threshold.
@@ -108,6 +114,10 @@ impl TriggerPolicy for AfterAdaptation {
     fn should_rebalance(&mut self, _ctx: &TriggerContext) -> bool {
         self.seen += 1;
         self.seen % self.interval == 0
+    }
+
+    fn advance_to(&mut self, steps: usize) {
+        self.seen = steps;
     }
 }
 
@@ -239,6 +249,28 @@ mod tests {
         let mut always = AfterAdaptation::new(1);
         assert!(always.should_rebalance(&ctx(1.0, 0.0, 0.0)));
         assert!(always.should_rebalance(&ctx(1.0, 0.0, 0.0)));
+    }
+
+    #[test]
+    fn advance_to_resumes_cadence_mid_cycle() {
+        // a fresh policy advanced to k steps fires exactly like one
+        // that was polled k times -- the checkpoint-restore contract
+        for k in 0..7 {
+            let mut polled = AfterAdaptation::new(3);
+            for i in 0..k {
+                polled.should_rebalance(&ctx(1.0 + i as f64, 0.0, 0.0));
+            }
+            let mut restored = AfterAdaptation::new(3);
+            restored.advance_to(k);
+            for i in 0..5 {
+                let c = ctx(1.0 + i as f64, 0.0, 0.0);
+                assert_eq!(polled.should_rebalance(&c), restored.should_rebalance(&c));
+            }
+        }
+        // stateless policies are unaffected
+        let mut l = LambdaThreshold { lambda: 1.2 };
+        l.advance_to(17);
+        assert!(l.should_rebalance(&ctx(1.3, 0.0, 0.0)));
     }
 
     #[test]

@@ -20,7 +20,17 @@
 use crate::bail;
 use crate::mesh::{ElemId, TetMesh, NONE};
 use crate::util::error::Result;
-use crate::util::hash::{FxHashMap, FxHashSet};
+use crate::util::hash::FxHashSet;
+use std::collections::BTreeMap;
+
+/// Learned weight-model state in checkpointable form: the EWMA factor
+/// plus the per-element cost entries sorted by `ElemId` (the canonical
+/// order the snapshot stores them in). See DESIGN.md §13.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightState {
+    pub alpha: f64,
+    pub costs: Vec<(ElemId, f64)>,
+}
 
 /// A pluggable notion of per-element computational load.
 pub trait WeightModel: Send + Sync {
@@ -38,6 +48,16 @@ pub trait WeightModel: Send + Sync {
     fn learns(&self) -> bool {
         false
     }
+
+    /// Export learned state for a checkpoint; `None` for stateless
+    /// models (nothing is stored and nothing needs restoring).
+    fn export_state(&self) -> Option<WeightState> {
+        None
+    }
+
+    /// Restore state previously produced by
+    /// [`WeightModel::export_state`]. Stateless models ignore it.
+    fn import_state(&mut self, _state: &WeightState) {}
 }
 
 /// Scale `w` so its mean is 1.0 (no-op for empty or all-zero input).
@@ -112,18 +132,24 @@ impl WeightModel for DofWeighted {
 /// (children are born on their parent's rank with their parent's cost
 /// profile); elements with no observed ancestor get the mean observed
 /// cost, so a cold start reproduces [`Unit`].
+///
+/// Costs live in a `BTreeMap` rather than a hash map on purpose: the
+/// mean in [`Measured::weights`] is a float sum over the map's
+/// iteration order, and resume-equivalence (DESIGN.md §13) needs that
+/// order -- hence the sum's rounding -- to be a pure function of the
+/// entries, not of the map's insertion history.
 #[derive(Debug, Clone)]
 pub struct Measured {
     /// EWMA smoothing factor in (0, 1]; 1.0 = keep only the latest.
     pub alpha: f64,
-    cost: FxHashMap<ElemId, f64>,
+    cost: BTreeMap<ElemId, f64>,
 }
 
 impl Measured {
     pub fn new() -> Self {
         Self {
             alpha: 0.5,
-            cost: FxHashMap::default(),
+            cost: BTreeMap::new(),
         }
     }
 
@@ -187,11 +213,11 @@ impl WeightModel for Measured {
         self.cost.retain(|id, _| live.contains(id));
         for (&id, &c) in leaves.iter().zip(costs) {
             match self.cost.entry(id) {
-                std::collections::hash_map::Entry::Occupied(mut e) => {
+                std::collections::btree_map::Entry::Occupied(mut e) => {
                     let v = e.get_mut();
                     *v = (1.0 - self.alpha) * *v + self.alpha * c;
                 }
-                std::collections::hash_map::Entry::Vacant(e) => {
+                std::collections::btree_map::Entry::Vacant(e) => {
                     e.insert(c);
                 }
             }
@@ -200,6 +226,18 @@ impl WeightModel for Measured {
 
     fn learns(&self) -> bool {
         true
+    }
+
+    fn export_state(&self) -> Option<WeightState> {
+        Some(WeightState {
+            alpha: self.alpha,
+            costs: self.cost.iter().map(|(&id, &c)| (id, c)).collect(),
+        })
+    }
+
+    fn import_state(&mut self, state: &WeightState) {
+        self.alpha = state.alpha;
+        self.cost = state.costs.iter().copied().collect();
     }
 }
 
@@ -369,6 +407,27 @@ mod tests {
             coarse.len(),
             "stale entries survived the prune"
         );
+    }
+
+    #[test]
+    fn measured_state_roundtrips_through_export_import() {
+        let mesh = generator::cube_mesh(1);
+        let leaves = mesh.leaves_unordered();
+        let mut m = Measured::new();
+        let costs: Vec<f64> = (0..leaves.len()).map(|i| 0.1 + i as f64).collect();
+        m.observe(&mesh, &leaves, &costs);
+        let state = m.export_state().unwrap();
+        assert_eq!(state.costs.len(), leaves.len());
+        let mut fresh = Measured::new();
+        fresh.import_state(&state);
+        assert_eq!(fresh.export_state().unwrap(), state);
+        let (a, b) = (m.weights(&mesh, &leaves), fresh.weights(&mesh, &leaves));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // stateless models export nothing
+        assert!(Unit.export_state().is_none());
+        assert!(DofWeighted.export_state().is_none());
     }
 
     #[test]

@@ -23,6 +23,9 @@
 //! Both executors run bit-identical arithmetic (the plan fixes every
 //! loop and reduction order), so `--exec` changes how fast the answer
 //! arrives and how honestly it is timed -- never the answer itself.
+//! That same determinism is what lets [`crate::serve`] multiplex many
+//! driver tenants over this machinery and still promise bitwise
+//! checkpoint/resume equivalence ([`crate::coordinator::checkpoint`]).
 
 pub mod assemble;
 pub mod ghost;

@@ -13,7 +13,10 @@
 //!   registry: [`dlb`]), the problem scenarios behind `--problem`
 //!   ([`scenario`]), the execution schedules behind `--exec`
 //!   ([`exec`]: virtual-SPMD vs real shared-memory threads),
-//!   the generic adaptive driver ([`coordinator`]), and structured
+//!   the generic adaptive driver ([`coordinator`]) with
+//!   checkpoint/restore ([`coordinator::checkpoint`]), the
+//!   many-tenant solver daemon behind `phg-dlb serve` ([`serve`]),
+//!   and structured
 //!   observability: phase tracing + metrics ([`obs`])
 //!   -- plus every substrate they
 //!   need: tet meshes with refinement forests ([`mesh`]), bisection
@@ -37,4 +40,5 @@ pub mod partition;
 pub mod remap;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod util;

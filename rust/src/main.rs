@@ -6,6 +6,7 @@
 //! phg-dlb run --problem lshape                     # scenario's own domain
 //! phg-dlb partition --domain cylinder --method PHG/HSFC --nparts 64
 //! phg-dlb compare --domain cylinder --nparts 32          # all methods
+//! phg-dlb serve --jobs jobs.jsonl --serve-workers 4      # service mode
 //! phg-dlb methods | info
 //! ```
 
@@ -206,6 +207,58 @@ fn cmd_compare(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    use phg_dlb::serve::{serve, signal, JobSpec, ServeOptions};
+
+    let jobs_path = cfg.get_str("jobs", "");
+    if jobs_path.is_empty() {
+        return Err(format_err!(
+            "serve needs --jobs <path.jsonl|-> (one JSON job object per line)"
+        ));
+    }
+    let text = if jobs_path == "-" {
+        use std::io::Read;
+        let mut buf = String::new();
+        std::io::stdin().read_to_string(&mut buf)?;
+        buf
+    } else {
+        std::fs::read_to_string(&jobs_path)?
+    };
+    let specs = JobSpec::parse_jsonl(&text)?;
+    let trace_dir = cfg.get_str("trace_dir", "out/serve");
+    let opts = ServeOptions {
+        workers: cfg.get_usize("serve_workers", 2)?,
+        checkpoint_dir: cfg.get_str("checkpoint_dir", "out/ckpt").into(),
+        trace_dir: (!trace_dir.is_empty()).then(|| trace_dir.into()),
+        drain_timeout_s: cfg.get_f64("drain_timeout", 0.0)?,
+        retry_base_ms: cfg.get_usize("retry_base_ms", 100)? as u64,
+    };
+    println!(
+        "# serve: {} jobs, {} workers, checkpoints -> {}",
+        specs.len(),
+        if opts.workers == 0 {
+            "auto".to_string()
+        } else {
+            opts.workers.to_string()
+        },
+        opts.checkpoint_dir.display()
+    );
+    signal::install();
+    let summary = serve(specs, &opts)?;
+    print!("{}", summary.format_table());
+    let metrics_path = cfg.get_str("metrics", "");
+    if !metrics_path.is_empty() {
+        let dump = obs::metrics().dump();
+        if metrics_path == "-" {
+            print!("{dump}");
+        } else {
+            std::fs::write(&metrics_path, &dump)?;
+            println!("metrics: {metrics_path}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     println!("phg-dlb {}", env!("CARGO_PKG_VERSION"));
     match Runtime::open_default() {
@@ -246,6 +299,7 @@ fn run() -> Result<()> {
         "run" => cmd_run(&cfg),
         "partition" => cmd_partition(&cfg),
         "compare" => cmd_compare(&cfg),
+        "serve" => cmd_serve(&cfg),
         "methods" => {
             // every pluggable registry, sorted or documentation order
             // + described, so CI log diffs and docs stay stable
@@ -301,7 +355,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: phg-dlb <run|partition|compare|methods|info> [--key value ...]\n\
+                "usage: phg-dlb <run|partition|compare|serve|methods|info> [--key value ...]\n\
                  keys: problem (see `phg-dlb methods`) domain (auto|cube|cylinder|lshape)\n\
                  \x20     scale (explicit domains only) prerefine method nparts nsteps dt\n\
                  \x20     (method accepts tunables: name:key=val,... e.g. AdaptiveRepart:itr=100)\n\
@@ -311,7 +365,10 @@ fn run() -> Result<()> {
                  \x20     exec (virtual|threads) exec_threads (0 = one per core)\n\
                  \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
                  \x20     trace (Chrome-trace JSON path) metrics (text path, - = stdout)\n\
-                 \x20     solver_tol solver_max_iter use_pjrt csv config"
+                 \x20     solver_tol solver_max_iter use_pjrt csv config\n\
+                 serve keys: jobs (JSONL path, - = stdin) serve_workers (0 = auto)\n\
+                 \x20     checkpoint_dir trace_dir (\"\" disables) drain_timeout (s)\n\
+                 \x20     retry_base_ms (backoff base; doubles per attempt)"
             );
             Ok(())
         }

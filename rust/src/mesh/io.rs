@@ -1,8 +1,19 @@
-//! Legacy-VTK export of the leaf mesh with per-element part ids --
-//! lets partitions be eyeballed in ParaView (used by the
-//! `partition_gallery` example).
+//! Mesh I/O: legacy-VTK export for eyeballing partitions, plus the
+//! binary snapshot substrate (`SnapWriter`/`SnapReader` and the full
+//! forest serializer) backing driver checkpoints (DESIGN.md §13).
+//!
+//! The snapshot format is little-endian and exact: every `f64` crosses
+//! the boundary as its IEEE bit pattern (`to_bits`/`from_bits`), never
+//! as text, so a restored mesh is bitwise-identical to the one that was
+//! saved. Allocation free lists are stored in their verbatim order --
+//! `alloc_elem`/`alloc_vertex` pop from them, so the order determines
+//! every future `ElemId`/`VertId` assignment and is part of the state.
 
-use super::TetMesh;
+use super::{ElemId, TetMesh, VertId, NONE};
+use crate::geometry::Vec3;
+use crate::util::error::Result;
+use crate::{bail, format_err};
+use crate::util::hash::FxHashMap;
 use std::io::Write;
 use std::path::Path;
 
@@ -64,6 +75,336 @@ pub fn write_vtk(
     Ok(())
 }
 
+/// Little-endian binary encoder for snapshot sections. Plain
+/// `Vec<u8>` underneath; the caller frames the stream (magic, version,
+/// checksum) -- see `coordinator::checkpoint`.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Lengths and counts travel as u64 regardless of host pointer width.
+    pub fn put_len(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Exact: the IEEE bit pattern, never a decimal round-trip.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_len(s.len());
+        self.put_bytes(s.as_bytes());
+    }
+}
+
+/// Offset-tracking decoder. Every read names what it wanted and the
+/// byte offset where the stream ran out, so a truncated or corrupted
+/// snapshot produces an actionable error instead of a panic.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Current byte offset into the snapshot.
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "snapshot truncated at offset {}: wanted {n} bytes for {what}, {} remain",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn get_u16(&mut self, what: &str) -> Result<u16> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn get_u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// Read a length/count and bound it by what the stream could still
+    /// hold (`min_elem` = smallest encoding of one element), so a
+    /// corrupted length field errors instead of attempting a huge
+    /// allocation.
+    pub fn get_len(&mut self, min_elem: usize, what: &str) -> Result<usize> {
+        let off = self.pos;
+        let n = self.get_u64(what)? as usize;
+        if n.saturating_mul(min_elem.max(1)) > self.remaining() {
+            bail!(
+                "snapshot corrupt at offset {off}: length {n} for {what} exceeds {} bytes remaining",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    pub fn get_f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64(what)?))
+    }
+
+    pub fn get_str(&mut self, what: &str) -> Result<String> {
+        let n = self.get_len(1, what)?;
+        let b = self.take(n, what)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| format_err!("snapshot corrupt: {what} is not UTF-8"))
+    }
+}
+
+/// Serialize the full refinement forest: every SoA arena array
+/// (including dead slots), root order, the edge-midpoint map (sorted by
+/// key for a canonical byte stream), and the allocation free lists in
+/// verbatim order. `scratch_leaves` is transient and not stored.
+pub fn write_mesh(w: &mut SnapWriter, mesh: &TetMesh) {
+    w.put_len(mesh.vertices.len());
+    for p in &mesh.vertices {
+        w.put_f64(p.x);
+        w.put_f64(p.y);
+        w.put_f64(p.z);
+    }
+    let n = mesh.everts.len();
+    w.put_len(n);
+    for ev in &mesh.everts {
+        for &v in ev {
+            w.put_u32(v);
+        }
+    }
+    for &t in &mesh.tags {
+        w.put_u8(t);
+    }
+    for &g in &mesh.generations {
+        w.put_u16(g);
+    }
+    for &o in &mesh.owners {
+        w.put_u16(o);
+    }
+    for &p in &mesh.parents {
+        w.put_u32(p);
+    }
+    for c in &mesh.children {
+        w.put_u32(c[0]);
+        w.put_u32(c[1]);
+    }
+    for &m in &mesh.mid_vertices {
+        w.put_u32(m);
+    }
+    for &d in &mesh.dead {
+        w.put_u8(d as u8);
+    }
+    w.put_len(mesh.roots.len());
+    for &r in &mesh.roots {
+        w.put_u32(r);
+    }
+    let mut edges: Vec<(u64, VertId)> = mesh.edge_mid.iter().map(|(&k, &v)| (k, v)).collect();
+    edges.sort_unstable();
+    w.put_len(edges.len());
+    for (k, v) in edges {
+        w.put_u64(k);
+        w.put_u32(v);
+    }
+    w.put_len(mesh.free_elems.len());
+    for &e in &mesh.free_elems {
+        w.put_u32(e);
+    }
+    w.put_len(mesh.free_verts.len());
+    for &v in &mesh.free_verts {
+        w.put_u32(v);
+    }
+    w.put_len(mesh.n_leaves);
+    w.put_u64(mesh.revision);
+}
+
+/// Inverse of [`write_mesh`]. Validates id ranges so a corrupted
+/// snapshot fails here rather than panicking deep in a leaf scan.
+pub fn read_mesh(r: &mut SnapReader) -> Result<TetMesh> {
+    let nv = r.get_len(24, "vertex count")?;
+    let mut vertices = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        let x = r.get_f64("vertex x")?;
+        let y = r.get_f64("vertex y")?;
+        let z = r.get_f64("vertex z")?;
+        vertices.push(Vec3::new(x, y, z));
+    }
+    let n = r.get_len(4, "element slot count")?;
+    let mut everts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut ev = [0u32; 4];
+        for v in &mut ev {
+            *v = r.get_u32("element vertex")?;
+        }
+        everts.push(ev);
+    }
+    let mut tags = Vec::with_capacity(n);
+    for _ in 0..n {
+        tags.push(r.get_u8("element tag")?);
+    }
+    let mut generations = Vec::with_capacity(n);
+    for _ in 0..n {
+        generations.push(r.get_u16("element generation")?);
+    }
+    let mut owners = Vec::with_capacity(n);
+    for _ in 0..n {
+        owners.push(r.get_u16("element owner")?);
+    }
+    let mut parents = Vec::with_capacity(n);
+    for _ in 0..n {
+        parents.push(r.get_u32("element parent")?);
+    }
+    let mut children = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = r.get_u32("element child")?;
+        let b = r.get_u32("element child")?;
+        children.push([a, b]);
+    }
+    let mut mid_vertices = Vec::with_capacity(n);
+    for _ in 0..n {
+        mid_vertices.push(r.get_u32("element mid-vertex")?);
+    }
+    let mut dead = Vec::with_capacity(n);
+    for _ in 0..n {
+        dead.push(r.get_u8("element dead flag")? != 0);
+    }
+    let nroots = r.get_len(4, "root count")?;
+    let mut roots = Vec::with_capacity(nroots);
+    for _ in 0..nroots {
+        roots.push(r.get_u32("root id")?);
+    }
+    let nedges = r.get_len(12, "edge-midpoint count")?;
+    let mut edge_mid = FxHashMap::default();
+    for _ in 0..nedges {
+        let k = r.get_u64("edge key")?;
+        let v = r.get_u32("edge midpoint")?;
+        edge_mid.insert(k, v);
+    }
+    let nfe = r.get_len(4, "free-element count")?;
+    let mut free_elems = Vec::with_capacity(nfe);
+    for _ in 0..nfe {
+        free_elems.push(r.get_u32("free element id")?);
+    }
+    let nfv = r.get_len(4, "free-vertex count")?;
+    let mut free_verts = Vec::with_capacity(nfv);
+    for _ in 0..nfv {
+        free_verts.push(r.get_u32("free vertex id")?);
+    }
+    // plain count, not a length prefix: no bytes follow it
+    let n_leaves = r.get_u64("leaf count")? as usize;
+    let revision = r.get_u64("mesh revision")?;
+
+    let elem_ok = |id: ElemId| id == NONE || (id as usize) < n;
+    let vert_ok = |id: VertId| id == NONE || (id as usize) < nv;
+    for i in 0..n {
+        if everts[i].iter().any(|&v| (v as usize) >= nv) {
+            bail!("snapshot corrupt: element {i} references vertex out of range");
+        }
+        if !elem_ok(parents[i]) || !elem_ok(children[i][0]) || !elem_ok(children[i][1]) {
+            bail!("snapshot corrupt: element {i} has tree link out of range");
+        }
+        if !vert_ok(mid_vertices[i]) {
+            bail!("snapshot corrupt: element {i} mid-vertex out of range");
+        }
+    }
+    if roots.iter().any(|&id| (id as usize) >= n) {
+        bail!("snapshot corrupt: root id out of range");
+    }
+    if free_elems.iter().any(|&id| (id as usize) >= n)
+        || free_verts.iter().any(|&id| (id as usize) >= nv)
+    {
+        bail!("snapshot corrupt: free-list id out of range");
+    }
+
+    Ok(TetMesh {
+        vertices,
+        everts,
+        tags,
+        generations,
+        owners,
+        parents,
+        children,
+        mid_vertices,
+        dead,
+        roots,
+        edge_mid,
+        free_elems,
+        free_verts,
+        n_leaves,
+        revision,
+        scratch_leaves: Vec::new(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +421,62 @@ mod tests {
         assert!(text.contains("CELLS 6 30"));
         assert!(text.contains("SCALARS part double 1"));
         std::fs::remove_file(&path).ok();
+    }
+
+    fn refined_mesh() -> TetMesh {
+        let mut m = cube_mesh(2);
+        let marks: Vec<ElemId> = m.leaves_unordered().into_iter().step_by(3).collect();
+        m.refine(&marks);
+        let marks: Vec<ElemId> = m.leaves_unordered().into_iter().step_by(5).collect();
+        m.refine(&marks);
+        m
+    }
+
+    #[test]
+    fn mesh_snapshot_roundtrips_bitwise() {
+        let m = refined_mesh();
+        let mut w = SnapWriter::new();
+        write_mesh(&mut w, &m);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let back = read_mesh(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(back.n_leaves(), m.n_leaves());
+        assert_eq!(back.roots, m.roots);
+        assert_eq!(back.revision(), m.revision());
+        assert_eq!(back.vertices.len(), m.vertices.len());
+        for (a, b) in back.vertices.iter().zip(&m.vertices) {
+            assert_eq!(a.x.to_bits(), b.x.to_bits());
+            assert_eq!(a.y.to_bits(), b.y.to_bits());
+            assert_eq!(a.z.to_bits(), b.z.to_bits());
+        }
+        let la = back.leaves_unordered();
+        let lb = m.leaves_unordered();
+        assert_eq!(la, lb);
+        for &id in &la {
+            assert_eq!(back.verts_of(id), m.verts_of(id));
+            assert_eq!(back.owner_of(id), m.owner_of(id));
+        }
+        back.check_invariants().unwrap();
+
+        // the snapshot encodes the same byte stream when re-serialized
+        let mut w2 = SnapWriter::new();
+        write_mesh(&mut w2, &back);
+        assert_eq!(w2.into_bytes(), bytes);
+    }
+
+    #[test]
+    fn truncated_snapshot_errors_name_the_offset() {
+        let m = refined_mesh();
+        let mut w = SnapWriter::new();
+        write_mesh(&mut w, &m);
+        let bytes = w.into_bytes();
+        let cut = bytes.len() / 2;
+        let mut r = SnapReader::new(&bytes[..cut]);
+        let err = read_mesh(&mut r).unwrap_err().to_string();
+        assert!(
+            err.contains("offset"),
+            "error should name the byte offset: {err}"
+        );
     }
 }

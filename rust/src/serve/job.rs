@@ -1,0 +1,413 @@
+//! The serve job model: specs, states, and the registry/scheduler.
+//!
+//! A [`JobSpec`] is one line of JSONL: a scenario plus `DriverConfig`
+//! overrides plus a step budget. The [`JobRegistry`] mirrors the
+//! `dlb::Registry` idiom -- one flat, inspectable table of everything
+//! the daemon knows -- and doubles as the scheduler: workers claim the
+//! first queued entry under one lock, so admission order is the spec
+//! order regardless of worker count.
+
+use crate::serve::json::{self, Json};
+use crate::util::error::Result;
+use crate::{bail, format_err};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Keys with daemon-level meaning; everything else in a job object is
+/// passed through as a `Config` override (`problem`, `nparts`, ...).
+const RESERVED: [&str; 5] = ["id", "steps", "retries", "resume", "drain_after"];
+
+/// One solve job: scenario + config overrides + step budget.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Unique name; also the stem of the job's trace/checkpoint files.
+    pub id: String,
+    /// `Config` overrides in the order the JSON object listed them.
+    pub overrides: Vec<(String, String)>,
+    /// Total adaptive steps to run (including steps completed before a
+    /// checkpoint when `resume_from` is set).
+    pub steps: usize,
+    /// Extra attempts after a failure (bounded retry with backoff).
+    pub max_retries: usize,
+    /// Resume from this checkpoint instead of a fresh driver.
+    pub resume_from: Option<PathBuf>,
+    /// Testing/ops hook: request a daemon drain after this many steps
+    /// of *this* job, so drain-and-checkpoint can be rehearsed
+    /// deterministically (no timers involved).
+    pub drain_after: Option<usize>,
+}
+
+impl JobSpec {
+    /// Parse one JSONL line (a JSON object).
+    pub fn from_json_line(line: &str, index: usize) -> Result<Self> {
+        let v = json::parse(line)?;
+        let pairs = match v {
+            Json::Obj(pairs) => pairs,
+            other => bail!("job {index}: expected a JSON object, got {other:?}"),
+        };
+        let mut spec = JobSpec {
+            id: format!("job-{index}"),
+            overrides: Vec::new(),
+            steps: 4,
+            max_retries: 0,
+            resume_from: None,
+            drain_after: None,
+        };
+        let mut steps_set = false;
+        for (key, val) in pairs {
+            match key.as_str() {
+                "id" => {
+                    spec.id = val
+                        .as_str()
+                        .ok_or_else(|| format_err!("job {index}: \"id\" must be a string"))?
+                        .to_string();
+                }
+                "steps" => {
+                    spec.steps = as_count(&val)
+                        .ok_or_else(|| format_err!("job {index}: bad \"steps\""))?;
+                    steps_set = true;
+                }
+                "retries" => {
+                    spec.max_retries = as_count(&val)
+                        .ok_or_else(|| format_err!("job {index}: bad \"retries\""))?;
+                }
+                "resume" => {
+                    let p = val
+                        .as_str()
+                        .ok_or_else(|| format_err!("job {index}: \"resume\" must be a path"))?;
+                    spec.resume_from = Some(PathBuf::from(p));
+                }
+                "drain_after" => {
+                    spec.drain_after = Some(
+                        as_count(&val)
+                            .ok_or_else(|| format_err!("job {index}: bad \"drain_after\""))?,
+                    );
+                }
+                _ => {
+                    let s = match &val {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(n) => {
+                            if n.fract() == 0.0 && n.abs() < 1e15 {
+                                format!("{}", *n as i64)
+                            } else {
+                                format!("{n}")
+                            }
+                        }
+                        Json::Bool(b) => b.to_string(),
+                        other => bail!(
+                            "job {index}: override {key:?} must be a scalar, got {other:?}"
+                        ),
+                    };
+                    // "nsteps" doubles as the step budget unless
+                    // "steps" says otherwise
+                    if key == "nsteps" && !steps_set {
+                        if let Ok(n) = s.parse::<usize>() {
+                            spec.steps = n;
+                        }
+                    }
+                    spec.overrides.push((key, s));
+                }
+            }
+        }
+        if spec.id.is_empty()
+            || !spec
+                .id
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.')
+        {
+            bail!(
+                "job {index}: id {:?} must be nonempty [A-Za-z0-9._-] (it names files)",
+                spec.id
+            );
+        }
+        Ok(spec)
+    }
+
+    /// Parse a whole JSONL document: one job object per line; blank
+    /// lines and `#` comment lines are skipped. Ids must be unique.
+    pub fn parse_jsonl(text: &str) -> Result<Vec<JobSpec>> {
+        let mut specs: Vec<JobSpec> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let spec = JobSpec::from_json_line(line, specs.len())
+                .map_err(|e| format_err!("jobs line {}: {e}", lineno + 1))?;
+            if specs.iter().any(|s| s.id == spec.id) {
+                bail!("jobs line {}: duplicate job id {:?}", lineno + 1, spec.id);
+            }
+            specs.push(spec);
+        }
+        Ok(specs)
+    }
+}
+
+fn as_count(v: &Json) -> Option<usize> {
+    match v.as_f64() {
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 1e9 => Some(n as usize),
+        _ => None,
+    }
+}
+
+/// Lifecycle of one job inside the daemon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One registry row: the spec plus everything observed about the job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Attempts started (1 on the first run; retries increment).
+    pub attempts: usize,
+    /// Order in which the scheduler first admitted this job.
+    pub admitted: Option<usize>,
+    pub error: Option<String>,
+    /// Where a drained (cancelled-but-resumable) job was checkpointed.
+    pub checkpoint: Option<PathBuf>,
+    pub steps_done: usize,
+    pub n_elements: usize,
+    pub n_dofs: usize,
+    pub l2_error: f64,
+    pub wall_s: f64,
+}
+
+/// The daemon's job table + deterministic scheduler (see module docs).
+pub struct JobRegistry {
+    rows: Mutex<Vec<JobRecord>>,
+    admissions: Mutex<usize>,
+}
+
+impl JobRegistry {
+    pub fn new(specs: Vec<JobSpec>) -> Self {
+        let rows = specs
+            .into_iter()
+            .map(|spec| JobRecord {
+                spec,
+                state: JobState::Queued,
+                attempts: 0,
+                admitted: None,
+                error: None,
+                checkpoint: None,
+                steps_done: 0,
+                n_elements: 0,
+                n_dofs: 0,
+                l2_error: 0.0,
+                wall_s: 0.0,
+            })
+            .collect();
+        Self {
+            rows: Mutex::new(rows),
+            admissions: Mutex::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Claim the first queued job (marks it running, counts the
+    /// attempt). Deterministic: spec order, under one lock.
+    pub fn claim_next(&self) -> Option<(usize, JobSpec)> {
+        let mut rows = self.rows.lock().unwrap();
+        let i = rows.iter().position(|r| r.state == JobState::Queued)?;
+        let row = &mut rows[i];
+        row.state = JobState::Running;
+        row.attempts += 1;
+        if row.admitted.is_none() {
+            let mut n = self.admissions.lock().unwrap();
+            row.admitted = Some(*n);
+            *n += 1;
+        }
+        Some((i, row.spec.clone()))
+    }
+
+    /// How many attempts job `i` has made so far.
+    pub fn attempts(&self, i: usize) -> usize {
+        self.rows.lock().unwrap()[i].attempts
+    }
+
+    pub fn complete(&self, i: usize, outcome: JobOutcome) {
+        self.finish(i, JobState::Done, None, None, outcome);
+    }
+
+    pub fn fail(&self, i: usize, error: String, outcome: JobOutcome) {
+        self.finish(i, JobState::Failed, Some(error), None, outcome);
+    }
+
+    /// Drained mid-flight: cancelled, but resumable from `checkpoint`.
+    pub fn suspend(&self, i: usize, checkpoint: PathBuf, outcome: JobOutcome) {
+        self.finish(i, JobState::Cancelled, None, Some(checkpoint), outcome);
+    }
+
+    /// Put a failed attempt back in the queue (bounded retry).
+    pub fn requeue(&self, i: usize, error: String) {
+        let mut rows = self.rows.lock().unwrap();
+        let row = &mut rows[i];
+        row.state = JobState::Queued;
+        row.error = Some(error);
+    }
+
+    /// Mark every still-queued job cancelled (drain: nothing new runs).
+    pub fn cancel_queued(&self) {
+        let mut rows = self.rows.lock().unwrap();
+        for row in rows.iter_mut() {
+            if row.state == JobState::Queued {
+                row.state = JobState::Cancelled;
+                if row.error.is_none() {
+                    row.error = Some("drained before starting".to_string());
+                }
+            }
+        }
+    }
+
+    fn finish(
+        &self,
+        i: usize,
+        state: JobState,
+        error: Option<String>,
+        checkpoint: Option<PathBuf>,
+        outcome: JobOutcome,
+    ) {
+        let mut rows = self.rows.lock().unwrap();
+        let row = &mut rows[i];
+        row.state = state;
+        if error.is_some() {
+            row.error = error;
+        }
+        row.checkpoint = checkpoint;
+        row.steps_done = outcome.steps_done;
+        row.n_elements = outcome.n_elements;
+        row.n_dofs = outcome.n_dofs;
+        row.l2_error = outcome.l2_error;
+        row.wall_s += outcome.wall_s;
+    }
+
+    pub fn snapshot(&self) -> Vec<JobRecord> {
+        self.rows.lock().unwrap().clone()
+    }
+
+    pub fn all_terminal(&self) -> bool {
+        self.rows
+            .lock()
+            .unwrap()
+            .iter()
+            .all(|r| r.state.is_terminal())
+    }
+}
+
+/// What one attempt of a job produced (folded into the registry row).
+#[derive(Debug, Clone, Default)]
+pub struct JobOutcome {
+    pub steps_done: usize,
+    pub n_elements: usize,
+    pub n_dofs: usize,
+    pub l2_error: f64,
+    pub wall_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_parsing_reserved_keys_and_overrides() {
+        let text = "\n# a comment\n\
+            {\"id\": \"a\", \"problem\": \"helmholtz\", \"steps\": 3, \"nparts\": 4}\n\
+            {\"problem\": \"parabolic\", \"nsteps\": 5, \"retries\": 2, \"dt\": 1.5e-3}\n";
+        let specs = JobSpec::parse_jsonl(text).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].id, "a");
+        assert_eq!(specs[0].steps, 3);
+        assert_eq!(
+            specs[0].overrides,
+            vec![
+                ("problem".to_string(), "helmholtz".to_string()),
+                ("nparts".to_string(), "4".to_string()),
+            ]
+        );
+        // nsteps doubles as the budget; integers stay integral
+        assert_eq!(specs[1].id, "job-1");
+        assert_eq!(specs[1].steps, 5);
+        assert_eq!(specs[1].max_retries, 2);
+        assert!(specs[1]
+            .overrides
+            .iter()
+            .any(|(k, v)| k == "dt" && v == "0.0015"));
+    }
+
+    #[test]
+    fn jsonl_rejects_bad_input_with_line_numbers() {
+        let err = JobSpec::parse_jsonl("{\"id\": \"x\"}\n{oops}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = JobSpec::parse_jsonl("{\"id\": \"x\"}\n{\"id\": \"x\"}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        let err = JobSpec::parse_jsonl("{\"id\": \"../evil\"}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("names files"), "{err}");
+        assert!(RESERVED.contains(&"steps"));
+    }
+
+    #[test]
+    fn registry_claims_in_spec_order_and_tracks_states() {
+        let specs = JobSpec::parse_jsonl(
+            "{\"id\": \"a\"}\n{\"id\": \"b\"}\n{\"id\": \"c\"}\n",
+        )
+        .unwrap();
+        let reg = JobRegistry::new(specs);
+        assert_eq!(reg.len(), 3);
+        let (i, s) = reg.claim_next().unwrap();
+        assert_eq!((i, s.id.as_str()), (0, "a"));
+        let (j, _) = reg.claim_next().unwrap();
+        assert_eq!(j, 1);
+        reg.complete(0, JobOutcome::default());
+        // a failed attempt goes back to the head of the queue
+        reg.requeue(1, "boom".to_string());
+        let (k, _) = reg.claim_next().unwrap();
+        assert_eq!(k, 1);
+        assert_eq!(reg.attempts(1), 2);
+        reg.fail(1, "boom".to_string(), JobOutcome::default());
+        assert!(!reg.all_terminal());
+        reg.cancel_queued();
+        assert!(reg.all_terminal());
+        let rows = reg.snapshot();
+        assert_eq!(rows[0].state, JobState::Done);
+        assert_eq!(rows[1].state, JobState::Failed);
+        assert_eq!(rows[2].state, JobState::Cancelled);
+        assert_eq!(rows[0].admitted, Some(0));
+        assert_eq!(rows[1].admitted, Some(1));
+        assert_eq!(rows[2].admitted, None);
+    }
+}

@@ -1,0 +1,257 @@
+//! Service mode: the driver as a long-running, many-tenant solver
+//! (ROADMAP item 4, DESIGN.md §13).
+//!
+//! A stream of [`JobSpec`]s (JSONL: scenario + `DriverConfig`
+//! overrides + step budget) is admitted in deterministic spec order
+//! onto a pool of worker threads; each job runs a full
+//! [`crate::coordinator::AdaptiveDriver`] on the shared `exec/`
+//! machinery. The daemon's contracts:
+//!
+//! * **isolation** -- a panicking or erroring job is marked failed
+//!   (with bounded retry + backoff first); the daemon keeps serving;
+//! * **drain** -- on shutdown signal or `--drain-timeout`, in-flight
+//!   jobs are checkpointed at the next step boundary (resumable
+//!   bitwise-identically, see `coordinator::checkpoint`) and queued
+//!   jobs are cancelled;
+//! * **observability** -- per-job Chrome-trace files + timeline CSVs,
+//!   `serve.*` metrics through [`crate::obs`], and a final
+//!   jobs-summary table in machine-greppable `key=value` form.
+
+pub mod job;
+pub mod json;
+pub mod runner;
+pub mod signal;
+
+pub use job::{JobOutcome, JobRecord, JobRegistry, JobSpec, JobState};
+
+use crate::obs;
+use crate::util::error::{Context, Result};
+use crate::{bail, format_err};
+use runner::RunOutcome;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Daemon configuration (the `phg-dlb serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Concurrent worker threads; 0 = one per available core, capped
+    /// by the job count.
+    pub workers: usize,
+    /// Where drained jobs write `<id>.ckpt` snapshots.
+    pub checkpoint_dir: PathBuf,
+    /// Per-job trace/timeline directory; `None` disables the files.
+    pub trace_dir: Option<PathBuf>,
+    /// Request a drain after this many seconds (0 = never). The CLI
+    /// also drains on SIGINT/SIGTERM via [`signal::install`].
+    pub drain_timeout_s: f64,
+    /// Base backoff before a retry attempt (doubles per attempt).
+    pub retry_base_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            checkpoint_dir: PathBuf::from("out/ckpt"),
+            trace_dir: Some(PathBuf::from("out/serve")),
+            drain_timeout_s: 0.0,
+            retry_base_ms: 100,
+        }
+    }
+}
+
+/// Final state of one serve run: the full registry table.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub jobs: Vec<JobRecord>,
+}
+
+impl ServeSummary {
+    pub fn count(&self, state: JobState) -> usize {
+        self.jobs.iter().filter(|j| j.state == state).count()
+    }
+
+    /// One `key=value` line per job plus a totals line -- greppable by
+    /// the CI serve smoke step.
+    pub fn format_table(&self) -> String {
+        let mut out = String::new();
+        for j in &self.jobs {
+            out.push_str(&format!(
+                "job {} state={} attempts={} steps={} elements={} dofs={} wall_ms={:.1}",
+                j.spec.id,
+                j.state.as_str(),
+                j.attempts,
+                j.steps_done,
+                j.n_elements,
+                j.n_dofs,
+                j.wall_s * 1e3,
+            ));
+            if let Some(e) = &j.error {
+                out.push_str(&format!(" error={e:?}"));
+            }
+            if let Some(p) = &j.checkpoint {
+                out.push_str(&format!(" checkpoint={}", p.display()));
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "serve: jobs={} done={} failed={} cancelled={}\n",
+            self.jobs.len(),
+            self.count(JobState::Done),
+            self.count(JobState::Failed),
+            self.count(JobState::Cancelled),
+        ));
+        out
+    }
+}
+
+/// Run the daemon over `specs` until every job reaches a terminal
+/// state (or a drain empties the queue). Returns the registry table;
+/// per-job failures are reported there, not as an `Err` (daemon-level
+/// problems -- empty job list, unwritable directories -- are errors).
+pub fn serve(specs: Vec<JobSpec>, opts: &ServeOptions) -> Result<ServeSummary> {
+    serve_with_drain(specs, opts, Arc::new(AtomicBool::new(false)))
+}
+
+/// [`serve`] with a caller-owned drain flag (set it from a signal
+/// handler, a test, or an embedding server to stop admitting jobs and
+/// checkpoint the in-flight ones).
+pub fn serve_with_drain(
+    specs: Vec<JobSpec>,
+    opts: &ServeOptions,
+    drain: Arc<AtomicBool>,
+) -> Result<ServeSummary> {
+    if specs.is_empty() {
+        bail!("serve: no jobs (empty JSONL)");
+    }
+    std::fs::create_dir_all(&opts.checkpoint_dir).with_context(|| {
+        format!("creating checkpoint dir {}", opts.checkpoint_dir.display())
+    })?;
+    let workers = if opts.workers == 0 {
+        crate::exec::available_threads().min(specs.len()).max(1)
+    } else {
+        opts.workers.min(specs.len())
+    };
+    let registry = Arc::new(JobRegistry::new(specs));
+    obs::metrics().counter_add("serve.jobs_submitted", registry.len() as u64);
+
+    let done = AtomicBool::new(false);
+    let deadline = (opts.drain_timeout_s > 0.0).then(|| {
+        std::time::Instant::now() + Duration::from_secs_f64(opts.drain_timeout_s)
+    });
+    std::thread::scope(|scope| {
+        // watchdog: folds the signal flag and the drain timeout into
+        // the shared drain flag, then exits with the workers
+        let watchdog = {
+            let drain = Arc::clone(&drain);
+            let done = &done;
+            scope.spawn(move || loop {
+                if done.load(Ordering::SeqCst) {
+                    break;
+                }
+                if signal::drain_requested() {
+                    drain.store(true, Ordering::SeqCst);
+                }
+                if let Some(deadline) = deadline {
+                    if std::time::Instant::now() >= deadline {
+                        drain.store(true, Ordering::SeqCst);
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            })
+        };
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let registry = Arc::clone(&registry);
+                let drain = Arc::clone(&drain);
+                scope.spawn(move || worker_loop(&registry, opts, &drain))
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("serve worker panicked outside isolation");
+        }
+        done.store(true, Ordering::SeqCst);
+        watchdog.join().expect("serve watchdog panicked");
+    });
+
+    let summary = ServeSummary {
+        jobs: registry.snapshot(),
+    };
+    if !registry.all_terminal() {
+        // can't happen: workers only exit on an empty queue or drain
+        return Err(format_err!("serve: non-terminal jobs after shutdown"));
+    }
+    Ok(summary)
+}
+
+fn worker_loop(registry: &JobRegistry, opts: &ServeOptions, drain: &AtomicBool) {
+    loop {
+        if drain.load(Ordering::SeqCst) {
+            // nothing new starts during a drain
+            registry.cancel_queued();
+            return;
+        }
+        let Some((i, spec)) = registry.claim_next() else {
+            return;
+        };
+        let run = runner::run_job(&spec, opts, drain);
+        match run.outcome {
+            RunOutcome::Completed => registry.complete(i, run.stats),
+            RunOutcome::Drained(path) => registry.suspend(i, path, run.stats),
+            RunOutcome::Error(e) => {
+                let attempts = registry.attempts(i);
+                if attempts <= spec.max_retries {
+                    let backoff = opts
+                        .retry_base_ms
+                        .saturating_mul(1 << (attempts - 1).min(4))
+                        .min(2_000);
+                    std::thread::sleep(Duration::from_millis(backoff));
+                    registry.requeue(i, e);
+                } else {
+                    registry.fail(i, e, run.stats);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_opts(tag: &str) -> ServeOptions {
+        let base = std::env::temp_dir().join(format!("phg_serve_{tag}_{}", std::process::id()));
+        ServeOptions {
+            workers: 2,
+            checkpoint_dir: base.join("ckpt"),
+            trace_dir: Some(base.join("trace")),
+            drain_timeout_s: 0.0,
+            retry_base_ms: 1,
+        }
+    }
+
+    #[test]
+    fn empty_job_list_is_a_daemon_error() {
+        let err = serve(Vec::new(), &temp_opts("empty")).unwrap_err().to_string();
+        assert!(err.contains("no jobs"), "{err}");
+    }
+
+    #[test]
+    fn summary_table_is_greppable() {
+        let specs =
+            JobSpec::parse_jsonl("{\"id\": \"t\", \"problem\": \"helmholtz\", \"steps\": 1}\n")
+                .unwrap();
+        let reg = JobRegistry::new(specs);
+        reg.claim_next().unwrap();
+        reg.fail(0, "synthetic".to_string(), JobOutcome::default());
+        let summary = ServeSummary {
+            jobs: reg.snapshot(),
+        };
+        let table = summary.format_table();
+        assert!(table.contains("job t state=failed attempts=1"), "{table}");
+        assert!(table.contains("error=\"synthetic\""), "{table}");
+        assert!(table.contains("serve: jobs=1 done=0 failed=1"), "{table}");
+    }
+}

@@ -1,0 +1,187 @@
+//! One job attempt, end to end: build (or restore) a driver, step it
+//! to the budget, checkpoint on drain, and survive anything it throws.
+//!
+//! Panic isolation is the serve contract: a panicking job (bad config,
+//! solver assertion, ...) is caught with `catch_unwind`, converted to
+//! an error string, and reported through the registry; the daemon and
+//! its other tenants keep running.
+
+use crate::config::Config;
+use crate::coordinator::AdaptiveDriver;
+use crate::obs;
+use crate::serve::job::{JobOutcome, JobSpec};
+use crate::serve::json::escape;
+use crate::serve::ServeOptions;
+use crate::util::error::{Context, Result};
+use crate::util::timer::Stopwatch;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// How one attempt ended.
+pub enum RunOutcome {
+    Completed,
+    /// Drained at a step boundary; resumable from this checkpoint.
+    Drained(PathBuf),
+    Error(String),
+}
+
+pub struct JobRun {
+    pub outcome: RunOutcome,
+    pub stats: JobOutcome,
+}
+
+/// Per-step record kept for the job's private trace file (the global
+/// tracer is a singleton; concurrent tenants each get their own file
+/// instead of interleaving one).
+struct StepEvent {
+    step: usize,
+    ts_us: u64,
+    dur_us: u64,
+    n_elements: usize,
+    n_dofs: usize,
+}
+
+/// Run one attempt of `spec`. Never panics: job panics become
+/// `RunOutcome::Error`.
+pub fn run_job(spec: &JobSpec, opts: &ServeOptions, drain: &AtomicBool) -> JobRun {
+    let sw = Stopwatch::start();
+    let result = catch_unwind(AssertUnwindSafe(|| run_job_inner(spec, opts, drain)));
+    let wall_s = sw.elapsed();
+    let mut run = match result {
+        Ok(Ok(run)) => run,
+        Ok(Err(e)) => JobRun {
+            outcome: RunOutcome::Error(format!("{e}")),
+            stats: JobOutcome::default(),
+        },
+        Err(payload) => JobRun {
+            outcome: RunOutcome::Error(format!("panicked: {}", panic_message(&payload))),
+            stats: JobOutcome::default(),
+        },
+    };
+    run.stats.wall_s = wall_s;
+    let m = obs::metrics();
+    m.observe("serve.job_wall_s", wall_s);
+    match &run.outcome {
+        RunOutcome::Completed => m.counter_add("serve.jobs_completed", 1),
+        RunOutcome::Drained(_) => m.counter_add("serve.jobs_drained", 1),
+        RunOutcome::Error(_) => m.counter_add("serve.job_errors", 1),
+    }
+    run
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+fn run_job_inner(spec: &JobSpec, opts: &ServeOptions, drain: &AtomicBool) -> Result<JobRun> {
+    let mut cfg = Config::new();
+    cfg.apply_pairs(&spec.overrides);
+    cfg.set("nsteps", spec.steps);
+    let driver_cfg = cfg.driver_config()?;
+    let mut driver = match &spec.resume_from {
+        Some(path) => AdaptiveDriver::restore(driver_cfg, path)?,
+        None => AdaptiveDriver::for_scenario(driver_cfg)?,
+    };
+
+    let sw = Stopwatch::start();
+    let mut events: Vec<StepEvent> = Vec::new();
+    let mut drained: Option<PathBuf> = None;
+    while driver.steps_completed() < spec.steps {
+        if drain.load(Ordering::SeqCst) {
+            let path = opts.checkpoint_dir.join(format!("{}.ckpt", spec.id));
+            driver.checkpoint(&path)?;
+            drained = Some(path);
+            break;
+        }
+        let t0 = sw.elapsed();
+        let more = driver.step();
+        let t1 = sw.elapsed();
+        if let Some(rec) = driver.timeline.records.last() {
+            events.push(StepEvent {
+                step: rec.step,
+                ts_us: (t0 * 1e6) as u64,
+                dur_us: ((t1 - t0) * 1e6) as u64,
+                n_elements: rec.n_elements,
+                n_dofs: rec.n_dofs,
+            });
+        }
+        // the per-job drain rehearsal hook (see JobSpec::drain_after):
+        // counts steps of this attempt, not the pre-checkpoint prefix
+        if let Some(after) = spec.drain_after {
+            if driver.timeline.records.len() >= after {
+                drain.store(true, Ordering::SeqCst);
+            }
+        }
+        if !more {
+            break;
+        }
+    }
+
+    let last = driver.timeline.records.last();
+    let stats = JobOutcome {
+        steps_done: driver.steps_completed(),
+        n_elements: last.map_or(0, |r| r.n_elements),
+        n_dofs: last.map_or(0, |r| r.n_dofs),
+        l2_error: last.map_or(0.0, |r| r.l2_error),
+        wall_s: 0.0, // stamped by run_job from the attempt wall
+    };
+    record_job_metrics(&stats);
+    if let Some(dir) = &opts.trace_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        let trace_path = dir.join(format!("job-{}.json", spec.id));
+        write_trace(&trace_path, spec, &events, drained.is_some())?;
+        let csv_path = dir.join(format!("job-{}.csv", spec.id));
+        std::fs::write(&csv_path, driver.timeline.to_csv())
+            .with_context(|| format!("writing {}", csv_path.display()))?;
+    }
+    let outcome = match drained {
+        Some(path) => RunOutcome::Drained(path),
+        None => RunOutcome::Completed,
+    };
+    Ok(JobRun { outcome, stats })
+}
+
+fn record_job_metrics(stats: &JobOutcome) {
+    let m = obs::metrics();
+    m.observe("serve.job_steps", stats.steps_done as f64);
+    m.observe("serve.job_elements", stats.n_elements as f64);
+}
+
+/// Chrome-trace-format JSON (`{"traceEvents": [...]}`), one file per
+/// job: a lifecycle span plus one "X" event per adaptive step.
+fn write_trace(
+    path: &std::path::Path,
+    spec: &JobSpec,
+    events: &[StepEvent],
+    drained: bool,
+) -> Result<()> {
+    let total_us = events.last().map_or(0, |e| e.ts_us + e.dur_us);
+    let mut out = String::new();
+    out.push_str("{\"traceEvents\":[\n");
+    out.push_str(&format!(
+        "{{\"name\":\"job:{}\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":0,\"dur\":{},\
+         \"pid\":1,\"tid\":0,\"args\":{{\"steps\":{},\"drained\":{}}}}}",
+        escape(&spec.id),
+        total_us.max(1),
+        events.len(),
+        drained
+    ));
+    for e in events {
+        out.push_str(&format!(
+            ",\n{{\"name\":\"step {}\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":1,\"tid\":0,\"args\":{{\"n_elements\":{},\"n_dofs\":{}}}}}",
+            e.step, e.ts_us, e.dur_us, e.n_elements, e.n_dofs
+        ));
+    }
+    out.push_str("\n]}\n");
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}

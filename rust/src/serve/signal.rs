@@ -1,0 +1,40 @@
+//! Shutdown-signal wiring for the daemon: SIGINT/SIGTERM set a global
+//! drain flag; the serve loop polls it and drains gracefully
+//! (checkpointing in-flight jobs) instead of dying mid-step.
+//!
+//! The crate is dependency-free, so this registers handlers through
+//! libc's `signal(2)` directly (one tiny extern declaration instead of
+//! a signal-handling crate). The handler body is async-signal-safe: a
+//! single atomic store.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set once a shutdown signal arrives; [`crate::serve::serve`] folds
+/// it into its drain flag. Public so embedders can poll it too.
+pub static DRAIN_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" fn mark_drain(_signum: i32) {
+    DRAIN_REQUESTED.store(true, Ordering::SeqCst);
+}
+
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+}
+
+/// Install SIGINT/SIGTERM handlers that request a drain. Idempotent.
+/// Called by the `phg-dlb serve` CLI entry point only -- library users
+/// (and tests) pass their own drain flag instead.
+pub fn install() {
+    unsafe {
+        signal(SIGINT, mark_drain);
+        signal(SIGTERM, mark_drain);
+    }
+}
+
+/// Whether a shutdown signal has been observed.
+pub fn drain_requested() -> bool {
+    DRAIN_REQUESTED.load(Ordering::SeqCst)
+}

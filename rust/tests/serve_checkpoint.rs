@@ -1,0 +1,400 @@
+//! Service-mode acceptance: checkpoint/restore is bitwise resume
+//! equivalence (DESIGN.md §13), snapshots are version-tagged with
+//! offset-naming corruption errors, and the serve daemon runs many
+//! tenants to correct terminal states -- surviving a panicking job and
+//! draining resumably.
+
+use phg_dlb::coordinator::checkpoint::{MAGIC, VERSION};
+use phg_dlb::coordinator::timeline::StepRecord;
+use phg_dlb::coordinator::{AdaptiveDriver, DriverConfig};
+use phg_dlb::dlb::WeightModel;
+use phg_dlb::fem::SolverOpts;
+use phg_dlb::scenario::SCENARIOS;
+use phg_dlb::serve::json::{self, Json};
+use phg_dlb::serve::{serve, JobSpec, JobState, ServeOptions};
+use phg_dlb::util::hash::FxHasher;
+use std::hash::Hasher;
+use std::path::PathBuf;
+
+fn cfg(problem: &str, exec: &str) -> DriverConfig {
+    DriverConfig {
+        problem: problem.to_string(),
+        nparts: 4,
+        method: "PHG/HSFC".to_string(),
+        trigger: "lambda".to_string(),
+        weights: "unit".to_string(),
+        strategy: "scratch".to_string(),
+        exec: exec.to_string(),
+        exec_threads: 0,
+        lambda_trigger: 1.1,
+        theta_refine: 0.4,
+        theta_coarsen: 0.03,
+        max_elements: 30_000,
+        solver: SolverOpts {
+            tol: 1e-5,
+            max_iter: 600,
+        },
+        use_pjrt: false,
+        nsteps: 3,
+        dt: 1.5e-3,
+    }
+}
+
+fn run_steps(d: &mut AdaptiveDriver, n: usize) {
+    while d.steps_completed() < n {
+        if !d.step() {
+            break;
+        }
+    }
+}
+
+/// The wall-independent step invariants that must be bitwise equal
+/// between an uninterrupted run and a checkpoint-resumed one. Measured
+/// times (and quantities derived from them, like the threaded
+/// executor's `solve_imbalance`) are process-local and excluded.
+fn assert_steps_match(a: &StepRecord, b: &StepRecord, tag: &str) {
+    let step = a.step;
+    assert_eq!(a.step, b.step, "{tag}: step numbering diverged");
+    assert_eq!(a.nparts, b.nparts, "{tag} step {step}");
+    assert_eq!(a.n_elements, b.n_elements, "{tag} step {step}: n_elements");
+    assert_eq!(a.n_dofs, b.n_dofs, "{tag} step {step}: n_dofs");
+    assert_eq!(
+        a.solve_iterations, b.solve_iterations,
+        "{tag} step {step}: solver iterations"
+    );
+    assert_eq!(
+        a.interface_faces, b.interface_faces,
+        "{tag} step {step}: interface faces"
+    );
+    assert_eq!(
+        a.repartitioned, b.repartitioned,
+        "{tag} step {step}: DLB decision"
+    );
+    assert_eq!(
+        a.strategy.map(|s| s.name()),
+        b.strategy.map(|s| s.name()),
+        "{tag} step {step}: strategy"
+    );
+    for (name, x, y) in [
+        ("imbalance_before", a.imbalance_before, b.imbalance_before),
+        ("imbalance_after", a.imbalance_after, b.imbalance_after),
+        ("l2_error", a.l2_error, b.l2_error),
+        ("max_error", a.max_error, b.max_error),
+        ("remap_kept_fraction", a.remap_kept_fraction, b.remap_kept_fraction),
+        ("partition_comm_modeled", a.partition_comm_modeled, b.partition_comm_modeled),
+        ("migrate_modeled", a.migrate_modeled, b.migrate_modeled),
+        ("solve_comm_modeled", a.solve_comm_modeled, b.solve_comm_modeled),
+    ] {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag} step {step}: {name} diverged ({x} vs {y})"
+        );
+    }
+    match (&a.migration, &b.migration) {
+        (None, None) => {}
+        (Some(ma), Some(mb)) => {
+            assert_eq!(ma.total_v.to_bits(), mb.total_v.to_bits(), "{tag} step {step}");
+            assert_eq!(ma.max_v.to_bits(), mb.max_v.to_bits(), "{tag} step {step}");
+            assert_eq!(
+                ma.moved_fraction.to_bits(),
+                mb.moved_fraction.to_bits(),
+                "{tag} step {step}"
+            );
+        }
+        _ => panic!("{tag} step {step}: migration presence diverged"),
+    }
+}
+
+/// Run `n` steps uninterrupted; run `k` steps, checkpoint, restore,
+/// run to `n`; every post-restore StepRecord and the final solution
+/// must match the uninterrupted run bitwise.
+fn check_resume_equivalence(problem: &str, exec: &str, k: usize, n: usize) {
+    let tag = format!("{problem}/{exec} (k={k}, n={n})");
+    let mut full = AdaptiveDriver::for_scenario(cfg(problem, exec)).unwrap();
+    run_steps(&mut full, n);
+
+    let mut prefix = AdaptiveDriver::for_scenario(cfg(problem, exec)).unwrap();
+    run_steps(&mut prefix, k);
+    assert_eq!(prefix.steps_completed(), k, "{tag}: prefix stopped early");
+    let bytes = prefix.checkpoint_bytes();
+
+    let mut resumed = AdaptiveDriver::restore_bytes(cfg(problem, exec), &bytes).unwrap();
+    assert_eq!(resumed.steps_completed(), k, "{tag}: restored step counter");
+    assert!(resumed.timeline.records.is_empty(), "{tag}: restored timeline not fresh");
+    run_steps(&mut resumed, n);
+
+    assert_eq!(
+        full.timeline.records.len(),
+        k + resumed.timeline.records.len(),
+        "{tag}: step counts diverged"
+    );
+    for (a, b) in full.timeline.records[k..].iter().zip(&resumed.timeline.records) {
+        assert_steps_match(a, b, &tag);
+    }
+    let (ua, ub) = (full.solution(), resumed.solution());
+    assert_eq!(ua.len(), ub.len(), "{tag}: solution lengths diverged");
+    for (i, (x, y)) in ua.iter().zip(ub).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: solution[{i}] diverged ({x} vs {y})");
+    }
+}
+
+#[test]
+fn resume_matches_uninterrupted_on_all_scenarios() {
+    for spec in &SCENARIOS {
+        for exec in ["virtual", "threads"] {
+            check_resume_equivalence(spec.name, exec, 1, 3);
+        }
+    }
+}
+
+#[test]
+fn resume_matches_after_a_deeper_prefix() {
+    // two post-restore steps after two pre-checkpoint adaptations: the
+    // restored forest (parents, mid-vertices, free lists) must keep
+    // producing the same ids the uninterrupted process would
+    check_resume_equivalence("helmholtz", "threads", 2, 4);
+}
+
+fn fx_checksum(bytes: &[u8]) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Re-frame a payload with a freshly computed trailing checksum, so a
+/// deliberate payload edit exercises the parser instead of tripping the
+/// checksum-first gate.
+fn reframe(payload: &[u8]) -> Vec<u8> {
+    let mut out = payload.to_vec();
+    out.extend_from_slice(&fx_checksum(payload).to_le_bytes());
+    out
+}
+
+#[test]
+fn snapshots_are_version_tagged_and_corruption_names_the_offset() {
+    let mut d = AdaptiveDriver::for_scenario(cfg("helmholtz", "virtual")).unwrap();
+    run_steps(&mut d, 1);
+    let bytes = d.checkpoint_bytes();
+    assert!(bytes.starts_with(MAGIC), "checkpoint must lead with the magic tag");
+
+    // too short to even hold the frame
+    let err = AdaptiveDriver::restore_bytes(cfg("helmholtz", "virtual"), &bytes[..10])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("truncated") && err.contains("offset"), "{err}");
+
+    // a valid frame around a truncated payload: the reader names the
+    // byte offset where it ran out
+    let payload = &bytes[..bytes.len() - 8];
+    let cut = reframe(&payload[..payload.len() - 50]);
+    let err = AdaptiveDriver::restore_bytes(cfg("helmholtz", "virtual"), &cut)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("offset"), "truncation must name the offset: {err}");
+
+    // a flipped payload byte under the original checksum
+    let mut corrupt = bytes.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0xff;
+    let err = AdaptiveDriver::restore_bytes(cfg("helmholtz", "virtual"), &corrupt)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("checksum mismatch") && err.contains("offset"), "{err}");
+
+    // a future format version is rejected by name, not misparsed
+    let mut newer = payload.to_vec();
+    newer[8..12].copy_from_slice(&(VERSION + 1).to_le_bytes());
+    let err = AdaptiveDriver::restore_bytes(cfg("helmholtz", "virtual"), &reframe(&newer))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("version") && err.contains("this build reads"), "{err}");
+
+    // a non-checkpoint file is named as such
+    let mut alien = payload.to_vec();
+    alien[0] ^= 0xff;
+    let err = AdaptiveDriver::restore_bytes(cfg("helmholtz", "virtual"), &reframe(&alien))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("bad magic"), "{err}");
+
+    // the config must name the snapshot's problem and part count
+    let err = AdaptiveDriver::restore_bytes(cfg("lshape", "virtual"), &bytes)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("problem"), "{err}");
+    let mut other = cfg("helmholtz", "virtual");
+    other.nparts = 8;
+    let err = AdaptiveDriver::restore_bytes(other, &bytes).unwrap_err().to_string();
+    assert!(err.contains("nparts"), "{err}");
+}
+
+#[test]
+fn learned_dlb_state_survives_the_roundtrip() {
+    // measured-EWMA weights are part of the adaptive state: the
+    // restored driver must re-serialize to the identical byte stream
+    // (which covers the weight table, the wall EWMAs, clock and forest)
+    let mut c = cfg("parabolic", "threads");
+    c.weights = "measured".to_string();
+    let mut d = AdaptiveDriver::for_scenario(c.clone()).unwrap();
+    run_steps(&mut d, 2);
+    let state = d.weight_model.export_state().expect("measured model exports state");
+    assert!(!state.costs.is_empty(), "no per-element costs learned");
+
+    let bytes = d.checkpoint_bytes();
+    let restored = AdaptiveDriver::restore_bytes(c, &bytes).unwrap();
+    assert_eq!(restored.weight_model.export_state(), Some(state));
+    assert_eq!(
+        restored.checkpoint_bytes(),
+        bytes,
+        "restore -> checkpoint must be the identity on the byte stream"
+    );
+}
+
+fn temp_opts(tag: &str) -> (ServeOptions, PathBuf) {
+    let base = std::env::temp_dir().join(format!("phg_serve_it_{tag}_{}", std::process::id()));
+    let opts = ServeOptions {
+        workers: 2,
+        checkpoint_dir: base.join("ckpt"),
+        trace_dir: Some(base.join("trace")),
+        drain_timeout_s: 0.0,
+        retry_base_ms: 1,
+    };
+    (opts, base)
+}
+
+const SMALL: &str = "\"nparts\": 4, \"max_elements\": 30000, \"theta_refine\": 0.4, \
+                     \"solver_tol\": 1e-4, \"solver_max_iter\": 400";
+
+/// A parabolic tenant: time-dependent, so `step()` never stops early
+/// on the growth budget and step counts are exactly the budget.
+fn parabolic_overrides() -> Vec<(String, String)> {
+    [
+        ("problem", "parabolic"),
+        ("nparts", "4"),
+        ("max_elements", "30000"),
+        ("theta_refine", "0.4"),
+        ("solver_tol", "1e-4"),
+        ("solver_max_iter", "400"),
+        ("dt", "1.5e-3"),
+    ]
+    .iter()
+    .map(|(k, v)| (k.to_string(), v.to_string()))
+    .collect()
+}
+
+#[test]
+fn three_job_serve_completes_with_per_job_timelines() {
+    let jsonl = format!(
+        "# three tenants, mixed scenarios\n\
+         {{\"id\": \"helm\", \"problem\": \"helmholtz\", \"steps\": 2, {SMALL}}}\n\
+         {{\"id\": \"para\", \"problem\": \"parabolic\", \"steps\": 2, \"dt\": 1.5e-3, {SMALL}}}\n\
+         {{\"id\": \"lshape\", \"problem\": \"lshape\", \"steps\": 2, {SMALL}}}\n"
+    );
+    let specs = JobSpec::parse_jsonl(&jsonl).unwrap();
+    let (opts, base) = temp_opts("three");
+    let summary = serve(specs, &opts).unwrap();
+
+    assert_eq!(summary.jobs.len(), 3);
+    for job in &summary.jobs {
+        assert_eq!(job.state, JobState::Done, "{}: {:?}", job.spec.id, job.error);
+        assert_eq!(job.attempts, 1, "{}", job.spec.id);
+        assert_eq!(job.steps_done, 2, "{}", job.spec.id);
+        assert!(job.n_elements > 0 && job.n_dofs > 0, "{}", job.spec.id);
+        assert!(job.l2_error.is_finite() && job.l2_error > 0.0, "{}", job.spec.id);
+    }
+    let table = summary.format_table();
+    assert!(table.contains("serve: jobs=3 done=3 failed=0 cancelled=0"), "{table}");
+
+    // disjoint per-job timelines: every tenant gets its own parseable
+    // trace file naming itself, plus a CSV with one row per step
+    for id in ["helm", "para", "lshape"] {
+        let trace = std::fs::read_to_string(base.join("trace").join(format!("job-{id}.json")))
+            .unwrap_or_else(|e| panic!("job-{id}.json: {e}"));
+        let v = json::parse(&trace).unwrap_or_else(|e| panic!("job-{id}.json: {e}"));
+        let events = match v.get("traceEvents") {
+            Some(Json::Arr(events)) => events,
+            other => panic!("job-{id}.json: traceEvents is {other:?}"),
+        };
+        // lifecycle span + one event per step
+        assert_eq!(events.len(), 3, "job-{id}.json event count");
+        let name = events[0].get("name").and_then(|n| n.as_str()).unwrap();
+        assert_eq!(name, format!("job:{id}"));
+        let csv = std::fs::read_to_string(base.join("trace").join(format!("job-{id}.csv")))
+            .unwrap_or_else(|e| panic!("job-{id}.csv: {e}"));
+        assert_eq!(csv.lines().count(), 3, "job-{id}.csv: header + 2 steps");
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn a_panicking_job_is_isolated_retried_and_failed() {
+    // nparts 0 trips a hard assertion deep in the driver composition;
+    // the daemon must convert that panic into a failed row (after the
+    // budgeted retry) while the good tenant completes untouched
+    let jsonl = format!(
+        "{{\"id\": \"good\", \"problem\": \"helmholtz\", \"steps\": 1, {SMALL}}}\n\
+         {{\"id\": \"boom\", \"problem\": \"helmholtz\", \"steps\": 1, \"retries\": 1, \
+           \"nparts\": 0}}\n"
+    );
+    let specs = JobSpec::parse_jsonl(&jsonl).unwrap();
+    let (opts, base) = temp_opts("panic");
+    let summary = serve(specs, &opts).unwrap();
+
+    let good = &summary.jobs[0];
+    assert_eq!(good.state, JobState::Done, "{:?}", good.error);
+    let boom = &summary.jobs[1];
+    assert_eq!(boom.state, JobState::Failed);
+    assert_eq!(boom.attempts, 2, "one retry after the first panic");
+    let err = boom.error.as_deref().unwrap_or("");
+    assert!(err.contains("panicked"), "panic not surfaced: {err:?}");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn drain_checkpoints_in_flight_jobs_and_resume_finishes_them() {
+    let (opts, base) = temp_opts("drain");
+    let mut opts = opts;
+    opts.workers = 1;
+    let long = JobSpec {
+        id: "long".to_string(),
+        overrides: parabolic_overrides(),
+        steps: 5,
+        max_retries: 0,
+        resume_from: None,
+        drain_after: Some(2),
+    };
+    let short = JobSpec {
+        id: "short".to_string(),
+        overrides: parabolic_overrides(),
+        steps: 1,
+        max_retries: 0,
+        resume_from: None,
+        drain_after: None,
+    };
+    let summary = serve(vec![long.clone(), short], &opts).unwrap();
+
+    // the in-flight job drained at a step boundary, resumably
+    let drained = &summary.jobs[0];
+    assert_eq!(drained.state, JobState::Cancelled);
+    assert_eq!(drained.steps_done, 2, "drained after two steps");
+    let ckpt = drained.checkpoint.clone().expect("drained job leaves a checkpoint");
+    assert!(ckpt.exists(), "{}", ckpt.display());
+    // the queued job was cancelled without ever starting
+    let skipped = &summary.jobs[1];
+    assert_eq!(skipped.state, JobState::Cancelled);
+    assert!(skipped.checkpoint.is_none());
+    assert_eq!(skipped.attempts, 0);
+
+    // resuming the drained spec finishes the original budget
+    let resumed = JobSpec {
+        resume_from: Some(ckpt),
+        drain_after: None,
+        ..long
+    };
+    let summary = serve(vec![resumed], &opts).unwrap();
+    let job = &summary.jobs[0];
+    assert_eq!(job.state, JobState::Done, "{:?}", job.error);
+    assert_eq!(job.steps_done, 5, "budget is total steps, resumed included");
+    std::fs::remove_dir_all(&base).ok();
+}
