@@ -1,6 +1,7 @@
 //! Service-mode throughput: a mixed-scenario job batch through the
 //! serve daemon (jobs/s, p95 job wall) plus the checkpoint layer's
-//! write/restore cost on a refined driver.
+//! write/restore cost on a refined driver, and the status plane's
+//! scrape cost (Prometheus render + one HTTP round-trip).
 //!
 //! ```sh
 //! cargo bench --bench serve_throughput [-- --quick] [--jobs N] [--workers N]
@@ -79,6 +80,7 @@ fn main() {
         trace_dir: None,
         drain_timeout_s: 0.0,
         retry_base_ms: 1,
+        status_port: None,
     };
     let sw = Stopwatch::start();
     let summary = serve(specs, &opts).expect("serve batch");
@@ -112,6 +114,30 @@ fn main() {
         restore_s * 1e3
     );
 
+    // status plane: text-exposition render wall on the registry the
+    // batch just populated, plus one real loopback scrape round-trip
+    let render_s = median_time(quick_or(9, 5), || {
+        std::hint::black_box(phg_dlb::obs::metrics().prometheus());
+    });
+    let server = phg_dlb::obs::StatusServer::start(0, None).expect("status server");
+    let addr = server.addr();
+    let scrape_s = median_time(quick_or(9, 5), || {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).expect("connect status plane");
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .expect("scrape request");
+        let mut body = String::new();
+        s.read_to_string(&mut body).expect("scrape response");
+        assert!(body.contains("200 OK"), "scrape failed:\n{body}");
+        std::hint::black_box(body.len());
+    });
+    server.stop();
+    println!(
+        "status plane: prometheus render {:.3}ms, HTTP scrape {:.3}ms",
+        render_s * 1e3,
+        scrape_s * 1e3
+    );
+
     let mut batch = BenchRow::new(format!("serve:w{workers}"));
     batch.wall_ms = Some(wall * 1e3);
     batch.extras.push(("jobs_per_s", jobs_per_s));
@@ -122,5 +148,9 @@ fn main() {
     ckpt.extras.push(("checkpoint_write_ms", write_s * 1e3));
     ckpt.extras.push(("checkpoint_restore_ms", restore_s * 1e3));
     ckpt.extras.push(("checkpoint_bytes", bytes.len() as f64));
-    write_bench_json("serve", &[batch, ckpt]);
+    let mut status = BenchRow::new("status_plane");
+    status.wall_ms = Some(scrape_s * 1e3);
+    status.extras.push(("prometheus_render_ms", render_s * 1e3));
+    status.extras.push(("http_scrape_ms", scrape_s * 1e3));
+    write_bench_json("serve", &[batch, ckpt, status]);
 }

@@ -296,4 +296,40 @@ mod tests {
         assert_eq!(c.get_str("trace", ""), "out/run.json");
         assert_eq!(c.get_str("metrics", ""), "-");
     }
+
+    #[test]
+    fn status_plane_and_flight_keys_flow_through() {
+        // --status-port / --flight / and the `top` client's
+        // --connect/--interval/--polls are plain flat keys too: no
+        // schema change was needed to add the status plane
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("status_port", 0).unwrap(), 0); // off
+        assert_eq!(c.get_str("flight", ""), "");
+
+        let mut c = Config::parse("status_port = 8080\n").unwrap();
+        assert_eq!(c.get_usize("status_port", 0).unwrap(), 8080);
+        c.apply_args(&[
+            "--status-port".into(),
+            "9100".into(),
+            "--flight".into(),
+            "out/flight.jsonl".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.get_usize("status_port", 0).unwrap(), 9100);
+        assert_eq!(c.get_str("flight", ""), "out/flight.jsonl");
+
+        let mut c = Config::new();
+        c.apply_args(&[
+            "--connect".into(),
+            "127.0.0.1:9100".into(),
+            "--interval".into(),
+            "0.5".into(),
+            "--polls".into(),
+            "3".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.get_str("connect", ""), "127.0.0.1:9100");
+        assert_eq!(c.get_f64("interval", 1.0).unwrap(), 0.5);
+        assert_eq!(c.get_usize("polls", 0).unwrap(), 3);
+    }
 }

@@ -214,21 +214,71 @@ impl AdaptiveDriver {
 
     /// Evaluate the trigger policy and, if it fires, run the full
     /// rebalance pipeline, folding its report into the step record.
+    ///
+    /// Every evaluation -- fired or not -- is also offered to the
+    /// flight recorder (DESIGN.md §14): when `--flight` is on, the
+    /// per-strategy modeled-cost table is computed once up front and
+    /// *both* the recorded event and the strategy resolution are read
+    /// from it, so the logged argmin and the executed choice cannot
+    /// disagree. When the recorder is off the whole block costs one
+    /// relaxed atomic load and the lazy resolution paths are
+    /// unchanged.
     fn maybe_rebalance(&mut self, leaves: &[ElemId], weights: &[f64], rec: &mut StepRecord) {
         rec.imbalance_before = self.pipeline.dist.imbalance(&self.mesh, leaves, weights);
+        let flight_on = obs::flight().enabled();
+        let table = if flight_on {
+            self.pipeline.candidate_costs(
+                &self.mesh,
+                leaves,
+                weights,
+                self.last_solve_parallel,
+                self.partition_wall_ewma,
+            )
+        } else {
+            Vec::new()
+        };
+        // resolve (strategy, estimate) from the already-priced table:
+        // concrete strategies read their own row, Auto takes the
+        // argmin (strict <, earlier row wins -- the same rule as
+        // RebalancePipeline::resolve_and_estimate)
+        let configured = self.pipeline.strategy;
+        let resolve_from_table = move |t: &[(RepartitionStrategy, CostEstimate, f64, f64)]| {
+            match configured {
+                RepartitionStrategy::Auto => {
+                    let mut best = &t[0];
+                    for row in &t[1..] {
+                        if row.3 < best.3 {
+                            best = row;
+                        }
+                    }
+                    (best.0, best.1)
+                }
+                concrete => {
+                    let row = t
+                        .iter()
+                        .find(|r| r.0 == concrete)
+                        .expect("table covers every concrete strategy");
+                    (row.0, row.1)
+                }
+            }
+        };
         // the cost-model / strategy-resolution pass is O(n); run it at
         // most once per step, and only up front when the policy reads
         // the estimate (`auto` resolves against the solve history,
         // DESIGN.md §7)
         let mut resolved = None;
         let estimate = if self.trigger.needs_estimate() {
-            let (strategy, estimate) = self.pipeline.resolve_and_estimate(
-                &self.mesh,
-                leaves,
-                weights,
-                self.last_solve_parallel,
-                self.partition_wall_ewma,
-            );
+            let (strategy, estimate) = if flight_on {
+                resolve_from_table(&table)
+            } else {
+                self.pipeline.resolve_and_estimate(
+                    &self.mesh,
+                    leaves,
+                    weights,
+                    self.last_solve_parallel,
+                    self.partition_wall_ewma,
+                )
+            };
             resolved = Some(strategy);
             estimate
         } else {
@@ -239,19 +289,48 @@ impl AdaptiveDriver {
             lambda: rec.imbalance_before,
             estimate,
         };
+        let candidates = || -> Vec<obs::CandidateCost> {
+            table
+                .iter()
+                .map(|&(s, est, lambda_after, total)| obs::CandidateCost {
+                    strategy: s.name(),
+                    rebalance_cost: est.rebalance_cost,
+                    saving_per_step: est.saving_per_step,
+                    lambda_after,
+                    total,
+                })
+                .collect()
+        };
         if !self.trigger.should_rebalance(&ctx) {
             rec.imbalance_after = rec.imbalance_before;
+            if flight_on {
+                obs::flight().record(obs::FlightEvent {
+                    step: rec.step,
+                    lambda: rec.imbalance_before,
+                    trigger: self.trigger.name(),
+                    fired: false,
+                    rebalance_cost: estimate.rebalance_cost,
+                    saving_per_step: estimate.saving_per_step,
+                    candidates: candidates(),
+                    chosen: None,
+                    realized: None,
+                });
+            }
             return;
         }
-        let strategy = resolved.unwrap_or_else(|| {
-            self.pipeline.resolve_strategy(
+        let (strategy, modeled) = match resolved {
+            Some(s) => (s, estimate),
+            None if flight_on => resolve_from_table(&table),
+            // resolve_and_estimate is the same pass resolve_strategy
+            // runs, so the modeled cost for the audit below is free
+            None => self.pipeline.resolve_and_estimate(
                 &self.mesh,
                 leaves,
                 weights,
                 self.last_solve_parallel,
                 self.partition_wall_ewma,
-            )
-        });
+            ),
+        };
         let report = self
             .pipeline
             .rebalance_as(strategy, &mut self.mesh, leaves, weights);
@@ -263,6 +342,40 @@ impl AdaptiveDriver {
             } else {
                 report.partition_wall
             };
+        }
+        // modeled-vs-measured audit: always on, one sample per
+        // rebalance. The model-error summary and the dlb.flight.*
+        // families in every metrics dump / exposition read these.
+        let realized = report.dlb_time();
+        let m = obs::metrics();
+        m.counter_add("dlb.flight.rebalances", 1);
+        m.observe("dlb.flight.modeled_cost_s", modeled.rebalance_cost);
+        m.observe("dlb.flight.realized_cost_s", realized);
+        if modeled.rebalance_cost > 0.0 && realized > 0.0 {
+            let ratio_metric = match report.strategy {
+                RepartitionStrategy::Scratch => "dlb.flight.model_ratio.scratch",
+                RepartitionStrategy::Diffusive => "dlb.flight.model_ratio.diffusive",
+                RepartitionStrategy::Adaptive => "dlb.flight.model_ratio.adaptive",
+                RepartitionStrategy::Auto => unreachable!("rebalance_as resolves auto"),
+            };
+            m.observe(ratio_metric, modeled.rebalance_cost / realized);
+        }
+        if flight_on {
+            obs::flight().record(obs::FlightEvent {
+                step: rec.step,
+                lambda: rec.imbalance_before,
+                trigger: self.trigger.name(),
+                fired: true,
+                rebalance_cost: modeled.rebalance_cost,
+                saving_per_step: modeled.saving_per_step,
+                candidates: candidates(),
+                chosen: Some(report.strategy.name()),
+                realized: Some(obs::RealizedOutcome {
+                    dlb_wall_s: realized,
+                    total_v: report.volume.total_v,
+                    lambda_after: report.lambda_after,
+                }),
+            });
         }
         rec.strategy = Some(report.strategy);
         rec.partition_time = report.partition_wall;

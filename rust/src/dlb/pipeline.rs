@@ -538,6 +538,46 @@ impl RebalancePipeline {
         }
     }
 
+    /// The `Auto` decision table: one row per concrete candidate in
+    /// tie order (diffusive, adaptive, scratch), carrying the modeled
+    /// estimate, the predicted post-rebalance lambda, and the URP
+    /// objective `total = rebalance_cost + solve_parallel_time *
+    /// max(lambda_after - 1, 0)`.
+    ///
+    /// [`RebalancePipeline::resolve_and_estimate`]'s `Auto` arm is the
+    /// argmin over exactly this table (strict `<`, earlier row wins
+    /// ties), so a flight-recorded table always agrees with the
+    /// decision that was made from it.
+    pub fn candidate_costs(
+        &self,
+        mesh: &TetMesh,
+        leaves: &[ElemId],
+        weights: &[f64],
+        solve_parallel_time: f64,
+        partition_wall_estimate: f64,
+    ) -> Vec<(RepartitionStrategy, CostEstimate, f64, f64)> {
+        [
+            RepartitionStrategy::Diffusive,
+            RepartitionStrategy::Adaptive,
+            RepartitionStrategy::Scratch,
+        ]
+        .into_iter()
+        .map(|s| {
+            let (est, lambda_after) = self.estimate_for(
+                s,
+                mesh,
+                leaves,
+                weights,
+                solve_parallel_time,
+                partition_wall_estimate,
+            );
+            let total =
+                est.rebalance_cost + solve_parallel_time * (lambda_after - 1.0).max(0.0);
+            (s, est, lambda_after, total)
+        })
+        .collect()
+    }
+
     /// Resolve the pipeline's strategy for one rebalance event.
     /// Concrete strategies pass through; `Auto` prices all three paths
     /// URP-style -- rebalance cost plus the residual-imbalance solve
@@ -588,28 +628,19 @@ impl RebalancePipeline {
                 (self.strategy, est)
             }
             RepartitionStrategy::Auto => {
-                let penalty = |lambda_after: f64| {
-                    solve_parallel_time * (lambda_after - 1.0).max(0.0)
-                };
                 // tie order = ascending migration: diffusive moves the
                 // least, adaptive only what refinement chooses, scratch
-                // relabels everything the remap cannot keep
-                let candidates = [
-                    RepartitionStrategy::Diffusive,
-                    RepartitionStrategy::Adaptive,
-                    RepartitionStrategy::Scratch,
-                ];
+                // relabels everything the remap cannot keep -- encoded
+                // once, in candidate_costs
+                let table = self.candidate_costs(
+                    mesh,
+                    leaves,
+                    weights,
+                    solve_parallel_time,
+                    partition_wall_estimate,
+                );
                 let mut best: Option<(RepartitionStrategy, CostEstimate, f64)> = None;
-                for s in candidates {
-                    let (est, lambda_after) = self.estimate_for(
-                        s,
-                        mesh,
-                        leaves,
-                        weights,
-                        solve_parallel_time,
-                        partition_wall_estimate,
-                    );
-                    let total = est.rebalance_cost + penalty(lambda_after);
+                for &(s, est, _, total) in &table {
                     let better = match &best {
                         None => true,
                         Some((_, _, best_total)) => total < *best_total,
@@ -843,5 +874,43 @@ mod tests {
         pipe.diffusion.lambda_tol = 1e-6;
         let chosen = pipe.resolve_strategy(&mesh, &leaves, &weights, 10.0, 1e-3);
         assert_eq!(chosen, RepartitionStrategy::Diffusive);
+    }
+
+    #[test]
+    fn candidate_costs_table_matches_estimate_for_and_argmin() {
+        let (mesh, leaves) = skewed(4);
+        let weights = vec![1.0f64; leaves.len()];
+        let pipe = RebalancePipeline::from_method("PHG/HSFC", 4)
+            .unwrap()
+            .with_strategy(RepartitionStrategy::Auto);
+        let table = pipe.candidate_costs(&mesh, &leaves, &weights, 5.0, 1e-3);
+        assert_eq!(table.len(), 3);
+        assert_eq!(table[0].0, RepartitionStrategy::Diffusive);
+        assert_eq!(table[1].0, RepartitionStrategy::Adaptive);
+        assert_eq!(table[2].0, RepartitionStrategy::Scratch);
+        // every row is bitwise the independent estimate_for call, and
+        // the total is the published URP objective
+        for &(s, est, lambda_after, total) in &table {
+            let (e2, l2) = pipe.estimate_for(s, &mesh, &leaves, &weights, 5.0, 1e-3);
+            assert_eq!(est.rebalance_cost, e2.rebalance_cost);
+            assert_eq!(est.saving_per_step, e2.saving_per_step);
+            assert_eq!(lambda_after, l2);
+            assert_eq!(
+                total,
+                est.rebalance_cost + 5.0 * (lambda_after - 1.0).max(0.0)
+            );
+        }
+        // the Auto resolution is the argmin over exactly this table
+        // (strict <, earlier row wins ties)
+        let mut best = &table[0];
+        for row in &table[1..] {
+            if row.3 < best.3 {
+                best = row;
+            }
+        }
+        assert_eq!(
+            pipe.resolve_strategy(&mesh, &leaves, &weights, 5.0, 1e-3),
+            best.0
+        );
     }
 }

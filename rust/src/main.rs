@@ -7,6 +7,8 @@
 //! phg-dlb partition --domain cylinder --method PHG/HSFC --nparts 64
 //! phg-dlb compare --domain cylinder --nparts 32          # all methods
 //! phg-dlb serve --jobs jobs.jsonl --serve-workers 4      # service mode
+//! phg-dlb serve --jobs jobs.jsonl --status-port 8080     # + live /metrics /jobs
+//! phg-dlb top --connect 127.0.0.1:8080                   # watch a daemon
 //! phg-dlb methods | info
 //! ```
 
@@ -46,6 +48,34 @@ fn make_domain(cfg: &Config, default_domain: &str) -> Result<TetMesh> {
     prerefine(cfg, mesh)
 }
 
+/// Parse `--status-port` (0 or absent = off: no thread, no socket).
+fn status_port(cfg: &Config) -> Result<Option<u16>> {
+    let port = cfg.get_usize("status_port", 0)?;
+    if port == 0 {
+        Ok(None)
+    } else if port <= u16::MAX as usize {
+        Ok(Some(port as u16))
+    } else {
+        Err(format_err!("--status-port {port} out of range (1-65535)"))
+    }
+}
+
+/// Start the loopback status plane for a single-run command; `jobs`
+/// feeds the `/jobs` route (`None` serves an empty table).
+fn start_status_plane(
+    cfg: &Config,
+    jobs: Option<obs::JobsProvider>,
+) -> Result<Option<obs::StatusServer>> {
+    match status_port(cfg)? {
+        Some(port) => {
+            let server = obs::StatusServer::start(port, jobs)?;
+            eprintln!("status: http://{}", server.addr());
+            Ok(Some(server))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_run(cfg: &Config) -> Result<()> {
     let dc = cfg.driver_config()?;
     let problem = dc.problem.clone();
@@ -74,6 +104,12 @@ fn cmd_run(cfg: &Config) -> Result<()> {
     if !trace_path.is_empty() {
         obs::tracer().set_enabled(true);
     }
+    let flight_path = cfg.get_str("flight", "");
+    if !flight_path.is_empty() {
+        obs::flight().clear();
+        obs::flight().set_enabled(true);
+    }
+    let status = start_status_plane(cfg, None)?;
     let mut driver = AdaptiveDriver::new(mesh, dc)?;
     let sw = Stopwatch::start();
     driver.run();
@@ -119,7 +155,18 @@ fn cmd_run(cfg: &Config) -> Result<()> {
             println!("  {name:<14} {count:>8} spans {secs:>10.4}s");
         }
     }
+    if !flight_path.is_empty() {
+        let fr = obs::flight();
+        std::fs::write(&flight_path, fr.to_jsonl())?;
+        println!(
+            "flight: {flight_path} ({} events, {} dropped)",
+            fr.len(),
+            fr.dropped()
+        );
+        print!("{}", obs::model_error_summary());
+    }
     if !metrics_path.is_empty() {
+        obs::sync_derived_metrics();
         let dump = obs::metrics().dump();
         if metrics_path == "-" {
             print!("{dump}");
@@ -127,6 +174,9 @@ fn cmd_run(cfg: &Config) -> Result<()> {
             std::fs::write(&metrics_path, &dump)?;
             println!("metrics: {metrics_path}");
         }
+    }
+    if let Some(server) = status {
+        server.stop();
     }
     if cfg.get_bool("csv", false)? {
         let path = phg_dlb::coordinator::report::write_report(
@@ -232,7 +282,13 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         trace_dir: (!trace_dir.is_empty()).then(|| trace_dir.into()),
         drain_timeout_s: cfg.get_f64("drain_timeout", 0.0)?,
         retry_base_ms: cfg.get_usize("retry_base_ms", 100)? as u64,
+        status_port: status_port(cfg)?,
     };
+    let flight_path = cfg.get_str("flight", "");
+    if !flight_path.is_empty() {
+        obs::flight().clear();
+        obs::flight().set_enabled(true);
+    }
     println!(
         "# serve: {} jobs, {} workers, checkpoints -> {}",
         specs.len(),
@@ -246,8 +302,19 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     signal::install();
     let summary = serve(specs, &opts)?;
     print!("{}", summary.format_table());
+    if !flight_path.is_empty() {
+        let fr = obs::flight();
+        std::fs::write(&flight_path, fr.to_jsonl())?;
+        println!(
+            "flight: {flight_path} ({} events, {} dropped)",
+            fr.len(),
+            fr.dropped()
+        );
+        print!("{}", obs::model_error_summary());
+    }
     let metrics_path = cfg.get_str("metrics", "");
     if !metrics_path.is_empty() {
+        obs::sync_derived_metrics();
         let dump = obs::metrics().dump();
         if metrics_path == "-" {
             print!("{dump}");
@@ -257,6 +324,89 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Blocking loopback HTTP GET against a status plane; returns the
+/// response body (zero-dependency, mirrors `obs::serve_status`).
+fn http_get(addr: &str, path: &str) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| format_err!("connecting {addr}: {e}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut text = String::new();
+    stream.read_to_string(&mut text)?;
+    match text.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => Err(format_err!("malformed HTTP response from {addr}{path}")),
+    }
+}
+
+/// `phg-dlb top`: poll a daemon's status plane and render a
+/// refreshing per-job table plus the headline serve counters.
+fn cmd_top(cfg: &Config) -> Result<()> {
+    use phg_dlb::serve::json;
+
+    let addr = cfg.get_str("connect", "127.0.0.1:8080");
+    let interval = cfg.get_f64("interval", 1.0)?.max(0.05);
+    let polls = cfg.get_usize("polls", 0)?; // 0 = until interrupted
+    let mut n = 0usize;
+    loop {
+        n += 1;
+        let jobs = http_get(&addr, "/jobs")?;
+        let prom = http_get(&addr, "/metrics")?;
+        if n > 1 {
+            // redraw in place from the second poll on; a single-poll
+            // invocation stays clean for pipes and transcripts
+            print!("\x1b[2J\x1b[H");
+        }
+        println!("phg-dlb top -- {addr} (poll {n})");
+        println!(
+            "{:<14} {:<10} {:>8} {:>9} {:>10} {:>10} {:>8} {:>9}",
+            "job", "state", "attempts", "steps", "elements", "dofs", "lambda", "wall(s)"
+        );
+        for line in jobs.lines() {
+            let v = json::parse(line)?;
+            let s = |k: &str| v.get(k).and_then(|j| j.as_str()).unwrap_or("?").to_string();
+            let f = |k: &str| v.get(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
+            println!(
+                "{:<14} {:<10} {:>8} {:>9} {:>10} {:>10} {:>8.3} {:>9.2}",
+                s("id"),
+                s("state"),
+                f("attempts") as u64,
+                format!("{}/{}", f("steps_done") as u64, f("steps") as u64),
+                f("n_elements") as u64,
+                f("n_dofs") as u64,
+                f("lambda"),
+                f("wall_s"),
+            );
+        }
+        let mut headline = String::new();
+        for name in [
+            "serve_jobs_submitted",
+            "serve_jobs_completed",
+            "serve_job_errors",
+            "serve_jobs_retried",
+            "serve_jobs_drained",
+            "serve_jobs_cancelled",
+        ] {
+            if let Some(line) = prom.lines().find(|l| l.starts_with(&format!("{name} "))) {
+                let value = line.rsplit(' ').next().unwrap_or("0");
+                let short = name.trim_start_matches("serve_jobs_").trim_start_matches("serve_");
+                headline.push_str(&format!(" {short}={value}"));
+            }
+        }
+        if !headline.is_empty() {
+            println!("serve:{headline}");
+        }
+        if polls > 0 && n >= polls {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
 }
 
 fn cmd_info() -> Result<()> {
@@ -300,6 +450,7 @@ fn run() -> Result<()> {
         "partition" => cmd_partition(&cfg),
         "compare" => cmd_compare(&cfg),
         "serve" => cmd_serve(&cfg),
+        "top" => cmd_top(&cfg),
         "methods" => {
             // every pluggable registry, sorted or documentation order
             // + described, so CI log diffs and docs stay stable
@@ -355,7 +506,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: phg-dlb <run|partition|compare|serve|methods|info> [--key value ...]\n\
+                "usage: phg-dlb <run|partition|compare|serve|top|methods|info> [--key value ...]\n\
                  keys: problem (see `phg-dlb methods`) domain (auto|cube|cylinder|lshape)\n\
                  \x20     scale (explicit domains only) prerefine method nparts nsteps dt\n\
                  \x20     (method accepts tunables: name:key=val,... e.g. AdaptiveRepart:itr=100)\n\
@@ -365,10 +516,14 @@ fn run() -> Result<()> {
                  \x20     exec (virtual|threads) exec_threads (0 = one per core)\n\
                  \x20     lambda_trigger theta_refine theta_coarsen max_elements\n\
                  \x20     trace (Chrome-trace JSON path) metrics (text path, - = stdout)\n\
+                 \x20     flight (DLB decision JSONL path) status_port (loopback HTTP, 0 = off)\n\
                  \x20     solver_tol solver_max_iter use_pjrt csv config\n\
                  serve keys: jobs (JSONL path, - = stdin) serve_workers (0 = auto)\n\
                  \x20     checkpoint_dir trace_dir (\"\" disables) drain_timeout (s)\n\
-                 \x20     retry_base_ms (backoff base; doubles per attempt)"
+                 \x20     retry_base_ms (backoff base; doubles per attempt)\n\
+                 \x20     status_port flight (as above)\n\
+                 top keys: connect (host:port, default 127.0.0.1:8080)\n\
+                 \x20     interval (s, default 1) polls (0 = until interrupted)"
             );
             Ok(())
         }

@@ -1,0 +1,365 @@
+//! DLB decision flight recorder (DESIGN.md §14): every trigger
+//! evaluation -- fired or not -- becomes one structured event carrying
+//! the inputs the policy saw (step, lambda, the cost estimate), the
+//! per-strategy modeled-cost table the `Auto` argmin ranks, the chosen
+//! strategy, and the realized outcome (measured DLB wall, TotalV,
+//! lambda after) once the rebalance has run.
+//!
+//! The recorder is **off by default** and the disabled path is one
+//! relaxed atomic load with no allocation (`tests/obs_overhead.rs`
+//! enforces this) -- the coordinator gates event *construction* on
+//! [`FlightRecorder::enabled`], so a run without `--flight` never
+//! builds the candidate table for lambda/cadence triggers. Events land
+//! in a bounded ring; overflow bumps a dropped counter instead of
+//! growing without bound, mirroring the tracer's contract.
+//!
+//! Events from concurrent drivers (the serve daemon's tenants)
+//! interleave in submission order; each event is complete when
+//! recorded, so no cross-thread amend step exists to race.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Ring capacity: at one event per adaptive step this covers runs far
+/// longer than any bench or serve batch; beyond it the oldest context
+/// is less useful than knowing the drop count.
+const RING_CAP: usize = 4096;
+
+/// One row of the per-strategy modeled-cost table: what `estimate_for`
+/// priced for this candidate at decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateCost {
+    /// `RepartitionStrategy::name()` of the candidate.
+    pub strategy: &'static str,
+    /// Modeled one-off rebalance cost (s).
+    pub rebalance_cost: f64,
+    /// Modeled solve time recovered per subsequent step (s).
+    pub saving_per_step: f64,
+    /// Predicted post-rebalance load-imbalance factor.
+    pub lambda_after: f64,
+    /// The `Auto` objective: `rebalance_cost + solve_parallel_time *
+    /// max(lambda_after - 1, 0)` -- argmin over the table is the
+    /// choice.
+    pub total: f64,
+}
+
+/// What actually happened once the chosen strategy ran.
+#[derive(Debug, Clone, Copy)]
+pub struct RealizedOutcome {
+    /// Measured + modeled DLB time of the rebalance (s),
+    /// `RebalanceReport::dlb_time()`.
+    pub dlb_wall_s: f64,
+    /// Oliker-Biswas total migration volume.
+    pub total_v: f64,
+    /// Load-imbalance factor after migration.
+    pub lambda_after: f64,
+}
+
+/// One trigger evaluation, fired or not.
+#[derive(Debug, Clone)]
+pub struct FlightEvent {
+    /// Adaptive step index of the evaluating driver.
+    pub step: usize,
+    /// Load-imbalance factor the trigger saw.
+    pub lambda: f64,
+    /// Trigger policy display name (`lambda:1.20`, `costbenefit:8`).
+    pub trigger: String,
+    /// The verdict: did the policy fire?
+    pub fired: bool,
+    /// Modeled rebalance cost the trigger context carried (0 for
+    /// policies that never read the estimate).
+    pub rebalance_cost: f64,
+    /// Modeled per-step saving the trigger context carried.
+    pub saving_per_step: f64,
+    /// Per-strategy modeled-cost table at decision time (diffusive,
+    /// adaptive, scratch -- the `Auto` tie order).
+    pub candidates: Vec<CandidateCost>,
+    /// `RepartitionStrategy::name()` of the strategy that ran; `None`
+    /// when the trigger kept the current distribution.
+    pub chosen: Option<&'static str>,
+    /// Realized wall/TotalV/lambda, filled in after the rebalance ran.
+    pub realized: Option<RealizedOutcome>,
+}
+
+impl FlightEvent {
+    /// One JSON object, a single JSONL line (no trailing newline).
+    /// Hand-rolled like the rest of the crate's JSON output; every
+    /// float is emitted through [`json_f64`] so the line stays valid
+    /// JSON even for non-finite values.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        out.push_str(&format!(
+            "{{\"step\":{},\"lambda\":{},\"trigger\":\"{}\",\"fired\":{},\
+             \"rebalance_cost\":{},\"saving_per_step\":{}",
+            self.step,
+            json_f64(self.lambda),
+            escape(&self.trigger),
+            self.fired,
+            json_f64(self.rebalance_cost),
+            json_f64(self.saving_per_step),
+        ));
+        out.push_str(",\"candidates\":[");
+        for (i, c) in self.candidates.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"strategy\":\"{}\",\"rebalance_cost\":{},\"saving_per_step\":{},\
+                 \"lambda_after\":{},\"total\":{}}}",
+                c.strategy,
+                json_f64(c.rebalance_cost),
+                json_f64(c.saving_per_step),
+                json_f64(c.lambda_after),
+                json_f64(c.total),
+            ));
+        }
+        out.push(']');
+        match self.chosen {
+            Some(s) => out.push_str(&format!(",\"chosen\":\"{s}\"")),
+            None => out.push_str(",\"chosen\":null"),
+        }
+        match &self.realized {
+            Some(r) => out.push_str(&format!(
+                ",\"realized\":{{\"dlb_wall_s\":{},\"total_v\":{},\"lambda_after\":{}}}",
+                json_f64(r.dlb_wall_s),
+                json_f64(r.total_v),
+                json_f64(r.lambda_after),
+            )),
+            None => out.push_str(",\"realized\":null"),
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// JSON has no NaN/Infinity literals; clamp non-finite floats to 0 so
+/// a pathological estimate cannot corrupt the JSONL stream.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    crate::serve::json::escape(s)
+}
+
+/// The recorder: a bounded ring of [`FlightEvent`]s behind one mutex,
+/// with the tracer's enabled/dropped contract.
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    ring: Mutex<VecDeque<FlightEvent>>,
+    dropped: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new() -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            ring: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether events are being recorded (one relaxed load -- the
+    /// whole cost of a disabled recorder at the instrumentation site).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Append one event. No-op (no lock, no allocation) when disabled;
+    /// beyond the ring cap the *oldest* event is displaced and counted
+    /// dropped -- the tail of a long run is the interesting part.
+    pub fn record(&self, ev: FlightEvent) {
+        if !self.enabled() {
+            return;
+        }
+        let mut ring = self.ring.lock().expect("flight ring poisoned");
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Events recorded and still in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("flight ring poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events displaced at the ring cap (0 in any sane run).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy of the ring in record order; the ring is left intact.
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        self.ring
+            .lock()
+            .expect("flight ring poisoned")
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Drop every event and reset the dropped counter (tests, and the
+    /// boundary between CLI runs sharing the process).
+    pub fn clear(&self) {
+        self.ring.lock().expect("flight ring poisoned").clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// The whole ring as JSONL (`--flight out.jsonl` writes this).
+    pub fn to_jsonl(&self) -> String {
+        let ring = self.ring.lock().expect("flight ring poisoned");
+        let mut out = String::new();
+        for ev in ring.iter() {
+            out.push_str(&ev.to_json());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static FLIGHT: OnceLock<FlightRecorder> = OnceLock::new();
+
+/// The process-wide flight recorder the coordinator feeds (disabled
+/// until `--flight` or a test enables it).
+pub fn flight() -> &'static FlightRecorder {
+    FLIGHT.get_or_init(FlightRecorder::new)
+}
+
+/// Model-error summary from the always-on audit metrics
+/// (`dlb.flight.model_ratio.<strategy>`: modeled cost / realized DLB
+/// wall per rebalance): one line per strategy that rebalanced, plus a
+/// totals line. Printed at run end by `--flight`; the underlying
+/// histograms are in every `--metrics` dump regardless.
+pub fn model_error_summary() -> String {
+    let m = crate::obs::metrics();
+    let mut out = String::new();
+    for (strategy, name) in [
+        ("scratch", "dlb.flight.model_ratio.scratch"),
+        ("diffusive", "dlb.flight.model_ratio.diffusive"),
+        ("adaptive", "dlb.flight.model_ratio.adaptive"),
+    ] {
+        if let Some(h) = m.histogram(name) {
+            out.push_str(&format!(
+                "flight: {strategy:<10} rebalances={} modeled/realized mean={:.3} \
+                 p50={:.3} p95={:.3}\n",
+                h.count, h.mean, h.p50, h.p95
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "flight: rebalances={} events={} dropped={}\n",
+        m.counter("dlb.flight.rebalances"),
+        flight().len(),
+        flight().dropped(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(step: usize, fired: bool) -> FlightEvent {
+        FlightEvent {
+            step,
+            lambda: 1.3,
+            trigger: "lambda:1.20".to_string(),
+            fired,
+            rebalance_cost: 1e-3,
+            saving_per_step: 2e-3,
+            candidates: vec![CandidateCost {
+                strategy: "diffusive",
+                rebalance_cost: 1e-3,
+                saving_per_step: 2e-3,
+                lambda_after: 1.01,
+                total: 1.2e-3,
+            }],
+            chosen: fired.then_some("diffusive"),
+            realized: fired.then_some(RealizedOutcome {
+                dlb_wall_s: 1.5e-3,
+                total_v: 42.0,
+                lambda_after: 1.02,
+            }),
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = FlightRecorder::new();
+        assert!(!r.enabled());
+        r.record(ev(0, true));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let r = FlightRecorder::new();
+        r.set_enabled(true);
+        for i in 0..RING_CAP + 10 {
+            r.record(ev(i, false));
+        }
+        assert_eq!(r.len(), RING_CAP);
+        assert_eq!(r.dropped(), 10);
+        // oldest displaced: the ring starts at step 10
+        assert_eq!(r.snapshot().first().unwrap().step, 10);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn jsonl_is_one_complete_object_per_event() {
+        let r = FlightRecorder::new();
+        r.set_enabled(true);
+        r.record(ev(0, false));
+        r.record(ev(1, true));
+        let jsonl = r.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"fired\":false"));
+        assert!(lines[0].contains("\"chosen\":null"));
+        assert!(lines[0].contains("\"realized\":null"));
+        assert!(lines[1].contains("\"fired\":true"));
+        assert!(lines[1].contains("\"chosen\":\"diffusive\""));
+        assert!(lines[1].contains("\"total_v\":42"));
+        // the crate's own JSON parser must accept every line
+        for line in lines {
+            let v = crate::serve::json::parse(line).expect("valid JSON");
+            assert!(v.get("step").is_some());
+            assert!(v.get("candidates").is_some());
+        }
+    }
+
+    #[test]
+    fn non_finite_floats_stay_valid_json() {
+        let mut e = ev(0, false);
+        e.lambda = f64::NAN;
+        e.rebalance_cost = f64::INFINITY;
+        let line = e.to_json();
+        assert!(crate::serve::json::parse(&line).is_ok(), "{line}");
+        assert!(!line.contains("NaN") && !line.contains("inf"), "{line}");
+    }
+}

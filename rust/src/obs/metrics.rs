@@ -56,11 +56,17 @@ impl Histogram {
         }
     }
 
+    /// Record one sample. Non-finite values (NaN, ±inf) are counted
+    /// and land in the catch-all bucket, but stay out of sum/min/max
+    /// so a single bad sample cannot poison the mean or wreck the
+    /// quantile clamp range.
     pub fn observe(&mut self, v: f64) {
         self.count += 1;
-        self.sum += v;
-        self.min = self.min.min(v);
-        self.max = self.max.max(v);
+        if v.is_finite() {
+            self.sum += v;
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
         self.buckets[bucket_of(v)] += 1;
     }
 
@@ -76,19 +82,27 @@ impl Histogram {
         }
     }
 
+    /// Exact sum of the finite samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest finite sample; 0 when none has been observed (empty
+    /// histogram, or nothing but NaN/±inf).
     pub fn min(&self) -> f64 {
-        if self.count == 0 {
-            0.0
-        } else {
+        if self.min.is_finite() {
             self.min
+        } else {
+            0.0
         }
     }
 
+    /// Largest finite sample; 0 when none has been observed.
     pub fn max(&self) -> f64 {
-        if self.count == 0 {
-            0.0
-        } else {
+        if self.max.is_finite() {
             self.max
+        } else {
+            0.0
         }
     }
 
@@ -105,14 +119,17 @@ impl Histogram {
             cum += c;
             if cum >= target {
                 if i == 0 {
-                    // zero/negative/subnormal catch-all: no midpoint
-                    return self.min;
+                    // zero/negative/subnormal/non-finite catch-all:
+                    // no midpoint, fall back to the guarded min
+                    return self.min();
                 }
+                // i > 0 implies a finite positive sample was observed,
+                // so the guarded accessors return a real range here
                 let mid = 1.5 * 2.0f64.powi(i as i32 - EXP_OFFSET);
-                return mid.clamp(self.min, self.max);
+                return mid.clamp(self.min(), self.max());
             }
         }
-        self.max
+        self.max()
     }
 }
 
@@ -139,6 +156,27 @@ enum Entry {
     Hist(Histogram),
 }
 
+/// Prometheus-normalized metric name: dots become underscores
+/// (`serve.jobs` -> `serve_jobs`). Registration enforces (in debug
+/// builds) that names contain nothing but `[a-z0-9_.]`, so this one
+/// substitution is the whole mapping -- `/metrics`, [`Metrics::dump`]
+/// and the bench extras agree on names by construction.
+pub fn prom_name(name: &str) -> String {
+    name.replace('.', "_")
+}
+
+/// A registrable metric name: starts with a lowercase letter, made of
+/// `[a-z0-9_.]`, no trailing dot. Checked by `debug_assert!` at every
+/// registration site so a bad name fails tier-1, never production.
+fn valid_metric_name(name: &str) -> bool {
+    let b = name.as_bytes();
+    !b.is_empty()
+        && b[0].is_ascii_lowercase()
+        && b[b.len() - 1] != b'.'
+        && b.iter()
+            .all(|&c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_' || c == b'.')
+}
+
 /// The registry: a name-keyed map of counters and histograms. Names
 /// are `&'static str` dotted paths (`"driver.solve_s"`), so feeding
 /// a metric never allocates once its entry exists; `BTreeMap` keeps
@@ -156,6 +194,7 @@ impl Metrics {
 
     /// Add to a monotonic counter, creating it at zero on first use.
     pub fn counter_add(&self, name: &'static str, by: u64) {
+        debug_assert!(valid_metric_name(name), "invalid metric name {name:?}");
         let mut m = self.inner.lock().expect("metrics poisoned");
         match m.entry(name).or_insert(Entry::Counter(0)) {
             Entry::Counter(c) => *c += by,
@@ -163,8 +202,22 @@ impl Metrics {
         }
     }
 
+    /// Set a counter to an absolute value. For gauges derived from
+    /// state owned elsewhere (`obs.trace.dropped` mirrors
+    /// `Tracer::dropped()`), refreshed by `obs::sync_derived_metrics`
+    /// just before every dump or `/metrics` scrape.
+    pub fn counter_set(&self, name: &'static str, v: u64) {
+        debug_assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        let mut m = self.inner.lock().expect("metrics poisoned");
+        match m.entry(name).or_insert(Entry::Counter(0)) {
+            Entry::Counter(c) => *c = v,
+            Entry::Hist(_) => debug_assert!(false, "metric {name} is a histogram"),
+        }
+    }
+
     /// Record one sample into a histogram, creating it on first use.
     pub fn observe(&self, name: &'static str, v: f64) {
+        debug_assert!(valid_metric_name(name), "invalid metric name {name:?}");
         let mut m = self.inner.lock().expect("metrics poisoned");
         match m.entry(name).or_insert_with(|| Entry::Hist(Histogram::new())) {
             Entry::Hist(h) => h.observe(v),
@@ -219,6 +272,38 @@ impl Metrics {
                         h.quantile(0.50),
                         h.quantile(0.95),
                         h.max()
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of the whole
+    /// registry, names normalized via [`prom_name`]: counters as
+    /// `# TYPE name counter` plus value, histograms as a summary with
+    /// p50/p95 quantiles and exact `_sum`/`_count`. Served by
+    /// `obs::serve_status` at `/metrics`.
+    pub fn prometheus(&self) -> String {
+        let m = self.inner.lock().expect("metrics poisoned");
+        let mut out = String::new();
+        for (name, entry) in m.iter() {
+            let p = prom_name(name);
+            match entry {
+                Entry::Counter(c) => {
+                    out.push_str(&format!("# TYPE {p} counter\n{p} {c}\n"));
+                }
+                Entry::Hist(h) => {
+                    out.push_str(&format!(
+                        "# TYPE {p} summary\n\
+                         {p}{{quantile=\"0.5\"}} {}\n\
+                         {p}{{quantile=\"0.95\"}} {}\n\
+                         {p}_sum {}\n\
+                         {p}_count {}\n",
+                        h.quantile(0.50),
+                        h.quantile(0.95),
+                        h.sum(),
+                        h.count()
                     ));
                 }
             }
@@ -307,6 +392,121 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn non_finite_observations_do_not_poison() {
+        let m = Metrics::new();
+        m.observe("nf", 2.0);
+        m.observe("nf", f64::NAN);
+        m.observe("nf", f64::INFINITY);
+        m.observe("nf", f64::NEG_INFINITY);
+        m.observe("nf", 4.0);
+        let h = m.histogram("nf").unwrap();
+        assert_eq!(h.count, 5, "non-finite samples are still counted");
+        assert_eq!(h.min, 2.0, "min tracks only finite samples");
+        assert_eq!(h.max, 4.0, "max tracks only finite samples");
+        assert!(h.mean.is_finite(), "mean = {}", h.mean);
+        assert!(h.p50.is_finite() && h.p95.is_finite());
+        assert!(h.p50 >= 2.0 && h.p95 <= 4.0, "p50={} p95={}", h.p50, h.p95);
+    }
+
+    #[test]
+    fn all_non_finite_histogram_reads_zero() {
+        let mut h = Histogram::new();
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.sum(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_the_sample() {
+        let mut h = Histogram::new();
+        h.observe(3.0);
+        assert_eq!(h.quantile(0.0), 3.0);
+        assert_eq!(h.quantile(0.5), 3.0);
+        assert_eq!(h.quantile(1.0), 3.0);
+        assert_eq!(h.min(), 3.0);
+        assert_eq!(h.max(), 3.0);
+    }
+
+    #[test]
+    fn concurrent_counter_add_sums_exactly() {
+        let m = Metrics::new();
+        let threads = 8u64;
+        let per = 10_000u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    for _ in 0..per {
+                        m.counter_add("c", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("c"), threads * per);
+    }
+
+    #[test]
+    fn prom_name_normalizes_and_validates() {
+        assert_eq!(prom_name("serve.jobs_submitted"), "serve_jobs_submitted");
+        assert_eq!(
+            prom_name("dlb.flight.model_ratio.scratch"),
+            "dlb_flight_model_ratio_scratch"
+        );
+        assert_eq!(prom_name("plain"), "plain");
+        assert!(valid_metric_name("driver.solve_s"));
+        assert!(valid_metric_name("exec.threads.barrier_wait_s"));
+        assert!(!valid_metric_name(""));
+        assert!(!valid_metric_name("Driver.Solve"));
+        assert!(!valid_metric_name("a b"));
+        assert!(!valid_metric_name(".x"));
+        assert!(!valid_metric_name("x."));
+        assert!(!valid_metric_name("9x"));
+        assert!(!valid_metric_name("serve-jobs"));
+    }
+
+    #[test]
+    fn prometheus_round_trips_dump_names() {
+        let m = Metrics::new();
+        m.counter_add("serve.jobs", 3);
+        m.observe("driver.solve_s", 0.5);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE serve_jobs counter\nserve_jobs 3\n"));
+        assert!(text.contains("# TYPE driver_solve_s summary\n"));
+        assert!(text.contains("driver_solve_s{quantile=\"0.5\"} 0.5\n"));
+        assert!(text.contains("driver_solve_s_sum 0.5\n"));
+        assert!(text.contains("driver_solve_s_count 1\n"));
+        // every dump line's name maps onto exactly one exposition
+        // family: normalization happens in one place for both views
+        for line in m.dump().lines() {
+            let name = line.split_whitespace().next().unwrap();
+            assert!(
+                text.contains(&format!("# TYPE {} ", prom_name(name))),
+                "dump name {name} missing from exposition"
+            );
+        }
+        // and the exposition itself is line-valid
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            let metric = name.split('{').next().unwrap();
+            assert!(!metric.contains('.'), "un-normalized: {line}");
+            assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn bad_names_are_rejected_at_registration_in_debug() {
+        Metrics::new().counter_add("Bad Name", 1);
     }
 
     #[test]

@@ -1,7 +1,8 @@
-//! Observability: span-based phase tracing and a metrics registry
-//! (DESIGN.md §10).
+//! Observability: span-based phase tracing, a metrics registry, the
+//! DLB decision flight recorder and a live status plane (DESIGN.md
+//! §10, §14).
 //!
-//! Two independent mechanisms with different cost contracts:
+//! Four mechanisms with different cost contracts:
 //!
 //! * **Tracing** ([`trace`]) -- per-rank buffers of timed phase
 //!   spans, off by default, enabled by `--trace out.json`. Sites sit
@@ -10,13 +11,38 @@
 //!   `tests/obs_overhead.rs`).
 //! * **Metrics** ([`metrics`]) -- always-on counters and histograms
 //!   fed at step granularity by the driver, `RebalancePipeline` and
-//!   both executors; dumped deterministically by `--metrics`.
+//!   both executors; dumped deterministically by `--metrics`,
+//!   exposed in Prometheus text form by the status plane.
+//! * **Flight recorder** ([`flight`]) -- off by default, enabled by
+//!   `--flight out.jsonl`: one structured event per trigger
+//!   evaluation with the per-strategy modeled-cost table and the
+//!   realized outcome, so every DLB decision is auditable.
+//! * **Status plane** ([`serve_status`]) -- opt-in `--status-port`
+//!   loopback HTTP thread serving `/metrics`, `/jobs`, `/health`;
+//!   off = no thread, no socket (also enforced by
+//!   `tests/obs_overhead.rs`).
 
+pub mod flight;
 pub mod metrics;
+pub mod serve_status;
 pub mod trace;
 
-pub use metrics::{metrics, HistSummary, Metrics};
+pub use flight::{
+    flight, model_error_summary, CandidateCost, FlightEvent, FlightRecorder, RealizedOutcome,
+};
+pub use metrics::{metrics, prom_name, HistSummary, Metrics};
+pub use serve_status::{JobsProvider, StatusServer};
 pub use trace::{span, tracer, Phase, Span, SpanEvent, Tracer, DRIVER_LANE};
+
+/// Mirror state owned by other obs subsystems into the metrics
+/// registry as counters: `obs.trace.dropped` (spans silently dropped
+/// at the shard cap) and `obs.flight.dropped` (flight events
+/// displaced from the ring). Called just before every metrics dump
+/// and every `/metrics` scrape so the exported values are current.
+pub fn sync_derived_metrics() {
+    metrics().counter_set("obs.trace.dropped", tracer().dropped());
+    metrics().counter_set("obs.flight.dropped", flight().dropped());
+}
 
 /// Open a span on the driver lane (the sequential phases of the
 /// adaptive loop: solve, estimate, mark, refine, partition, remap,

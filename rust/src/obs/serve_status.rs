@@ -1,0 +1,238 @@
+//! Zero-dependency status plane (DESIGN.md §14): an opt-in
+//! `std::net::TcpListener` thread serving a minimal HTTP/1.1 surface:
+//!
+//! * `GET /metrics` -- Prometheus text exposition of the whole
+//!   [`crate::obs::Metrics`] registry (names normalized
+//!   `serve.jobs` -> `serve_jobs`, see [`crate::obs::prom_name`]);
+//! * `GET /jobs`    -- live JSONL job table, one JSON object per job,
+//!   supplied by the embedder (the serve daemon wires its
+//!   `JobRegistry` in as a closure so `obs` never depends on `serve`);
+//! * `GET /health`  -- `ok`.
+//!
+//! Off = off: no `--status-port` means no thread, no socket, no
+//! allocation (`tests/obs_overhead.rs` proves it). The server binds
+//! `127.0.0.1` only -- this is an operator's loopback window, not a
+//! public API -- and handles one request per connection
+//! (`Connection: close`), which keeps the loop free of any
+//! keep-alive state machine.
+
+use crate::util::error::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Supplier of the `/jobs` body: called per request, returns JSONL.
+pub type JobsProvider = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// A running status server: one accept-loop thread plus the bound
+/// address. Stop it with [`StatusServer::stop`]; dropping it stops it
+/// too (best effort, still joins the thread).
+pub struct StatusServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatusServer {
+    /// Bind `127.0.0.1:port` (port 0 = kernel-assigned, for tests;
+    /// read the result back from [`StatusServer::addr`]) and spawn the
+    /// accept loop.
+    pub fn start(port: u16, jobs: Option<JobsProvider>) -> Result<StatusServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding status port {port}"))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("phg-status".to_string())
+                .spawn(move || accept_loop(listener, &shutdown, jobs))
+                .context("spawning status thread")?
+        };
+        Ok(StatusServer {
+            addr,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the kernel's choice).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the thread. The blocking `accept` is
+    /// unblocked by a self-connection -- no platform-specific socket
+    /// shutdown needed.
+    pub fn stop(mut self) {
+        self.shutdown_and_join();
+    }
+
+    fn shutdown_and_join(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake the accept loop; ignore failure (the thread may already
+        // be past accept, or the listener gone at process teardown)
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        if self.handle.is_some() {
+            self.shutdown_and_join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shutdown: &AtomicBool, jobs: Option<JobsProvider>) {
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        // a stalled client must not wedge the (single-threaded)
+        // accept loop; 2s is generous for a loopback GET
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+        // per-request failures (disconnects, timeouts) are the
+        // client's problem, never the daemon's
+        let _ = handle_conn(stream, &jobs);
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, jobs: &Option<JobsProvider>) -> std::io::Result<()> {
+    let path = match read_request_path(&mut stream)? {
+        Some(p) => p,
+        None => return Ok(()), // malformed request line: just close
+    };
+    let (status, content_type, body) = match path.as_str() {
+        "/metrics" => {
+            crate::obs::sync_derived_metrics();
+            (
+                "200 OK",
+                // the Prometheus text exposition format version
+                "text/plain; version=0.0.4; charset=utf-8",
+                crate::obs::metrics().prometheus(),
+            )
+        }
+        "/jobs" => (
+            "200 OK",
+            "application/x-ndjson",
+            jobs.as_ref().map_or_else(String::new, |p| p()),
+        ),
+        "/health" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found (routes: /metrics /jobs /health)\n".to_string(),
+        ),
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// Read up to the header terminator and return the request-line path
+/// (`GET /metrics HTTP/1.1` -> `/metrics`). `None` on anything that
+/// is not a well-formed GET -- this is a status window, not a server.
+fn read_request_path(stream: &mut TcpStream) -> std::io::Result<Option<String>> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let line = text.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    match (parts.next(), parts.next()) {
+        (Some("GET"), Some(path)) => Ok(Some(path.to_string())),
+        _ => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Blocking loopback GET against a test server; returns
+    /// (status line, body).
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        let (head, body) = text.split_once("\r\n\r\n").expect("header terminator");
+        (head.lines().next().unwrap().to_string(), body.to_string())
+    }
+
+    #[test]
+    fn routes_serve_health_jobs_and_404() {
+        let jobs: JobsProvider = Arc::new(|| "{\"id\":\"t\"}\n".to_string());
+        let srv = StatusServer::start(0, Some(jobs)).expect("ephemeral bind");
+        let addr = srv.addr();
+        assert_ne!(addr.port(), 0, "port 0 must resolve to a real port");
+
+        let (status, body) = get(addr, "/health");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body, "ok\n");
+
+        let (status, body) = get(addr, "/jobs");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body, "{\"id\":\"t\"}\n");
+
+        let (status, body) = get(addr, "/nope");
+        assert!(status.contains("404"), "{status}");
+        assert!(body.contains("/metrics"), "{body}");
+
+        let (status, body) = get(addr, "/metrics");
+        assert!(status.contains("200"), "{status}");
+        // the registry is process-global and other tests feed it, so
+        // only the format is asserted here: every non-comment line is
+        // `name[{quantile}] value`
+        for line in body.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparsable value: {line}");
+            // the metric name (before any {quantile=...} label set)
+            // must be dot-free, i.e. prom_name-normalized
+            let metric = name.split('{').next().unwrap();
+            assert!(!metric.contains('.'), "un-normalized name: {line}");
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn jobs_without_provider_is_empty_200() {
+        let srv = StatusServer::start(0, None).expect("bind");
+        let (status, body) = get(srv.addr(), "/jobs");
+        assert!(status.contains("200"), "{status}");
+        assert!(body.is_empty());
+        srv.stop();
+    }
+
+    #[test]
+    fn stop_joins_even_with_no_traffic() {
+        let srv = StatusServer::start(0, None).expect("bind");
+        srv.stop(); // must not hang on the blocking accept
+    }
+}

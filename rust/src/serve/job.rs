@@ -143,6 +143,15 @@ impl JobSpec {
     }
 }
 
+/// JSON has no NaN/Infinity literals; the job table clamps them to 0.
+fn finite_or_zero(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 fn as_count(v: &Json) -> Option<usize> {
     match v.as_f64() {
         Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 1e9 => Some(n as usize),
@@ -193,6 +202,13 @@ pub struct JobRecord {
     pub n_dofs: usize,
     pub l2_error: f64,
     pub wall_s: f64,
+    /// Last observed load-imbalance factor (0 until the driver has
+    /// produced a step record).
+    pub lambda: f64,
+    /// Wall of the in-flight attempt so far; folded into `wall_s` and
+    /// zeroed when the attempt finishes. Lets `/jobs` report a live
+    /// wall for running jobs without double-counting finished ones.
+    pub attempt_wall_s: f64,
 }
 
 /// The daemon's job table + deterministic scheduler (see module docs).
@@ -217,6 +233,8 @@ impl JobRegistry {
                 n_dofs: 0,
                 l2_error: 0.0,
                 wall_s: 0.0,
+                lambda: 0.0,
+                attempt_wall_s: 0.0,
             })
             .collect();
         Self {
@@ -275,17 +293,77 @@ impl JobRegistry {
         row.error = Some(error);
     }
 
-    /// Mark every still-queued job cancelled (drain: nothing new runs).
-    pub fn cancel_queued(&self) {
+    /// Mark every still-queued job cancelled (drain: nothing new
+    /// runs); returns how many were cancelled so the daemon can count
+    /// them into `serve.jobs_cancelled`.
+    pub fn cancel_queued(&self) -> usize {
         let mut rows = self.rows.lock().unwrap();
+        let mut n = 0;
         for row in rows.iter_mut() {
             if row.state == JobState::Queued {
                 row.state = JobState::Cancelled;
                 if row.error.is_none() {
                     row.error = Some("drained before starting".to_string());
                 }
+                n += 1;
             }
         }
+        n
+    }
+
+    /// Live progress of a running attempt, fed by the runner at step
+    /// granularity: the `/jobs` route reads these fields mid-run.
+    pub fn progress(
+        &self,
+        i: usize,
+        steps_done: usize,
+        n_elements: usize,
+        n_dofs: usize,
+        lambda: f64,
+        attempt_wall_s: f64,
+    ) {
+        let mut rows = self.rows.lock().unwrap();
+        let row = &mut rows[i];
+        row.steps_done = steps_done;
+        row.n_elements = n_elements;
+        row.n_dofs = n_dofs;
+        row.lambda = lambda;
+        row.attempt_wall_s = attempt_wall_s;
+    }
+
+    /// The live job table as JSONL: one JSON object per row in spec
+    /// order -- what the status plane serves at `/jobs`. `wall_s`
+    /// includes the in-flight attempt so a long-running job's wall
+    /// visibly advances between polls.
+    pub fn jobs_jsonl(&self) -> String {
+        let rows = self.rows.lock().unwrap();
+        let mut out = String::new();
+        for row in rows.iter() {
+            out.push_str(&format!(
+                "{{\"id\":\"{}\",\"state\":\"{}\",\"attempts\":{},\"steps_done\":{},\
+                 \"steps\":{},\"n_elements\":{},\"n_dofs\":{},\"lambda\":{},\"wall_s\":{}",
+                json::escape(&row.spec.id),
+                row.state.as_str(),
+                row.attempts,
+                row.steps_done,
+                row.spec.steps,
+                row.n_elements,
+                row.n_dofs,
+                finite_or_zero(row.lambda),
+                finite_or_zero(row.wall_s + row.attempt_wall_s),
+            ));
+            if let Some(e) = &row.error {
+                out.push_str(&format!(",\"error\":\"{}\"", json::escape(e)));
+            }
+            if let Some(c) = &row.checkpoint {
+                out.push_str(&format!(
+                    ",\"checkpoint\":\"{}\"",
+                    json::escape(&c.display().to_string())
+                ));
+            }
+            out.push_str("}\n");
+        }
+        out
     }
 
     fn finish(
@@ -308,6 +386,7 @@ impl JobRegistry {
         row.n_dofs = outcome.n_dofs;
         row.l2_error = outcome.l2_error;
         row.wall_s += outcome.wall_s;
+        row.attempt_wall_s = 0.0;
     }
 
     pub fn snapshot(&self) -> Vec<JobRecord> {
@@ -378,6 +457,46 @@ mod tests {
             .to_string();
         assert!(err.contains("names files"), "{err}");
         assert!(RESERVED.contains(&"steps"));
+    }
+
+    #[test]
+    fn jobs_jsonl_reflects_live_progress() {
+        let specs =
+            JobSpec::parse_jsonl("{\"id\": \"a\", \"steps\": 4}\n{\"id\": \"b\"}\n").unwrap();
+        let reg = JobRegistry::new(specs);
+        let (i, _) = reg.claim_next().unwrap();
+        reg.progress(i, 2, 100, 50, 1.25, 0.5);
+        let jsonl = reg.jobs_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"state\":\"running\""), "{}", lines[0]);
+        assert!(lines[0].contains("\"steps_done\":2"), "{}", lines[0]);
+        assert!(lines[0].contains("\"lambda\":1.25"), "{}", lines[0]);
+        assert!(lines[0].contains("\"wall_s\":0.5"), "{}", lines[0]);
+        assert!(lines[1].contains("\"state\":\"queued\""), "{}", lines[1]);
+        for line in &lines {
+            let v = json::parse(line).expect("valid JSON per line");
+            assert!(v.get("id").is_some());
+        }
+        // finishing folds the attempt wall into wall_s exactly once
+        reg.complete(
+            i,
+            JobOutcome {
+                steps_done: 4,
+                wall_s: 0.7,
+                ..Default::default()
+            },
+        );
+        let jsonl = reg.jobs_jsonl();
+        assert!(
+            jsonl.lines().next().unwrap().contains("\"wall_s\":0.7"),
+            "{jsonl}"
+        );
+        // non-finite floats are clamped; every line stays valid JSON
+        reg.progress(1, 0, 0, 0, f64::NAN, f64::INFINITY);
+        for line in reg.jobs_jsonl().lines() {
+            assert!(json::parse(line).is_ok(), "{line}");
+        }
     }
 
     #[test]

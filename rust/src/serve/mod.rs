@@ -48,6 +48,9 @@ pub struct ServeOptions {
     pub drain_timeout_s: f64,
     /// Base backoff before a retry attempt (doubles per attempt).
     pub retry_base_ms: u64,
+    /// Loopback status plane (`/metrics`, `/jobs`, `/health`) on this
+    /// port (0 = kernel-assigned); `None` = no thread, no socket.
+    pub status_port: Option<u16>,
 }
 
 impl Default for ServeOptions {
@@ -58,6 +61,7 @@ impl Default for ServeOptions {
             trace_dir: Some(PathBuf::from("out/serve")),
             drain_timeout_s: 0.0,
             retry_base_ms: 100,
+            status_port: None,
         }
     }
 }
@@ -126,16 +130,60 @@ pub fn serve_with_drain(
     if specs.is_empty() {
         bail!("serve: no jobs (empty JSONL)");
     }
+    let registry = Arc::new(JobRegistry::new(specs));
+    obs::metrics().counter_add("serve.jobs_submitted", registry.len() as u64);
+    // opt-in status plane: the registry snapshot closure is the only
+    // coupling between obs::serve_status and the serve daemon
+    let status = match opts.status_port {
+        Some(port) => {
+            let reg = Arc::clone(&registry);
+            let server =
+                obs::StatusServer::start(port, Some(Arc::new(move || reg.jobs_jsonl())))?;
+            eprintln!("serve: status plane on http://{}", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
+    let result = run_registry(&registry, opts, &drain);
+    if let Some(server) = status {
+        server.stop();
+    }
+    result?;
+    Ok(ServeSummary {
+        jobs: registry.snapshot(),
+    })
+}
+
+/// Drive the worker pool over a caller-owned registry until every job
+/// is terminal (the body of [`serve_with_drain`], split out so tests
+/// and embedders can own the registry -- e.g. to poll its live state
+/// through a status server they also own).
+pub fn run_registry(
+    registry: &Arc<JobRegistry>,
+    opts: &ServeOptions,
+    drain: &Arc<AtomicBool>,
+) -> Result<()> {
+    // touch every serve.* counter so a dump after a clean run shows
+    // an explicit 0 instead of omitting the metric (the CI smoke
+    // greps for retry/drain/cancel counts by name)
+    for name in [
+        "serve.jobs_submitted",
+        "serve.jobs_completed",
+        "serve.jobs_drained",
+        "serve.jobs_retried",
+        "serve.jobs_cancelled",
+        "serve.job_errors",
+    ] {
+        obs::metrics().counter_add(name, 0);
+    }
     std::fs::create_dir_all(&opts.checkpoint_dir).with_context(|| {
         format!("creating checkpoint dir {}", opts.checkpoint_dir.display())
     })?;
     let workers = if opts.workers == 0 {
-        crate::exec::available_threads().min(specs.len()).max(1)
+        crate::exec::available_threads().min(registry.len()).max(1)
     } else {
-        opts.workers.min(specs.len())
+        opts.workers.min(registry.len())
     };
-    let registry = Arc::new(JobRegistry::new(specs));
-    obs::metrics().counter_add("serve.jobs_submitted", registry.len() as u64);
 
     let done = AtomicBool::new(false);
     let deadline = (opts.drain_timeout_s > 0.0).then(|| {
@@ -145,7 +193,7 @@ pub fn serve_with_drain(
         // watchdog: folds the signal flag and the drain timeout into
         // the shared drain flag, then exits with the workers
         let watchdog = {
-            let drain = Arc::clone(&drain);
+            let drain = Arc::clone(drain);
             let done = &done;
             scope.spawn(move || loop {
                 if done.load(Ordering::SeqCst) {
@@ -164,8 +212,8 @@ pub fn serve_with_drain(
         };
         let handles: Vec<_> = (0..workers)
             .map(|_| {
-                let registry = Arc::clone(&registry);
-                let drain = Arc::clone(&drain);
+                let registry = Arc::clone(registry);
+                let drain = Arc::clone(drain);
                 scope.spawn(move || worker_loop(&registry, opts, &drain))
             })
             .collect();
@@ -176,33 +224,34 @@ pub fn serve_with_drain(
         watchdog.join().expect("serve watchdog panicked");
     });
 
-    let summary = ServeSummary {
-        jobs: registry.snapshot(),
-    };
     if !registry.all_terminal() {
         // can't happen: workers only exit on an empty queue or drain
         return Err(format_err!("serve: non-terminal jobs after shutdown"));
     }
-    Ok(summary)
+    Ok(())
 }
 
 fn worker_loop(registry: &JobRegistry, opts: &ServeOptions, drain: &AtomicBool) {
     loop {
         if drain.load(Ordering::SeqCst) {
             // nothing new starts during a drain
-            registry.cancel_queued();
+            let cancelled = registry.cancel_queued();
+            if cancelled > 0 {
+                obs::metrics().counter_add("serve.jobs_cancelled", cancelled as u64);
+            }
             return;
         }
         let Some((i, spec)) = registry.claim_next() else {
             return;
         };
-        let run = runner::run_job(&spec, opts, drain);
+        let run = runner::run_job(&spec, opts, drain, Some((registry, i)));
         match run.outcome {
             RunOutcome::Completed => registry.complete(i, run.stats),
             RunOutcome::Drained(path) => registry.suspend(i, path, run.stats),
             RunOutcome::Error(e) => {
                 let attempts = registry.attempts(i);
                 if attempts <= spec.max_retries {
+                    obs::metrics().counter_add("serve.jobs_retried", 1);
                     let backoff = opts
                         .retry_base_ms
                         .saturating_mul(1 << (attempts - 1).min(4))
@@ -229,6 +278,7 @@ mod tests {
             trace_dir: Some(base.join("trace")),
             drain_timeout_s: 0.0,
             retry_base_ms: 1,
+            status_port: None,
         }
     }
 

@@ -9,7 +9,7 @@
 use crate::config::Config;
 use crate::coordinator::AdaptiveDriver;
 use crate::obs;
-use crate::serve::job::{JobOutcome, JobSpec};
+use crate::serve::job::{JobOutcome, JobRegistry, JobSpec};
 use crate::serve::json::escape;
 use crate::serve::ServeOptions;
 use crate::util::error::{Context, Result};
@@ -43,10 +43,20 @@ struct StepEvent {
 }
 
 /// Run one attempt of `spec`. Never panics: job panics become
-/// `RunOutcome::Error`.
-pub fn run_job(spec: &JobSpec, opts: &ServeOptions, drain: &AtomicBool) -> JobRun {
+/// `RunOutcome::Error`. When `registry` carries `(registry, row)`,
+/// per-step progress (steps done, mesh size, last lambda, attempt
+/// wall) is pushed into that row so the status plane's `/jobs` route
+/// sees the job move mid-run.
+pub fn run_job(
+    spec: &JobSpec,
+    opts: &ServeOptions,
+    drain: &AtomicBool,
+    registry: Option<(&JobRegistry, usize)>,
+) -> JobRun {
     let sw = Stopwatch::start();
-    let result = catch_unwind(AssertUnwindSafe(|| run_job_inner(spec, opts, drain)));
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        run_job_inner(spec, opts, drain, registry)
+    }));
     let wall_s = sw.elapsed();
     let mut run = match result {
         Ok(Ok(run)) => run,
@@ -80,7 +90,12 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn run_job_inner(spec: &JobSpec, opts: &ServeOptions, drain: &AtomicBool) -> Result<JobRun> {
+fn run_job_inner(
+    spec: &JobSpec,
+    opts: &ServeOptions,
+    drain: &AtomicBool,
+    registry: Option<(&JobRegistry, usize)>,
+) -> Result<JobRun> {
     let mut cfg = Config::new();
     cfg.apply_pairs(&spec.overrides);
     cfg.set("nsteps", spec.steps);
@@ -111,6 +126,16 @@ fn run_job_inner(spec: &JobSpec, opts: &ServeOptions, drain: &AtomicBool) -> Res
                 n_elements: rec.n_elements,
                 n_dofs: rec.n_dofs,
             });
+            if let Some((reg, row)) = registry {
+                reg.progress(
+                    row,
+                    driver.steps_completed(),
+                    rec.n_elements,
+                    rec.n_dofs,
+                    rec.imbalance_after,
+                    sw.elapsed(),
+                );
+            }
         }
         // the per-job drain rehearsal hook (see JobSpec::drain_after):
         // counts steps of this attempt, not the pre-checkpoint prefix

@@ -2,10 +2,11 @@
 //! span path on the PCG hot loop performs **zero** allocations (it is
 //! two relaxed atomic loads and no clock read); the threaded PCG's
 //! steady-state iteration loop (halo exchange included) also
-//! allocates nothing per iteration. Enforced with a counting global
-//! allocator, which is why this is its own test binary with exactly
-//! one `#[test]`: any concurrent test thread would pollute the
-//! allocation counter.
+//! allocates nothing per iteration; the disabled flight recorder and
+//! the absent status plane (no `--status-port`) add no allocations and
+//! spawn no thread. Enforced with a counting global allocator, which
+//! is why this is its own test binary with exactly one `#[test]`: any
+//! concurrent test thread would pollute the allocation counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -41,6 +42,14 @@ unsafe impl GlobalAlloc for CountingAlloc {
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Thread count of this process via `/proc/self/task` (Linux); `None`
+/// where procfs is unavailable, which skips the thread assertions.
+fn thread_count() -> Option<usize> {
+    std::fs::read_dir("/proc/self/task")
+        .ok()
+        .map(|dir| dir.count())
+}
 
 #[test]
 fn disabled_tracing_adds_no_allocations_to_the_hot_loop() {
@@ -153,6 +162,54 @@ fn disabled_tracing_adds_no_allocations_to_the_hot_loop() {
         );
     }
 
+    // ---- disabled flight recorder: what a run without `--flight`
+    // pays at every trigger evaluation is this gate -- one relaxed
+    // load -- and the coordinator gates event *construction* on it, so
+    // nothing downstream (candidate table, strings) is ever built.
+    // A record() call on a disabled recorder is an immediate return:
+    // no lock, no allocation (the pre-built event is merely dropped).
+    let fl = obs::flight();
+    assert!(!fl.enabled(), "flight recorder must be off by default");
+    let probe = obs::FlightEvent {
+        step: 0,
+        lambda: 1.0,
+        trigger: "lambda:1.20".to_string(),
+        fired: false,
+        rebalance_cost: 0.0,
+        saving_per_step: 0.0,
+        candidates: Vec::new(),
+        chosen: None,
+        realized: None,
+    };
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..100_000usize {
+        std::hint::black_box(fl.enabled());
+    }
+    fl.record(probe);
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after, before,
+        "disabled flight path allocated {} times over 100k gates + 1 record",
+        after - before
+    );
+    assert!(fl.is_empty(), "disabled recorder must record nothing");
+    assert_eq!(fl.dropped(), 0);
+
+    // ---- absent status plane: without `--status-port` there is no
+    // server object at all -- the run path holds `None`, which costs
+    // no allocation and spawns no thread (compare PR 9: the baseline
+    // thread census is whatever the harness + PCG warm-up left us)
+    let threads_baseline = thread_count();
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let status: Option<obs::StatusServer> = None;
+    assert!(status.is_none());
+    drop(status);
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after, before, "a disabled status plane must not allocate");
+    if let (Some(t0), Some(t1)) = (threads_baseline, thread_count()) {
+        assert_eq!(t1, t0, "a disabled status plane must not spawn threads");
+    }
+
     // positive control: the counting allocator really counts -- an
     // *enabled* span must allocate (first push into an empty shard)
     tr.set_enabled(true);
@@ -167,4 +224,33 @@ fn disabled_tracing_adds_no_allocations_to_the_hot_loop() {
     );
     assert_eq!(tr.len(), 1);
     tr.clear();
+
+    // positive control: an *enabled* recorder really records (and so
+    // the disabled assertions above are not vacuous)
+    fl.set_enabled(true);
+    fl.record(obs::FlightEvent {
+        step: 1,
+        lambda: 1.2,
+        trigger: "lambda:1.20".to_string(),
+        fired: false,
+        rebalance_cost: 0.0,
+        saving_per_step: 0.0,
+        candidates: Vec::new(),
+        chosen: None,
+        realized: None,
+    });
+    fl.set_enabled(false);
+    assert_eq!(fl.len(), 1);
+    fl.clear();
+
+    // positive control: a *started* status server runs exactly one
+    // accept thread, and stop() joins it back out of the census
+    if let Some(t0) = thread_count() {
+        let srv = obs::StatusServer::start(0, None).expect("ephemeral status server");
+        let t1 = thread_count().expect("procfs stays available");
+        assert_eq!(t1, t0 + 1, "status server must run exactly one thread");
+        srv.stop();
+        let t2 = thread_count().expect("procfs stays available");
+        assert_eq!(t2, t0, "stop() must join the accept thread");
+    }
 }

@@ -259,6 +259,7 @@ fn temp_opts(tag: &str) -> (ServeOptions, PathBuf) {
         trace_dir: Some(base.join("trace")),
         drain_timeout_s: 0.0,
         retry_base_ms: 1,
+        status_port: None,
     };
     (opts, base)
 }

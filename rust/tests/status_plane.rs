@@ -1,0 +1,195 @@
+//! End-to-end status plane + flight recorder (DESIGN.md §14): a
+//! multi-job serve run with the loopback HTTP window and the DLB
+//! decision log both on, polled over *real* sockets mid-run.
+//!
+//! This is the only driver-running test in this binary on purpose: the
+//! flight ring and the `dlb.flight.*` audit metrics are process-global,
+//! so keeping other drivers out makes the deltas below attributable.
+
+use phg_dlb::obs;
+use phg_dlb::serve::{self, json, JobRegistry, JobSpec, JobState, ServeOptions};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+/// Blocking loopback GET; returns (status line, body).
+fn get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect status plane");
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").as_bytes())
+        .expect("send request");
+    let mut text = String::new();
+    s.read_to_string(&mut text).expect("read response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header terminator");
+    (head.lines().next().unwrap().to_string(), body.to_string())
+}
+
+fn temp_opts() -> ServeOptions {
+    let base = std::env::temp_dir().join(format!("phg_status_plane_{}", std::process::id()));
+    ServeOptions {
+        workers: 2,
+        checkpoint_dir: base.join("ckpt"),
+        trace_dir: None,
+        drain_timeout_s: 0.0,
+        retry_base_ms: 1,
+        // the test owns its StatusServer (ephemeral port) + registry
+        // instead of letting serve() wire one up on a fixed port
+        status_port: None,
+    }
+}
+
+/// Small adaptive tenants that *will* rebalance: `auto` strategy with a
+/// hair trigger, so every fired event carries the three-way modeled
+/// cost table the argmin assertion below needs.
+const JOBS: &str = r#"
+{"id": "tenant-a", "problem": "helmholtz", "strategy": "auto", "lambda_trigger": 1.05, "nparts": 4, "max_elements": 30000, "theta_refine": 0.4, "solver_tol": 1e-4, "solver_max_iter": 400, "steps": 3}
+{"id": "tenant-b", "problem": "lshape", "strategy": "auto", "lambda_trigger": 1.05, "nparts": 4, "max_elements": 30000, "theta_refine": 0.4, "solver_tol": 1e-4, "solver_max_iter": 400, "steps": 3}
+{"id": "tenant-c", "problem": "helmholtz", "strategy": "auto", "lambda_trigger": 1.05, "nparts": 4, "max_elements": 20000, "theta_refine": 0.4, "solver_tol": 1e-4, "solver_max_iter": 400, "steps": 3}
+"#;
+
+#[test]
+fn serve_run_exposes_live_status_and_flight_logs_every_rebalance() {
+    let flight = obs::flight();
+    flight.clear();
+    flight.set_enabled(true);
+    let rebalances_before = obs::metrics().counter("dlb.flight.rebalances");
+
+    let specs = JobSpec::parse_jsonl(JOBS).expect("job specs");
+    let registry = Arc::new(JobRegistry::new(specs));
+    let provider: obs::JobsProvider = {
+        let reg = Arc::clone(&registry);
+        Arc::new(move || reg.jobs_jsonl())
+    };
+    let server = obs::StatusServer::start(0, Some(provider)).expect("ephemeral status plane");
+    let addr = server.addr();
+
+    // before admission: all three jobs visible over the socket, queued
+    let (status, body) = get(addr, "/jobs");
+    assert!(status.contains("200"), "{status}");
+    assert_eq!(body.lines().count(), 3, "{body}");
+    for line in body.lines() {
+        let v = json::parse(line).expect("queued /jobs line parses");
+        assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("queued"));
+        assert_eq!(v.get("steps_done").and_then(|n| n.as_f64()), Some(0.0));
+    }
+    let (status, body) = get(addr, "/health");
+    assert!(status.contains("200"), "{status}");
+    assert_eq!(body, "ok\n");
+
+    let opts = temp_opts();
+    let drain = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        let worker = scope.spawn(|| serve::run_registry(&registry, &opts, &drain));
+        // poll the live tables over the socket while the pool works;
+        // every line must be valid JSON at every instant, whatever
+        // mixture of queued/running/done the poll catches
+        loop {
+            let (status, body) = get(addr, "/jobs");
+            assert!(status.contains("200"), "{status}");
+            for line in body.lines() {
+                let v = json::parse(line).expect("mid-run /jobs line parses");
+                assert!(v.get("id").is_some(), "{line}");
+                assert!(v.get("state").is_some(), "{line}");
+                assert!(v.get("lambda").is_some(), "{line}");
+                assert!(v.get("wall_s").is_some(), "{line}");
+            }
+            let (status, metrics) = get(addr, "/metrics");
+            assert!(status.contains("200"), "{status}");
+            for line in metrics.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+                let (name, value) = line.rsplit_once(' ').expect("name value");
+                assert!(value.parse::<f64>().is_ok(), "unparsable: {line}");
+                let metric = name.split('{').next().unwrap();
+                assert!(!metric.contains('.'), "un-normalized mid-run name: {line}");
+            }
+            if registry.all_terminal() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        worker.join().expect("worker thread").expect("run_registry");
+    });
+
+    for rec in registry.snapshot() {
+        assert_eq!(rec.state, JobState::Done, "job {} did not finish", rec.spec.id);
+        // stationary tenants may stop early on the growth budget, but
+        // never without completing at least one adaptive step
+        assert!(
+            rec.steps_done >= 1 && rec.steps_done <= 3,
+            "job {}: steps_done {}",
+            rec.spec.id,
+            rec.steps_done
+        );
+    }
+
+    // the post-run exposition must carry the flight audit family, and
+    // the scraped counter must agree with the in-process registry
+    let (status, body) = get(addr, "/metrics");
+    assert!(status.contains("200"), "{status}");
+    assert!(body.contains("# TYPE serve_jobs_completed counter"), "{body}");
+    let rebalances = obs::metrics().counter("dlb.flight.rebalances") - rebalances_before;
+    let exposed: f64 = body
+        .lines()
+        .find_map(|l| l.strip_prefix("dlb_flight_rebalances "))
+        .expect("dlb_flight_rebalances missing from exposition")
+        .parse()
+        .expect("counter value");
+    assert_eq!(exposed, obs::metrics().counter("dlb.flight.rebalances") as f64);
+    server.stop();
+
+    // flight recorder: every rebalance of the whole batch is logged as
+    // one fired event whose chosen strategy is the argmin over the
+    // per-strategy modeled-cost table recorded with it
+    flight.set_enabled(false);
+    let events = flight.snapshot();
+    assert_eq!(flight.dropped(), 0);
+    let fired: Vec<_> = events.iter().filter(|e| e.fired).collect();
+    assert!(rebalances >= 1, "hair trigger never fired; no rebalance to audit");
+    assert_eq!(
+        fired.len() as u64,
+        rebalances,
+        "every rebalance must produce exactly one fired flight event"
+    );
+    for e in &events {
+        // flight was on for the whole run: even no-fire evaluations
+        // carry the full three-way table, in the Auto tie order
+        assert_eq!(e.candidates.len(), 3, "step {}", e.step);
+        assert_eq!(e.candidates[0].strategy, "diffusive");
+        assert_eq!(e.candidates[1].strategy, "adaptive");
+        assert_eq!(e.candidates[2].strategy, "scratch");
+        for c in &e.candidates {
+            assert!(c.total >= c.rebalance_cost, "objective below cost: {c:?}");
+            assert!(c.lambda_after >= 1.0, "{c:?}");
+        }
+        let line = e.to_json();
+        json::parse(&line).expect("flight JSONL line parses");
+    }
+    for e in &fired {
+        let chosen = e.chosen.expect("fired event names its strategy");
+        let mut best = &e.candidates[0];
+        for c in &e.candidates[1..] {
+            if c.total < best.total {
+                best = c;
+            }
+        }
+        assert_eq!(
+            chosen, best.strategy,
+            "step {}: chose {} but the recorded table's argmin is {} ({:?})",
+            e.step, chosen, best.strategy, e.candidates
+        );
+        let r = e.realized.expect("fired event carries the realized outcome");
+        assert!(r.dlb_wall_s > 0.0, "step {}", e.step);
+        assert!(r.total_v >= 0.0);
+        assert!(r.lambda_after >= 1.0);
+    }
+    // the model-error summary reads the same audit metrics and must
+    // report the batch's rebalance total
+    let summary = obs::model_error_summary();
+    assert!(
+        summary.contains(&format!(
+            "rebalances={}",
+            obs::metrics().counter("dlb.flight.rebalances")
+        )),
+        "{summary}"
+    );
+    flight.clear();
+}
